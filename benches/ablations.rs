@@ -1,0 +1,45 @@
+//! Design-choice ablations (DESIGN.md §6): LVC sizing, MEC tree depth,
+//! batched TL-LF, and the emulation-fidelity comparison.
+
+mod common;
+
+use twinload::config::{RunSpec, SystemConfig};
+use twinload::coordinator::experiments as exp;
+use twinload::sim::run_spec;
+use twinload::stats::Table;
+use twinload::workloads::WorkloadKind;
+
+fn main() {
+    let scale = common::scale();
+    common::emit("ablate_lvc", || exp::ablate_lvc(&scale));
+    common::emit("ablate_layers", || exp::ablate_layers(&scale));
+    common::emit("ablate_batch", || exp::ablate_batch(&scale));
+    common::emit("ablate_scm", || exp::ablate_scm(&scale));
+    common::emit("ablate_smt", || exp::ablate_smt(&scale));
+    common::emit("emulation_fidelity", emulation_fidelity);
+}
+
+/// The paper's emulation vs the real MEC content protocol: quantifies the
+/// approximation error of the paper's own §5 methodology — something only
+/// a simulator can measure.
+fn emulation_fidelity() -> Table {
+    let mut t = Table::new(
+        "Emulation fidelity: paper-emulation content vs real MEC1 content",
+        &["Workload", "Emulated (us)", "Real (us)", "Emu/Real", "Real retries"],
+    );
+    for wl in [WorkloadKind::Gups, WorkloadKind::Cg, WorkloadKind::ScalParC] {
+        let spec = RunSpec { workload: wl, footprint: 32 << 20, ops_per_core: 20_000, seed: 3 };
+        let emu = run_spec(&SystemConfig::tl_ooo(), &spec);
+        let mut real_cfg = SystemConfig::tl_ooo();
+        real_cfg.emulate_content = false;
+        let real = run_spec(&real_cfg, &spec);
+        t.row(&[
+            wl.name().into(),
+            format!("{:.1}", emu.runtime_ns() / 1000.0),
+            format!("{:.1}", real.runtime_ns() / 1000.0),
+            format!("{:.3}", real.finish as f64 / emu.finish.max(1) as f64),
+            real.twin_retries.to_string(),
+        ]);
+    }
+    t
+}

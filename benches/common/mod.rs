@@ -1,0 +1,27 @@
+//! Shared bench plumbing: scale selection + timed table emission.
+
+use std::time::Instant;
+use twinload::coordinator::experiments::Scale;
+use twinload::stats::Table;
+
+/// `TWINLOAD_BENCH_QUICK=1` (or --quick in argv) shrinks every sweep.
+pub fn scale() -> Scale {
+    let quick = std::env::var_os("TWINLOAD_BENCH_QUICK").is_some()
+        || std::env::args().any(|a| a == "--quick");
+    if quick {
+        Scale::quick()
+    } else {
+        Scale::full()
+    }
+}
+
+/// Run one experiment closure, print its table + wall time, optionally
+/// save CSV under results/.
+pub fn emit(name: &str, f: impl FnOnce() -> Table) {
+    let t0 = Instant::now();
+    let table = f();
+    let dt = t0.elapsed();
+    println!("{}", table.render());
+    println!("[bench] {name}: {:.2} s\n", dt.as_secs_f64());
+    let _ = table.save_csv(&format!("results/{name}.csv"));
+}

@@ -1,0 +1,11 @@
+//! Figure 7: normalized performance of TL-LF / TL-OoO / NUMA vs Ideal,
+//! medium + large footprints, all ten Table-4 workloads.
+
+mod common;
+
+use twinload::coordinator::experiments as exp;
+
+fn main() {
+    let scale = common::scale();
+    common::emit("fig07", || exp::fig7(&scale));
+}

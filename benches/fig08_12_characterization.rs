@@ -1,0 +1,25 @@
+//! Figures 8–12 from one characterization dataset:
+//!   Fig 8  — instruction count + IPC of TL-OoO vs Ideal
+//!   Fig 9  — LLC MPKI
+//!   Fig 10 — TLB MPKI
+//!   Fig 11 — outstanding off-core reads
+//!   Fig 12 — average read bandwidth
+
+mod common;
+
+use twinload::coordinator::experiments as exp;
+
+fn main() {
+    let scale = common::scale();
+    let t0 = std::time::Instant::now();
+    let data = exp::characterize(&scale);
+    println!(
+        "[bench] characterization runs: {:.2} s\n",
+        t0.elapsed().as_secs_f64()
+    );
+    common::emit("fig08", || exp::fig8(&data));
+    common::emit("fig09", || exp::fig9(&data));
+    common::emit("fig10", || exp::fig10(&data));
+    common::emit("fig11", || exp::fig11(&data));
+    common::emit("fig12", || exp::fig12(&data));
+}

@@ -1,0 +1,11 @@
+//! Figure 13: PCIe page-swapping performance as the share of data in
+//! extended memory sweeps 0–90 % (five representative workloads).
+
+mod common;
+
+use twinload::coordinator::experiments as exp;
+
+fn main() {
+    let scale = common::scale();
+    common::emit("fig13", || exp::fig13(&scale));
+}

@@ -1,0 +1,20 @@
+//! Figure 14 (+ the §7.1 headline checks): performance-per-dollar vs
+//! parallel efficiency, normalized to TL-OoO.
+
+mod common;
+
+use twinload::coordinator::experiments as exp;
+use twinload::cost;
+
+fn main() {
+    common::emit("fig14", exp::fig14);
+    println!(
+        "cluster/TL crossover at parallel efficiency {:.1}% (paper: ~60%)",
+        cost::cluster_crossover() * 100.0
+    );
+    let s = cost::table5_systems();
+    println!(
+        "TL vs NUMA perf/$ advantage at c2=1: {:+.1}% (paper: >=7%)",
+        (s[1].perf_per_dollar(1.0) / s[2].perf_per_dollar(1.0) - 1.0) * 100.0
+    );
+}

@@ -1,0 +1,42 @@
+//! Figure 15: twin-load vs simply increasing tRL, sweeping the extra
+//! latency to tolerate (cycle-accurate sweep + the PJRT analytic fast
+//! path cross-check).
+
+mod common;
+
+use twinload::config::SystemConfig;
+use twinload::coordinator::{experiments as exp, fastpath};
+use twinload::twinload::Mechanism;
+use twinload::workloads::WorkloadKind;
+
+fn main() {
+    let scale = common::scale();
+    common::emit("fig15", || exp::fig15(&scale));
+
+    // Analytic (PJRT / Pallas) estimate of the same crossover.
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    match fastpath::FastPath::new(dir) {
+        Err(e) => println!("(fast path unavailable: {e})"),
+        Ok(fp) => {
+            let cfg = SystemConfig::tl_ooo();
+            let (tb, tr) =
+                fastpath::synthesize_trace(&cfg, WorkloadKind::Gups, Mechanism::TlOoO, 2, 42);
+            let (sb, sr) =
+                fastpath::synthesize_trace(&cfg, WorkloadKind::Gups, Mechanism::Ideal, 2, 42);
+            let twin = fp.classify(&tb, &tr).expect("classify");
+            let single = fp.classify(&sb, &sr).expect("classify");
+            println!("PJRT analytic serial-latency estimate (GUPS trace):");
+            println!("  extra(ns)  twin(us)  inc-tRL(us)  winner");
+            for d in [0i64, 35, 70, 105, 135] {
+                let (t, s) = fp.twin_vs_inc_trl(&twin, &single, d);
+                println!(
+                    "  {:>8}  {:>8.1}  {:>11.1}  {}",
+                    d,
+                    t as f64 / 1000.0,
+                    s as f64 / 1000.0,
+                    if s < t { "inc-tRL" } else { "twin-load" }
+                );
+            }
+        }
+    }
+}

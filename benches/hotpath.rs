@@ -1,0 +1,120 @@
+//! Hot-path microbenchmarks (the §Perf baseline/after numbers in
+//! EXPERIMENTS.md): DRAM controller service rate, end-to-end simulator
+//! throughput, cache ops, and PJRT fast-path classification rate.
+
+mod common;
+
+use std::time::Instant;
+use twinload::cache::{CacheConfig, DataKind, SetAssocCache};
+use twinload::config::{RunSpec, SystemConfig};
+use twinload::coordinator::fastpath;
+use twinload::dram::address::DecodedAddr;
+use twinload::dram::timing::{Geometry, TimingParams};
+use twinload::dram::{MemController, Transaction};
+use twinload::sim::run_spec;
+use twinload::twinload::Mechanism;
+use twinload::util::Rng;
+use twinload::workloads::WorkloadKind;
+
+fn timeit(name: &str, units: f64, unit_name: &str, f: impl FnOnce()) {
+    let t0 = Instant::now();
+    f();
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{name:<34} {:>9.3} s   {:>12.0} {unit_name}/s",
+        dt,
+        units / dt
+    );
+}
+
+fn bench_controller(n: u64) {
+    let geo = Geometry::sim_small();
+    let mut ctrl = MemController::new(TimingParams::ddr3_1600(), geo);
+    let mut rng = Rng::new(1);
+    let mut now = 0u64;
+    let mut done = 0u64;
+    while done < n {
+        // Keep ~32 in flight.
+        for _ in 0..32 {
+            let addr = DecodedAddr {
+                channel: 0,
+                rank: (rng.below(2)) as u32,
+                bank: (rng.below(8)) as u32,
+                row: (rng.below(1024)) as u32,
+                col: (rng.below(128)) as u32,
+            };
+            ctrl.enqueue(Transaction { id: done, addr, is_write: false, arrive: now });
+        }
+        loop {
+            let (res, wake) = ctrl.pump(now);
+            done += res.len() as u64;
+            match wake {
+                Some(w) => now = w,
+                None => break,
+            }
+        }
+    }
+}
+
+fn bench_cache(n: u64) {
+    let mut c = SetAssocCache::new(CacheConfig::llc_scaled());
+    let mut rng = Rng::new(2);
+    for _ in 0..n {
+        let a = rng.below(1 << 24) * 64;
+        if c.probe(a).is_none() {
+            c.fill(a, false, DataKind::Real);
+        }
+        c.access(a, false);
+    }
+}
+
+fn bench_sim(kind: WorkloadKind, cfg: &SystemConfig, ops: u64) -> u64 {
+    let spec = RunSpec { workload: kind, footprint: 32 << 20, ops_per_core: ops, seed: 5 };
+    let r = run_spec(cfg, &spec);
+    assert!(!r.deadlocked);
+    r.retired_insts
+}
+
+fn main() {
+    println!("== hot-path microbenchmarks ==");
+    let n_ctrl = 2_000_000u64;
+    timeit("dram controller (random txns)", n_ctrl as f64, "txn", || {
+        bench_controller(n_ctrl)
+    });
+
+    let n_cache = 20_000_000u64;
+    timeit("LLC access+fill (random)", n_cache as f64, "op", || bench_cache(n_cache));
+
+    let ops = 200_000u64;
+    for (name, cfg) in [
+        ("sim ideal/gups", SystemConfig::ideal()),
+        ("sim tl-ooo/gups", SystemConfig::tl_ooo()),
+        ("sim tl-ooo/memcached", SystemConfig::tl_ooo()),
+    ] {
+        let wl = if name.contains("memcached") {
+            WorkloadKind::Memcached
+        } else {
+            WorkloadKind::Gups
+        };
+        let mut cfg = cfg;
+        cfg.cores = 4;
+        let total_ops = ops * cfg.cores as u64;
+        timeit(name, total_ops as f64, "logical-op", || {
+            bench_sim(wl, &cfg, ops);
+        });
+    }
+
+    // PJRT fast-path classification throughput.
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if let Ok(fp) = fastpath::FastPath::new(dir) {
+        let cfg = SystemConfig::tl_ooo();
+        let (b, r) =
+            fastpath::synthesize_trace(&cfg, WorkloadKind::Gups, Mechanism::TlOoO, 8, 9);
+        let n = b.len() as f64;
+        timeit("pjrt trace classification", n, "access", || {
+            fp.classify(&b, &r).expect("classify");
+        });
+    } else {
+        println!("(pjrt fast path unavailable — run `make artifacts`)");
+    }
+}

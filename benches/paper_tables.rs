@@ -1,0 +1,15 @@
+//! Regenerate the paper's tables: Table 1 (timing), Table 2 (cache
+//! states), Table 3 (systems), Table 4 (workloads), Table 5 (costs).
+
+mod common;
+
+use twinload::coordinator::experiments as exp;
+
+fn main() {
+    let scale = common::scale();
+    common::emit("table1", exp::table1);
+    common::emit("table2", exp::table2);
+    common::emit("table3", exp::table3);
+    common::emit("table4", || exp::table4(&scale));
+    common::emit("table5", exp::table5);
+}

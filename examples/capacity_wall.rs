@@ -1,0 +1,77 @@
+//! The capacity-wall scenario the paper's introduction motivates: how
+//! deep can the MEC tree go (how much capacity can one channel fan out
+//! to) before each mechanism breaks?
+//!
+//! Sweeps MEC tree depth with the paper's 3.4 ns simple-forwarding hops
+//! (§2.1), reports the TL-OoO tolerance boundary (§3.1: "enough to
+//! tolerate propagation delays for up to five MEC layers"), and shows
+//! TL-LF sailing past it — the scalability headline of the paper.
+//!
+//! ```sh
+//! cargo run --release --example capacity_wall
+//! ```
+
+use twinload::config::{RunSpec, SystemConfig};
+use twinload::dram::timing::TimingParams;
+use twinload::mec::Topology;
+use twinload::sim::run_spec;
+use twinload::stats::Table;
+use twinload::workloads::WorkloadKind;
+
+fn main() {
+    let host = TimingParams::ddr3_1600();
+    let spec = RunSpec {
+        workload: WorkloadKind::Cg,
+        footprint: 32 << 20,
+        ops_per_core: 16_000,
+        seed: 7,
+    };
+
+    let mut table = Table::new(
+        "Capacity wall: MEC tree depth vs mechanism (CG workload)",
+        &[
+            "Layers",
+            "Leaves",
+            "Capacity x",
+            "RTT (ns)",
+            "OoO ok?",
+            "TL-OoO (us)",
+            "2nd-load real %",
+            "TL-LF (us)",
+        ],
+    );
+
+    for layers in [1u32, 2, 3, 4, 5, 6, 8] {
+        let topo = Topology { layers, fanout: 2, hop_delay: 3_400 };
+        let mut ooo = SystemConfig::tl_ooo();
+        ooo.mec.topology = topo;
+        // The real-content mode shows the tolerance wall (late second
+        // loads start returning fake data and retrying).
+        ooo.emulate_content = false;
+        let mut lf = SystemConfig::tl_lf();
+        lf.mec.topology = topo;
+        lf.emulate_content = false;
+
+        let r_ooo = run_spec(&ooo, &spec);
+        let r_lf = run_spec(&lf, &spec);
+        let real_pct = 100.0 * r_ooo.mec_second_real as f64
+            / (r_ooo.mec_second_real + r_ooo.mec_second_late).max(1) as f64;
+        table.row(&[
+            layers.to_string(),
+            topo.num_leaves().to_string(),
+            format!("{}x", topo.num_leaves() * 2), // dual-rank leaves
+            format!("{:.1}", topo.round_trip() as f64 / 1000.0),
+            topo.ooo_tolerable(&host, &host).to_string(),
+            format!("{:.1}", r_ooo.runtime_ns() / 1000.0),
+            format!("{real_pct:.1}"),
+            format!("{:.1}", r_lf.runtime_ns() / 1000.0),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "Reading: TL-OoO's forced row-miss window covers ~5 simple layers \
+         (paper §3.1); beyond it the LVC data arrives late, second loads\n\
+         return fake values and software retries erode performance. TL-LF \
+         tolerates arbitrary depth at its (fence-serialized) pace."
+    );
+}

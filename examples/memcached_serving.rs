@@ -1,0 +1,66 @@
+//! Key-value serving scenario (paper Table 4's Memcached row): how much
+//! serving capacity survives each memory-extension mechanism when the
+//! item store lives almost entirely (97.3 %) in extended memory?
+//!
+//! The memcached workload generator reproduces memslap-style traffic:
+//! zipf-popular keys, hash-chain walks, mostly GETs. We serve the same
+//! request volume on every mechanism and report throughput plus the
+//! memory-system health indicators a service operator would watch.
+//!
+//! ```sh
+//! cargo run --release --example memcached_serving
+//! ```
+
+use twinload::config::{RunSpec, SystemConfig};
+use twinload::sim::run_spec;
+use twinload::stats::Table;
+use twinload::workloads::WorkloadKind;
+
+/// Logical ops per memcached request in the generator (hash + chain +
+/// value + response ≈ 8 ops/request).
+const OPS_PER_REQUEST: f64 = 8.0;
+
+fn main() {
+    let spec = RunSpec {
+        workload: WorkloadKind::Memcached,
+        footprint: 64 << 20,
+        ops_per_core: 40_000,
+        seed: 11,
+    };
+    let systems = [
+        ("ideal", SystemConfig::ideal()),
+        ("tl-ooo", SystemConfig::tl_ooo()),
+        ("tl-lf", SystemConfig::tl_lf()),
+        ("numa", SystemConfig::numa()),
+        ("pcie-75%", SystemConfig::pcie(0.75)),
+    ];
+
+    let mut table = Table::new(
+        "Memcached serving: 97.3% of the item store in extended memory",
+        &["System", "kReq/s", "vs ideal", "LLC MPKI", "IPC", "Retries"],
+    );
+    let mut base_rate = None;
+    for (name, cfg) in systems {
+        let r = run_spec(&cfg, &spec);
+        assert!(!r.deadlocked, "{name} deadlocked");
+        let requests =
+            (r.transform.logical_mem as f64 / OPS_PER_REQUEST).max(1.0);
+        let krps = requests / (r.finish as f64 * 1e-12) / 1e3;
+        let base = *base_rate.get_or_insert(krps);
+        table.row(&[
+            name.into(),
+            format!("{krps:.0}"),
+            format!("{:.2}", krps / base),
+            format!("{:.1}", r.llc_mpki(r.retired_insts)),
+            format!("{:.2}", r.ipc()),
+            format!("{}", r.twin_retries + r.cas_fails),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "Reading: the paper's Memcached is insensitive to the memory system \
+         until PCIe swapping enters (Figure 7 vs Figure 13's 0.13x) —\n\
+         twin-load keeps the serving rate in the same order as Ideal, while \
+         page swapping collapses it."
+    );
+}

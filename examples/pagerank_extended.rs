@@ -1,0 +1,130 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): the full three-layer stack on
+//! a real small workload.
+//!
+//! 1. **Application compute** — the Rust coordinator loads the
+//!    AOT-compiled `pagerank_step` artifact (L2 JAX graph calling the L1
+//!    Pallas gather kernel) and runs PageRank to convergence on a
+//!    synthetic 4096-node / 32768-edge graph via PJRT. Results are
+//!    verified against a pure-Rust reference implementation.
+//! 2. **Memory-system evaluation** — the same application's access
+//!    pattern (the `pagerank` Table-4 workload) runs through the platform
+//!    simulator on Ideal, TL-OoO, and NUMA, reproducing the Figure-7
+//!    comparison for this app.
+//!
+//! Requires `make artifacts` first.
+//!
+//! ```sh
+//! cargo run --release --example pagerank_extended
+//! ```
+
+use twinload::config::{RunSpec, SystemConfig};
+use twinload::runtime::{ArgValue, PjrtRuntime};
+use twinload::sim::run_spec;
+use twinload::util::Rng;
+use twinload::workloads::WorkloadKind;
+
+const NODES: usize = 4_096;
+const EDGES: usize = 32_768;
+const DAMPING: f32 = 0.85;
+
+/// Pure-Rust PageRank step (the correctness oracle for the PJRT path).
+fn reference_step(ranks: &[f32], src: &[i32], dst: &[i32], inv_deg: &[f32]) -> Vec<f32> {
+    let n = ranks.len();
+    let mut out = vec![(1.0 - DAMPING) / n as f32; n];
+    for e in 0..src.len() {
+        out[dst[e] as usize] += DAMPING * ranks[src[e] as usize] * inv_deg[src[e] as usize];
+    }
+    out
+}
+
+fn main() -> anyhow::Result<()> {
+    // --- Build the graph ---
+    let mut rng = Rng::new(2026);
+    let src: Vec<i32> = (0..EDGES).map(|_| rng.below(NODES as u64) as i32).collect();
+    let dst: Vec<i32> = (0..EDGES).map(|_| rng.below(NODES as u64) as i32).collect();
+    let mut deg = vec![0f32; NODES];
+    for &s in &src {
+        deg[s as usize] += 1.0;
+    }
+    let inv_deg: Vec<f32> =
+        deg.iter().map(|&d| if d > 0.0 { 1.0 / d } else { 0.0 }).collect();
+    let mut ranks = vec![1.0f32 / NODES as f32; NODES];
+
+    // --- Layer 3 loads the AOT artifact (L2 JAX + L1 Pallas) ---
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let mut rt = PjrtRuntime::cpu()?;
+    rt.load_hlo("pagerank_step", format!("{dir}/pagerank_step.hlo.txt"))?;
+    println!(
+        "loaded pagerank_step on {} (graph: {NODES} nodes, {EDGES} edges)",
+        rt.platform()
+    );
+
+    // --- Iterate to convergence via PJRT ---
+    let n_i64 = &[NODES as i64][..];
+    let e_i64 = &[EDGES as i64][..];
+    let t0 = std::time::Instant::now();
+    let mut iters = 0;
+    loop {
+        let outs = rt.execute(
+            "pagerank_step",
+            &[
+                ArgValue::f32(ranks.clone(), n_i64),
+                ArgValue::i32(src.clone(), e_i64),
+                ArgValue::i32(dst.clone(), e_i64),
+                ArgValue::f32(inv_deg.clone(), n_i64),
+            ],
+        )?;
+        let new_ranks = outs[0].as_f32()?.to_vec();
+        let delta: f32 =
+            new_ranks.iter().zip(&ranks).map(|(a, b)| (a - b).abs()).sum();
+        ranks = new_ranks;
+        iters += 1;
+        if delta < 1e-6 || iters >= 100 {
+            println!("converged after {iters} iterations (L1 delta {delta:.2e})");
+            break;
+        }
+    }
+    let elapsed = t0.elapsed();
+    println!(
+        "PJRT throughput: {:.1} M edges/s over {iters} iterations ({:.1} ms total)",
+        (EDGES as f64 * iters as f64) / elapsed.as_secs_f64() / 1e6,
+        elapsed.as_secs_f64() * 1e3
+    );
+
+    // --- Verify against the Rust oracle ---
+    let mut check = vec![1.0f32 / NODES as f32; NODES];
+    for _ in 0..iters {
+        check = reference_step(&check, &src, &dst, &inv_deg);
+    }
+    let max_err = ranks
+        .iter()
+        .zip(&check)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!("max |PJRT - Rust oracle| = {max_err:.3e}");
+    assert!(max_err < 1e-5, "PJRT result diverges from the oracle");
+    let sum: f32 = ranks.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-3, "rank mass not conserved: {sum}");
+
+    // --- Memory-system evaluation of the same application ---
+    println!("\nmemory-system comparison (pagerank access pattern):");
+    let spec = RunSpec {
+        workload: WorkloadKind::PageRank,
+        footprint: 64 << 20,
+        ops_per_core: 30_000,
+        seed: 2026,
+    };
+    let ideal = run_spec(&SystemConfig::ideal(), &spec);
+    let tl = run_spec(&SystemConfig::tl_ooo(), &spec);
+    let numa = run_spec(&SystemConfig::numa(), &spec);
+    println!("  {}", ideal.summary());
+    println!("  {}", tl.summary());
+    println!("  {}", numa.summary());
+    println!(
+        "\nnormalized performance: TL-OoO {:.2}, NUMA {:.2} (Ideal = 1.0) — \
+         with 87.9% of the application's data in extended memory (Table 4).",
+        tl.perf_vs(&ideal),
+        numa.perf_vs(&ideal)
+    );
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Quickstart: simulate one workload on the twin-load system and the
+//! Ideal baseline, and print the comparison the paper's Figure 7 makes.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use twinload::config::{RunSpec, SystemConfig};
+use twinload::sim::run_spec;
+use twinload::workloads::WorkloadKind;
+
+fn main() {
+    let workload = WorkloadKind::Gups;
+    let spec = RunSpec {
+        workload,
+        footprint: 64 << 20, // "medium" (paper's ~4 GB, scaled 64x)
+        ops_per_core: 40_000,
+        seed: 42,
+    };
+
+    println!("== twin-load quickstart: {} ==", workload.name());
+    let ideal = run_spec(&SystemConfig::ideal(), &spec);
+    println!("  {}", ideal.summary());
+
+    let tl = run_spec(&SystemConfig::tl_ooo(), &spec);
+    println!("  {}", tl.summary());
+
+    let norm = tl.perf_vs(&ideal);
+    println!(
+        "\nTL-OoO achieves {:.1}% of Ideal performance on {}.",
+        norm * 100.0,
+        workload.name()
+    );
+    println!(
+        "Twin-load costs: {:.0}% more instructions, {:.0}% more LLC misses, \
+         {} twin retries, {} CAS retries.",
+        (tl.retired_insts as f64 / ideal.retired_insts as f64 - 1.0) * 100.0,
+        (tl.llc_misses as f64 / ideal.llc_misses.max(1) as f64 - 1.0) * 100.0,
+        tl.twin_retries,
+        tl.cas_fails,
+    );
+    println!(
+        "MEC1 served {} first loads; {:.1}% of second loads found their \
+         data in the LVC in time.",
+        tl.mec_first_loads,
+        100.0 * tl.mec_second_real as f64
+            / (tl.mec_second_real + tl.mec_second_late).max(1) as f64
+    );
+    assert!(!ideal.deadlocked && !tl.deadlocked);
+}

@@ -1,0 +1,83 @@
+"""AOT lowering: JAX models → HLO text artifacts for the Rust runtime.
+
+HLO **text**, not `.serialize()`: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which the image's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md). Lowered with return_tuple=True;
+the Rust side unwraps with `to_tuple()`.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifacts():
+    """(name, fn, example_args) for every AOT entry point."""
+    i32, f32 = jnp.int32, jnp.float32
+    return [
+        (
+            "trace_latency",
+            model.trace_latency_entry,
+            (spec((model.TRACE_CHUNK,), i32), spec((model.TRACE_CHUNK,), i32)),
+        ),
+        (
+            "pagerank_step",
+            model.pagerank_step,
+            (
+                spec((model.PAGERANK_NODES,), f32),
+                spec((model.PAGERANK_EDGES,), i32),
+                spec((model.PAGERANK_EDGES,), i32),
+                spec((model.PAGERANK_NODES,), f32),
+            ),
+        ),
+        (
+            "gups_chunk",
+            model.gups_chunk,
+            (
+                spec((model.GUPS_TABLE,), f32),
+                spec((model.GUPS_CHUNK,), i32),
+                spec((model.GUPS_CHUNK,), f32),
+            ),
+        ),
+    ]
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--only", default=None, help="emit a single artifact")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, fn, example in artifacts():
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars  {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: DRAM bank-state scan (the analytic timing model).
+
+Given a trace chunk of (flat_bank, row) pairs in program order, classify
+each access against the open-row state of its bank — row hit / row miss
+(closed bank) / row conflict (other row open) — and emit its latency
+contribution. This is the compute hot-spot of the coordinator's fast
+path: wide parameter sweeps (paper Figure 15) run the analytic model over
+trace chunks instead of the cycle-accurate Rust simulator, which serves
+as the oracle it is validated against.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the per-bank open-row
+vector is the only sequential carry. It lives in a VMEM scratch buffer
+that persists across sequential grid steps; each grid step streams one
+trace block HBM→VMEM via BlockSpec and walks it with a fori_loop. The
+classification arithmetic is vectorizable; the carry is tiny (NUM_BANKS
+lanes). `interpret=True` everywhere — the CPU PJRT plugin cannot execute
+Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Number of logical banks tracked (2 ranks x 8 banks x 4 channels of
+# headroom; Rust passes flat bank ids modulo this).
+NUM_BANKS = 64
+
+# Default block size per grid step.
+BLOCK = 1024
+
+
+def _kernel(bank_ref, row_ref, lat_ref, state_ref, *, lat_hit, lat_miss, lat_conflict):
+    """One grid step: scan BLOCK accesses, carrying per-bank open rows."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        state_ref[...] = jnp.full((NUM_BANKS,), -1, jnp.int32)
+
+    def body(i, _):
+        b = bank_ref[i]
+        r = row_ref[i]
+        prev = state_ref[b]
+        lat = jnp.where(
+            prev == r,
+            jnp.int32(lat_hit),
+            jnp.where(prev < 0, jnp.int32(lat_miss), jnp.int32(lat_conflict)),
+        )
+        lat_ref[i] = lat
+        state_ref[b] = r
+        return 0
+
+    jax.lax.fori_loop(0, bank_ref.shape[0], body, 0)
+
+
+def bank_scan(bank, row, lat_hit, lat_miss, lat_conflict, block=BLOCK):
+    """Per-access latency classification.
+
+    Args:
+      bank: int32[N] flat bank ids in [0, NUM_BANKS).
+      row: int32[N] row addresses (-1 never used).
+      lat_hit/lat_miss/lat_conflict: python ints (latencies in ns or any
+        consistent unit; compiled in as constants).
+      block: trace block per grid step (N must be a multiple).
+
+    Returns:
+      int32[N] per-access latency.
+    """
+    n = bank.shape[0]
+    assert n % block == 0, f"N={n} not a multiple of block={block}"
+    grid = n // block
+    kernel = functools.partial(
+        _kernel, lat_hit=lat_hit, lat_miss=lat_miss, lat_conflict=lat_conflict
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        # The bank-state carry: persists across sequential grid steps.
+        scratch_shapes=[pltpu.VMEM((NUM_BANKS,), jnp.int32)],
+        interpret=True,
+    )(bank, row)

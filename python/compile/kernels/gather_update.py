@@ -1,0 +1,94 @@
+"""L1 Pallas kernels for the application compute path.
+
+Two kernels back the end-to-end examples (the big-memory applications the
+paper motivates — PageRank and GUPS from Table 4):
+
+* :func:`gather_contrib` — the gather half of a PageRank/SpMV step:
+  ``contrib[e] = ranks[src[e]] * inv_deg[src[e]]`` for every edge. The
+  rank/degree vectors stay resident in VMEM (the TPU analogue of keeping
+  the hot table in shared memory on a GPU) while edge blocks stream
+  through; the scatter half (segment-sum by destination) is left to XLA,
+  which fuses it with the damping arithmetic.
+* :func:`gups_update` — a GUPS update chunk: ``table[idx[k]] += val[k]``
+  with the table tile VMEM-resident.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_EDGES = 512
+
+
+def _gather_kernel(src_ref, ranks_ref, inv_deg_ref, out_ref):
+    idx = src_ref[...]
+    out_ref[...] = ranks_ref[idx] * inv_deg_ref[idx]
+
+
+def gather_contrib(src, ranks, inv_deg, block=BLOCK_EDGES):
+    """contrib[e] = ranks[src[e]] * inv_deg[src[e]].
+
+    Args:
+      src: int32[E] source-node index per edge (E % block == 0).
+      ranks: f32[N] current ranks.
+      inv_deg: f32[N] 1/out-degree per node.
+
+    Returns:
+      f32[E] per-edge contribution.
+    """
+    e = src.shape[0]
+    assert e % block == 0, f"E={e} not a multiple of {block}"
+    n = ranks.shape[0]
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=(e // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            # Whole vectors resident per step (hot data in VMEM).
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((e,), jnp.float32),
+        interpret=True,
+    )(src, ranks, inv_deg)
+
+
+def _gups_kernel(idx_ref, val_ref, table_ref, out_ref):
+    # Sequential read-modify-write over the chunk (GUPS semantics: updates
+    # may collide, so a blind scatter would lose increments).
+    out_ref[...] = table_ref[...]
+
+    def body(k, _):
+        i = idx_ref[k]
+        out_ref[i] = out_ref[i] + val_ref[k]
+        return 0
+
+    jax.lax.fori_loop(0, idx_ref.shape[0], body, 0)
+
+
+def gups_update(table, idx, val):
+    """table[idx[k]] += val[k] for every k, collision-safe.
+
+    Args:
+      table: f32[M] the update table (one VMEM-resident tile).
+      idx: int32[K] update indices in [0, M).
+      val: f32[K] addends.
+
+    Returns:
+      f32[M] updated table.
+    """
+    m = table.shape[0]
+    k = idx.shape[0]
+    return pl.pallas_call(
+        _gups_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(idx, val, table)

@@ -1,0 +1,74 @@
+"""L2 JAX models — the compute graphs the Rust coordinator executes via
+PJRT. Each calls the L1 Pallas kernels; `aot.py` lowers them once to HLO
+text, and they never run under Python at simulation/serving time.
+
+Models:
+
+* :func:`trace_latency_model` — the analytic DRAM timing model over one
+  trace chunk (bank/row streams → per-access latency + summary). Backs
+  the coordinator's fast path for wide sweeps (paper Figure 15).
+* :func:`pagerank_step` — one PageRank iteration over a fixed-shape CSR
+  (COO) graph; the end-to-end example's inner loop.
+* :func:`gups_chunk` — a GUPS update chunk over a table tile.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bank_scan as bank_scan_mod
+from .kernels import gather_update as gu
+
+# Fixed AOT shapes (the PJRT path compiles one executable per shape).
+TRACE_CHUNK = 16_384
+PAGERANK_NODES = 4_096
+PAGERANK_EDGES = 32_768
+GUPS_TABLE = 65_536
+GUPS_CHUNK = 4_096
+
+# DDR3-1600 latency classes in nanoseconds (TimingParams::ddr3_1600):
+# hit = tCCD, miss = tRCD + tRL, conflict = tRTP + tRP + tRCD + tRL.
+LAT_HIT_NS = 5
+LAT_MISS_NS = 28
+LAT_CONFLICT_NS = 49
+
+
+def trace_latency_model(bank, row):
+    """Per-access latency + summary statistics for one trace chunk.
+
+    Args:
+      bank: int32[TRACE_CHUNK] flat bank ids (mod NUM_BANKS).
+      row: int32[TRACE_CHUNK] row ids (>= 0).
+
+    Returns:
+      (lat int32[N], total_ns int32[1], hits int32[1], conflicts int32[1])
+    """
+    lat = bank_scan_mod.bank_scan(
+        bank % bank_scan_mod.NUM_BANKS,
+        row,
+        LAT_HIT_NS,
+        LAT_MISS_NS,
+        LAT_CONFLICT_NS,
+    )
+    total = jnp.sum(lat, dtype=jnp.int32).reshape((1,))
+    hits = jnp.sum(lat == LAT_HIT_NS, dtype=jnp.int32).reshape((1,))
+    conflicts = jnp.sum(lat == LAT_CONFLICT_NS, dtype=jnp.int32).reshape((1,))
+    return lat, total, hits, conflicts
+
+
+def pagerank_step(ranks, src, dst, inv_deg):
+    """One damping-0.85 PageRank iteration (gather via Pallas, scatter
+    via XLA segment-sum — see gather_update.py)."""
+    n = ranks.shape[0]
+    contrib = gu.gather_contrib(src, ranks, inv_deg)
+    gathered = jax.ops.segment_sum(contrib, dst, num_segments=n)
+    return ((1.0 - 0.85) / n + 0.85 * gathered,)
+
+
+def gups_chunk(table, idx, val):
+    """Apply one chunk of GUPS updates to a table tile."""
+    return (gu.gups_update(table, idx, val),)
+
+
+def trace_latency_entry(bank, row):
+    """Tuple-returning wrapper for AOT export."""
+    return trace_latency_model(bank, row)

@@ -1,0 +1,137 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+hypothesis sweeps shapes and inputs; fixed seeds keep CI deterministic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bank_scan as bs
+from compile.kernels import gather_update as gu
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+LAT = dict(lat_hit=5, lat_miss=28, lat_conflict=49)
+
+
+def rand_trace(rng, n, banks=bs.NUM_BANKS, rows=128):
+    bank = rng.integers(0, banks, n).astype(np.int32)
+    row = rng.integers(0, rows, n).astype(np.int32)
+    return jnp.asarray(bank), jnp.asarray(row)
+
+
+class TestBankScan:
+    def test_known_sequence(self):
+        bank = jnp.array([0, 0, 1, 0], jnp.int32)
+        row = jnp.array([3, 3, 5, 4], jnp.int32)
+        out = bs.bank_scan(bank, row, **LAT, block=4)
+        assert out.tolist() == [28, 5, 28, 49]
+
+    def test_matches_ref_random(self):
+        rng = np.random.default_rng(0)
+        bank, row = rand_trace(rng, 4096)
+        got = bs.bank_scan(bank, row, **LAT)
+        want = ref.bank_scan_ref(bank, row, **LAT)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_state_carries_across_blocks(self):
+        # Same (bank,row) in consecutive blocks must be a hit in block 2.
+        n = 2 * bs.BLOCK
+        bank = jnp.zeros((n,), jnp.int32)
+        row = jnp.zeros((n,), jnp.int32)
+        out = bs.bank_scan(bank, row, **LAT)
+        assert int(out[0]) == LAT["lat_miss"]
+        assert int(out[bs.BLOCK]) == LAT["lat_hit"], "carry lost at block edge"
+
+    def test_twin_pair_forces_conflict(self):
+        # The twin-load property: same bank, row differing in the MSB.
+        msb = 1 << 10
+        bank = jnp.array([3, 3], jnp.int32)
+        row = jnp.array([7, 7 ^ msb], jnp.int32)
+        out = bs.bank_scan(bank, row, **LAT, block=2)
+        assert out.tolist() == [LAT["lat_miss"], LAT["lat_conflict"]]
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n_blocks=st.integers(1, 4),
+        block=st.sampled_from([8, 64, 256]),
+        rows=st.integers(1, 64),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_matches_ref(self, n_blocks, block, rows, seed):
+        rng = np.random.default_rng(seed)
+        bank, row = rand_trace(rng, n_blocks * block, rows=rows)
+        got = bs.bank_scan(bank, row, **LAT, block=block)
+        want = ref.bank_scan_ref(bank, row, **LAT)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_rejects_ragged_input(self):
+        bank = jnp.zeros((100,), jnp.int32)
+        with pytest.raises(AssertionError):
+            bs.bank_scan(bank, bank, **LAT, block=64)
+
+
+class TestGatherContrib:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(1)
+        n, e = 64, 512
+        src = jnp.asarray(rng.integers(0, n, e).astype(np.int32))
+        ranks = jnp.asarray(rng.random(n).astype(np.float32))
+        inv_deg = jnp.asarray((1.0 / (1 + rng.integers(1, 8, n))).astype(np.float32))
+        got = gu.gather_contrib(src, ranks, inv_deg)
+        want = ref.gather_contrib_ref(src, ranks, inv_deg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.sampled_from([16, 128, 1024]),
+        blocks=st.integers(1, 3),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, n, blocks, seed):
+        rng = np.random.default_rng(seed)
+        e = blocks * 128
+        src = jnp.asarray(rng.integers(0, n, e).astype(np.int32))
+        ranks = jnp.asarray(rng.random(n).astype(np.float32))
+        inv_deg = jnp.asarray(rng.random(n).astype(np.float32))
+        got = gu.gather_contrib(src, ranks, inv_deg, block=128)
+        want = ref.gather_contrib_ref(src, ranks, inv_deg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+class TestGupsUpdate:
+    def test_matches_ref_with_collisions(self):
+        rng = np.random.default_rng(2)
+        m, k = 256, 512  # k > m: guaranteed collisions
+        table = jnp.asarray(rng.random(m).astype(np.float32))
+        idx = jnp.asarray(rng.integers(0, m, k).astype(np.int32))
+        val = jnp.asarray(rng.random(k).astype(np.float32))
+        got = gu.gups_update(table, idx, val)
+        want = ref.gups_update_ref(table, idx, val)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    def test_no_updates_is_identity_plus_zero(self):
+        table = jnp.arange(16, dtype=jnp.float32)
+        idx = jnp.zeros((4,), jnp.int32)
+        val = jnp.zeros((4,), jnp.float32)
+        got = gu.gups_update(table, idx, val)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(table))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m=st.sampled_from([32, 128]),
+        k=st.sampled_from([16, 64, 256]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_collision_safety(self, m, k, seed):
+        rng = np.random.default_rng(seed)
+        table = jnp.asarray(rng.random(m).astype(np.float32))
+        idx = jnp.asarray(rng.integers(0, m, k).astype(np.int32))
+        val = jnp.asarray(rng.random(k).astype(np.float32))
+        got = gu.gups_update(table, idx, val)
+        want = ref.gups_update_ref(table, idx, val)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)

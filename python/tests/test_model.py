@@ -1,0 +1,74 @@
+"""L2 model tests: shapes, semantics, and AOT lowering health."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestTraceLatency:
+    def test_shapes_and_summary_consistency(self):
+        rng = np.random.default_rng(3)
+        bank = jnp.asarray(rng.integers(0, 64, model.TRACE_CHUNK).astype(np.int32))
+        row = jnp.asarray(rng.integers(0, 256, model.TRACE_CHUNK).astype(np.int32))
+        lat, total, hits, conflicts = model.trace_latency_model(bank, row)
+        assert lat.shape == (model.TRACE_CHUNK,)
+        assert int(total[0]) == int(jnp.sum(lat))
+        assert int(hits[0]) == int(jnp.sum(lat == model.LAT_HIT_NS))
+        assert int(conflicts[0]) == int(jnp.sum(lat == model.LAT_CONFLICT_NS))
+
+    def test_sequential_trace_mostly_hits(self):
+        # Stream within one row of one bank: all hits after the opener.
+        bank = jnp.zeros((model.TRACE_CHUNK,), jnp.int32)
+        row = jnp.zeros((model.TRACE_CHUNK,), jnp.int32)
+        _, _, hits, conflicts = model.trace_latency_model(bank, row)
+        assert int(hits[0]) == model.TRACE_CHUNK - 1
+        assert int(conflicts[0]) == 0
+
+
+class TestPageRank:
+    def _graph(self, seed=4):
+        rng = np.random.default_rng(seed)
+        n, e = model.PAGERANK_NODES, model.PAGERANK_EDGES
+        src = rng.integers(0, n, e).astype(np.int32)
+        dst = rng.integers(0, n, e).astype(np.int32)
+        deg = np.bincount(src, minlength=n).astype(np.float32)
+        inv_deg = np.where(deg > 0, 1.0 / np.maximum(deg, 1), 0.0).astype(np.float32)
+        ranks = np.full(n, 1.0 / n, np.float32)
+        return map(jnp.asarray, (ranks, src, dst, inv_deg))
+
+    def test_matches_ref(self):
+        ranks, src, dst, inv_deg = self._graph()
+        (got,) = model.pagerank_step(ranks, src, dst, inv_deg)
+        want = ref.pagerank_step_ref(ranks, src, dst, inv_deg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    def test_iteration_contracts(self):
+        # Repeated application converges (sum of |delta| shrinks).
+        ranks, src, dst, inv_deg = self._graph()
+        r1 = model.pagerank_step(ranks, src, dst, inv_deg)[0]
+        r2 = model.pagerank_step(r1, src, dst, inv_deg)[0]
+        r3 = model.pagerank_step(r2, src, dst, inv_deg)[0]
+        d12 = float(jnp.sum(jnp.abs(r2 - r1)))
+        d23 = float(jnp.sum(jnp.abs(r3 - r2)))
+        assert d23 < d12
+
+
+class TestAot:
+    def test_artifact_registry_shapes(self):
+        names = [a[0] for a in aot.artifacts()]
+        assert names == ["trace_latency", "pagerank_step", "gups_chunk"]
+
+    @pytest.mark.parametrize("name", ["trace_latency", "pagerank_step", "gups_chunk"])
+    def test_lowering_produces_hlo_text(self, name):
+        entry = next(a for a in aot.artifacts() if a[0] == name)
+        _, fn, example = entry
+        lowered = jax.jit(fn).lower(*example)
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), text[:80]
+        assert "ROOT" in text

@@ -1,0 +1,19 @@
+//! Baseline extension mechanisms the paper compares against (§5, Table 3).
+//!
+//! * [`numa`] — extra processors attached over QPI (§2.3): extended
+//!   accesses pay a per-hop interconnect latency.
+//! * [`pcie`] — remote memory behind PCIe with OS page swapping (§2.4,
+//!   §6.3): non-resident pages fault and swap at microsecond cost.
+//! * [`trl`] — "just raise tRL" (§7.2): a single load with a longer read
+//!   latency, which holds the bank and kills concurrency.
+//!
+//! `Ideal` needs no module: it is the untransformed stream on local
+//! timing.
+
+pub mod numa;
+pub mod pcie;
+pub mod trl;
+
+pub use numa::NumaLink;
+pub use pcie::{PcieSwap, SwapOutcome};
+pub use trl::increased_trl;

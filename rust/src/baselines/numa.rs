@@ -1,0 +1,95 @@
+//! NUMA (QPI) extension model (§2.3, §6.2).
+//!
+//! The paper measures ≈100 ns local and ≈170 ns remote access on its
+//! host, i.e. ≈70 ns added by one QPI hop (Molka et al. report 58–110 ns
+//! per hop). The model: extended-memory requests traverse the link (fixed
+//! latency each way + limited link bandwidth) to a remote controller.
+
+use crate::util::time::{Ps, NS};
+
+/// One cache line per transfer.
+const LINE_BYTES: u64 = 64;
+
+/// A QPI-like coherent link.
+#[derive(Debug, Clone)]
+pub struct NumaLink {
+    /// One-way latency (≈ half the 70 ns round-trip addition).
+    pub one_way: Ps,
+    /// Link bandwidth in bytes/ps (QPI 8 GT/s ≈ 16 GB/s usable: 0.016).
+    bytes_per_ps: f64,
+    next_free: Ps,
+    pub transfers: u64,
+    pub stalled: u64,
+}
+
+impl NumaLink {
+    pub fn new(one_way: Ps, gbytes_per_s: f64) -> NumaLink {
+        NumaLink {
+            one_way,
+            bytes_per_ps: gbytes_per_s * 1e9 * 1e-12,
+            next_free: 0,
+            transfers: 0,
+            stalled: 0,
+        }
+    }
+
+    /// The paper host's interconnect: 70 ns round-trip addition; dual
+    /// QPI links on E5-2600 give ~25.6 GB/s usable per direction.
+    pub fn qpi() -> NumaLink {
+        NumaLink::new(35 * NS, 25.6)
+    }
+
+    /// Serialization time of one line on the link.
+    pub fn line_time(&self) -> Ps {
+        (LINE_BYTES as f64 / self.bytes_per_ps) as Ps
+    }
+
+    /// Request crosses the link at `t`; returns arrival at the remote
+    /// controller (bandwidth-limited).
+    pub fn cross(&mut self, t: Ps) -> Ps {
+        let start = t.max(self.next_free);
+        if start > t {
+            self.stalled += 1;
+        }
+        self.next_free = start + self.line_time();
+        self.transfers += 1;
+        start + self.one_way
+    }
+
+    /// Full remote penalty for a round trip starting at `t`: out + back.
+    pub fn round_trip_from(&mut self, t: Ps) -> Ps {
+        let at_remote = self.cross(t);
+        at_remote + self.one_way - t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qpi_adds_70ns_round_trip() {
+        let mut l = NumaLink::qpi();
+        let rt = l.round_trip_from(0);
+        assert_eq!(rt, 70 * NS);
+    }
+
+    #[test]
+    fn bandwidth_serializes_lines() {
+        let mut l = NumaLink::qpi();
+        // 64 B at 25.6 GB/s = 2.5 ns per line.
+        assert_eq!(l.line_time(), 2_500);
+        let a = l.cross(0);
+        let b = l.cross(0);
+        assert_eq!(b - a, l.line_time());
+        assert_eq!(l.stalled, 1);
+    }
+
+    #[test]
+    fn idle_link_no_stall() {
+        let mut l = NumaLink::qpi();
+        l.cross(0);
+        l.cross(100 * NS);
+        assert_eq!(l.stalled, 0);
+    }
+}

@@ -1,0 +1,77 @@
+//! "Increase tRL" comparison (§7.2, Figure 15).
+//!
+//! Instead of twin loads, extend JEDEC's read latency so one load covers
+//! the extended round trip. The catch the paper simulates: the bank must
+//! stay open until its data has been transferred, so the longer tRL also
+//! delays the PRE for a row turnaround — concurrency on the bank drops as
+//! tRL grows, which is why this scheme loses to twin-load at high
+//! latencies even though it wins at small ones.
+
+use crate::dram::timing::TimingParams;
+use crate::util::time::Ps;
+
+/// Derive an extended-channel timing with `extra` added to tRL.
+///
+/// The RD→PRE constraint becomes `max(tRTP, tRL′)`: the row may not close
+/// before the (now much later) data transfer has begun — the bank-holding
+/// effect §7.2 describes. All other parameters are unchanged.
+pub fn increased_trl(base: &TimingParams, extra: Ps) -> TimingParams {
+    let t_rl = base.t_rl + extra;
+    TimingParams {
+        t_rl,
+        t_rtp: base.t_rtp.max(t_rl),
+        ..*base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::bank::Bank;
+    use crate::util::time::NS;
+
+    #[test]
+    fn zero_extra_changes_nothing_but_rtp_floor() {
+        let base = TimingParams::ddr3_1600();
+        let t = increased_trl(&base, 0);
+        assert_eq!(t.t_rl, base.t_rl);
+        // tRTP floors at tRL even for zero extra (13.75 > 7.5).
+        assert_eq!(t.t_rtp, base.t_rl);
+    }
+
+    #[test]
+    fn extra_latency_extends_bank_holding() {
+        let base = TimingParams::ddr3_1600();
+        let t = increased_trl(&base, 100 * NS);
+        assert_eq!(t.t_rl, base.t_rl + 100 * NS);
+        assert_eq!(t.t_rtp, base.t_rl + 100 * NS);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn bank_throughput_degrades_with_trl() {
+        // Row-miss ping-pong on one bank: time per access grows by ~extra.
+        let run = |p: &TimingParams| -> Ps {
+            let mut b = Bank::new();
+            let mut t = 0;
+            for i in 0..10u32 {
+                let act = b.earliest_act().max(t);
+                b.do_act(act, i, p);
+                let rd = b.earliest_rd();
+                b.do_rd(rd, p);
+                let pre = b.earliest_pre();
+                b.do_pre(pre, p);
+                t = pre;
+            }
+            t
+        };
+        let base = TimingParams::ddr3_1600();
+        let slow = increased_trl(&base, 60 * NS);
+        let t_base = run(&base);
+        let t_slow = run(&slow);
+        assert!(
+            t_slow > t_base + 9 * 50 * NS,
+            "bank holding not modeled: base={t_base} slow={t_slow}"
+        );
+    }
+}

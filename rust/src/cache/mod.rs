@@ -1,0 +1,31 @@
+//! Processor-side memory hierarchy models: set-associative caches, MSHRs
+//! (the structure that bounds memory-level parallelism — Figure 11 is an
+//! MSHR-occupancy plot), and the TLB (Figure 10).
+//!
+//! Cache lines carry a [`DataKind`] so the simulator can track which lines
+//! currently hold *fake* twin-load placeholder data vs real data — the
+//! four cache states of paper Table 2 fall out of this bookkeeping.
+
+pub mod mshr;
+pub mod setassoc;
+pub mod tlb;
+
+pub use mshr::{MshrFile, MshrOutcome};
+pub use setassoc::{CacheConfig, Evicted, LookupResult, SetAssocCache};
+pub use tlb::Tlb;
+
+/// Content carried by a cache line in extended/shadow space.
+///
+/// `Fake` is the MEC placeholder pattern (the paper uses repetitive 0x5a);
+/// lines in local memory are always `Real`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataKind {
+    Real,
+    Fake,
+}
+
+impl DataKind {
+    pub fn is_real(self) -> bool {
+        self == DataKind::Real
+    }
+}

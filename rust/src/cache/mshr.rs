@@ -1,0 +1,141 @@
+//! Miss Status Holding Registers.
+//!
+//! The MSHR file bounds how many distinct line misses can be outstanding —
+//! the processor's "available memory access concurrency" the paper says
+//! TL-OoO exploits (§6.1, Figure 11). Secondary misses to an in-flight
+//! line merge instead of consuming a new entry.
+
+use crate::util::FastMap;
+
+/// Outcome of requesting an MSHR for a line address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MshrOutcome {
+    /// New entry allocated — issue the memory request.
+    Allocated,
+    /// Same line already in flight — merged; do not issue.
+    Merged,
+    /// File full — the requester must stall.
+    Full,
+}
+
+#[derive(Debug, Clone)]
+pub struct MshrFile {
+    capacity: usize,
+    /// line address -> number of merged waiters.
+    entries: FastMap<u64, u32>,
+    pub peak: usize,
+    pub allocs: u64,
+    pub merges: u64,
+    pub stalls: u64,
+}
+
+impl MshrFile {
+    pub fn new(capacity: usize) -> MshrFile {
+        MshrFile {
+            capacity,
+            entries: FastMap::with_capacity_and_hasher(capacity * 2, Default::default()),
+            peak: 0,
+            allocs: 0,
+            merges: 0,
+            stalls: 0,
+        }
+    }
+
+    /// Xeon-class line-fill buffer count per core (the paper's host).
+    pub fn xeon_core() -> MshrFile {
+        MshrFile::new(10)
+    }
+
+    pub fn request(&mut self, line_addr: u64) -> MshrOutcome {
+        if let Some(w) = self.entries.get_mut(&line_addr) {
+            *w += 1;
+            self.merges += 1;
+            return MshrOutcome::Merged;
+        }
+        if self.entries.len() >= self.capacity {
+            self.stalls += 1;
+            return MshrOutcome::Full;
+        }
+        self.entries.insert(line_addr, 1);
+        self.allocs += 1;
+        self.peak = self.peak.max(self.entries.len());
+        MshrOutcome::Allocated
+    }
+
+    /// Retire the entry for `line_addr`; returns the waiter count (primary
+    /// + merged) that should be woken.
+    pub fn complete(&mut self, line_addr: u64) -> u32 {
+        self.entries.remove(&line_addr).unwrap_or(0)
+    }
+
+    #[inline]
+    pub fn outstanding(&self) -> usize {
+        self.entries.len()
+    }
+
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.entries.len() >= self.capacity
+    }
+
+    #[inline]
+    pub fn pending(&self, line_addr: u64) -> bool {
+        self.entries.contains_key(&line_addr)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_merge_complete() {
+        let mut m = MshrFile::new(2);
+        assert_eq!(m.request(0x40), MshrOutcome::Allocated);
+        assert_eq!(m.request(0x40), MshrOutcome::Merged);
+        assert_eq!(m.outstanding(), 1);
+        assert_eq!(m.complete(0x40), 2);
+        assert_eq!(m.outstanding(), 0);
+    }
+
+    #[test]
+    fn full_file_stalls() {
+        let mut m = MshrFile::new(2);
+        assert_eq!(m.request(0x00), MshrOutcome::Allocated);
+        assert_eq!(m.request(0x40), MshrOutcome::Allocated);
+        assert!(m.is_full());
+        assert_eq!(m.request(0x80), MshrOutcome::Full);
+        assert_eq!(m.stalls, 1);
+        // Completion frees a slot.
+        m.complete(0x00);
+        assert_eq!(m.request(0x80), MshrOutcome::Allocated);
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut m = MshrFile::new(4);
+        m.request(0x00);
+        m.request(0x40);
+        m.request(0x80);
+        m.complete(0x00);
+        assert_eq!(m.peak, 3);
+    }
+
+    #[test]
+    fn complete_unknown_is_zero() {
+        let mut m = MshrFile::new(2);
+        assert_eq!(m.complete(0x123), 0);
+    }
+
+    #[test]
+    fn pending_query() {
+        let mut m = MshrFile::new(2);
+        m.request(0x40);
+        assert!(m.pending(0x40));
+        assert!(!m.pending(0x80));
+    }
+}

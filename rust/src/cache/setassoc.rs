@@ -1,0 +1,310 @@
+//! Set-associative cache with true-LRU replacement and writeback.
+
+use super::DataKind;
+use crate::util::log2_exact;
+
+/// Geometry + behaviour of one cache level.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheConfig {
+    pub size_bytes: u64,
+    pub ways: u32,
+    pub line_bytes: u64,
+}
+
+impl CacheConfig {
+    /// Per-core L1D: 32 KiB, 8-way.
+    pub fn l1d() -> CacheConfig {
+        CacheConfig { size_bytes: 32 << 10, ways: 8, line_bytes: 64 }
+    }
+
+    /// Scaled shared LLC. The paper host has a 15 MiB LLC for ~16 GB
+    /// footprints; we scale footprints by 64× (DESIGN.md), so 256 KiB–2 MiB
+    /// keeps the miss regime equivalent. Default 1 MiB, 16-way.
+    pub fn llc_scaled() -> CacheConfig {
+        CacheConfig { size_bytes: 1 << 20, ways: 16, line_bytes: 64 }
+    }
+
+    pub fn sets(&self) -> u64 {
+        self.size_bytes / (self.ways as u64 * self.line_bytes)
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Line {
+    tag: u64,
+    valid: bool,
+    dirty: bool,
+    content: DataKind,
+    /// LRU stamp: larger = more recently used.
+    stamp: u64,
+}
+
+const INVALID: Line =
+    Line { tag: 0, valid: false, dirty: false, content: DataKind::Real, stamp: 0 };
+
+/// A victim evicted by a fill.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Evicted {
+    pub addr: u64,
+    pub dirty: bool,
+}
+
+/// Result of a lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LookupResult {
+    Hit(DataKind),
+    Miss,
+}
+
+#[derive(Debug, Clone)]
+pub struct SetAssocCache {
+    cfg: CacheConfig,
+    lines: Vec<Line>,
+    set_bits: u32,
+    line_bits: u32,
+    clock: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub writebacks: u64,
+}
+
+impl SetAssocCache {
+    pub fn new(cfg: CacheConfig) -> SetAssocCache {
+        let sets = cfg.sets();
+        assert!(sets.is_power_of_two(), "set count must be a power of two");
+        SetAssocCache {
+            lines: vec![INVALID; (sets * cfg.ways as u64) as usize],
+            set_bits: log2_exact(sets),
+            line_bits: log2_exact(cfg.line_bytes),
+            cfg,
+            clock: 0,
+            hits: 0,
+            misses: 0,
+            writebacks: 0,
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, addr: u64) -> usize {
+        (((addr >> self.line_bits) & ((1 << self.set_bits) - 1)) * self.cfg.ways as u64) as usize
+    }
+
+    #[inline]
+    fn tag_of(&self, addr: u64) -> u64 {
+        addr >> (self.line_bits + self.set_bits)
+    }
+
+    #[inline]
+    fn line_addr(&self, tag: u64, set_index: u64) -> u64 {
+        (tag << (self.line_bits + self.set_bits)) | (set_index << self.line_bits)
+    }
+
+    /// Look up `addr`; a hit refreshes LRU and optionally sets dirty.
+    pub fn access(&mut self, addr: u64, write: bool) -> LookupResult {
+        self.clock += 1;
+        let base = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        for i in base..base + self.cfg.ways as usize {
+            let line = &mut self.lines[i];
+            if line.valid && line.tag == tag {
+                line.stamp = self.clock;
+                if write {
+                    line.dirty = true;
+                }
+                self.hits += 1;
+                return LookupResult::Hit(line.content);
+            }
+        }
+        self.misses += 1;
+        LookupResult::Miss
+    }
+
+    /// Peek without updating LRU or counters.
+    pub fn probe(&self, addr: u64) -> Option<DataKind> {
+        let base = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        self.lines[base..base + self.cfg.ways as usize]
+            .iter()
+            .find(|l| l.valid && l.tag == tag)
+            .map(|l| l.content)
+    }
+
+    /// Install `addr`; returns the evicted victim if one was displaced.
+    pub fn fill(&mut self, addr: u64, dirty: bool, content: DataKind) -> Option<Evicted> {
+        self.clock += 1;
+        let base = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        // Refill over an existing copy (e.g. write-allocate race) just updates.
+        let mut victim_i = base;
+        let mut victim_stamp = u64::MAX;
+        for i in base..base + self.cfg.ways as usize {
+            let line = &self.lines[i];
+            if line.valid && line.tag == tag {
+                let line = &mut self.lines[i];
+                line.stamp = self.clock;
+                line.dirty |= dirty;
+                line.content = content;
+                return None;
+            }
+            if !line.valid {
+                victim_i = i;
+                victim_stamp = 0;
+            } else if line.stamp < victim_stamp {
+                victim_i = i;
+                victim_stamp = line.stamp;
+            }
+        }
+        let set_index = ((addr >> self.line_bits) & ((1 << self.set_bits) - 1)) as u64;
+        let old = self.lines[victim_i];
+        let evicted = if old.valid {
+            if old.dirty {
+                self.writebacks += 1;
+            }
+            Some(Evicted { addr: self.line_addr(old.tag, set_index), dirty: old.dirty })
+        } else {
+            None
+        };
+        self.lines[victim_i] =
+            Line { tag, valid: true, dirty, content, stamp: self.clock };
+        evicted
+    }
+
+    /// Invalidate the line holding `addr` (twin-load retry path uses this
+    /// clflush-equivalent). Returns true if a line was dropped; dirty data
+    /// is counted as a writeback.
+    pub fn invalidate(&mut self, addr: u64) -> bool {
+        let base = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        for i in base..base + self.cfg.ways as usize {
+            let line = &mut self.lines[i];
+            if line.valid && line.tag == tag {
+                if line.dirty {
+                    self.writebacks += 1;
+                }
+                *line = INVALID;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Update the content flag of a resident line (MEC data arrival).
+    pub fn set_content(&mut self, addr: u64, content: DataKind) -> bool {
+        let base = self.set_of(addr);
+        let tag = self.tag_of(addr);
+        for i in base..base + self.cfg.ways as usize {
+            let line = &mut self.lines[i];
+            if line.valid && line.tag == tag {
+                line.content = content;
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.misses as f64 / total as f64
+        }
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> SetAssocCache {
+        // 4 sets x 2 ways x 64B = 512 B
+        SetAssocCache::new(CacheConfig { size_bytes: 512, ways: 2, line_bytes: 64 })
+    }
+
+    #[test]
+    fn miss_then_hit_after_fill() {
+        let mut c = tiny();
+        assert_eq!(c.access(0x1000, false), LookupResult::Miss);
+        assert!(c.fill(0x1000, false, DataKind::Real).is_none());
+        assert_eq!(c.access(0x1000, false), LookupResult::Hit(DataKind::Real));
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 1);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut c = tiny();
+        // Three lines mapping to set 0 (set stride = 4 sets * 64 = 256).
+        let a = 0x0000;
+        let b = 0x0400;
+        let d = 0x0800;
+        c.fill(a, false, DataKind::Real);
+        c.fill(b, false, DataKind::Real);
+        c.access(a, false); // a most recent
+        let ev = c.fill(d, false, DataKind::Real).expect("must evict");
+        assert_eq!(ev.addr, b, "b was LRU");
+        assert!(c.probe(a).is_some());
+        assert!(c.probe(b).is_none());
+    }
+
+    #[test]
+    fn dirty_eviction_reports_writeback() {
+        let mut c = tiny();
+        c.fill(0x0000, false, DataKind::Real);
+        c.access(0x0000, true); // dirty it
+        c.fill(0x0400, false, DataKind::Real);
+        let ev = c.fill(0x0800, false, DataKind::Real).unwrap();
+        assert!(ev.dirty);
+        assert_eq!(c.writebacks, 1);
+    }
+
+    #[test]
+    fn invalidate_drops_line() {
+        let mut c = tiny();
+        c.fill(0x40, false, DataKind::Fake);
+        assert!(c.invalidate(0x40));
+        assert!(!c.invalidate(0x40));
+        assert_eq!(c.access(0x40, false), LookupResult::Miss);
+    }
+
+    #[test]
+    fn content_flag_tracked() {
+        let mut c = tiny();
+        c.fill(0x80, false, DataKind::Fake);
+        assert_eq!(c.probe(0x80), Some(DataKind::Fake));
+        assert!(c.set_content(0x80, DataKind::Real));
+        assert_eq!(c.access(0x80, false), LookupResult::Hit(DataKind::Real));
+    }
+
+    #[test]
+    fn refill_existing_updates_in_place() {
+        let mut c = tiny();
+        c.fill(0xC0, false, DataKind::Fake);
+        assert!(c.fill(0xC0, true, DataKind::Real).is_none());
+        assert_eq!(c.probe(0xC0), Some(DataKind::Real));
+    }
+
+    #[test]
+    fn distinct_sets_do_not_conflict() {
+        let mut c = tiny();
+        for i in 0..4u64 {
+            c.fill(i * 64, false, DataKind::Real);
+        }
+        for i in 0..4u64 {
+            assert!(c.probe(i * 64).is_some());
+        }
+    }
+
+    #[test]
+    fn miss_rate_math() {
+        let mut c = tiny();
+        c.access(0, false);
+        c.fill(0, false, DataKind::Real);
+        c.access(0, false);
+        assert!((c.miss_rate() - 0.5).abs() < 1e-12);
+    }
+}

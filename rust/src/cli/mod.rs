@@ -1,0 +1,130 @@
+//! Minimal CLI argument parser (the vendored registry has no clap).
+//!
+//! Grammar: `binary <subcommand> [--flag value]... [--switch]... [pos]...`
+//! Flags known to take values are declared by the caller; everything
+//! else starting with `--` is a boolean switch.
+
+use std::collections::{HashMap, HashSet};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: HashSet<String>,
+}
+
+impl Args {
+    /// Parse argv (excluding the binary name). `value_flags` lists flags
+    /// that consume the next token.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        value_flags: &[&str],
+    ) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if value_flags.contains(&name) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("--{name} expects a value"))?;
+                    args.flags.insert(name.to_string(), v);
+                } else {
+                    args.switches.insert(name.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, flag: &str) -> Option<&str> {
+        self.flags.get(flag).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, flag: &str, default: &'a str) -> &'a str {
+        self.get(flag).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, flag: &str) -> Result<Option<u64>, String> {
+        match self.get(flag) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{flag}: '{v}' is not an integer")),
+        }
+    }
+
+    pub fn get_f64(&self, flag: &str) -> Result<Option<f64>, String> {
+        match self.get(flag) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{flag}: '{v}' is not a number")),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.contains(switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(
+            s.split_whitespace().map(|t| t.to_string()),
+            &["workload", "ops", "frac"],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn subcommand_flags_switches() {
+        let a = parse("run --workload gups --ops 100 --quick fig7");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("workload"), Some("gups"));
+        assert_eq!(a.get_u64("ops").unwrap(), Some(100));
+        assert!(a.has("quick"));
+        assert_eq!(a.positional, vec!["fig7"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --workload=bfs --frac=0.5");
+        assert_eq!(a.get("workload"), Some("bfs"));
+        assert_eq!(a.get_f64("frac").unwrap(), Some(0.5));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::parse(
+            vec!["run".to_string(), "--workload".to_string()],
+            &["workload"],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("run --ops abc");
+        assert!(a.get_u64("ops").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_or("workload", "gups"), "gups");
+        assert!(!a.has("quick"));
+    }
+}

@@ -1,0 +1,238 @@
+//! The PJRT fast path: batched analytic DRAM timing over trace chunks.
+//!
+//! Wide parameter sweeps don't need the full platform simulation — the
+//! paper's own §7.2 comparison is trace-driven. The coordinator chunks a
+//! workload's extended-memory access trace, ships it through the
+//! AOT-compiled JAX/Pallas `trace_latency` artifact (see
+//! `python/compile/model.py`), and post-processes the classification
+//! counts under different timing parameters. The cycle-accurate Rust
+//! simulator is the oracle this estimator is validated against
+//! (`twinload validate`).
+
+use crate::config::SystemConfig;
+use crate::memmgr::Allocator;
+use crate::runtime::{ArgValue, PjrtRuntime};
+use crate::twinload::{Mechanism, Transform};
+use crate::cpu::trace::{MicroOp, OpSource};
+use crate::workloads::{self, WorkloadKind};
+use anyhow::{anyhow, Result};
+
+/// Chunk length compiled into the artifact (model.TRACE_CHUNK).
+pub const CHUNK: usize = 16_384;
+/// Bank count compiled into the kernel (bank_scan.NUM_BANKS).
+pub const NUM_BANKS: i32 = 64;
+
+/// Latency classes compiled into the artifact, in nanoseconds
+/// (model.py LAT_*): keep in sync with python/compile/model.py.
+pub const LAT_HIT_NS: i64 = 5;
+pub const LAT_MISS_NS: i64 = 28;
+pub const LAT_CONFLICT_NS: i64 = 49;
+
+/// Classification counts for a trace.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TraceCounts {
+    pub accesses: u64,
+    pub hits: u64,
+    pub conflicts: u64,
+    /// Serial latency total at the compiled DDR3-1600 classes (ns).
+    pub total_ns: u64,
+}
+
+impl TraceCounts {
+    pub fn misses(&self) -> u64 {
+        self.accesses - self.hits - self.conflicts
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.accesses as f64
+        }
+    }
+
+    /// Re-weight the classification under different latency classes —
+    /// e.g. an increased-tRL system adds `delta` to every access and
+    /// extends the bank-hold on conflicts (§7.2).
+    pub fn estimate_ns(&self, hit: i64, miss: i64, conflict: i64) -> u64 {
+        (self.hits as i64 * hit
+            + self.misses() as i64 * miss
+            + self.conflicts as i64 * conflict) as u64
+    }
+}
+
+pub struct FastPath {
+    rt: PjrtRuntime,
+}
+
+impl FastPath {
+    /// Load the `trace_latency` artifact from `artifacts/`.
+    pub fn new(artifacts_dir: &str) -> Result<FastPath> {
+        let mut rt = PjrtRuntime::cpu()?;
+        let path = std::path::Path::new(artifacts_dir).join("trace_latency.hlo.txt");
+        if !path.exists() {
+            return Err(anyhow!(
+                "{} missing — run `make artifacts` first",
+                path.display()
+            ));
+        }
+        rt.load_hlo("trace_latency", &path)?;
+        Ok(FastPath { rt })
+    }
+
+    /// Classify a trace (length truncated to whole chunks).
+    pub fn classify(&self, bank: &[i32], row: &[i32]) -> Result<TraceCounts> {
+        assert_eq!(bank.len(), row.len());
+        let n = (bank.len() / CHUNK) * CHUNK;
+        if n == 0 {
+            return Err(anyhow!("trace shorter than one chunk ({CHUNK})"));
+        }
+        let mut counts = TraceCounts::default();
+        for c in 0..n / CHUNK {
+            let lo = c * CHUNK;
+            let hi = lo + CHUNK;
+            let outs = self.rt.execute(
+                "trace_latency",
+                &[
+                    ArgValue::i32(bank[lo..hi].to_vec(), &[CHUNK as i64]),
+                    ArgValue::i32(row[lo..hi].to_vec(), &[CHUNK as i64]),
+                ],
+            )?;
+            counts.total_ns += outs[1].as_i32()?[0] as u64;
+            counts.hits += outs[2].as_i32()?[0] as u64;
+            counts.conflicts += outs[3].as_i32()?[0] as u64;
+            counts.accesses += CHUNK as u64;
+        }
+        Ok(counts)
+    }
+
+    /// Figure-15-style analytic comparison on one trace: serial DRAM
+    /// latency of twin-load (unchanged tRL, twins force conflicts —
+    /// already in the trace when synthesized with a TL mechanism) vs a
+    /// single-load system with tRL increased by `delta`.
+    pub fn twin_vs_inc_trl(
+        &self,
+        twin_counts: &TraceCounts,
+        single_counts: &TraceCounts,
+        delta_ns: i64,
+    ) -> (u64, u64) {
+        let twin = twin_counts.total_ns;
+        // Increased tRL: every access pays +delta; conflicts additionally
+        // hold the bank until the (later) data transfer completes.
+        let conflict = LAT_CONFLICT_NS + delta_ns + (delta_ns - LAT_HIT_NS).max(0);
+        let single = single_counts.estimate_ns(
+            LAT_HIT_NS + delta_ns,
+            LAT_MISS_NS + delta_ns,
+            conflict,
+        );
+        (twin, single)
+    }
+}
+
+/// Synthesize `(bank, row)` streams of the extended-channel accesses a
+/// workload generates under `mech` (whole chunks; deterministic by seed).
+pub fn synthesize_trace(
+    cfg: &SystemConfig,
+    wl: WorkloadKind,
+    mech: Mechanism,
+    chunks: usize,
+    seed: u64,
+) -> (Vec<i32>, Vec<i32>) {
+    let layout = cfg.layout;
+    let mut alloc = Allocator::new(layout, 1 << 20);
+    let sig = wl.signature();
+    let data = workloads::DataRegions::place(&mut alloc, 16 << 20, &sig);
+    // A generous op budget; we stop once enough ext accesses are seen.
+    let want = chunks * CHUNK;
+    let gen = workloads::build_with_regions(wl, data, u64::MAX / 2, seed);
+    let mut transform = Transform::new(gen, mech, layout);
+    let map = crate::dram::address::AddressMapping::new(&cfg.mec_channel_geometry(), 1);
+    let (mut banks, mut rows) = (Vec::with_capacity(want), Vec::with_capacity(want));
+    while banks.len() < want {
+        match transform.next_op() {
+            Some(MicroOp::Mem(m)) => {
+                if m.vaddr >= layout.ext_base() {
+                    let off = layout.ext_channel_offset(m.vaddr) % map.capacity();
+                    let d = map.decode(off);
+                    banks.push((d.flat_bank(map.banks_per_rank()) as i32) % NUM_BANKS);
+                    rows.push(d.row as i32);
+                }
+            }
+            Some(_) => {}
+            None => break,
+        }
+    }
+    banks.truncate(want);
+    rows.truncate(want);
+    (banks, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> Option<FastPath> {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        FastPath::new(dir).ok()
+    }
+
+    #[test]
+    fn synthesized_trace_shape() {
+        let cfg = SystemConfig::tl_ooo();
+        let (b, r) = synthesize_trace(&cfg, WorkloadKind::Gups, Mechanism::TlOoO, 1, 7);
+        assert_eq!(b.len(), CHUNK);
+        assert_eq!(r.len(), CHUNK);
+        assert!(b.iter().all(|&x| (0..NUM_BANKS).contains(&x)));
+        assert!(r.iter().all(|&x| x >= 0));
+    }
+
+    #[test]
+    fn classify_counts_consistent() {
+        let Some(fp) = fast() else {
+            eprintln!("artifacts missing; skipping");
+            return;
+        };
+        let cfg = SystemConfig::tl_ooo();
+        let (b, r) = synthesize_trace(&cfg, WorkloadKind::Gups, Mechanism::TlOoO, 1, 7);
+        let c = fp.classify(&b, &r).unwrap();
+        assert_eq!(c.accesses, CHUNK as u64);
+        assert_eq!(c.hits + c.conflicts + c.misses(), c.accesses);
+        let expect = c.estimate_ns(LAT_HIT_NS, LAT_MISS_NS, LAT_CONFLICT_NS);
+        assert_eq!(c.total_ns, expect, "summary vs re-weighting mismatch");
+    }
+
+    #[test]
+    fn twin_traces_conflict_more_than_single() {
+        let Some(fp) = fast() else {
+            return;
+        };
+        let cfg = SystemConfig::tl_ooo();
+        let (tb, tr) = synthesize_trace(&cfg, WorkloadKind::Gups, Mechanism::TlOoO, 1, 7);
+        let (sb, sr) = synthesize_trace(&cfg, WorkloadKind::Gups, Mechanism::Ideal, 1, 7);
+        let twin = fp.classify(&tb, &tr).unwrap();
+        let single = fp.classify(&sb, &sr).unwrap();
+        // Twins to the same bank/different row force conflicts.
+        assert!(
+            twin.conflicts as f64 / twin.accesses as f64
+                > single.conflicts as f64 / single.accesses as f64
+        );
+    }
+
+    #[test]
+    fn inc_trl_crossover_shape() {
+        // At +0ns a single load beats twin-load; at large deltas the
+        // bank-holding makes it lose — the Figure 15 crossover.
+        let Some(fp) = fast() else {
+            return;
+        };
+        let cfg = SystemConfig::tl_ooo();
+        let (tb, tr) = synthesize_trace(&cfg, WorkloadKind::Gups, Mechanism::TlOoO, 1, 7);
+        let (sb, sr) = synthesize_trace(&cfg, WorkloadKind::Gups, Mechanism::Ideal, 1, 7);
+        let twin = fp.classify(&tb, &tr).unwrap();
+        let single = fp.classify(&sb, &sr).unwrap();
+        let (t0, s0) = fp.twin_vs_inc_trl(&twin, &single, 0);
+        let (t135, s135) = fp.twin_vs_inc_trl(&twin, &single, 135);
+        assert!(s0 < t0, "at +0ns single-load must win: {s0} vs {t0}");
+        assert!(s135 > t135, "at +135ns twin-load must win: {s135} vs {t135}");
+    }
+}

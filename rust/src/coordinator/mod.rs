@@ -1,0 +1,19 @@
+//! Experiment coordinator: the L3 orchestration layer.
+//!
+//! * [`runner`] — parallel fan-out of (system, workload) simulation jobs
+//!   across OS threads (no tokio in the vendored registry; std::thread
+//!   scoped parallelism is all this needs).
+//! * [`experiments`] — one entry point per paper table/figure; each runs
+//!   the required simulations and renders the same rows/series the paper
+//!   reports. The benches and the `twinload repro` subcommand are thin
+//!   wrappers over these.
+//! * [`fastpath`] — the PJRT-accelerated analytic timing model: trace
+//!   chunks are batched through the AOT-compiled JAX/Pallas artifact for
+//!   wide sweeps, cross-validated against the cycle-accurate simulator.
+
+pub mod experiments;
+pub mod fastpath;
+pub mod runner;
+
+pub use experiments::Scale;
+pub use runner::run_parallel;

@@ -1,0 +1,79 @@
+//! Parallel simulation fan-out.
+
+use crate::config::{RunSpec, SystemConfig};
+use crate::sim::{run_spec, SimReport};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run every (system, spec) job, work-stealing across `threads` OS
+/// threads; results are returned in job order. Panics in workers are
+/// propagated.
+pub fn run_parallel(jobs: &[(SystemConfig, RunSpec)], threads: usize) -> Vec<SimReport> {
+    let threads = threads.max(1).min(jobs.len().max(1));
+    let next = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<SimReport>>> = Mutex::new(vec![None; jobs.len()]);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let (cfg, spec) = &jobs[i];
+                let report = run_spec(cfg, spec);
+                results.lock().unwrap()[i] = Some(report);
+            });
+        }
+    });
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("job not completed"))
+        .collect()
+}
+
+/// Default parallelism: physical cores minus one, at least one.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get().saturating_sub(1)).unwrap_or(1).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::WorkloadKind;
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+        spec.ops_per_core = 2_000;
+        let mut cfg = SystemConfig::ideal();
+        cfg.cores = 2;
+        let jobs: Vec<(SystemConfig, RunSpec)> =
+            (0..4).map(|_| (cfg.clone(), spec)).collect();
+        let par = run_parallel(&jobs, 4);
+        let serial: Vec<_> = jobs.iter().map(|(c, s)| crate::sim::run_spec(c, s)).collect();
+        for (p, s) in par.iter().zip(&serial) {
+            assert_eq!(p.finish, s.finish, "parallel result differs from serial");
+            assert_eq!(p.retired_insts, s.retired_insts);
+        }
+    }
+
+    #[test]
+    fn preserves_job_order() {
+        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+        spec.ops_per_core = 500;
+        let mut jobs = Vec::new();
+        for kind in [WorkloadKind::Gups, WorkloadKind::Cg, WorkloadKind::Bfs] {
+            let mut s = spec;
+            s.workload = kind;
+            let mut c = SystemConfig::ideal();
+            c.cores = 1;
+            jobs.push((c, s));
+        }
+        let out = run_parallel(&jobs, 2);
+        assert_eq!(out[0].workload, "gups");
+        assert_eq!(out[1].workload, "cg");
+        assert_eq!(out[2].workload, "bfs");
+    }
+}

@@ -1,0 +1,206 @@
+//! Cost / TCO model (paper §7.1, Table 5, Figure 14).
+//!
+//! Components and assumptions follow the paper exactly: three-year
+//! amortization, server power at 8 % of TCO for mid-end servers, "other
+//! costs" (capital + opex) from Barroso & Hölzle, Intel/Amazon list
+//! prices circa 2014. The model reproduces the paper's two headline
+//! claims analytically: TL beats NUMA on perf/$ by ≈7 %, and beats
+//! Cluster whenever parallel efficiency is below ≈60 %.
+
+use crate::stats::Table;
+
+/// One system's bill of materials (per-year costs in dollars).
+#[derive(Debug, Clone, Copy)]
+pub struct SystemCost {
+    pub name: &'static str,
+    pub processors: f64,
+    pub memory: f64,
+    pub motherboard_disk: f64,
+    pub mec: f64,
+    pub power: f64,
+    pub other: f64,
+    /// Peak speedup factor relative to baseline (×x for doubled memory).
+    pub potential_speedup: f64,
+    /// Correction factor c (mechanism overhead; §7.1 performance model).
+    pub correction: f64,
+}
+
+impl SystemCost {
+    pub fn total(&self) -> f64 {
+        self.processors + self.memory + self.motherboard_disk + self.mec + self.power + self.other
+    }
+
+    /// Performance per dollar in units of `x/$` (the paper's Figure 14
+    /// y-axis before normalization). `efficiency` scales mechanisms that
+    /// depend on parallelization quality (NUMA c₂ / Cluster c).
+    pub fn perf_per_dollar(&self, efficiency: f64) -> f64 {
+        self.potential_speedup * self.correction * efficiency / self.total()
+    }
+}
+
+/// Paper Table 5 constants (three-year amortization where marked).
+pub mod prices {
+    pub const XEON_E5_2650V2: f64 = 1166.0;
+    pub const XEON_E5_4650V2: f64 = 3616.0;
+    pub const RDIMM_16GB: f64 = 175.0;
+    pub const MOTHERBOARD_DISK: f64 = 1000.0;
+    pub const MEC: f64 = 100.0;
+    pub const SERVER_POWER: f64 = 252.0;
+    pub const OTHER: f64 = 1325.0;
+    pub const YEARS: f64 = 3.0;
+}
+
+/// The four Table-5 systems. `x` is the memory-doubling speedup factor
+/// (cancels in relative comparisons; kept explicit for absolute output).
+pub fn table5_systems() -> [SystemCost; 4] {
+    use prices::*;
+    [
+        SystemCost {
+            name: "Baseline",
+            processors: 2.0 * XEON_E5_2650V2 / YEARS,
+            memory: 8.0 * RDIMM_16GB / YEARS,
+            motherboard_disk: MOTHERBOARD_DISK / YEARS,
+            mec: 0.0,
+            power: SERVER_POWER,
+            other: OTHER,
+            potential_speedup: 1.0,
+            correction: 1.0,
+        },
+        SystemCost {
+            name: "TL-OoO",
+            processors: 2.0 * XEON_E5_2650V2 / YEARS,
+            memory: 16.0 * RDIMM_16GB / YEARS,
+            motherboard_disk: MOTHERBOARD_DISK / YEARS,
+            mec: 8.0 * MEC / YEARS,
+            power: 1.3 * SERVER_POWER,
+            other: OTHER,
+            potential_speedup: 1.0, // ×x
+            correction: 0.74,       // §6: TL-OoO at 74 % of Ideal
+        },
+        SystemCost {
+            name: "NUMA",
+            processors: 4.0 * XEON_E5_4650V2 / YEARS,
+            memory: 16.0 * RDIMM_16GB / YEARS,
+            motherboard_disk: 1.5 * MOTHERBOARD_DISK / YEARS,
+            mec: 0.0,
+            power: 1.8 * SERVER_POWER,
+            other: 1.5 * OTHER,
+            potential_speedup: 2.0, // ×2x (more processors too)
+            correction: 0.76,       // c₁; c₂ (parallel efficiency) varies
+        },
+        SystemCost {
+            name: "Cluster",
+            processors: 4.0 * XEON_E5_2650V2 / YEARS,
+            memory: 16.0 * RDIMM_16GB / YEARS,
+            motherboard_disk: 2.0 * MOTHERBOARD_DISK / YEARS,
+            mec: 0.0,
+            power: 2.0 * SERVER_POWER,
+            other: 2.0 * OTHER,
+            potential_speedup: 2.0,
+            correction: 1.0, // c = parallel efficiency, varies
+        },
+    ]
+}
+
+/// Render Table 5.
+pub fn table5() -> Table {
+    let mut t = Table::new(
+        "Table 5: Costs of various memory extension mechanisms ($/year)",
+        &["Component", "Baseline", "TL-OoO", "NUMA", "Cluster"],
+    );
+    let systems = table5_systems();
+    let row = |label: &str, f: &dyn Fn(&SystemCost) -> f64| -> Vec<String> {
+        let mut cells = vec![label.to_string()];
+        cells.extend(systems.iter().map(|s| format!("{:.0}", f(s))));
+        cells
+    };
+    t.row(&row("Processor", &|s| s.processors));
+    t.row(&row("Memory", &|s| s.memory));
+    t.row(&row("Motherboard+Disk", &|s| s.motherboard_disk));
+    t.row(&row("MEC", &|s| s.mec));
+    t.row(&row("Server power", &|s| s.power));
+    t.row(&row("Other costs", &|s| s.other));
+    t.row(&row("Total", &|s| s.total()));
+    t
+}
+
+/// Figure 14: performance-per-dollar (normalized to TL-OoO) as parallel
+/// efficiency sweeps 0→1. Returns rows of
+/// `(efficiency, tl_norm, numa_norm, cluster_norm)`.
+pub fn fig14_series(points: usize) -> Vec<(f64, f64, f64, f64)> {
+    let systems = table5_systems();
+    let tl = systems[1].perf_per_dollar(1.0);
+    (0..=points)
+        .map(|i| {
+            let eff = i as f64 / points as f64;
+            (
+                eff,
+                1.0,
+                systems[2].perf_per_dollar(eff) / tl,
+                systems[3].perf_per_dollar(eff) / tl,
+            )
+        })
+        .collect()
+}
+
+/// The crossover efficiency where Cluster matches TL (paper: ≈60 %).
+pub fn cluster_crossover() -> f64 {
+    let systems = table5_systems();
+    let tl = systems[1].perf_per_dollar(1.0);
+    // eff such that cluster(eff) == tl.
+    tl * systems[3].total() / (systems[3].potential_speedup * systems[3].correction)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_match_paper_table5() {
+        let s = table5_systems();
+        assert!((s[0].total() - 3154.0).abs() < 10.0, "baseline {}", s[0].total());
+        assert!((s[1].total() - 3963.0).abs() < 10.0, "tl {}", s[1].total());
+        assert!((s[2].total() - 8696.0).abs() < 10.0, "numa {}", s[2].total());
+        assert!((s[3].total() - 6308.0).abs() < 10.0, "cluster {}", s[3].total());
+    }
+
+    #[test]
+    fn tl_beats_numa_by_about_7_percent() {
+        let s = table5_systems();
+        let tl = s[1].perf_per_dollar(1.0);
+        let numa = s[2].perf_per_dollar(1.0); // best case for NUMA (c₂=1)
+        let advantage = tl / numa - 1.0;
+        assert!(
+            (0.04..0.10).contains(&advantage),
+            "TL vs NUMA perf/$ advantage = {advantage:.3} (paper: ≥7 %)"
+        );
+    }
+
+    #[test]
+    fn cluster_crossover_near_60_percent() {
+        let x = cluster_crossover();
+        assert!((0.55..0.65).contains(&x), "crossover {x:.3} (paper ≈0.6)");
+    }
+
+    #[test]
+    fn fig14_series_monotone_in_efficiency() {
+        let series = fig14_series(10);
+        assert_eq!(series.len(), 11);
+        for w in series.windows(2) {
+            assert!(w[1].2 >= w[0].2);
+            assert!(w[1].3 >= w[0].3);
+        }
+        // At eff=0 both parallel mechanisms deliver nothing.
+        assert_eq!(series[0].2, 0.0);
+        assert_eq!(series[0].3, 0.0);
+    }
+
+    #[test]
+    fn table5_renders() {
+        let t = table5();
+        let s = t.render();
+        assert!(s.contains("TL-OoO"));
+        assert!(s.contains("Cluster"));
+        assert_eq!(t.num_rows(), 7);
+    }
+}

@@ -1,0 +1,16 @@
+//! Trace-driven out-of-order core model.
+//!
+//! The paper's performance effects are first-order consequences of how an
+//! OoO window interacts with memory latency: twin-load adds ~64 % more
+//! instructions yet only costs ~26 % because the extra work executes in
+//! load-stall slots (Figure 8), while TL-LF's fences serialize loads and
+//! cut memory concurrency by a third (Figure 11). This module models
+//! exactly those mechanisms: a ROB-bounded window, frontend fetch
+//! throughput, dependency-gated load issue, MSHR-limited outstanding
+//! misses, load fences, and in-order retire.
+
+pub mod core;
+pub mod trace;
+
+pub use self::core::{Core, CoreParams, CoreStats, IssueResult, MemoryPort};
+pub use trace::{AccessKind, MemAccess, MicroOp, OpSource, TwinCheck};

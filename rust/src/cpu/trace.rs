@@ -1,0 +1,147 @@
+//! Micro-op stream vocabulary consumed by the core model.
+//!
+//! Workload generators emit *logical* operations (see `workloads::`);
+//! the access-mechanism transform (`twinload::protocol`) lowers them into
+//! this micro-op stream. The core never knows which mechanism produced
+//! the stream — exactly like real hardware.
+
+/// What a memory micro-op does at the memory port.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessKind {
+    /// Normal cacheable load.
+    Load,
+    /// Cacheable store (write-allocate RFO on miss).
+    Store,
+    /// Invalidate the line (clflush): twin-load retry prologue (§4.4).
+    Invalidate,
+    /// Slow-but-safe uncacheable MMIO access via the MEC exception
+    /// registers (§4.5); always returns real data.
+    SafePath,
+}
+
+/// A memory micro-op.
+#[derive(Debug, Clone, Copy)]
+pub struct MemAccess {
+    /// Virtual line address (64 B aligned by construction).
+    pub vaddr: u64,
+    pub kind: AccessKind,
+    /// Logical load index: both twins of a pair share it; dependencies
+    /// reference it.
+    pub logical: u64,
+    /// The logical index whose *value* this access needs before issuing
+    /// (pointer-chase dependence), if any.
+    pub dep_on: Option<u64>,
+    /// Twin-pair id: `Some(p)` groups the two loads of one twin-load.
+    pub pair: Option<u64>,
+    /// This op is a software retry (a second failure escalates to the
+    /// safe path instead of retrying again).
+    pub retry: bool,
+}
+
+impl MemAccess {
+    pub fn load(vaddr: u64, logical: u64) -> MemAccess {
+        MemAccess {
+            vaddr,
+            kind: AccessKind::Load,
+            logical,
+            dep_on: None,
+            pair: None,
+            retry: false,
+        }
+    }
+
+    pub fn store(vaddr: u64, logical: u64) -> MemAccess {
+        MemAccess {
+            vaddr,
+            kind: AccessKind::Store,
+            logical,
+            dep_on: None,
+            pair: None,
+            retry: false,
+        }
+    }
+
+    pub fn with_dep(mut self, dep: Option<u64>) -> MemAccess {
+        self.dep_on = dep;
+        self
+    }
+
+    pub fn with_pair(mut self, pair: u64) -> MemAccess {
+        self.pair = Some(pair);
+        self
+    }
+}
+
+/// What the core should do when a twin pair resolves (content check).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TwinCheck {
+    /// TL semantics: if *both* twins returned fake data (Table 2 state 4),
+    /// invalidate + fence + retry; a second failure takes the safe path.
+    RetryIfBothFake,
+    /// Store discipline (§3.2): the CAS that follows fails if the line
+    /// turned fake; retry the store.
+    CasStore,
+}
+
+/// One micro-op.
+#[derive(Debug, Clone, Copy)]
+pub enum MicroOp {
+    /// `n` non-memory instructions (address arithmetic, compares, the
+    /// twin-load inline-function overhead...).
+    Compute(u32),
+    /// Load fence: later loads may not issue until all earlier loads have
+    /// returned data (Intel LFENCE semantics, §3.1 TL-LF).
+    Fence,
+    Mem(MemAccess),
+}
+
+impl MicroOp {
+    /// Retired-instruction weight of this micro-op.
+    pub fn insts(&self) -> u32 {
+        match self {
+            MicroOp::Compute(n) => *n,
+            MicroOp::Fence => 1,
+            MicroOp::Mem(_) => 1,
+        }
+    }
+}
+
+/// A pull-based micro-op source (workload ∘ mechanism transform).
+pub trait OpSource {
+    fn next_op(&mut self) -> Option<MicroOp>;
+}
+
+/// Blanket impl so plain iterators (tests, replays) are sources.
+impl<I: Iterator<Item = MicroOp>> OpSource for I {
+    fn next_op(&mut self) -> Option<MicroOp> {
+        self.next()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inst_weights() {
+        assert_eq!(MicroOp::Compute(7).insts(), 7);
+        assert_eq!(MicroOp::Fence.insts(), 1);
+        assert_eq!(MicroOp::Mem(MemAccess::load(0, 0)).insts(), 1);
+    }
+
+    #[test]
+    fn builders_compose() {
+        let a = MemAccess::load(0x40, 3).with_dep(Some(2)).with_pair(9);
+        assert_eq!(a.kind, AccessKind::Load);
+        assert_eq!(a.dep_on, Some(2));
+        assert_eq!(a.pair, Some(9));
+    }
+
+    #[test]
+    fn iterator_is_source() {
+        let mut it = vec![MicroOp::Compute(1), MicroOp::Fence].into_iter();
+        assert!(matches!(it.next_op(), Some(MicroOp::Compute(1))));
+        assert!(matches!(it.next_op(), Some(MicroOp::Fence)));
+        assert!(it.next_op().is_none());
+    }
+}

@@ -1,0 +1,208 @@
+//! Physical-address ↔ DRAM-coordinate mapping.
+//!
+//! The paper's twin-load trick depends on the mapping: "memory controllers
+//! generally use the most significant bit (MSB) of the physical address in
+//! the row address, we choose it" (§4). The default layout here therefore
+//! places the row field at the top of the physical address:
+//!
+//! ```text
+//!   MSB                                              LSB
+//!   | row | rank | bank | col | channel | offset(6) |
+//! ```
+//!
+//! so that flipping the physical-address MSB flips the row MSB while
+//! keeping channel/rank/bank/col identical — exactly the property TL-OoO
+//! needs (shadow twin lands on the *same bank, different row* → forced row
+//! miss → ≈35 ns spacing between the twins).
+
+use super::timing::Geometry;
+use crate::util::log2_exact;
+
+/// Decoded DRAM coordinates of a physical address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DecodedAddr {
+    pub channel: u32,
+    pub rank: u32,
+    pub bank: u32,
+    pub row: u32,
+    /// Column in cache-line (64 B) units.
+    pub col: u32,
+}
+
+impl DecodedAddr {
+    /// Flat bank id within the channel (rank-major).
+    pub fn flat_bank(&self, banks_per_rank: u32) -> u32 {
+        self.rank * banks_per_rank + self.bank
+    }
+}
+
+/// Bit-slicing address mapping. Field widths derived from a [`Geometry`]
+/// plus a channel count; all dimensions must be powers of two.
+#[derive(Debug, Clone, Copy)]
+pub struct AddressMapping {
+    channel_bits: u32,
+    col_bits: u32,
+    bank_bits: u32,
+    rank_bits: u32,
+    row_bits: u32,
+}
+
+pub const LINE_BITS: u32 = 6; // 64-byte cache lines
+pub const LINE_BYTES: u64 = 64;
+
+impl AddressMapping {
+    pub fn new(geo: &Geometry, channels: u32) -> AddressMapping {
+        AddressMapping {
+            channel_bits: log2_exact(channels as u64),
+            col_bits: log2_exact(geo.cols_per_row as u64),
+            bank_bits: log2_exact(geo.banks_per_rank as u64),
+            rank_bits: log2_exact(geo.ranks as u64),
+            row_bits: log2_exact(geo.rows_per_bank as u64),
+        }
+    }
+
+    /// Total addressable bytes under this mapping.
+    pub fn capacity(&self) -> u64 {
+        1u64 << (self.channel_bits
+            + self.col_bits
+            + self.bank_bits
+            + self.rank_bits
+            + self.row_bits
+            + LINE_BITS)
+    }
+
+    /// Number of address bits (above which the address is out of range).
+    pub fn addr_bits(&self) -> u32 {
+        self.channel_bits + self.col_bits + self.bank_bits + self.rank_bits + self.row_bits
+            + LINE_BITS
+    }
+
+    /// The physical-address bit that is the row MSB — the bit MEC1 uses to
+    /// distinguish extended vs shadow space (§4: "we choose the MSB").
+    pub fn row_msb_bit(&self) -> u32 {
+        self.addr_bits() - 1
+    }
+
+    /// Banks per rank under this mapping.
+    pub fn banks_per_rank(&self) -> u32 {
+        1 << self.bank_bits
+    }
+
+    /// Total (rank × bank) flat banks per channel.
+    pub fn num_flat_banks(&self) -> u32 {
+        1 << (self.bank_bits + self.rank_bits)
+    }
+
+    pub fn decode(&self, addr: u64) -> DecodedAddr {
+        debug_assert!(
+            addr < self.capacity(),
+            "address {:#x} out of range (capacity {:#x})",
+            addr,
+            self.capacity()
+        );
+        let mut a = addr >> LINE_BITS;
+        let take = |a: &mut u64, bits: u32| -> u32 {
+            let v = (*a & ((1u64 << bits) - 1)) as u32;
+            *a >>= bits;
+            v
+        };
+        let mut a2 = a;
+        let channel = take(&mut a2, self.channel_bits);
+        a = a2;
+        let col = take(&mut a, self.col_bits);
+        let bank = take(&mut a, self.bank_bits);
+        let rank = take(&mut a, self.rank_bits);
+        let row = take(&mut a, self.row_bits);
+        DecodedAddr { channel, rank, bank, row, col }
+    }
+
+    pub fn encode(&self, d: &DecodedAddr) -> u64 {
+        let mut a: u64 = d.row as u64;
+        a = (a << self.rank_bits) | d.rank as u64;
+        a = (a << self.bank_bits) | d.bank as u64;
+        a = (a << self.col_bits) | d.col as u64;
+        a = (a << self.channel_bits) | d.channel as u64;
+        a << LINE_BITS
+    }
+
+    /// Flip the row-MSB of a physical address — produce the shadow twin.
+    pub fn twin(&self, addr: u64) -> u64 {
+        addr ^ (1u64 << self.row_msb_bit())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn mapping() -> AddressMapping {
+        AddressMapping::new(&Geometry::sim_small(), 2)
+    }
+
+    #[test]
+    fn roundtrip_random_addresses() {
+        let m = mapping();
+        let mut rng = Rng::new(1234);
+        for _ in 0..10_000 {
+            let addr = rng.below(m.capacity()) & !(LINE_BYTES - 1);
+            let d = m.decode(addr);
+            assert_eq!(m.encode(&d), addr, "roundtrip failed for {addr:#x}");
+        }
+    }
+
+    #[test]
+    fn twin_same_bank_different_row_msb() {
+        let m = mapping();
+        let mut rng = Rng::new(99);
+        for _ in 0..1_000 {
+            let addr = rng.below(m.capacity() / 2) & !(LINE_BYTES - 1); // in "extended" half
+            let t = m.twin(addr);
+            let d = m.decode(addr);
+            let dt = m.decode(t);
+            assert_eq!(d.channel, dt.channel);
+            assert_eq!(d.rank, dt.rank);
+            assert_eq!(d.bank, dt.bank);
+            assert_eq!(d.col, dt.col);
+            assert_ne!(d.row, dt.row, "twin must differ in row");
+            // specifically the row MSB
+            let row_msb = 1u32 << (m.row_bits - 1);
+            assert_eq!(d.row ^ dt.row, row_msb);
+        }
+    }
+
+    #[test]
+    fn twin_is_involution() {
+        let m = mapping();
+        let addr = 0x12340;
+        assert_eq!(m.twin(m.twin(addr)), addr);
+    }
+
+    #[test]
+    fn adjacent_lines_interleave_channels() {
+        let m = mapping();
+        let d0 = m.decode(0);
+        let d1 = m.decode(64);
+        assert_ne!(d0.channel, d1.channel, "line interleave across channels");
+    }
+
+    #[test]
+    fn sequential_lines_same_row_hit_friendly() {
+        // Lines 0 and 2 (same channel under 2-way interleave) should share a
+        // row — open-page locality for streaming workloads.
+        let m = mapping();
+        let d0 = m.decode(0);
+        let d2 = m.decode(128);
+        assert_eq!(d0.channel, d2.channel);
+        assert_eq!(d0.row, d2.row);
+        assert_eq!(d0.bank, d2.bank);
+        assert_eq!(d2.col, d0.col + 1);
+    }
+
+    #[test]
+    fn capacity_matches_geometry() {
+        let m = mapping();
+        let g = Geometry::sim_small();
+        assert_eq!(m.capacity(), g.capacity_bytes() * 2); // 2 channels
+    }
+}

@@ -1,0 +1,216 @@
+//! Per-bank state machine with timestamp algebra.
+
+use super::timing::TimingParams;
+use crate::util::time::Ps;
+
+/// One DRAM bank: the open row plus earliest-allowed issue times for each
+/// command class. All constraints of paper Table 1 that are *intra-bank*
+/// live here; rank- and channel-level constraints (tRRD, tFAW, tCCD, data
+/// bus) are layered on top by `rank.rs` / `channel.rs`.
+#[derive(Debug, Clone)]
+pub struct Bank {
+    open_row: Option<u32>,
+    next_act: Ps,
+    next_rd: Ps,
+    next_wr: Ps,
+    next_pre: Ps,
+    /// Counters for row-buffer locality stats.
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub row_conflicts: u64,
+}
+
+impl Bank {
+    pub fn new() -> Bank {
+        Bank {
+            open_row: None,
+            next_act: 0,
+            next_rd: 0,
+            next_wr: 0,
+            next_pre: 0,
+            row_hits: 0,
+            row_misses: 0,
+            row_conflicts: 0,
+        }
+    }
+
+    #[inline]
+    pub fn open_row(&self) -> Option<u32> {
+        self.open_row
+    }
+
+    /// Is an access to `row` a row hit right now?
+    #[inline]
+    pub fn is_hit(&self, row: u32) -> bool {
+        self.open_row == Some(row)
+    }
+
+    /// Earliest time an ACT could issue (intra-bank constraints only).
+    #[inline]
+    pub fn earliest_act(&self) -> Ps {
+        self.next_act
+    }
+
+    /// Earliest time a RD to the open row could issue.
+    #[inline]
+    pub fn earliest_rd(&self) -> Ps {
+        self.next_rd
+    }
+
+    #[inline]
+    pub fn earliest_wr(&self) -> Ps {
+        self.next_wr
+    }
+
+    #[inline]
+    pub fn earliest_pre(&self) -> Ps {
+        self.next_pre
+    }
+
+    /// Apply an ACT at `t` opening `row`.
+    pub fn do_act(&mut self, t: Ps, row: u32, p: &TimingParams) {
+        debug_assert!(t >= self.next_act, "ACT issued too early");
+        debug_assert!(self.open_row.is_none(), "ACT to an open bank");
+        self.open_row = Some(row);
+        self.next_rd = self.next_rd.max(t + p.t_rcd);
+        self.next_wr = self.next_wr.max(t + p.t_rcd);
+        self.next_pre = self.next_pre.max(t + p.t_ras);
+        self.next_act = self.next_act.max(t + p.t_rc);
+    }
+
+    /// Apply a RD at `t`; returns the time of the last data beat.
+    pub fn do_rd(&mut self, t: Ps, p: &TimingParams) -> Ps {
+        debug_assert!(t >= self.next_rd, "RD issued too early");
+        debug_assert!(self.open_row.is_some(), "RD to a closed bank");
+        self.next_pre = self.next_pre.max(t + p.t_rtp);
+        // Same-bank RD-to-RD also spaced by tCCD (rank enforces cross-bank).
+        self.next_rd = self.next_rd.max(t + p.t_ccd);
+        self.next_wr = self.next_wr.max(t + p.t_ccd);
+        t + p.t_rl + p.t_burst
+    }
+
+    /// Apply a WR at `t`; returns the time of the last data beat.
+    pub fn do_wr(&mut self, t: Ps, p: &TimingParams) -> Ps {
+        debug_assert!(t >= self.next_wr, "WR issued too early");
+        debug_assert!(self.open_row.is_some(), "WR to a closed bank");
+        let data_end = t + p.t_wl + p.t_burst;
+        self.next_pre = self.next_pre.max(data_end + p.t_wr);
+        self.next_rd = self.next_rd.max(t + p.t_ccd);
+        self.next_wr = self.next_wr.max(t + p.t_ccd);
+        data_end
+    }
+
+    /// Apply a PRE at `t`.
+    pub fn do_pre(&mut self, t: Ps, p: &TimingParams) {
+        debug_assert!(t >= self.next_pre, "PRE issued too early");
+        self.open_row = None;
+        self.next_act = self.next_act.max(t + p.t_rp);
+    }
+
+    /// Force-close for refresh: bank unusable until `until`.
+    pub fn block_until(&mut self, until: Ps) {
+        self.open_row = None;
+        self.next_act = self.next_act.max(until);
+        self.next_rd = self.next_rd.max(until);
+        self.next_wr = self.next_wr.max(until);
+        self.next_pre = self.next_pre.max(until);
+    }
+}
+
+impl Default for Bank {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::time::NS;
+
+    fn p() -> TimingParams {
+        TimingParams::ddr3_1600()
+    }
+
+    #[test]
+    fn closed_access_sequence() {
+        let p = p();
+        let mut b = Bank::new();
+        assert!(!b.is_hit(5));
+        b.do_act(0, 5, &p);
+        assert!(b.is_hit(5));
+        assert_eq!(b.earliest_rd(), p.t_rcd);
+        let data_end = b.do_rd(p.t_rcd, &p);
+        assert_eq!(data_end, p.t_rcd + p.t_rl + p.t_burst);
+    }
+
+    #[test]
+    fn row_miss_turnaround_is_35ns_path() {
+        // RD @ t, then PRE no earlier than t+tRTP, ACT no earlier than
+        // +tRP, next RD no earlier than +tRCD: total 35 ns after the RD.
+        let p = p();
+        let mut b = Bank::new();
+        b.do_act(0, 1, &p);
+        let t_rd = b.earliest_rd();
+        b.do_rd(t_rd, &p);
+        let t_pre = b.earliest_pre().max(t_rd + p.t_rtp);
+        assert_eq!(t_pre, p.t_ras.max(t_rd + p.t_rtp)); // tRAS also binds early
+        b.do_pre(t_pre, &p);
+        let t_act = b.earliest_act();
+        assert!(t_act >= t_pre + p.t_rp);
+        b.do_act(t_act, 2, &p);
+        let t_rd2 = b.earliest_rd();
+        assert!(t_rd2 >= t_act + p.t_rcd);
+        // For a late-enough first RD (tRAS satisfied), spacing is exactly 35 ns.
+        let mut b2 = Bank::new();
+        b2.do_act(0, 1, &p);
+        let first_rd = 40 * NS; // beyond tRAS so tRTP is the binding PRE constraint
+        b2.do_rd(first_rd, &p);
+        let pre = first_rd + p.t_rtp;
+        b2.do_pre(pre, &p);
+        let act = pre + p.t_rp;
+        b2.do_act(act, 2, &p);
+        let rd2 = act + p.t_rcd;
+        assert_eq!(rd2 - first_rd, p.row_miss_turnaround());
+        assert_eq!(rd2 - first_rd, 35 * NS);
+    }
+
+    #[test]
+    fn back_to_back_row_hits_spaced_by_tccd() {
+        let p = p();
+        let mut b = Bank::new();
+        b.do_act(0, 7, &p);
+        let t1 = b.earliest_rd();
+        b.do_rd(t1, &p);
+        let t2 = b.earliest_rd();
+        assert_eq!(t2 - t1, p.t_ccd);
+    }
+
+    #[test]
+    fn write_recovery_delays_precharge() {
+        let p = p();
+        let mut b = Bank::new();
+        b.do_act(0, 3, &p);
+        let t_wr = b.earliest_wr();
+        let data_end = b.do_wr(t_wr, &p);
+        assert!(b.earliest_pre() >= data_end + p.t_wr);
+    }
+
+    #[test]
+    fn refresh_blocks_bank() {
+        let p = p();
+        let mut b = Bank::new();
+        b.do_act(0, 3, &p);
+        b.block_until(500 * NS);
+        assert_eq!(b.open_row(), None);
+        assert!(b.earliest_act() >= 500 * NS);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rd_to_closed_bank_panics_in_debug() {
+        let p = p();
+        let mut b = Bank::new();
+        b.do_rd(100, &p);
+    }
+}

@@ -1,0 +1,78 @@
+//! DRAM command vocabulary (paper Figure 1).
+
+use crate::util::time::Ps;
+
+/// Command kinds on the DDRx command bus.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CommandKind {
+    /// Open a row into the bank's sense amplifiers.
+    Act,
+    /// Column read from the open row.
+    Rd,
+    /// Column write to the open row.
+    Wr,
+    /// Close (precharge) the bank.
+    Pre,
+    /// Refresh (modeled per rank).
+    Ref,
+}
+
+/// A timestamped command to a specific (rank, bank, row, col).
+///
+/// The MEC model consumes these to maintain its Bank State Table exactly the
+/// way §4.3 describes: ACT carries the row address; RD/WR carry only the
+/// column, so the MEC must reconstruct `<row, column, bank>` via the BST.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Command {
+    pub kind: CommandKind,
+    pub rank: u32,
+    pub bank: u32,
+    /// Row address: meaningful for `Act` (and kept for debugging on others).
+    pub row: u32,
+    /// Column address: meaningful for `Rd`/`Wr`.
+    pub col: u32,
+    /// Issue time on the command bus.
+    pub at: Ps,
+}
+
+impl Command {
+    pub fn act(rank: u32, bank: u32, row: u32, at: Ps) -> Command {
+        Command { kind: CommandKind::Act, rank, bank, row, col: 0, at }
+    }
+
+    pub fn rd(rank: u32, bank: u32, col: u32, at: Ps) -> Command {
+        Command { kind: CommandKind::Rd, rank, bank, row: 0, col, at }
+    }
+
+    pub fn wr(rank: u32, bank: u32, col: u32, at: Ps) -> Command {
+        Command { kind: CommandKind::Wr, rank, bank, row: 0, col, at }
+    }
+
+    pub fn pre(rank: u32, bank: u32, at: Ps) -> Command {
+        Command { kind: CommandKind::Pre, rank, bank, row: 0, col: 0, at }
+    }
+
+    /// Global bank index within a channel (rank-major).
+    pub fn flat_bank(&self, banks_per_rank: u32) -> u32 {
+        self.rank * banks_per_rank + self.bank
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_set_kind() {
+        assert_eq!(Command::act(0, 1, 2, 3).kind, CommandKind::Act);
+        assert_eq!(Command::rd(0, 1, 2, 3).kind, CommandKind::Rd);
+        assert_eq!(Command::wr(0, 1, 2, 3).kind, CommandKind::Wr);
+        assert_eq!(Command::pre(0, 1, 3).kind, CommandKind::Pre);
+    }
+
+    #[test]
+    fn flat_bank_rank_major() {
+        let c = Command::rd(1, 3, 0, 0);
+        assert_eq!(c.flat_bank(8), 11);
+    }
+}

@@ -1,0 +1,455 @@
+//! FR-FCFS memory controller over one channel.
+//!
+//! Transaction-granularity scheduling with exact command timestamps:
+//! when the controller commits to servicing a transaction it walks the
+//! PRE?/ACT?/RD|WR command sequence through the bank/rank/channel algebra,
+//! claiming the command and data buses at each step. First-Ready FCFS:
+//! row hits are prioritized over misses, ties broken by arrival order —
+//! the policy commodity controllers implement and the one that produces
+//! the twin-load row-miss spacing the paper relies on.
+
+use super::address::DecodedAddr;
+use super::channel::Channel;
+use super::command::Command;
+use super::timing::{Geometry, TimingParams};
+use crate::util::time::Ps;
+
+/// A read or write request at the controller.
+#[derive(Debug, Clone, Copy)]
+pub struct Transaction {
+    pub id: u64,
+    pub addr: DecodedAddr,
+    pub is_write: bool,
+    pub arrive: Ps,
+}
+
+/// Outcome of servicing one transaction.
+#[derive(Debug, Clone)]
+pub struct ServiceResult {
+    pub id: u64,
+    pub is_write: bool,
+    pub addr: DecodedAddr,
+    /// Column command (RD/WR) issue time.
+    pub col_cmd_at: Ps,
+    /// First / last data beat times.
+    pub data_start: Ps,
+    pub data_end: Ps,
+    pub row_hit: bool,
+    /// Full command sequence issued — consumed by the MEC model, which
+    /// observes the DDR bus exactly as §4.3 describes (BST from ACTs,
+    /// address reconstruction on RDs).
+    pub commands: Vec<Command>,
+}
+
+/// Per-controller statistics.
+#[derive(Debug, Default, Clone)]
+pub struct CtrlStats {
+    pub reads: u64,
+    pub writes: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub row_conflicts: u64,
+    pub read_bytes: u64,
+    pub write_bytes: u64,
+    pub queue_peak: usize,
+}
+
+/// Write-queue drain thresholds.
+const WQ_HIGH: usize = 32;
+const WQ_LOW: usize = 8;
+/// Read queue capacity (admission control / backpressure signal).
+pub const RQ_CAP: usize = 64;
+
+#[derive(Debug, Clone)]
+pub struct MemController {
+    p: TimingParams,
+    geo: Geometry,
+    channel: Channel,
+    reads: Vec<Transaction>,
+    writes: Vec<Transaction>,
+    draining: bool,
+    pub stats: CtrlStats,
+}
+
+impl MemController {
+    pub fn new(p: TimingParams, geo: Geometry) -> MemController {
+        MemController {
+            channel: Channel::new(&geo, &p),
+            p,
+            geo,
+            reads: Vec::with_capacity(RQ_CAP),
+            writes: Vec::with_capacity(WQ_HIGH + 4),
+            draining: false,
+            stats: CtrlStats::default(),
+        }
+    }
+
+    pub fn timing(&self) -> &TimingParams {
+        &self.p
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.reads.len() + self.writes.len()
+    }
+
+    pub fn has_room(&self) -> bool {
+        self.reads.len() < RQ_CAP
+    }
+
+    pub fn enqueue(&mut self, t: Transaction) {
+        if t.is_write {
+            self.writes.push(t);
+        } else {
+            self.reads.push(t);
+        }
+        self.stats.queue_peak = self.stats.queue_peak.max(self.queue_len());
+    }
+
+    /// Earliest time the *first* command of `t` could issue, plus whether
+    /// it would be a row hit, given current bank state.
+    fn first_cmd_time(&self, t: &Transaction) -> (Ps, bool) {
+        let rank = &self.channel.ranks[t.addr.rank as usize];
+        let bank = &rank.banks[t.addr.bank as usize];
+        let base = t.arrive;
+        match bank.open_row() {
+            Some(r) if r == t.addr.row => {
+                let col = if t.is_write {
+                    rank.earliest_wr(t.addr.bank)
+                } else {
+                    rank.earliest_rd(t.addr.bank)
+                };
+                (self.channel.earliest_cmd(col.max(base)), true)
+            }
+            Some(_) => {
+                let pre = bank.earliest_pre();
+                (self.channel.earliest_cmd(pre.max(base)), false)
+            }
+            None => {
+                let act = rank.earliest_act(t.addr.bank, &self.p);
+                (self.channel.earliest_cmd(act.max(base)), false)
+            }
+        }
+    }
+
+    /// Service one chosen transaction: walk its command sequence through
+    /// the algebra and return the timed result.
+    fn service(&mut self, t: Transaction) -> ServiceResult {
+        let (rank_i, bank_i, row) = (t.addr.rank, t.addr.bank, t.addr.row);
+        let mut commands = Vec::with_capacity(3);
+        let p = self.p;
+
+        // 1. PRE if a different row is open (row conflict).
+        let open = self.channel.ranks[rank_i as usize].open_row(bank_i);
+        let row_hit = open == Some(row);
+        if let Some(r) = open {
+            if r != row {
+                let pre_t = {
+                    let rank = &self.channel.ranks[rank_i as usize];
+                    self.channel
+                        .earliest_cmd(rank.banks[bank_i as usize].earliest_pre().max(t.arrive))
+                };
+                self.channel.claim_cmd(pre_t, &p);
+                self.channel.ranks[rank_i as usize].do_pre(pre_t, bank_i, &p);
+                commands.push(Command::pre(rank_i, bank_i, pre_t));
+                self.stats.row_conflicts += 1;
+                self.channel.ranks[rank_i as usize].banks[bank_i as usize].row_conflicts += 1;
+            }
+        }
+
+        // 2. ACT if the bank is (now) closed.
+        if self.channel.ranks[rank_i as usize].open_row(bank_i).is_none() {
+            let act_t = {
+                let rank = &self.channel.ranks[rank_i as usize];
+                self.channel.earliest_cmd(rank.earliest_act(bank_i, &p).max(t.arrive))
+            };
+            self.channel.claim_cmd(act_t, &p);
+            self.channel.ranks[rank_i as usize].do_act(act_t, bank_i, row, &p);
+            commands.push(Command::act(rank_i, bank_i, row, act_t));
+            if !row_hit {
+                self.stats.row_misses += 1;
+                self.channel.ranks[rank_i as usize].banks[bank_i as usize].row_misses += 1;
+            }
+        } else if row_hit {
+            self.stats.row_hits += 1;
+            self.channel.ranks[rank_i as usize].banks[bank_i as usize].row_hits += 1;
+        }
+
+        // 3. Column command; align with both command-bus and data-bus slots.
+        let lat = if t.is_write { p.t_wl } else { p.t_rl };
+        let col_t = {
+            let rank = &self.channel.ranks[rank_i as usize];
+            let ready = if t.is_write {
+                rank.earliest_wr(bank_i)
+            } else {
+                rank.earliest_rd(bank_i)
+            }
+            .max(t.arrive);
+            // Data burst starts `lat` after the column command: back-solve
+            // so the data bus is free when the burst arrives.
+            let mut ct = self.channel.earliest_cmd(ready);
+            loop {
+                let want_data = ct + lat;
+                let data_ok = self.channel.earliest_data(want_data, rank_i, &p);
+                if data_ok == want_data {
+                    break;
+                }
+                ct = self.channel.earliest_cmd(data_ok - lat);
+            }
+            ct
+        };
+        self.channel.claim_cmd(col_t, &p);
+        let data_end = if t.is_write {
+            self.channel.ranks[rank_i as usize].do_wr(col_t, bank_i, &p)
+        } else {
+            self.channel.ranks[rank_i as usize].do_rd(col_t, bank_i, &p)
+        };
+        let data_start = col_t + lat;
+        self.channel.claim_data(data_start, rank_i, &p);
+        commands.push(if t.is_write {
+            Command::wr(rank_i, bank_i, t.addr.col, col_t)
+        } else {
+            Command::rd(rank_i, bank_i, t.addr.col, col_t)
+        });
+
+        if t.is_write {
+            self.stats.writes += 1;
+            self.stats.write_bytes += 64;
+        } else {
+            self.stats.reads += 1;
+            self.stats.read_bytes += 64;
+        }
+
+        ServiceResult {
+            id: t.id,
+            is_write: t.is_write,
+            addr: t.addr,
+            col_cmd_at: col_t,
+            data_start,
+            data_end,
+            row_hit,
+            commands,
+        }
+    }
+
+    /// Advance the controller to `now`: run refreshes, service everything
+    /// that is first-ready, and report `(results, next_wake)`.
+    ///
+    /// `next_wake` is `Some(t)` when work remains that becomes ready at `t`.
+    pub fn pump(&mut self, now: Ps) -> (Vec<ServiceResult>, Option<Ps>) {
+        let mut out = Vec::new();
+        // Catch up on refreshes (loop: long idle periods may owe several).
+        while self.channel.maybe_refresh(now, &self.p).is_some() {}
+
+        loop {
+            // Enter/leave write-drain mode.
+            if self.writes.len() >= WQ_HIGH || (self.reads.is_empty() && !self.writes.is_empty()) {
+                self.draining = true;
+            }
+            if self.writes.len() <= WQ_LOW && !self.reads.is_empty() {
+                self.draining = false;
+            }
+
+            // Candidate pool: reads normally; writes when draining.
+            let pool: &Vec<Transaction> =
+                if self.draining && !self.writes.is_empty() { &self.writes } else { &self.reads };
+            if pool.is_empty() {
+                let wake = if self.writes.is_empty() && self.reads.is_empty() {
+                    None
+                } else {
+                    // The other queue has work (e.g. reads while draining off).
+                    let other = if self.draining { &self.reads } else { &self.writes };
+                    other.iter().map(|t| self.first_cmd_time(t).0).min()
+                };
+                return (out, wake);
+            }
+
+            // FR-FCFS pick among candidates ready at `now`; ties on
+            // arrival break by transaction id so the outcome does not
+            // depend on queue layout (swap_remove shuffles positions).
+            let mut best: Option<(usize, bool, Ps, u64)> = None; // (idx, hit, arrive, id)
+            let mut min_ready = Ps::MAX;
+            for (i, t) in pool.iter().enumerate() {
+                let (ready, hit) = self.first_cmd_time(t);
+                min_ready = min_ready.min(ready);
+                if ready > now {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some((_, bhit, barr, bid)) => {
+                        (hit && !bhit)
+                            || (hit == bhit
+                                && (t.arrive, t.id) < (barr, bid))
+                    }
+                };
+                if better {
+                    best = Some((i, hit, t.arrive, t.id));
+                }
+            }
+
+            match best {
+                Some((i, _, _, _)) => {
+                    // swap_remove is safe: FR-FCFS selects by (row-hit,
+                    // arrival time), never by queue position.
+                    let t = if self.draining && !self.writes.is_empty() {
+                        self.writes.swap_remove(i)
+                    } else {
+                        self.reads.swap_remove(i)
+                    };
+                    out.push(self.service(t));
+                }
+                None => {
+                    return (out, if min_ready == Ps::MAX { None } else { Some(min_ready) });
+                }
+            }
+        }
+    }
+
+    /// Read row-buffer hit rate so far.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.stats.row_hits + self.stats.row_misses + self.stats.row_conflicts;
+        if total == 0 {
+            0.0
+        } else {
+            self.stats.row_hits as f64 / total as f64
+        }
+    }
+
+    pub fn geometry(&self) -> &Geometry {
+        &self.geo
+    }
+
+    pub fn data_utilization(&self, now: Ps) -> f64 {
+        self.channel.data_utilization(now, &self.p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::command::CommandKind;
+    use crate::dram::address::AddressMapping;
+    use crate::util::time::NS;
+
+    fn ctrl() -> (MemController, AddressMapping) {
+        let geo = Geometry::sim_small();
+        (MemController::new(TimingParams::ddr3_1600(), geo), AddressMapping::new(&geo, 1))
+    }
+
+    fn read_to(map: &AddressMapping, id: u64, row: u32, col: u32, bank: u32, arrive: Ps) -> Transaction {
+        let addr = DecodedAddr { channel: 0, rank: 0, bank, row, col };
+        let _ = map;
+        Transaction { id, addr, is_write: false, arrive }
+    }
+
+    #[test]
+    fn single_read_closed_bank_latency() {
+        let (mut c, m) = ctrl();
+        c.enqueue(read_to(&m, 1, 5, 0, 0, 0));
+        let (res, wake) = c.pump(0);
+        assert_eq!(res.len(), 1);
+        let r = &res[0];
+        assert!(!r.row_hit);
+        // ACT@0, RD@tRCD, data ends at tRCD+tRL+tBURST.
+        let p = TimingParams::ddr3_1600();
+        assert_eq!(r.data_end, p.closed_access());
+        assert!(wake.is_none());
+    }
+
+    #[test]
+    fn row_hit_prioritized_over_older_miss() {
+        let (mut c, m) = ctrl();
+        // Open row 1 on bank 0.
+        c.enqueue(read_to(&m, 1, 1, 0, 0, 0));
+        let _ = c.pump(0);
+        // Older request misses (row 2), newer hits (row 1): FR-FCFS serves
+        // the hit first.
+        c.enqueue(read_to(&m, 2, 2, 0, 0, 10));
+        c.enqueue(read_to(&m, 3, 1, 1, 0, 11));
+        let (res, _) = c.pump(200 * NS);
+        let order: Vec<u64> = res.iter().map(|r| r.id).collect();
+        assert_eq!(order, vec![3, 2]);
+        assert!(res[0].row_hit && !res[1].row_hit);
+    }
+
+    #[test]
+    fn twin_pair_forced_row_miss_spacing() {
+        // The twin-load core property: two loads to the same bank but rows
+        // differing in the MSB are spaced by >= 35 ns at the column command.
+        let (mut c, m) = ctrl();
+        let row = 0x0123;
+        let twin_row = row | (1 << 9); // MSB of sim_small's 10-bit row space
+        c.enqueue(read_to(&m, 1, row, 7, 3, 0));
+        c.enqueue(read_to(&m, 2, twin_row, 7, 3, 0));
+        let (res, _) = c.pump(1_000 * NS);
+        assert_eq!(res.len(), 2);
+        let gap = res[1].col_cmd_at - res[0].col_cmd_at;
+        assert!(
+            gap >= TimingParams::ddr3_1600().row_miss_turnaround(),
+            "twin spacing {gap} < 35ns"
+        );
+    }
+
+    #[test]
+    fn bank_parallel_reads_overlap() {
+        let (mut c, m) = ctrl();
+        c.enqueue(read_to(&m, 1, 1, 0, 0, 0));
+        c.enqueue(read_to(&m, 2, 1, 0, 1, 0));
+        let (res, _) = c.pump(1_000 * NS);
+        let p = TimingParams::ddr3_1600();
+        // Both finish well before 2x the serial closed-access latency.
+        let last = res.iter().map(|r| r.data_end).max().unwrap();
+        assert!(last < 2 * p.closed_access(), "no bank overlap: {last}");
+    }
+
+    #[test]
+    fn writes_drain_when_no_reads() {
+        let (mut c, m) = ctrl();
+        let mut t = read_to(&m, 1, 3, 0, 0, 0);
+        t.is_write = true;
+        c.enqueue(t);
+        let (res, _) = c.pump(0);
+        assert_eq!(res.len(), 1);
+        assert!(res[0].is_write);
+        assert_eq!(c.stats.writes, 1);
+    }
+
+    #[test]
+    fn not_ready_returns_wake_time() {
+        let (mut c, m) = ctrl();
+        c.enqueue(read_to(&m, 1, 1, 0, 0, 0));
+        let _ = c.pump(0);
+        // Conflict on same bank: PRE can't go until tRAS; pumping at t=1
+        // must return a wake time instead of servicing.
+        c.enqueue(read_to(&m, 2, 9, 0, 0, 1));
+        let (res, wake) = c.pump(1);
+        assert!(res.is_empty());
+        let w = wake.expect("needs wake");
+        assert!(w >= TimingParams::ddr3_1600().t_ras);
+    }
+
+    #[test]
+    fn commands_stream_observable() {
+        let (mut c, m) = ctrl();
+        c.enqueue(read_to(&m, 1, 4, 2, 1, 0));
+        let (res, _) = c.pump(0);
+        let cmds = &res[0].commands;
+        assert_eq!(cmds.len(), 2);
+        assert_eq!(cmds[0].kind, CommandKind::Act);
+        assert_eq!(cmds[0].row, 4);
+        assert_eq!(cmds[1].kind, CommandKind::Rd);
+        assert_eq!(cmds[1].col, 2);
+        assert!(cmds[0].at < cmds[1].at);
+    }
+
+    #[test]
+    fn hit_rate_tracks() {
+        let (mut c, m) = ctrl();
+        c.enqueue(read_to(&m, 1, 1, 0, 0, 0));
+        c.enqueue(read_to(&m, 2, 1, 1, 0, 0));
+        c.enqueue(read_to(&m, 3, 1, 2, 0, 0));
+        let _ = c.pump(1_000 * NS);
+        // First is a miss, next two are hits.
+        assert!((c.hit_rate() - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

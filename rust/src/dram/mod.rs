@@ -1,0 +1,30 @@
+//! Cycle-level (timestamp-algebra) DDRx DRAM model.
+//!
+//! This is the substrate the paper reasons over (its Table 1 / Figure 1):
+//! JEDEC DDR3-style banks with ACT / RD / WR / PRE commands and the
+//! inter-command constraints tRCD, tRL(tCL), tCCD, tRTP, tRP, tRAS, tRC,
+//! tFAW, tRRD, tWR, tWTR, plus refresh. Instead of stepping every DRAM
+//! clock, each component tracks *earliest-allowed timestamps* per command
+//! class ("timestamp algebra", the approach fast simulators like Ramulator
+//! use); command interleaving across banks and data-bus serialization are
+//! modeled exactly, at transaction granularity.
+//!
+//! The same model instance serves three roles in the reproduction:
+//! * the host memory controller's view of **logical** banks (what MEC1's
+//!   fake SPD advertises — this is where the twin-load row-miss delay
+//!   comes from),
+//! * the **leaf DRAM** behind the deepest MECs,
+//! * the local-memory channels of every baseline system.
+
+pub mod address;
+pub mod bank;
+pub mod channel;
+pub mod command;
+pub mod controller;
+pub mod rank;
+pub mod timing;
+
+pub use address::{AddressMapping, DecodedAddr};
+pub use command::{Command, CommandKind};
+pub use controller::{MemController, ServiceResult, Transaction};
+pub use timing::TimingParams;

@@ -1,0 +1,177 @@
+//! Rank-level constraints: tRRD, tFAW, read/write turnaround, refresh.
+
+use super::bank::Bank;
+use super::timing::TimingParams;
+use crate::util::time::Ps;
+
+/// A rank: a set of banks sharing activation-power and turnaround limits.
+#[derive(Debug, Clone)]
+pub struct Rank {
+    pub banks: Vec<Bank>,
+    /// Issue times of the last four ACTs (sliding window for tFAW).
+    act_window: [Ps; 4],
+    act_ptr: usize,
+    /// Total ACTs so far (the FAW bound only applies once 4 have issued).
+    act_count: u64,
+    /// Last ACT anywhere in the rank (tRRD).
+    last_act: Ps,
+    /// Earliest next RD / WR considering same-rank turnaround (tWTR etc.).
+    next_rd_turn: Ps,
+    next_wr_turn: Ps,
+    /// Next scheduled refresh boundary.
+    next_refresh: Ps,
+    pub refreshes: u64,
+}
+
+impl Rank {
+    pub fn new(num_banks: u32, p: &TimingParams) -> Rank {
+        Rank {
+            banks: (0..num_banks).map(|_| Bank::new()).collect(),
+            act_window: [0; 4],
+            act_ptr: 0,
+            act_count: 0,
+            last_act: 0,
+            next_rd_turn: 0,
+            next_wr_turn: 0,
+            next_refresh: p.t_refi,
+            refreshes: 0,
+        }
+    }
+
+    /// Earliest ACT time for `bank` including tRRD and tFAW.
+    pub fn earliest_act(&self, bank: u32, p: &TimingParams) -> Ps {
+        let b = &self.banks[bank as usize];
+        // tFAW binds the 5th ACT to 4-ago's issue time; tRRD binds to the
+        // previous ACT. Neither applies before any ACT has issued.
+        let faw_bound =
+            if self.act_count >= 4 { self.act_window[self.act_ptr] + p.t_faw } else { 0 };
+        let rrd_bound = if self.act_count >= 1 { self.last_act + p.t_rrd } else { 0 };
+        b.earliest_act().max(rrd_bound).max(faw_bound)
+    }
+
+    pub fn earliest_rd(&self, bank: u32) -> Ps {
+        self.banks[bank as usize].earliest_rd().max(self.next_rd_turn)
+    }
+
+    pub fn earliest_wr(&self, bank: u32) -> Ps {
+        self.banks[bank as usize].earliest_wr().max(self.next_wr_turn)
+    }
+
+    pub fn do_act(&mut self, t: Ps, bank: u32, row: u32, p: &TimingParams) {
+        self.banks[bank as usize].do_act(t, row, p);
+        self.act_window[self.act_ptr] = t;
+        self.act_ptr = (self.act_ptr + 1) % 4;
+        self.act_count += 1;
+        self.last_act = t;
+    }
+
+    pub fn do_rd(&mut self, t: Ps, bank: u32, p: &TimingParams) -> Ps {
+        let data_end = self.banks[bank as usize].do_rd(t, p);
+        // Spacing of subsequent same-rank column commands (tCCD) across banks.
+        self.next_rd_turn = self.next_rd_turn.max(t + p.t_ccd);
+        // Read-to-write: write data can't start before read data clears.
+        self.next_wr_turn = self.next_wr_turn.max(t + p.t_ccd);
+        data_end
+    }
+
+    pub fn do_wr(&mut self, t: Ps, bank: u32, p: &TimingParams) -> Ps {
+        let data_end = self.banks[bank as usize].do_wr(t, p);
+        self.next_wr_turn = self.next_wr_turn.max(t + p.t_ccd);
+        // Write-to-read turnaround: tWTR after last write data beat.
+        self.next_rd_turn = self.next_rd_turn.max(data_end + p.t_wtr);
+        data_end
+    }
+
+    pub fn do_pre(&mut self, t: Ps, bank: u32, p: &TimingParams) {
+        self.banks[bank as usize].do_pre(t, p);
+    }
+
+    /// If a refresh is due at or before `now`, perform it (all banks busy
+    /// for tRFC) and return the completion time.
+    pub fn maybe_refresh(&mut self, now: Ps, p: &TimingParams) -> Option<Ps> {
+        if now < self.next_refresh {
+            return None;
+        }
+        let start = self.next_refresh;
+        let done = start + p.t_rfc;
+        for b in &mut self.banks {
+            b.block_until(done);
+        }
+        self.next_refresh += p.t_refi;
+        self.refreshes += 1;
+        Some(done)
+    }
+
+    pub fn open_row(&self, bank: u32) -> Option<u32> {
+        self.banks[bank as usize].open_row()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::time::NS;
+
+    fn p() -> TimingParams {
+        TimingParams::ddr3_1600()
+    }
+
+    #[test]
+    fn trrd_spaces_activates_across_banks() {
+        let p = p();
+        let mut r = Rank::new(8, &p);
+        r.do_act(0, 0, 10, &p);
+        assert!(r.earliest_act(1, &p) >= p.t_rrd);
+    }
+
+    #[test]
+    fn tfaw_limits_four_activates() {
+        let p = p();
+        let mut r = Rank::new(8, &p);
+        // Four ACTs as fast as tRRD allows.
+        let mut t = 0;
+        for bank in 0..4 {
+            t = r.earliest_act(bank, &p).max(t);
+            r.do_act(t, bank, 1, &p);
+        }
+        // Fifth ACT must wait for the FAW window from the first ACT.
+        let t5 = r.earliest_act(4, &p);
+        assert!(t5 >= p.t_faw, "t5={t5} < tFAW={}", p.t_faw);
+    }
+
+    #[test]
+    fn write_to_read_turnaround() {
+        let p = p();
+        let mut r = Rank::new(8, &p);
+        r.do_act(0, 0, 1, &p);
+        let t_wr = r.earliest_wr(0);
+        let data_end = r.do_wr(t_wr, 0, &p);
+        assert!(r.earliest_rd(0) >= data_end + p.t_wtr);
+    }
+
+    #[test]
+    fn refresh_fires_on_schedule() {
+        let p = p();
+        let mut r = Rank::new(8, &p);
+        assert!(r.maybe_refresh(0, &p).is_none());
+        let done = r.maybe_refresh(p.t_refi + NS, &p).unwrap();
+        assert_eq!(done, p.t_refi + p.t_rfc);
+        assert_eq!(r.refreshes, 1);
+        // All banks blocked until refresh completes.
+        assert!(r.earliest_act(3, &p) >= done);
+    }
+
+    #[test]
+    fn independent_banks_overlap() {
+        // Two different banks can both have rows open simultaneously —
+        // the bank-level parallelism TL-OoO exploits.
+        let p = p();
+        let mut r = Rank::new(8, &p);
+        r.do_act(0, 0, 1, &p);
+        let t1 = r.earliest_act(1, &p);
+        r.do_act(t1, 1, 2, &p);
+        assert_eq!(r.open_row(0), Some(1));
+        assert_eq!(r.open_row(1), Some(2));
+        assert!(t1 < p.t_rc, "bank 1 ACT did not wait for bank 0 tRC");
+    }
+}

@@ -1,0 +1,263 @@
+//! JEDEC DDRx timing parameters (paper Table 1) and presets.
+
+use crate::util::time::{Ps, NS, US};
+
+/// All parameters are stored in picoseconds (see `util::time`).
+///
+/// Field names follow JEDEC / the paper's Table 1. `t_rl` is the read
+/// latency (a.k.a. tCL/tAA): *fixed* latency from RD command to first data —
+/// the constraint twin-load exists to work around.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TimingParams {
+    /// Command clock period (e.g. 1250 ps for DDR3-1600).
+    pub t_ck: Ps,
+    /// RD command to first data beat (tCL). Paper: 13.75 ns.
+    pub t_rl: Ps,
+    /// Write latency: WR command to first data beat (CWL).
+    pub t_wl: Ps,
+    /// Data burst duration (BL8 on a x64 bus = 4 clocks). Paper: 4 cycles.
+    pub t_burst: Ps,
+    /// Minimum RD-to-RD (same rank) spacing. Paper: 4 cycles.
+    pub t_ccd: Ps,
+    /// RD to PRE minimum (same bank). Paper: 7.5 ns.
+    pub t_rtp: Ps,
+    /// PRE to ACT minimum (same bank). Paper: 13.75 ns.
+    pub t_rp: Ps,
+    /// ACT to RD/WR minimum (same bank). Paper: 13.75 ns.
+    pub t_rcd: Ps,
+    /// ACT to PRE minimum (row must stay open this long).
+    pub t_ras: Ps,
+    /// ACT to ACT minimum, same bank (= tRAS + tRP).
+    pub t_rc: Ps,
+    /// ACT to ACT minimum, different banks of the same rank.
+    pub t_rrd: Ps,
+    /// Four-activate window per rank.
+    pub t_faw: Ps,
+    /// End of write data to PRE (write recovery).
+    pub t_wr: Ps,
+    /// End of write data to RD command (same rank turnaround).
+    pub t_wtr: Ps,
+    /// Rank-to-rank data-bus switch penalty.
+    pub t_rtrs: Ps,
+    /// Refresh cycle time (all banks busy).
+    pub t_rfc: Ps,
+    /// Average refresh interval.
+    pub t_refi: Ps,
+}
+
+impl TimingParams {
+    /// DDR3-1600 (11-11-11), the configuration the paper's host uses.
+    /// tRL = tRP = tRCD = 13.75 ns, tCCD = tBURST = 4 clocks = 5 ns,
+    /// tRTP = 7.5 ns: the row-miss turnaround tRTP + tRP + tRCD = 35 ns
+    /// matches the paper's "minimum total delay is about 35ns at DDR3-1600".
+    pub fn ddr3_1600() -> TimingParams {
+        let t_ck = 1_250; // 800 MHz command clock
+        TimingParams {
+            t_ck,
+            t_rl: 13_750,
+            t_wl: 8 * t_ck, // CWL = 8
+            t_burst: 4 * t_ck,
+            t_ccd: 4 * t_ck,
+            t_rtp: 7_500,
+            t_rp: 13_750,
+            t_rcd: 13_750,
+            t_ras: 35 * NS,
+            t_rc: 35 * NS + 13_750,
+            t_rrd: 6 * NS,
+            t_faw: 30 * NS,
+            t_wr: 15 * NS,
+            t_wtr: 7_500,
+            t_rtrs: 2 * t_ck,
+            t_rfc: 160 * NS, // 4 Gb device
+            t_refi: 7_800 * NS,
+        }
+    }
+
+    /// DDR3-1866 (13-13-13): the higher-frequency point the paper cites for
+    /// the one-DIMM-per-channel SI limitation.
+    pub fn ddr3_1866() -> TimingParams {
+        let t_ck = 1_072; // ~933 MHz command clock (rounded to ps)
+        TimingParams {
+            t_ck,
+            t_rl: 13_910, // 13 clocks
+            t_wl: 9 * t_ck,
+            t_burst: 4 * t_ck,
+            t_ccd: 4 * t_ck,
+            t_rtp: 7_500,
+            t_rp: 13_910,
+            t_rcd: 13_910,
+            t_ras: 34 * NS,
+            t_rc: 34 * NS + 13_910,
+            t_rrd: 6 * NS,
+            t_faw: 27 * NS,
+            t_wr: 15 * NS,
+            t_wtr: 7_500,
+            t_rtrs: 2 * t_ck,
+            t_rfc: 160 * NS,
+            t_refi: 7_800 * NS,
+        }
+    }
+
+    /// A slow "storage-class memory" leaf preset for the §8 heterogeneous
+    /// DRAM/NVM extension experiments: reads ~2.5× and row activation ~4×
+    /// slower than DRAM (PCM-like, per Lee et al. \[35\]).
+    pub fn scm_leaf() -> TimingParams {
+        let base = TimingParams::ddr3_1600();
+        TimingParams {
+            t_rl: base.t_rl * 5 / 2,
+            t_rcd: base.t_rcd * 4,
+            t_rp: base.t_rp * 2,
+            t_ras: base.t_ras * 4,
+            t_rc: base.t_ras * 4 + base.t_rp * 2,
+            t_wr: base.t_wr * 10,
+            ..base
+        }
+    }
+
+    /// The paper's headline number: extra latency of a row-miss turnaround
+    /// (RD→PRE→ACT→RD on the same bank) = tRTP + tRP + tRCD ≈ 35 ns.
+    pub fn row_miss_turnaround(&self) -> Ps {
+        self.t_rtp + self.t_rp + self.t_rcd
+    }
+
+    /// Closed-bank access latency: ACT → RD → data end.
+    pub fn closed_access(&self) -> Ps {
+        self.t_rcd + self.t_rl + self.t_burst
+    }
+
+    /// Peak data-bus bandwidth in bytes/ps-interval terms: one 64-byte
+    /// burst every `t_burst`.
+    pub fn peak_gbps(&self) -> f64 {
+        64.0 / (self.t_burst as f64 * 1e-12) / 1e9
+    }
+
+    /// Validate internal consistency (used by config loading and tests).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.t_ck == 0 {
+            return Err("t_ck must be positive".into());
+        }
+        if self.t_rc < self.t_ras + self.t_rp {
+            return Err(format!(
+                "tRC ({}) < tRAS + tRP ({})",
+                self.t_rc,
+                self.t_ras + self.t_rp
+            ));
+        }
+        if self.t_faw < self.t_rrd {
+            return Err("tFAW must cover at least one tRRD".into());
+        }
+        if self.t_refi < self.t_rfc {
+            return Err("tREFI must exceed tRFC".into());
+        }
+        Ok(())
+    }
+}
+
+/// Geometry of one DRAM channel as the controller sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Geometry {
+    pub ranks: u32,
+    pub banks_per_rank: u32,
+    pub rows_per_bank: u32,
+    /// Columns counted in cache-line-sized (64 B) units.
+    pub cols_per_row: u32,
+}
+
+impl Geometry {
+    /// An 8 GB dual-rank DIMM-oid (paper host: 8×8 GB DIMMs).
+    pub fn dimm_8gb() -> Geometry {
+        Geometry { ranks: 2, banks_per_rank: 8, rows_per_bank: 1 << 16, cols_per_row: 1 << 7 }
+    }
+
+    /// Scaled-down geometry for fast simulation: 64 MB per rank keeps the
+    /// row/bank structure but shrinks row count (documented in DESIGN.md
+    /// footprint scaling).
+    pub fn sim_small() -> Geometry {
+        Geometry { ranks: 2, banks_per_rank: 8, rows_per_bank: 1 << 10, cols_per_row: 1 << 7 }
+    }
+
+    pub fn bytes_per_row(&self) -> u64 {
+        self.cols_per_row as u64 * 64
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.ranks as u64
+            * self.banks_per_rank as u64
+            * self.rows_per_bank as u64
+            * self.bytes_per_row()
+    }
+
+    pub fn total_banks(&self) -> u32 {
+        self.ranks * self.banks_per_rank
+    }
+}
+
+/// Propagation delay constants from the paper (§2.1): ~3.4 ns per direction
+/// per simple forwarding hop; a two-layer system with logic approaches 20 ns.
+pub const T_PD_SIMPLE_HOP: Ps = 3_400;
+/// Per-hop delay including MEC logic processing (paper: "minimal logic
+/// processing" pushes two layers toward 20 ns round trip).
+pub const T_PD_LOGIC_HOP: Ps = 5 * NS;
+
+/// The paper's measured host access latencies (§6.2): local ≈100 ns,
+/// remote-QPI ≈170 ns.
+pub const LOCAL_ACCESS_NS: Ps = 100 * NS;
+pub const QPI_EXTRA_NS: Ps = 70 * NS;
+
+/// PCIe page-swap cost measured on the paper's prototype (§6.3): 7.8 µs.
+pub const PCIE_SWAP_COST: Ps = 7_800 * NS;
+const _: () = assert!(PCIE_SWAP_COST == 78 * US / 10);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ddr3_1600_matches_paper_table1() {
+        let t = TimingParams::ddr3_1600();
+        assert_eq!(t.t_rl, 13_750); // 13.75 ns
+        assert_eq!(t.t_burst, 4 * t.t_ck); // 4 cycles
+        assert_eq!(t.t_ccd, 4 * t.t_ck); // 4 cycles
+        assert_eq!(t.t_rtp, 7_500); // 7.5 ns
+        assert_eq!(t.t_rp, 13_750);
+        assert_eq!(t.t_rcd, 13_750);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn row_miss_turnaround_is_35ns() {
+        let t = TimingParams::ddr3_1600();
+        assert_eq!(t.row_miss_turnaround(), 35 * NS);
+    }
+
+    #[test]
+    fn peak_bandwidth_ddr3_1600() {
+        let t = TimingParams::ddr3_1600();
+        // 64 B / 5 ns = 12.8 GB/s
+        assert!((t.peak_gbps() - 12.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn presets_validate() {
+        TimingParams::ddr3_1866().validate().unwrap();
+        TimingParams::scm_leaf().validate().unwrap();
+    }
+
+    #[test]
+    fn geometry_capacity() {
+        let g = Geometry::dimm_8gb();
+        assert_eq!(g.capacity_bytes(), 8 << 30);
+        let s = Geometry::sim_small();
+        assert_eq!(s.capacity_bytes(), 2 * (64 << 20));
+    }
+
+    #[test]
+    fn validate_rejects_bad_params() {
+        let mut t = TimingParams::ddr3_1600();
+        t.t_rc = 0;
+        assert!(t.validate().is_err());
+        let mut t2 = TimingParams::ddr3_1600();
+        t2.t_refi = 0;
+        assert!(t2.validate().is_err());
+    }
+}

@@ -1,0 +1,41 @@
+//! # twinload — a scalable memory system over the non-scalable interface
+//!
+//! Production-quality reproduction of *Twin-Load: Building a Scalable
+//! Memory System over the Non-Scalable Interface* (Cui et al., 2015).
+//!
+//! The crate is a full platform simulator plus the paper's twin-load
+//! protocol and all evaluated baselines:
+//!
+//! * [`dram`] — timestamp-algebra DDRx model (banks/ranks/channels,
+//!   FR-FCFS controller, JEDEC Table-1 timing).
+//! * [`cache`] — LLC / MSHR / TLB models.
+//! * [`cpu`] — trace-driven out-of-order core model.
+//! * [`mec`] — Memory Extending Chip: Bank State Table, Load Value Cache,
+//!   tree topologies, propagation delay.
+//! * [`twinload`] — the paper's contribution: TL-LF / TL-OoO access
+//!   discipline, shadow addressing, CAS stores, retry and safe path.
+//! * [`memmgr`] — extended-memory block allocator (§4.2).
+//! * [`baselines`] — NUMA, PCIe page swapping, Ideal, increased-tRL.
+//! * [`workloads`] — the ten Table-4 benchmark trace generators.
+//! * [`sim`] — event-driven platform simulator producing Figure 7–13 stats.
+//! * [`coordinator`] — experiment registry, parallel sweeps, PJRT fast path.
+//! * [`runtime`] — loads AOT-compiled JAX/Pallas artifacts via PJRT.
+//! * [`cost`] — Table-5 / Figure-14 cost model.
+
+pub mod baselines;
+pub mod cache;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod cpu;
+pub mod dram;
+pub mod mec;
+pub mod memmgr;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod testing;
+pub mod twinload;
+pub mod util;
+pub mod workloads;

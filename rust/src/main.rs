@@ -1,0 +1,297 @@
+//! `twinload` — CLI for the Twin-Load reproduction.
+//!
+//! Subcommands:
+//!   run       simulate one (mechanism, workload) pair
+//!   repro     regenerate a paper table/figure (table1..5, fig7..fig15, all)
+//!   ablate    design-choice sweeps (lvc | layers | batch | scm)
+//!   validate  cross-check the PJRT analytic fast path vs the cycle sim
+//!   list      show mechanisms and workloads
+
+use twinload::cli::Args;
+use twinload::config::{parser as cfgparser, RunSpec, SystemConfig};
+use twinload::coordinator::{experiments as exp, fastpath};
+use twinload::sim::run_spec;
+use twinload::twinload::Mechanism;
+use twinload::workloads::{WorkloadKind, ALL_WORKLOADS};
+
+const VALUE_FLAGS: &[&str] = &[
+    "mechanism",
+    "workload",
+    "ops",
+    "cores",
+    "footprint-mb",
+    "seed",
+    "config",
+    "csv-dir",
+    "trl-extra-ns",
+    "pcie-local-frac",
+];
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(argv, VALUE_FLAGS) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("repro") => cmd_repro(&args),
+        Some("ablate") => cmd_ablate(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("list") => cmd_list(),
+        _ => {
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    eprintln!(
+        "usage: twinload <run|repro|ablate|validate|list> [options]\n\
+         \n\
+         twinload run --mechanism tl-ooo --workload gups [--ops N] [--cores C]\n\
+         \x20            [--footprint-mb M] [--seed S] [--config file.ini]\n\
+         twinload repro <table1|table2|table3|table4|table5|fig7|fig8|fig9|\n\
+         \x20            fig10|fig11|fig12|fig13|fig14|fig15|all> [--quick] [--csv-dir DIR]\n\
+         twinload ablate <lvc|layers|batch> [--quick]\n\
+         twinload validate\n\
+         twinload list"
+    );
+}
+
+fn scale_from(args: &Args) -> exp::Scale {
+    if args.has("quick") {
+        exp::Scale::quick()
+    } else {
+        exp::Scale::full()
+    }
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let mech = args.get_or("mechanism", "tl-ooo");
+    let Some(mut cfg) = SystemConfig::by_name(mech) else {
+        eprintln!("unknown mechanism '{mech}' (see `twinload list`)");
+        return 2;
+    };
+    let wl_name = args.get_or("workload", "gups");
+    let Some(wl) = WorkloadKind::from_name(wl_name) else {
+        eprintln!("unknown workload '{wl_name}' (see `twinload list`)");
+        return 2;
+    };
+    let mut spec = RunSpec::medium(wl);
+    if let Some(path) = args.get("config") {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("reading {path}: {e}");
+                return 2;
+            }
+        };
+        let ini = match cfgparser::Ini::parse(&text) {
+            Ok(i) => i,
+            Err(e) => {
+                eprintln!("{path}: {e}");
+                return 2;
+            }
+        };
+        if let Err(e) = cfgparser::apply(&ini, &mut cfg, &mut spec) {
+            eprintln!("{path}: {e}");
+            return 2;
+        }
+    }
+    // CLI overrides after config file.
+    macro_rules! flag {
+        ($name:expr, $apply:expr) => {
+            match args.get_u64($name) {
+                Ok(Some(v)) => $apply(v),
+                Ok(None) => {}
+                Err(e) => {
+                    eprintln!("{e}");
+                    return 2;
+                }
+            }
+        };
+    }
+    flag!("ops", |v| spec.ops_per_core = v);
+    flag!("cores", |v| cfg.cores = v as usize);
+    flag!("footprint-mb", |v: u64| spec.footprint = v << 20);
+    flag!("seed", |v| spec.seed = v);
+    flag!("trl-extra-ns", |v: u64| cfg.trl_extra = v * 1000);
+    if let Ok(Some(f)) = args.get_f64("pcie-local-frac") {
+        cfg.pcie_local_frac = f;
+    }
+
+    let report = run_spec(&cfg, &spec);
+    println!("{}", report.summary());
+    println!(
+        "  runtime       {:>12.3} us\n  retired insts {:>12}\n  IPC           {:>12.3}\n  \
+         LLC misses    {:>12}\n  TLB misses    {:>12}\n  DRAM reads    {:>12}\n  \
+         DRAM writes   {:>12}\n  read BW       {:>9.2} GB/s\n  outstanding   {:>12.1}\n  \
+         row-hit rate  {:>11.1}%\n  ext accesses  {:>11.1}%\n  twin retries  {:>12}\n  \
+         cas fails     {:>12}",
+        report.runtime_ns() / 1000.0,
+        report.retired_insts,
+        report.ipc(),
+        report.llc_misses,
+        report.tlb_misses,
+        report.dram_reads,
+        report.dram_writes,
+        report.read_bandwidth_gbps(),
+        report.mlp_mean,
+        report.row_hit_rate * 100.0,
+        report.transform.ext_fraction() * 100.0,
+        report.twin_retries,
+        report.cas_fails,
+    );
+    if report.deadlocked {
+        eprintln!("simulation DEADLOCKED — report is partial");
+        return 1;
+    }
+    0
+}
+
+fn emit(table: twinload::stats::Table, csv_dir: Option<&str>, name: &str) {
+    println!("{}", table.render());
+    if let Some(dir) = csv_dir {
+        let path = format!("{dir}/{name}.csv");
+        match table.save_csv(&path) {
+            Ok(()) => println!("(csv -> {path})\n"),
+            Err(e) => eprintln!("csv {path}: {e}"),
+        }
+    }
+}
+
+fn cmd_repro(args: &Args) -> i32 {
+    let scale = scale_from(args);
+    let csv = args.get("csv-dir");
+    let what = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let char_needed = matches!(what, "fig8" | "fig9" | "fig10" | "fig11" | "fig12" | "all");
+    let data = if char_needed { Some(exp::characterize(&scale)) } else { None };
+    let mut did = false;
+    let mut run = |name: &str, table: twinload::stats::Table| {
+        emit(table, csv, name);
+        did = true;
+    };
+    match what {
+        "table1" => run("table1", exp::table1()),
+        "table2" => run("table2", exp::table2()),
+        "table3" => run("table3", exp::table3()),
+        "table4" => run("table4", exp::table4(&scale)),
+        "table5" => run("table5", exp::table5()),
+        "fig7" => run("fig7", exp::fig7(&scale)),
+        "fig8" => run("fig8", exp::fig8(data.as_ref().unwrap())),
+        "fig9" => run("fig9", exp::fig9(data.as_ref().unwrap())),
+        "fig10" => run("fig10", exp::fig10(data.as_ref().unwrap())),
+        "fig11" => run("fig11", exp::fig11(data.as_ref().unwrap())),
+        "fig12" => run("fig12", exp::fig12(data.as_ref().unwrap())),
+        "fig13" => run("fig13", exp::fig13(&scale)),
+        "fig14" => run("fig14", exp::fig14()),
+        "fig15" => run("fig15", exp::fig15(&scale)),
+        "all" => {
+            run("table1", exp::table1());
+            run("table2", exp::table2());
+            run("table3", exp::table3());
+            run("table4", exp::table4(&scale));
+            run("fig7", exp::fig7(&scale));
+            let d = data.as_ref().unwrap();
+            run("fig8", exp::fig8(d));
+            run("fig9", exp::fig9(d));
+            run("fig10", exp::fig10(d));
+            run("fig11", exp::fig11(d));
+            run("fig12", exp::fig12(d));
+            run("fig13", exp::fig13(&scale));
+            run("table5", exp::table5());
+            run("fig14", exp::fig14());
+            run("fig15", exp::fig15(&scale));
+        }
+        other => {
+            eprintln!("unknown experiment '{other}'");
+            return 2;
+        }
+    }
+    if did {
+        0
+    } else {
+        2
+    }
+}
+
+fn cmd_ablate(args: &Args) -> i32 {
+    let scale = scale_from(args);
+    let csv = args.get("csv-dir");
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("lvc") => emit(exp::ablate_lvc(&scale), csv, "ablate_lvc"),
+        Some("layers") => emit(exp::ablate_layers(&scale), csv, "ablate_layers"),
+        Some("batch") => emit(exp::ablate_batch(&scale), csv, "ablate_batch"),
+        Some("scm") => emit(exp::ablate_scm(&scale), csv, "ablate_scm"),
+        Some("smt") => emit(exp::ablate_smt(&scale), csv, "ablate_smt"),
+        _ => {
+            eprintln!("usage: twinload ablate <lvc|layers|batch|scm|smt>");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_validate(_args: &Args) -> i32 {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let fp = match fastpath::FastPath::new(dir) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("fast path unavailable: {e}");
+            return 1;
+        }
+    };
+    println!("PJRT analytic fast path vs cycle-accurate simulator");
+    println!("(row-buffer hit-rate on the extended channel, same trace family)\n");
+    let cfg = SystemConfig::tl_ooo();
+    let mut worst: f64 = 0.0;
+    for &wl in &[WorkloadKind::Gups, WorkloadKind::Cg, WorkloadKind::ScalParC] {
+        let (b, r) = fastpath::synthesize_trace(&cfg, wl, Mechanism::TlOoO, 2, 42);
+        let counts = match fp.classify(&b, &r) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("classify: {e}");
+                return 1;
+            }
+        };
+        let mut spec = RunSpec::smoke(wl);
+        spec.ops_per_core = 20_000;
+        let sim = run_spec(&cfg, &spec);
+        let delta = (counts.hit_rate() - sim.row_hit_rate).abs();
+        worst = worst.max(delta);
+        println!(
+            "  {:<12} analytic hit-rate {:>5.1}%   sim {:>5.1}%   |delta| {:>4.1} pts",
+            wl.name(),
+            counts.hit_rate() * 100.0,
+            sim.row_hit_rate * 100.0,
+            delta * 100.0
+        );
+    }
+    // The analytic model is serial and single-channel; agreement within
+    // 25 points indicates the classification logic matches.
+    if worst > 0.25 {
+        eprintln!("\nvalidation FAILED (worst delta {:.1} pts)", worst * 100.0);
+        1
+    } else {
+        println!("\nvalidation OK (worst delta {:.1} pts)", worst * 100.0);
+        0
+    }
+}
+
+fn cmd_list() -> i32 {
+    println!("mechanisms:");
+    for m in ["ideal", "tl-ooo", "tl-lf", "tl-lf-batched", "numa", "pcie", "inc-trl"] {
+        println!("  {m}");
+    }
+    println!("workloads:");
+    for w in ALL_WORKLOADS {
+        println!("  {}", w.name());
+    }
+    0
+}

@@ -1,0 +1,92 @@
+//! Bank State Table (paper §4.3, Figure 6 left).
+//!
+//! One entry per *logical* bank: whether the bank is open and the row
+//! address of the last ACT. N = number of logical banks; the MEC snoops
+//! ACT/PRE commands to keep it coherent with the host controller's view.
+
+/// Entry: `open` + last row address (+ the physical DIMM id the row maps
+/// to, which MEC1 passes along with non-ACT commands for routing — §4.3).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BstEntry {
+    pub open: bool,
+    pub row: u32,
+}
+
+#[derive(Debug, Clone)]
+pub struct BankStateTable {
+    entries: Vec<BstEntry>,
+}
+
+impl BankStateTable {
+    pub fn new(num_banks: u32) -> BankStateTable {
+        BankStateTable { entries: vec![BstEntry::default(); num_banks as usize] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Record an ACT: bank opens `row`.
+    pub fn on_act(&mut self, bank: u32, row: u32) {
+        let e = &mut self.entries[bank as usize];
+        e.open = true;
+        e.row = row;
+    }
+
+    /// Record a PRE: bank closes (row retained for debug only).
+    pub fn on_pre(&mut self, bank: u32) {
+        self.entries[bank as usize].open = false;
+    }
+
+    /// Row to use when reconstructing a RD/WR address on `bank`.
+    /// Returns `None` if the MEC never saw an ACT (protocol violation —
+    /// the host controller must open a row before column commands).
+    pub fn open_row(&self, bank: u32) -> Option<u32> {
+        let e = self.entries[bank as usize];
+        if e.open {
+            Some(e.row)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn act_then_rd_reconstructs_row() {
+        let mut bst = BankStateTable::new(16);
+        bst.on_act(3, 0x1a2);
+        assert_eq!(bst.open_row(3), Some(0x1a2));
+        assert_eq!(bst.open_row(4), None);
+    }
+
+    #[test]
+    fn pre_closes() {
+        let mut bst = BankStateTable::new(16);
+        bst.on_act(0, 7);
+        bst.on_pre(0);
+        assert_eq!(bst.open_row(0), None);
+    }
+
+    #[test]
+    fn reopen_replaces_row() {
+        let mut bst = BankStateTable::new(4);
+        bst.on_act(1, 10);
+        bst.on_pre(1);
+        bst.on_act(1, 20);
+        assert_eq!(bst.open_row(1), Some(20));
+    }
+
+    #[test]
+    fn sized_per_logical_bank() {
+        let bst = BankStateTable::new(64);
+        assert_eq!(bst.len(), 64);
+    }
+}

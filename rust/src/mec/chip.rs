@@ -1,0 +1,317 @@
+//! MEC1: the top-level Memory Extending Chip (paper §3.1, §4.3).
+//!
+//! MEC1 snoops the host channel's DDR command stream. ACT/PRE maintain the
+//! Bank State Table; each RD is reconstructed to a full address and looked
+//! up in the Load Value Cache:
+//!
+//! * **LVC miss → first load**: allocate an entry, forward the request
+//!   down the tree (prefetch), and drive *fake* data (0x5a pattern) on
+//!   the bus exactly tRL later — the synchronous interface is never
+//!   violated.
+//! * **LVC hit → second load**: if the prefetched data arrived by the bus
+//!   deadline, drive it (real) and free the entry; if the data is still
+//!   in flight (topology too deep) drive fake data and keep the entry; if
+//!   the entry was evicted the load is treated as a first load again
+//!   (re-prefetch) — software retries handle both (§4.4).
+
+use super::bst::BankStateTable;
+use super::lvc::{LoadValueCache, LvcLookup};
+use super::topology::{MecTree, Topology};
+use crate::cache::DataKind;
+use crate::dram::address::{AddressMapping, DecodedAddr};
+use crate::dram::command::{Command, CommandKind};
+use crate::dram::timing::TimingParams;
+use crate::util::time::Ps;
+
+/// MEC1 configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct MecConfig {
+    /// LVC entry count M (paper: must exceed ~10 for TL-OoO; default 32 —
+    /// bus monitoring showed twins separated by ~6 other loads).
+    pub lvc_entries: usize,
+    pub topology: Topology,
+    /// Leaf DRAM timing (DRAM by default; SCM preset for §8 experiments).
+    pub leaf_timing: TimingParams,
+}
+
+impl MecConfig {
+    pub fn default_tl() -> MecConfig {
+        MecConfig {
+            lvc_entries: 32,
+            topology: Topology::two_layer(),
+            leaf_timing: TimingParams::ddr3_1600(),
+        }
+    }
+}
+
+/// What the host observes for one RD to the extended channel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadOutcome {
+    /// Prefetch launched; fake data on the bus.
+    FirstLoad,
+    /// Real data on the bus.
+    SecondLoadReal,
+    /// Entry present but data still in flight; fake data, entry kept.
+    SecondLoadLate,
+}
+
+impl ReadOutcome {
+    pub fn data(self) -> DataKind {
+        match self {
+            ReadOutcome::SecondLoadReal => DataKind::Real,
+            _ => DataKind::Fake,
+        }
+    }
+}
+
+/// MEC1 statistics.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct MecStats {
+    pub first_loads: u64,
+    pub second_real: u64,
+    pub second_late: u64,
+    pub writes: u64,
+    pub reads_without_act: u64,
+}
+
+pub struct Mec1 {
+    cfg: MecConfig,
+    bst: BankStateTable,
+    lvc: LoadValueCache,
+    tree: MecTree,
+    /// Host-side extended-channel address mapping (single channel).
+    host_map: AddressMapping,
+    host_t_rl: Ps,
+    pub stats: MecStats,
+}
+
+impl Mec1 {
+    /// `ext_bytes` is the real extended capacity (the host channel space
+    /// is 2× that: extended + shadow, distinguished by the row MSB).
+    pub fn new(
+        cfg: MecConfig,
+        ext_bytes: u64,
+        host_map: AddressMapping,
+        host: &TimingParams,
+    ) -> Mec1 {
+        Mec1 {
+            // One BST entry per logical bank the fake SPD advertises.
+            bst: BankStateTable::new(host_map.num_flat_banks()),
+            lvc: LoadValueCache::new(cfg.lvc_entries),
+            tree: MecTree::new(ext_bytes, cfg.topology, cfg.leaf_timing),
+            host_map,
+            host_t_rl: host.t_rl,
+            cfg,
+            stats: MecStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &MecConfig {
+        &self.cfg
+    }
+
+    pub fn tree(&self) -> &MecTree {
+        &self.tree
+    }
+
+    pub fn lvc(&self) -> &LoadValueCache {
+        &self.lvc
+    }
+
+    /// Strip the shadow (row-MSB) bit: both twins map to the same target.
+    /// The mapping's `twin()` flips the physical-address MSB == row MSB, so
+    /// the canonical (extended-space) form is simply the smaller twin.
+    fn strip_shadow(&self, d: &DecodedAddr) -> (DecodedAddr, u64) {
+        let phys = self.host_map.encode(d);
+        let low = phys.min(self.host_map.twin(phys));
+        (self.host_map.decode(low), low)
+    }
+
+    /// LVC tag from a reconstructed, shadow-stripped address.
+    fn tag_of(d: &DecodedAddr) -> u64 {
+        ((d.row as u64) << 32) | ((d.rank as u64) << 24) | ((d.bank as u64) << 16) | d.col as u64
+    }
+
+    /// Observe one host-channel command stream entry (from the host
+    /// controller's `ServiceResult::commands`). Returns the outcome for
+    /// RD commands, `None` otherwise.
+    pub fn on_command(&mut self, cmd: &Command) -> Option<ReadOutcome> {
+        let flat = cmd.flat_bank(self.host_map.banks_per_rank());
+        match cmd.kind {
+            CommandKind::Act => {
+                self.bst.on_act(flat, cmd.row);
+                None
+            }
+            CommandKind::Pre => {
+                self.bst.on_pre(flat);
+                None
+            }
+            CommandKind::Rd => {
+                let Some(row) = self.bst.open_row(flat) else {
+                    self.stats.reads_without_act += 1;
+                    return Some(ReadOutcome::FirstLoad);
+                };
+                let d = DecodedAddr {
+                    channel: 0,
+                    rank: cmd.rank,
+                    bank: cmd.bank,
+                    row,
+                    col: cmd.col,
+                };
+                Some(self.on_read(&d, cmd.at))
+            }
+            CommandKind::Wr => {
+                if let Some(row) = self.bst.open_row(flat) {
+                    let d = DecodedAddr {
+                        channel: 0,
+                        rank: cmd.rank,
+                        bank: cmd.bank,
+                        row,
+                        col: cmd.col,
+                    };
+                    let (stripped, offset) = self.strip_shadow(&d);
+                    let _ = stripped;
+                    self.tree.write(offset, cmd.at);
+                    self.stats.writes += 1;
+                }
+                None
+            }
+            CommandKind::Ref => None,
+        }
+    }
+
+    /// Process a reconstructed read at time `t` (RD command issue time).
+    fn on_read(&mut self, d: &DecodedAddr, t: Ps) -> ReadOutcome {
+        let (stripped, offset) = self.strip_shadow(d);
+        let tag = Self::tag_of(&stripped);
+        match self.lvc.lookup(tag) {
+            LvcLookup::Miss => {
+                // First load: allocate + forward prefetch downstream.
+                let data_back = self.tree.prefetch(offset, t);
+                self.lvc.allocate(tag, data_back);
+                self.stats.first_loads += 1;
+                ReadOutcome::FirstLoad
+            }
+            LvcLookup::Hit { data_at } => {
+                // MEC1 must drive data tRL after the RD: the deadline.
+                let deadline = t + self.host_t_rl;
+                if data_at <= deadline {
+                    self.lvc.release(tag);
+                    self.stats.second_real += 1;
+                    ReadOutcome::SecondLoadReal
+                } else {
+                    self.stats.second_late += 1;
+                    ReadOutcome::SecondLoadLate
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dram::timing::Geometry;
+    use crate::util::time::NS;
+
+    /// Host-channel mapping over 2×256 MiB (extended + shadow).
+    fn host_map() -> AddressMapping {
+        // 512 MiB channel: dual rank, 8 banks, 128 cols → rows = 512 MiB /
+        // (2*8*128*64) = 4096.
+        let geo = Geometry { ranks: 2, banks_per_rank: 8, rows_per_bank: 4096, cols_per_row: 128 };
+        AddressMapping::new(&geo, 1)
+    }
+
+    fn mec(topology: Topology) -> Mec1 {
+        let cfg = MecConfig { lvc_entries: 32, topology, leaf_timing: TimingParams::ddr3_1600() };
+        Mec1::new(cfg, 256 << 20, host_map(), &TimingParams::ddr3_1600())
+    }
+
+    /// Drive an ACT+RD for the address at `phys`, at RD time `t`.
+    fn read_at(m: &mut Mec1, phys: u64, t: Ps) -> ReadOutcome {
+        let d = host_map().decode(phys);
+        m.on_command(&Command::act(d.rank, d.bank, d.row, t.saturating_sub(14 * NS)));
+        m.on_command(&Command::rd(d.rank, d.bank, d.col, t)).unwrap()
+    }
+
+    #[test]
+    fn first_then_second_load_real() {
+        let mut m = mec(Topology::two_layer());
+        let phys = 0x40;
+        let o1 = read_at(&mut m, phys, 20 * NS);
+        assert_eq!(o1, ReadOutcome::FirstLoad);
+        assert_eq!(o1.data(), DataKind::Fake);
+        // Twin arrives 35 ns later (row-miss spacing): data should be back.
+        let twin = host_map().twin(phys);
+        let o2 = read_at(&mut m, twin, 55 * NS);
+        assert_eq!(o2, ReadOutcome::SecondLoadReal);
+        assert_eq!(o2.data(), DataKind::Real);
+    }
+
+    #[test]
+    fn too_deep_topology_returns_late() {
+        // 6 layers × 5 ns hop = 60 ns round trip + leaf access ≫ 35 ns
+        // window: the second load finds the data still in flight.
+        let deep = Topology { layers: 6, fanout: 2, hop_delay: 5 * NS };
+        let mut m = mec(deep);
+        let phys = 0x40;
+        read_at(&mut m, phys, 20 * NS);
+        let o2 = read_at(&mut m, host_map().twin(phys), 55 * NS);
+        assert_eq!(o2, ReadOutcome::SecondLoadLate);
+        // A later retry (well past arrival) succeeds.
+        let o3 = read_at(&mut m, phys, 400 * NS);
+        assert_eq!(o3, ReadOutcome::SecondLoadReal);
+    }
+
+    #[test]
+    fn evicted_entry_re_prefetches() {
+        let mut m = mec(Topology::one_layer());
+        let phys = 0x40;
+        read_at(&mut m, phys, 20 * NS);
+        // Flood the LVC with 32 other first-loads to evict the entry.
+        for i in 1..=32u64 {
+            read_at(&mut m, phys + i * (128 * 64) * 16, (20 + i) * 100 * NS);
+        }
+        // The intended second load is identified as a first load again.
+        let o = read_at(&mut m, host_map().twin(phys), 10_000 * NS);
+        assert_eq!(o, ReadOutcome::FirstLoad);
+        assert!(m.lvc().evictions > 0);
+    }
+
+    #[test]
+    fn twins_share_the_lvc_tag() {
+        let mut m = mec(Topology::one_layer());
+        let phys = 0x7c0;
+        // First load via the SHADOW address, second via the extended —
+        // TL-OoO order is arbitrary and both must map to one entry.
+        let o1 = read_at(&mut m, host_map().twin(phys), 20 * NS);
+        let o2 = read_at(&mut m, phys, 200 * NS);
+        assert_eq!(o1, ReadOutcome::FirstLoad);
+        assert_eq!(o2, ReadOutcome::SecondLoadReal);
+        assert_eq!(m.stats.first_loads, 1);
+        assert_eq!(m.stats.second_real, 1);
+    }
+
+    #[test]
+    fn writes_forward_downstream() {
+        let mut m = mec(Topology::one_layer());
+        let d = host_map().decode(0x40);
+        m.on_command(&Command::act(d.rank, d.bank, d.row, 0));
+        m.on_command(&Command::wr(d.rank, d.bank, d.col, 10 * NS));
+        assert_eq!(m.stats.writes, 1);
+        assert_eq!(m.tree().writes, 1);
+    }
+
+    #[test]
+    fn bst_tracks_per_bank_rows() {
+        let mut m = mec(Topology::one_layer());
+        // Open different rows on two banks, then read both.
+        let a = host_map()
+            .encode(&DecodedAddr { channel: 0, rank: 0, bank: 0, row: 5, col: 1 });
+        let b = host_map()
+            .encode(&DecodedAddr { channel: 0, rank: 0, bank: 1, row: 9, col: 2 });
+        assert_eq!(read_at(&mut m, a, 20 * NS), ReadOutcome::FirstLoad);
+        assert_eq!(read_at(&mut m, b, 30 * NS), ReadOutcome::FirstLoad);
+        assert_eq!(m.stats.first_loads, 2);
+    }
+}

@@ -1,0 +1,28 @@
+//! Memory Extending Chip (MEC) models — the paper's hardware contribution.
+//!
+//! MEC1 (top of the tree) implements one slave DDRx interface toward the
+//! host memory controller and master interfaces toward the next layer.
+//! It advertises *logical* DIMMs via a fake SPD, observes the host's
+//! command bus, and implements the two §4.3 structures:
+//!
+//! * the **Bank State Table** ([`bst::BankStateTable`]) — per logical
+//!   bank, the open row last ACTivated, used to reconstruct the full
+//!   `<row, column, bank>` address when a RD arrives (RDs only carry the
+//!   column);
+//! * the **Load Value Cache** ([`lvc::LoadValueCache`]) — an M-entry LRU
+//!   cache of prefetched values keyed by reconstructed address; an LVC
+//!   miss identifies a *first* (prefetch) load, a hit the *second*.
+//!
+//! Lower MECs just route commands toward leaf DRAM ([`topology`]); each
+//! hop adds propagation delay, which is exactly the latency the
+//! synchronous interface cannot tolerate and twin-load hides.
+
+pub mod bst;
+pub mod chip;
+pub mod lvc;
+pub mod topology;
+
+pub use bst::BankStateTable;
+pub use chip::{Mec1, MecConfig, ReadOutcome};
+pub use lvc::LoadValueCache;
+pub use topology::{MecTree, Topology};

@@ -1,0 +1,248 @@
+//! MEC tree topologies (paper Figure 3) and the downstream path.
+//!
+//! Command-forwarding semantics: the host memory controller's ACT/RD
+//! stream *is* the DRAM command stream — middle MECs route each command
+//! toward the leaf whose physical-DIMM id sits in the high row bits
+//! (§4.3), adding propagation delay per hop in each direction. MEC1
+//! suppresses second-load (shadow) commands downstream — they are served
+//! from the LVC — so the leaf sees exactly the first-load sequence, with
+//! ACT already tRCD ahead of RD courtesy of host timing. The prefetched
+//! data is therefore back at MEC1 at
+//!
+//! ```text
+//!   t(RD) + 2·tPD + tRL_leaf + tBURST
+//! ```
+//!
+//! which is the paper's LVC round-trip `2·tPD + tRL` plus the burst tail.
+//! Per-leaf upstream data-bus serialization is modeled (consecutive
+//! prefetch returns from one leaf cannot overlap).
+
+use crate::dram::timing::{TimingParams, T_PD_LOGIC_HOP};
+use crate::util::time::Ps;
+
+/// Shape of the extension tree.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    /// Number of MEC layers (1 = just MEC1 in front of DIMMs).
+    pub layers: u32,
+    /// Children per MEC (leaves = fanout^(layers-1), must stay pow2).
+    pub fanout: u32,
+    /// Per-hop, per-direction propagation delay.
+    pub hop_delay: Ps,
+}
+
+impl Topology {
+    /// Figure 3's four-layer tree (binary fanout keeps leaf count pow2).
+    pub fn paper_fig3() -> Topology {
+        Topology { layers: 4, fanout: 2, hop_delay: T_PD_LOGIC_HOP }
+    }
+
+    /// Two-layer system with logic processing (§2.1's ≈20 ns example).
+    pub fn two_layer() -> Topology {
+        Topology { layers: 2, fanout: 4, hop_delay: T_PD_LOGIC_HOP }
+    }
+
+    /// Single MEC layer (LRDIMM-like, but asynchronous behind MEC1).
+    pub fn one_layer() -> Topology {
+        Topology { layers: 1, fanout: 4, hop_delay: T_PD_LOGIC_HOP }
+    }
+
+    /// The paper's five-layer simple-forwarding limit case: 3.4 ns hops.
+    pub fn five_layer_simple() -> Topology {
+        Topology { layers: 5, fanout: 2, hop_delay: 3_400 }
+    }
+
+    pub fn num_leaves(&self) -> u32 {
+        self.fanout.pow(self.layers.saturating_sub(1))
+    }
+
+    /// One-way propagation delay MEC1 → leaf DRAM.
+    pub fn one_way(&self) -> Ps {
+        self.layers as Ps * self.hop_delay
+    }
+
+    /// Round-trip propagation (the `2·tPD` of the paper's LVC formula).
+    pub fn round_trip(&self) -> Ps {
+        2 * self.one_way()
+    }
+
+    /// Can TL-OoO's forced row-miss window cover this topology? The
+    /// budget from the first RD is `turnaround + tRL_host` (second RD is
+    /// ≥35 ns later and MEC1 must drive data tRL after that); the cost is
+    /// `2·tPD + tRL_leaf` — first-beat semantics, since MEC1 relays the
+    /// burst cut-through (this is how the paper's five-layer example and
+    /// its `M > (2·tPD + tRL)/tCCD` sizing both come out).
+    pub fn ooo_tolerable(&self, host: &TimingParams, leaf: &TimingParams) -> bool {
+        self.round_trip() + leaf.t_rl <= host.row_miss_turnaround() + host.t_rl
+    }
+}
+
+/// Downstream model: routing + per-leaf upstream bus serialization.
+#[derive(Debug, Clone)]
+pub struct MecTree {
+    topo: Topology,
+    leaf_timing: TimingParams,
+    leaf_capacity: u64,
+    /// Per-leaf: when its upstream data path is next free.
+    leaf_data_free: Vec<Ps>,
+    pub prefetches: u64,
+    pub writes: u64,
+    /// Prefetches delayed by leaf data-path contention.
+    pub leaf_contention: u64,
+}
+
+impl MecTree {
+    /// Cover `ext_bytes` of extended memory with `topo` and the given
+    /// leaf DRAM/SCM timing.
+    pub fn new(ext_bytes: u64, topo: Topology, leaf_timing: TimingParams) -> MecTree {
+        let leaves = topo.num_leaves() as u64;
+        assert!(ext_bytes.is_power_of_two() && leaves.is_power_of_two());
+        assert!(ext_bytes >= leaves, "fewer bytes than leaves");
+        MecTree {
+            topo,
+            leaf_timing,
+            leaf_capacity: ext_bytes / leaves,
+            leaf_data_free: vec![0; leaves as usize],
+            prefetches: 0,
+            writes: 0,
+            leaf_contention: 0,
+        }
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        self.leaf_data_free.len()
+    }
+
+    /// Route an extended-space offset (shadow bit already stripped) to
+    /// `(leaf index, leaf-local offset)` — high bits = physical DIMM id.
+    pub fn route(&self, ext_offset: u64) -> (usize, u64) {
+        let leaf = (ext_offset / self.leaf_capacity) as usize;
+        (leaf % self.num_leaves(), ext_offset % self.leaf_capacity)
+    }
+
+    /// Forward a first-load prefetch whose RD issued at `rd_at`; returns
+    /// when the data is fully back **at MEC1**.
+    pub fn prefetch(&mut self, ext_offset: u64, rd_at: Ps) -> Ps {
+        self.prefetches += 1;
+        let (leaf, _) = self.route(ext_offset);
+        // Leaf drives data tRL after the forwarded RD arrives.
+        let data_start = rd_at + self.topo.one_way() + self.leaf_timing.t_rl;
+        // Upstream data-path serialization per leaf.
+        let start = data_start.max(self.leaf_data_free[leaf]);
+        if start > data_start {
+            self.leaf_contention += 1;
+        }
+        self.leaf_data_free[leaf] = start + self.leaf_timing.t_burst;
+        // First beat back at MEC1 (cut-through relay of the burst).
+        start + self.topo.one_way()
+    }
+
+    /// Forward a write (dirty eviction writeback). Posted; returns the
+    /// completion time at the leaf for stats.
+    pub fn write(&mut self, ext_offset: u64, wr_at: Ps) -> Ps {
+        self.writes += 1;
+        let (_leaf, _) = self.route(ext_offset);
+        wr_at + self.topo.one_way() + self.leaf_timing.t_wl + self.leaf_timing.t_burst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::time::NS;
+
+    fn tree(topo: Topology) -> MecTree {
+        MecTree::new(256 << 20, topo, TimingParams::ddr3_1600())
+    }
+
+    #[test]
+    fn leaf_counts() {
+        assert_eq!(Topology::paper_fig3().num_leaves(), 8);
+        assert_eq!(Topology::two_layer().num_leaves(), 4);
+        assert_eq!(Topology::one_layer().num_leaves(), 1);
+        assert_eq!(Topology::five_layer_simple().num_leaves(), 16);
+    }
+
+    #[test]
+    fn paper_five_layer_simple_is_tolerable() {
+        // §3.1: 35 ns "is enough to tolerate propagation delays for up to
+        // five MEC layers" at 3.4 ns per simple-forwarding hop.
+        let host = TimingParams::ddr3_1600();
+        let t = Topology::five_layer_simple();
+        assert!(t.ooo_tolerable(&host, &host), "rtt={}", t.round_trip());
+    }
+
+    #[test]
+    fn ooo_tolerance_boundary() {
+        let host = TimingParams::ddr3_1600();
+        // Budget = 35 + 13.75 = 48.75 ns; cost = RTT + 13.75 ns →
+        // RTT ≤ 35 ns: 3 layers × 5 ns hops (30 ns) ok, 4 (40 ns) not.
+        let t3 = Topology { layers: 3, fanout: 2, hop_delay: 5 * NS };
+        let t4 = Topology { layers: 4, fanout: 2, hop_delay: 5 * NS };
+        assert!(t3.ooo_tolerable(&host, &host));
+        assert!(!t4.ooo_tolerable(&host, &host));
+    }
+
+    #[test]
+    fn scm_leaf_shrinks_tolerance() {
+        // Slow SCM leaves eat the budget: a topology fine with DRAM
+        // leaves fails with SCM leaves.
+        let host = TimingParams::ddr3_1600();
+        let scm = TimingParams::scm_leaf();
+        let t = Topology { layers: 2, fanout: 2, hop_delay: 5 * NS };
+        assert!(t.ooo_tolerable(&host, &host));
+        assert!(!t.ooo_tolerable(&host, &scm));
+    }
+
+    #[test]
+    fn routing_partitions_space() {
+        let t = tree(Topology::paper_fig3());
+        let cap = 256u64 << 20;
+        let leaves = t.num_leaves() as u64;
+        let per = cap / leaves;
+        assert_eq!(t.route(0), (0, 0));
+        assert_eq!(t.route(per), (1, 0));
+        assert_eq!(t.route(per * (leaves - 1) + 64), ((leaves - 1) as usize, 64));
+    }
+
+    #[test]
+    fn prefetch_round_trip_formula() {
+        // The paper's `2·tPD + tRL` round trip, first-beat semantics.
+        let mut t = tree(Topology::two_layer());
+        let p = TimingParams::ddr3_1600();
+        let back = t.prefetch(0x40, 100 * NS);
+        assert_eq!(back, 100 * NS + t.topology().round_trip() + p.t_rl);
+        assert_eq!(t.prefetches, 1);
+    }
+
+    #[test]
+    fn same_leaf_back_to_back_serializes() {
+        let mut t = tree(Topology::two_layer());
+        let a = t.prefetch(0x0, 0);
+        let b = t.prefetch(0x40, 0); // same leaf, same instant
+        assert_eq!(b - a, TimingParams::ddr3_1600().t_burst);
+        assert_eq!(t.leaf_contention, 1);
+    }
+
+    #[test]
+    fn different_leaves_do_not_serialize() {
+        let mut t = tree(Topology::paper_fig3());
+        let per_leaf = (256u64 << 20) / 8;
+        let a = t.prefetch(0, 0);
+        let b = t.prefetch(per_leaf, 0);
+        assert_eq!(a, b);
+        assert_eq!(t.leaf_contention, 0);
+    }
+
+    #[test]
+    fn writes_complete() {
+        let mut t = tree(Topology::one_layer());
+        let done = t.write(0x1000, 5 * NS);
+        assert!(done > 5 * NS);
+        assert_eq!(t.writes, 1);
+    }
+}

@@ -1,0 +1,220 @@
+//! Block allocator for local / extended memory (§4.2).
+//!
+//! "To simplify memory management, we allocate/deallocate extended and
+//! shadow memory together in large blocks (e.g., 64MB)" — big-memory
+//! applications allocate almost everything at initialization, so a simple
+//! block cursor + free list suffices (no fragmentation-minimizing
+//! machinery, as the paper argues).
+
+use super::MemLayout;
+
+/// Which space an allocation lives in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Space {
+    Local,
+    Extended,
+}
+
+/// An allocated virtual region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    pub base: u64,
+    pub len: u64,
+    pub space: Space,
+}
+
+impl Region {
+    #[inline]
+    pub fn contains(&self, va: u64) -> bool {
+        va >= self.base && va < self.base + self.len
+    }
+
+    /// Address of byte `i` within the region (panics in debug if OOB).
+    #[inline]
+    pub fn at(&self, i: u64) -> u64 {
+        debug_assert!(i < self.len, "region index {i} out of {len}", len = self.len);
+        self.base + i
+    }
+}
+
+/// Block-granular allocator over a [`MemLayout`]. Extended allocations
+/// implicitly reserve the shadow twin block (same index, +EXT_MEM_SIZE),
+/// mirroring the paper's paired `mmap()` calls.
+#[derive(Debug, Clone)]
+pub struct Allocator {
+    layout: MemLayout,
+    block: u64,
+    local_free: Vec<u64>,
+    ext_free: Vec<u64>,
+    local_cursor: u64,
+    ext_cursor: u64,
+    pub allocated_local: u64,
+    pub allocated_ext: u64,
+}
+
+/// Default block size: the paper uses 64 MB at full scale; scaled 64× down
+/// that is 1 MiB.
+pub const SIM_BLOCK: u64 = 1 << 20;
+
+impl Allocator {
+    pub fn new(layout: MemLayout, block: u64) -> Allocator {
+        assert!(block.is_power_of_two());
+        Allocator {
+            layout,
+            block,
+            local_free: Vec::new(),
+            ext_free: Vec::new(),
+            local_cursor: 0,
+            ext_cursor: layout.ext_base(),
+            allocated_local: 0,
+            allocated_ext: 0,
+        }
+    }
+
+    pub fn layout(&self) -> &MemLayout {
+        &self.layout
+    }
+
+    fn blocks_for(&self, bytes: u64) -> u64 {
+        crate::util::div_ceil(bytes.max(1), self.block)
+    }
+
+    /// Allocate `bytes` (rounded up to whole blocks) in `space`.
+    /// Returns `None` when the space is exhausted.
+    pub fn alloc(&mut self, space: Space, bytes: u64) -> Option<Region> {
+        let nblocks = self.blocks_for(bytes);
+        let len = nblocks * self.block;
+        match space {
+            Space::Local => {
+                // Try the free list for a single-block request first.
+                if nblocks == 1 {
+                    if let Some(base) = self.local_free.pop() {
+                        self.allocated_local += len;
+                        return Some(Region { base, len, space });
+                    }
+                }
+                if self.local_cursor + len > self.layout.local_size {
+                    return None;
+                }
+                let base = self.local_cursor;
+                self.local_cursor += len;
+                self.allocated_local += len;
+                Some(Region { base, len, space })
+            }
+            Space::Extended => {
+                if nblocks == 1 {
+                    if let Some(base) = self.ext_free.pop() {
+                        self.allocated_ext += len;
+                        return Some(Region { base, len, space });
+                    }
+                }
+                if self.ext_cursor + len > self.layout.shadow_base() {
+                    return None;
+                }
+                let base = self.ext_cursor;
+                self.ext_cursor += len;
+                self.allocated_ext += len;
+                Some(Region { base, len, space })
+            }
+        }
+    }
+
+    /// Return a region's blocks to the allocator.
+    pub fn free(&mut self, region: Region) {
+        let list = match region.space {
+            Space::Local => {
+                self.allocated_local = self.allocated_local.saturating_sub(region.len);
+                &mut self.local_free
+            }
+            Space::Extended => {
+                self.allocated_ext = self.allocated_ext.saturating_sub(region.len);
+                &mut self.ext_free
+            }
+        };
+        let mut base = region.base;
+        while base < region.base + region.len {
+            list.push(base);
+            base += self.block;
+        }
+    }
+
+    /// Fraction of requested data placed in extended memory so far —
+    /// the "Proportion in extended memory" column of Table 4.
+    pub fn ext_fraction(&self) -> f64 {
+        let total = self.allocated_local + self.allocated_ext;
+        if total == 0 {
+            0.0
+        } else {
+            self.allocated_ext as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alloc() -> Allocator {
+        Allocator::new(MemLayout::new(16 << 20, 64 << 20), SIM_BLOCK)
+    }
+
+    #[test]
+    fn local_and_ext_disjoint() {
+        let mut a = alloc();
+        let l = a.alloc(Space::Local, 3 << 20).unwrap();
+        let e = a.alloc(Space::Extended, 3 << 20).unwrap();
+        assert!(a.layout().is_local(l.base));
+        assert!(a.layout().is_local(l.base + l.len - 1));
+        assert!(a.layout().is_extended(e.base));
+        assert!(a.layout().is_extended(e.base + e.len - 1));
+    }
+
+    #[test]
+    fn rounds_to_blocks() {
+        let mut a = alloc();
+        let r = a.alloc(Space::Local, 1).unwrap();
+        assert_eq!(r.len, SIM_BLOCK);
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut a = alloc();
+        assert!(a.alloc(Space::Local, 16 << 20).is_some());
+        assert!(a.alloc(Space::Local, 1).is_none());
+    }
+
+    #[test]
+    fn free_then_realloc_reuses() {
+        let mut a = alloc();
+        let r = a.alloc(Space::Extended, SIM_BLOCK).unwrap();
+        let base = r.base;
+        a.free(r);
+        let r2 = a.alloc(Space::Extended, SIM_BLOCK).unwrap();
+        assert_eq!(r2.base, base);
+    }
+
+    #[test]
+    fn ext_fraction_tracks_table4_style() {
+        let mut a = alloc();
+        a.alloc(Space::Local, 1 << 20).unwrap();
+        a.alloc(Space::Extended, 3 << 20).unwrap();
+        assert!((a.ext_fraction() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shadow_never_allocated_directly() {
+        let mut a = alloc();
+        // Fill extended completely; every region stays below shadow_base.
+        while let Some(r) = a.alloc(Space::Extended, 8 << 20) {
+            assert!(r.base + r.len <= a.layout().shadow_base());
+        }
+    }
+
+    #[test]
+    fn region_helpers() {
+        let r = Region { base: 0x1000, len: 0x100, space: Space::Local };
+        assert!(r.contains(0x10ff));
+        assert!(!r.contains(0x1100));
+        assert_eq!(r.at(0x40), 0x1040);
+    }
+}

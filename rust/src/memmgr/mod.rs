@@ -1,0 +1,140 @@
+//! Extended-memory management (paper §4.2, Figure 4).
+//!
+//! The paper reserves the extended and shadow physical ranges from the OS
+//! at boot and hands out large blocks (64 MB) via `mmap()`, mapping each
+//! object at virtual address `p` with its shadow at `p + EXT_MEM_SIZE`.
+//! This module reproduces that manager: a three-region virtual layout
+//! (local / extended / shadow), a power-of-two block allocator for the
+//! extended space, and the shadow-address arithmetic used by the protocol
+//! transform.
+//!
+//! Simulated addresses are identity-mapped (VA == PA) — the paper's
+//! manager also constructs direct mappings at block granularity, so the
+//! TLB and row/bank behaviour are equivalent; the page table exists for
+//! allocation bookkeeping, not for indirection.
+
+pub mod alloc;
+
+pub use alloc::{Allocator, Region, Space};
+
+/// Virtual/physical layout: `[0, local)` local DRAM, `[local, local+ext)`
+/// extended memory, `[local+ext, local+2·ext)` shadow (no real storage).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemLayout {
+    pub local_size: u64,
+    pub ext_size: u64,
+}
+
+impl MemLayout {
+    pub fn new(local_size: u64, ext_size: u64) -> MemLayout {
+        assert!(local_size.is_power_of_two(), "local size must be 2^n");
+        assert!(ext_size.is_power_of_two(), "ext size must be 2^n");
+        MemLayout { local_size, ext_size }
+    }
+
+    /// The paper's host ratio (8 GB local : 24 GB extended) scaled 64×
+    /// down: 128 MiB local, 256 MiB extended (large footprint ≈ 256 MiB).
+    pub fn sim_default() -> MemLayout {
+        MemLayout::new(128 << 20, 256 << 20)
+    }
+
+    #[inline]
+    pub fn ext_base(&self) -> u64 {
+        self.local_size
+    }
+
+    #[inline]
+    pub fn shadow_base(&self) -> u64 {
+        self.local_size + self.ext_size
+    }
+
+    #[inline]
+    pub fn total_span(&self) -> u64 {
+        self.local_size + 2 * self.ext_size
+    }
+
+    #[inline]
+    pub fn is_local(&self, va: u64) -> bool {
+        va < self.local_size
+    }
+
+    #[inline]
+    pub fn is_extended(&self, va: u64) -> bool {
+        va >= self.ext_base() && va < self.shadow_base()
+    }
+
+    #[inline]
+    pub fn is_shadow(&self, va: u64) -> bool {
+        va >= self.shadow_base() && va < self.total_span()
+    }
+
+    /// Shadow twin of an extended address: `p + EXT_MEM_SIZE` (§4.2).
+    #[inline]
+    pub fn shadow_of(&self, va: u64) -> u64 {
+        debug_assert!(self.is_extended(va), "shadow_of on non-extended address {va:#x}");
+        va + self.ext_size
+    }
+
+    /// Inverse of [`Self::shadow_of`].
+    #[inline]
+    pub fn extended_of(&self, va: u64) -> u64 {
+        debug_assert!(self.is_shadow(va));
+        va - self.ext_size
+    }
+
+    /// Offset within the extended channel's physical space for an
+    /// extended *or* shadow address; the shadow bit (MSB of that space)
+    /// survives, which is what the host memory controller row-decodes.
+    #[inline]
+    pub fn ext_channel_offset(&self, va: u64) -> u64 {
+        debug_assert!(va >= self.ext_base() && va < self.total_span());
+        va - self.ext_base()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> MemLayout {
+        MemLayout::new(128 << 20, 256 << 20)
+    }
+
+    #[test]
+    fn region_classification() {
+        let l = layout();
+        assert!(l.is_local(0));
+        assert!(l.is_local(l.local_size - 1));
+        assert!(l.is_extended(l.ext_base()));
+        assert!(l.is_extended(l.shadow_base() - 1));
+        assert!(l.is_shadow(l.shadow_base()));
+        assert!(l.is_shadow(l.total_span() - 1));
+    }
+
+    #[test]
+    fn shadow_roundtrip() {
+        let l = layout();
+        let p = l.ext_base() + 0x0234_0000;
+        let s = l.shadow_of(p);
+        assert!(l.is_shadow(s));
+        assert_eq!(l.extended_of(s), p);
+        assert_eq!(s - p, l.ext_size, "shadow distance is EXT_MEM_SIZE");
+    }
+
+    #[test]
+    fn channel_offset_preserves_shadow_bit() {
+        let l = layout();
+        let p = l.ext_base() + 0x40;
+        let s = l.shadow_of(p);
+        let po = l.ext_channel_offset(p);
+        let so = l.ext_channel_offset(s);
+        // Offsets differ exactly in the MSB of the 2·ext space.
+        assert_eq!(po ^ so, l.ext_size);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_pow2_rejected() {
+        MemLayout::new(100 << 20, 256 << 20);
+    }
+}

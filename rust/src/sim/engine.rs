@@ -1,0 +1,107 @@
+//! Deterministic event queue for the platform simulator.
+
+use crate::cache::DataKind;
+use crate::util::time::Ps;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Event payloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ev {
+    /// Re-advance a core.
+    CoreWake { core: usize },
+    /// Pump a channel group's controllers.
+    Pump { group: usize },
+    /// A memory line arrived for a core (fills caches, wakes waiters).
+    Deliver { core: usize, line: u64, data: DataKind },
+}
+
+/// A timestamped event; `seq` breaks ties deterministically in insertion
+/// order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    pub t: Ps,
+    pub seq: u64,
+    pub ev: Ev,
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed for min-heap behaviour inside BinaryHeap.
+        other.t.cmp(&self.t).then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap event queue with deterministic tie-breaking.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    next_seq: u64,
+    pub pushed: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue { heap: BinaryHeap::with_capacity(1024), next_seq: 0, pushed: 0 }
+    }
+
+    pub fn push(&mut self, t: Ps, ev: Ev) {
+        self.heap.push(Event { t, seq: self.next_seq, ev });
+        self.next_seq += 1;
+        self.pushed += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30, Ev::CoreWake { core: 0 });
+        q.push(10, Ev::CoreWake { core: 1 });
+        q.push(20, Ev::CoreWake { core: 2 });
+        let order: Vec<Ps> = std::iter::from_fn(|| q.pop().map(|e| e.t)).collect();
+        assert_eq!(order, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion() {
+        let mut q = EventQueue::new();
+        q.push(5, Ev::CoreWake { core: 0 });
+        q.push(5, Ev::CoreWake { core: 1 });
+        let a = q.pop().unwrap();
+        let b = q.pop().unwrap();
+        assert_eq!(a.ev, Ev::CoreWake { core: 0 });
+        assert_eq!(b.ev, Ev::CoreWake { core: 1 });
+    }
+
+    #[test]
+    fn empty_and_len() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(1, Ev::Pump { group: 0 });
+        assert_eq!(q.len(), 1);
+        q.pop();
+        assert!(q.is_empty());
+    }
+}

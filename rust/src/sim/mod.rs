@@ -1,0 +1,188 @@
+//! Event-driven platform simulator: cores → L1/TLB/MSHR → shared LLC →
+//! memory controllers → (MEC tree | QPI | PCIe | plain DRAM).
+//!
+//! One [`platform::Platform`] instance is one emulated system from paper
+//! Table 3 running one workload; [`run_workload`] is the one-call entry
+//! point that builds, runs, and reports.
+
+pub mod engine;
+pub mod platform;
+pub mod report;
+
+pub use platform::Platform;
+pub use report::SimReport;
+
+use crate::config::{RunSpec, SystemConfig};
+use crate::workloads::WorkloadKind;
+
+/// Build and run one (system, workload) pair to completion.
+pub fn run_workload(
+    cfg: &SystemConfig,
+    workload: WorkloadKind,
+    ops_per_core: u64,
+    seed: u64,
+) -> SimReport {
+    let spec = RunSpec {
+        workload,
+        footprint: RunSpec::smoke(workload).footprint,
+        ops_per_core,
+        seed,
+    };
+    run_spec(cfg, &spec)
+}
+
+/// Build and run with a full [`RunSpec`].
+pub fn run_spec(cfg: &SystemConfig, spec: &RunSpec) -> SimReport {
+    let mut p = Platform::build(cfg, spec);
+    p.run();
+    p.report()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke(cfg: &SystemConfig, wl: WorkloadKind) -> SimReport {
+        let mut spec = RunSpec::smoke(wl);
+        spec.ops_per_core = 3_000;
+        let mut cfg = cfg.clone();
+        cfg.cores = 2;
+        let r = run_spec(&cfg, &spec);
+        assert!(!r.deadlocked, "{}/{} deadlocked", r.mechanism, r.workload);
+        assert!(r.finish > 0);
+        assert!(r.retired_insts > 1_000);
+        r
+    }
+
+    #[test]
+    fn every_mechanism_completes_gups() {
+        for cfg in [
+            SystemConfig::ideal(),
+            SystemConfig::tl_ooo(),
+            SystemConfig::tl_lf(),
+            SystemConfig::tl_lf_batched(8),
+            SystemConfig::numa(),
+            SystemConfig::pcie(0.9),
+            SystemConfig::increased_trl(35_000),
+        ] {
+            let r = smoke(&cfg, WorkloadKind::Gups);
+            assert!(r.ipc() > 0.0, "{}: zero IPC", r.mechanism);
+        }
+    }
+
+    #[test]
+    fn every_workload_completes_on_tl_ooo() {
+        for &wl in crate::workloads::ALL_WORKLOADS {
+            smoke(&SystemConfig::tl_ooo(), wl);
+        }
+    }
+
+    #[test]
+    fn tl_ooo_slower_than_ideal_faster_than_tl_lf() {
+        let ideal = smoke(&SystemConfig::ideal(), WorkloadKind::Gups);
+        let ooo = smoke(&SystemConfig::tl_ooo(), WorkloadKind::Gups);
+        let lf = smoke(&SystemConfig::tl_lf(), WorkloadKind::Gups);
+        let p_ooo = ooo.perf_vs(&ideal);
+        let p_lf = lf.perf_vs(&ideal);
+        assert!(p_ooo < 1.0, "TL-OoO not slower than ideal: {p_ooo}");
+        assert!(p_lf < p_ooo, "TL-LF ({p_lf}) not slower than TL-OoO ({p_ooo})");
+        assert!(p_ooo > 0.2, "TL-OoO unreasonably slow: {p_ooo}");
+    }
+
+    #[test]
+    fn tl_mec_sees_twin_traffic() {
+        let r = smoke(&SystemConfig::tl_ooo(), WorkloadKind::Gups);
+        assert!(r.mec_first_loads > 100, "first loads: {}", r.mec_first_loads);
+        assert!(
+            r.mec_second_real > r.mec_first_loads / 4,
+            "second loads rarely got real data: {} vs {}",
+            r.mec_second_real,
+            r.mec_first_loads
+        );
+        // Retries are the rare case.
+        assert!(
+            r.twin_retries < r.mec_first_loads / 4,
+            "too many retries: {}",
+            r.twin_retries
+        );
+    }
+
+    #[test]
+    fn tl_increases_instructions_and_misses() {
+        let ideal = smoke(&SystemConfig::ideal(), WorkloadKind::Gups);
+        let ooo = smoke(&SystemConfig::tl_ooo(), WorkloadKind::Gups);
+        assert!(
+            ooo.retired_insts as f64 > 1.3 * ideal.retired_insts as f64,
+            "instruction expansion missing: {} vs {}",
+            ooo.retired_insts,
+            ideal.retired_insts
+        );
+        assert!(
+            ooo.llc_misses as f64 > 1.3 * ideal.llc_misses as f64,
+            "LLC miss increase missing: {} vs {}",
+            ooo.llc_misses,
+            ideal.llc_misses
+        );
+        assert!(
+            ooo.tlb_misses > ideal.tlb_misses,
+            "TLB miss increase missing"
+        );
+    }
+
+    #[test]
+    fn lf_serializes_concurrency() {
+        let ooo = smoke(&SystemConfig::tl_ooo(), WorkloadKind::Cg);
+        let lf = smoke(&SystemConfig::tl_lf(), WorkloadKind::Cg);
+        assert!(
+            lf.mlp_mean < ooo.mlp_mean,
+            "fence did not reduce MLP: lf={} ooo={}",
+            lf.mlp_mean,
+            ooo.mlp_mean
+        );
+        assert!(lf.fences > 100);
+    }
+
+    #[test]
+    fn pcie_faults_dominate_at_low_residency() {
+        // Long enough that steady-state faulting (not cold misses)
+        // dominates the comparison.
+        let run = |frac: f64| {
+            let mut cfg = SystemConfig::pcie(frac);
+            cfg.cores = 2;
+            let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+            spec.ops_per_core = 12_000;
+            run_spec(&cfg, &spec)
+        };
+        let hi = run(0.95);
+        let lo = run(0.10);
+        // hi-residency faults are mostly cold (one per touched page); the
+        // 10%-resident run faults on ~90 % of iterations.
+        assert!(lo.pcie_faults > hi.pcie_faults * 3 / 2,
+            "lo={} hi={}", lo.pcie_faults, hi.pcie_faults);
+        // Both runs are fault-bound (the swap device serializes), so the
+        // slowdown tracks the fault ratio.
+        assert!(
+            lo.finish > hi.finish * 3 / 2,
+            "faults did not slow the run: lo={} hi={}",
+            lo.finish,
+            hi.finish
+        );
+    }
+
+    #[test]
+    fn numa_slower_than_ideal() {
+        let ideal = smoke(&SystemConfig::ideal(), WorkloadKind::Bfs);
+        let numa = smoke(&SystemConfig::numa(), WorkloadKind::Bfs);
+        let p = numa.perf_vs(&ideal);
+        assert!(p < 1.0 && p > 0.3, "NUMA perf {p}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = smoke(&SystemConfig::tl_ooo(), WorkloadKind::Memcached);
+        let b = smoke(&SystemConfig::tl_ooo(), WorkloadKind::Memcached);
+        assert_eq!(a.finish, b.finish);
+        assert_eq!(a.retired_insts, b.retired_insts);
+        assert_eq!(a.llc_misses, b.llc_misses);
+    }
+}

@@ -1,0 +1,764 @@
+//! The platform: wiring of cores, caches, controllers, MEC, and baselines
+//! into one event-driven simulation.
+
+use super::engine::{Ev, EventQueue};
+use super::report::SimReport;
+use crate::baselines::{increased_trl, NumaLink, PcieSwap, SwapOutcome};
+use crate::cache::{CacheConfig, DataKind, LookupResult, MshrFile, MshrOutcome, SetAssocCache, Tlb};
+use crate::config::{RunSpec, SystemConfig};
+use crate::cpu::{Core, IssueResult, MemAccess, MemoryPort, AccessKind};
+use crate::dram::address::AddressMapping;
+use crate::dram::{MemController, Transaction};
+use crate::mec::Mec1;
+use crate::memmgr::Allocator;
+use crate::stats::LevelMeter;
+use crate::twinload::{Mechanism, Transform};
+use crate::util::time::Ps;
+use crate::workloads;
+use crate::util::FastMap;
+
+/// How a channel group realizes its accesses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum GroupKind {
+    /// Plain local DRAM.
+    Local,
+    /// The MEC'd extended channel (TL systems): spans ext + shadow.
+    ExtMec,
+    /// Remote DRAM behind the QPI link (NUMA).
+    ExtRemote,
+    /// Extended channel with increased tRL (§7.2).
+    ExtTrl,
+}
+
+/// A set of interleaved channels covering one address range.
+struct ChannelGroup {
+    kind: GroupKind,
+    base: u64,
+    span: u64,
+    map: AddressMapping,
+    channels: Vec<MemController>,
+    /// Earliest scheduled Pump event (spam guard; stale events are
+    /// harmless because pumping is idempotent).
+    next_pump: Option<Ps>,
+}
+
+impl ChannelGroup {
+    /// Route a line address within this group: (channel, channel-local).
+    fn route(&self, vaddr: u64) -> (usize, u64) {
+        let rel = (vaddr - self.base) % self.span;
+        let line = rel / 64;
+        let n = self.channels.len() as u64;
+        let ch = (line % n) as usize;
+        let ch_addr = (line / n) * 64;
+        (ch, ch_addr)
+    }
+}
+
+/// Per-core private state.
+struct CoreBundle {
+    core: Core,
+    source: Transform<Box<dyn crate::twinload::LogicalSource + Send>>,
+    l1: SetAssocCache,
+    tlb: Tlb,
+    mshr: MshrFile,
+    /// line → (req_id, is_store) waiters for in-flight misses.
+    waiters: FastMap<u64, Vec<(u64, bool)>>,
+    next_req: u64,
+    /// Earliest scheduled CoreWake (dedup guard against wake pileup).
+    next_wake: Option<Ps>,
+    /// Hardware page-walker occupancy: walks serialize per core (the
+    /// mechanism behind the paper's "GUPS concurrency is likely limited
+    /// by the many TLB misses", §6.1/Figure 11).
+    walker_free: Ps,
+    /// Stride-prefetcher stream table (multiple concurrent streams, as
+    /// real L2 prefetchers track): (last line, run length, lru stamp).
+    streams: [(u64, u32, u64); 8],
+    stream_clock: u64,
+}
+
+/// A read transaction in flight at a controller.
+#[derive(Debug, Clone, Copy)]
+struct PendingTxn {
+    /// Demand read for a core, or a hardware prefetch (LLC fill only).
+    core: Option<usize>,
+    line: u64,
+}
+
+pub struct Platform {
+    cfg: SystemConfig,
+    spec: RunSpec,
+    cores: Vec<CoreBundle>,
+    llc: SetAssocCache,
+    groups: Vec<ChannelGroup>,
+    /// One MEC tree per extended channel (a real deployment extends each
+    /// DDR channel with its own MEC1 — Figure 3 shows one channel's tree).
+    mecs: Vec<Mec1>,
+    numa: Option<NumaLink>,
+    pcie: Option<PcieSwap>,
+    pending: FastMap<u64, PendingTxn>,
+    next_txn: u64,
+    events: EventQueue,
+    mlp: LevelMeter,
+    now: Ps,
+    finished_cores: usize,
+    pub deadlocked: bool,
+}
+
+/// Buffered cross-component actions produced while a core is borrowed.
+#[derive(Default)]
+struct Outbox {
+    /// (line address, controller arrive time) for demand reads / RFOs.
+    reads: Vec<(u64, Ps)>,
+    writes: Vec<(u64, Ps)>,
+    /// Stride-prefetch candidates (LLC fills, no core waiter).
+    prefetches: Vec<(u64, Ps)>,
+}
+
+/// The per-core memory port: borrows the core's private hierarchy plus
+/// the shared LLC and books MC work into the outbox.
+struct Port<'a> {
+    cfg: &'a SystemConfig,
+    l1: &'a mut SetAssocCache,
+    tlb: &'a mut Tlb,
+    mshr: &'a mut MshrFile,
+    waiters: &'a mut FastMap<u64, Vec<(u64, bool)>>,
+    next_req: &'a mut u64,
+    walker_free: &'a mut Ps,
+    streams: &'a mut [(u64, u32, u64); 8],
+    stream_clock: &'a mut u64,
+    llc: &'a mut SetAssocCache,
+    pcie: &'a mut Option<PcieSwap>,
+    outbox: &'a mut Outbox,
+}
+
+/// Stride prefetch degree (lines fetched ahead once a stream is seen).
+const PREFETCH_DEGREE: u64 = 4;
+/// Misses in sequence before the prefetcher engages.
+const PREFETCH_TRAIN: u32 = 2;
+
+impl<'a> Port<'a> {
+    /// Submit an L1 eviction into the LLC (writeback path).
+    fn l1_evict(&mut self, addr: u64, dirty: bool, at: Ps) {
+        if !dirty {
+            return;
+        }
+        // Inclusive-ish: dirty data merges into the LLC copy if present,
+        // otherwise goes straight to memory.
+        match self.llc.probe(addr) {
+            Some(_) => {
+                self.llc.access(addr, true);
+            }
+            None => self.outbox.writes.push((addr, at)),
+        }
+    }
+}
+
+impl<'a> MemoryPort for Port<'a> {
+    fn issue(&mut self, now: Ps, acc: &MemAccess) -> IssueResult {
+        match acc.kind {
+            AccessKind::Invalidate => {
+                // clflush: drop from both levels (dirty data written back).
+                if self.l1.invalidate(acc.vaddr) {
+                    // write-back cost folded into inv_lat
+                }
+                self.llc.invalidate(acc.vaddr);
+                return IssueResult::Done { at: now + self.cfg.inv_lat, data: DataKind::Real };
+            }
+            AccessKind::SafePath => {
+                return IssueResult::Done { at: now + self.cfg.safe_lat, data: DataKind::Real };
+            }
+            AccessKind::Load | AccessKind::Store => {}
+        }
+        let is_store = acc.kind == AccessKind::Store;
+        let line = acc.vaddr & !63;
+
+        // Stall check first, against *probes* only: a stalled op will be
+        // re-issued, and hardware does not recount TLB/cache accesses for
+        // a replayed µop — neither do the counters here.
+        let l1_probe = self.l1.probe(line);
+        let llc_probe = if l1_probe.is_none() { self.llc.probe(line) } else { None };
+        if l1_probe.is_none()
+            && llc_probe.is_none()
+            && self.mshr.is_full()
+            && !self.mshr.pending(line)
+        {
+            self.mshr.request(line); // records the stall statistic
+            return IssueResult::Stall { retry_at: now + self.cfg.llc_lat };
+        }
+
+        // Committed: count TLB (virtual page of the *accessed* address —
+        // twins are distinct pages, the Figure-10 effect). Misses walk
+        // the page table on the core's two pipelined hardware walkers:
+        // walk *throughput* is one per walk_lat/2, which caps the MLP of
+        // TLB-thrashing workloads (the paper's "GUPS concurrency is
+        // likely limited by the many TLB misses"). Under NUMA, extended
+        // pages' leaf PTEs suffer remote page-table locality: extra
+        // latency plus walker occupancy (calibrated to the paper's
+        // measured NUMA slowdown on TLB-bound workloads).
+        let mut delay = if self.tlb.access(acc.vaddr) {
+            0
+        } else {
+            let remote =
+                self.cfg.mechanism == Mechanism::Numa && !self.cfg.layout.is_local(acc.vaddr);
+            let (lat_extra, occ_extra) = if remote {
+                (self.cfg.numa_one_way, self.cfg.numa_one_way / 2)
+            } else {
+                (0, 0)
+            };
+            let start = now.max(*self.walker_free);
+            *self.walker_free = start + self.cfg.walk_lat / 2 + occ_extra;
+            (start + self.cfg.walk_lat + lat_extra) - now
+        };
+
+        // PCIe residency check (extended data only).
+        if let Some(pcie) = self.pcie.as_mut() {
+            if self.cfg.layout.is_extended(acc.vaddr) {
+                if let SwapOutcome::Fault { swap_done, .. } = pcie.access(acc.vaddr, now) {
+                    delay += swap_done - now;
+                }
+            }
+        }
+
+        // L1.
+        if let LookupResult::Hit(d) = self.l1.access(line, is_store) {
+            return IssueResult::Done { at: now + delay + self.cfg.l1_lat, data: d };
+        }
+        // LLC.
+        if let LookupResult::Hit(d) = self.llc.access(line, false) {
+            if let Some(ev) = self.l1.fill(line, is_store, d) {
+                self.l1_evict(ev.addr, ev.dirty, now);
+            }
+            return IssueResult::Done { at: now + delay + self.cfg.llc_lat, data: d };
+        }
+        // Off-core: MSHR + memory transaction.
+        match self.mshr.request(line) {
+            MshrOutcome::Full => IssueResult::Stall { retry_at: now + self.cfg.llc_lat },
+            MshrOutcome::Merged => {
+                let req = *self.next_req;
+                *self.next_req += 1;
+                self.waiters.entry(line).or_default().push((req, is_store));
+                IssueResult::Pending { req_id: req }
+            }
+            MshrOutcome::Allocated => {
+                let req = *self.next_req;
+                *self.next_req += 1;
+                self.waiters.entry(line).or_default().push((req, is_store));
+                self.outbox.reads.push((line, now + delay + self.cfg.llc_lat));
+                // Stride prefetcher: the stream table matches this miss
+                // against tracked sequential streams; a trained stream
+                // pulls the next lines into the LLC (stopping at the page
+                // boundary, as hardware prefetchers do).
+                *self.stream_clock += 1;
+                let clock = *self.stream_clock;
+                let mut trained = false;
+                match self.streams.iter_mut().find(|s| line == s.0.wrapping_add(64)) {
+                    Some(s) => {
+                        s.0 = line;
+                        s.1 += 1;
+                        s.2 = clock;
+                        trained = s.1 >= PREFETCH_TRAIN;
+                    }
+                    None => {
+                        // Allocate over the LRU stream.
+                        let s = self.streams.iter_mut().min_by_key(|s| s.2).unwrap();
+                        *s = (line, 0, clock);
+                    }
+                }
+                if trained {
+                    for k in 1..=PREFETCH_DEGREE {
+                        let pf = line + 64 * k;
+                        if pf / 4096 != line / 4096 {
+                            break; // page boundary
+                        }
+                        if self.llc.probe(pf).is_none() && !self.mshr.pending(pf) {
+                            self.outbox
+                                .prefetches
+                                .push((pf, now + delay + self.cfg.llc_lat));
+                        }
+                    }
+                }
+                IssueResult::Pending { req_id: req }
+            }
+        }
+    }
+}
+
+impl Platform {
+    /// Build the platform for one (system, run) pair.
+    pub fn build(cfg: &SystemConfig, spec: &RunSpec) -> Platform {
+        cfg.validate().expect("invalid system config");
+        let layout = cfg.layout;
+
+        // --- Channel groups ---
+        let mut groups = Vec::new();
+        // Local memory: always present.
+        {
+            let geo = cfg.local_channel_geometry();
+            groups.push(ChannelGroup {
+                kind: GroupKind::Local,
+                base: 0,
+                span: layout.local_size,
+                map: AddressMapping::new(&geo, 1),
+                channels: (0..cfg.local_channels)
+                    .map(|_| MemController::new(cfg.host_timing, geo))
+                    .collect(),
+                next_pump: None,
+            });
+        }
+        let mut mecs = Vec::new();
+        let mut numa = None;
+        let mut pcie = None;
+        match cfg.mechanism {
+            Mechanism::TlLf | Mechanism::TlOoO | Mechanism::TlLfBatched(_) => {
+                // Extended + shadow space line-interleaved over the same
+                // number of channels as the Ideal system's extra DIMMs
+                // (paper Table 3: extended memory lives on the host's own
+                // channels); each channel carries its own MEC tree.
+                let nch = 4u64;
+                let geo = crate::config::geometry_for(2 * layout.ext_size / nch);
+                let map = AddressMapping::new(&geo, 1);
+                groups.push(ChannelGroup {
+                    kind: GroupKind::ExtMec,
+                    base: layout.ext_base(),
+                    span: 2 * layout.ext_size,
+                    map,
+                    channels: (0..nch)
+                        .map(|_| MemController::new(cfg.host_timing, geo))
+                        .collect(),
+                    next_pump: None,
+                });
+                for _ in 0..nch {
+                    mecs.push(Mec1::new(
+                        cfg.mec,
+                        layout.ext_size / nch,
+                        map,
+                        &cfg.host_timing,
+                    ));
+                }
+            }
+            Mechanism::Ideal => {
+                // Extended data on equally-local channels (the paper's
+                // emulation spreads it over the host's four channels).
+                let geo = cfg.ext_channel_geometry();
+                groups.push(ChannelGroup {
+                    kind: GroupKind::Local,
+                    base: layout.ext_base(),
+                    span: layout.ext_size,
+                    map: AddressMapping::new(&geo, 1),
+                    channels: (0..4).map(|_| MemController::new(cfg.host_timing, geo)).collect(),
+                    next_pump: None,
+                });
+            }
+            Mechanism::Numa => {
+                let geo = cfg.ext_channel_geometry();
+                groups.push(ChannelGroup {
+                    kind: GroupKind::ExtRemote,
+                    base: layout.ext_base(),
+                    span: layout.ext_size,
+                    map: AddressMapping::new(&geo, 1),
+                    channels: (0..4).map(|_| MemController::new(cfg.host_timing, geo)).collect(),
+                    next_pump: None,
+                });
+                numa = Some(NumaLink::new(cfg.numa_one_way, cfg.numa_gbps));
+            }
+            Mechanism::IncreasedTrl => {
+                // Same four-channel layout as every other system — only
+                // the timing differs (tRL + extra, bank held longer).
+                let geo = cfg.ext_channel_geometry();
+                let timing = increased_trl(&cfg.host_timing, cfg.trl_extra);
+                groups.push(ChannelGroup {
+                    kind: GroupKind::ExtTrl,
+                    base: layout.ext_base(),
+                    span: layout.ext_size,
+                    map: AddressMapping::new(&geo, 1),
+                    channels: (0..4).map(|_| MemController::new(timing, geo)).collect(),
+                    next_pump: None,
+                });
+            }
+            Mechanism::Pcie => {
+                // Extended data swaps into local DRAM; DRAM-level routing
+                // aliases ext addresses onto the local channels (cache and
+                // TLB still see distinct virtual lines). Residency pool
+                // sized from the workload's extended footprint.
+            }
+        }
+
+        // --- Workload placement + per-core sources ---
+        let mut alloc = Allocator::new(layout, 1 << 20);
+        let sig = spec.workload.signature();
+        let data = workloads::DataRegions::place(&mut alloc, spec.footprint, &sig);
+        if cfg.mechanism == Mechanism::Pcie {
+            let ext_pages = (data.ext_len / 4096) as usize;
+            let resident = ((ext_pages as f64) * cfg.pcie_local_frac).max(1.0) as usize;
+            pcie = Some(PcieSwap::paper(resident));
+        }
+
+        // SMT by static partitioning: each hardware thread is a bundle
+        // with its share of the core's window and private structures.
+        let smt = cfg.smt.max(1);
+        let hw_threads = cfg.cores * smt;
+        let mut tp = cfg.core;
+        tp.rob_size = (tp.rob_size / smt).max(16);
+        let mut l1 = cfg.l1;
+        l1.size_bytes = (l1.size_bytes / smt as u64).max(l1.ways as u64 * 64);
+        let thread_mshrs = (cfg.mshrs_per_core / smt).max(1);
+        let thread_tlb = (cfg.tlb_entries / smt as u32).max(16);
+        let cores: Vec<CoreBundle> = (0..hw_threads)
+            .map(|i| {
+                let wl = workloads::build_with_regions(
+                    spec.workload,
+                    data,
+                    spec.ops_per_core,
+                    spec.seed.wrapping_add(i as u64 * 0x9E37_79B9),
+                );
+                CoreBundle {
+                    core: Core::new(tp),
+                    source: Transform::new(wl, cfg.mechanism, layout),
+                    l1: SetAssocCache::new(l1),
+                    tlb: Tlb::new(thread_tlb, 4, 4 << 10),
+                    mshr: MshrFile::new(thread_mshrs),
+                    waiters: FastMap::default(),
+                    next_req: 1,
+                    next_wake: None,
+                    walker_free: 0,
+                    streams: [(u64::MAX, 0, 0); 8],
+                    stream_clock: 0,
+                }
+            })
+            .collect();
+
+        let mut events = EventQueue::new();
+        for i in 0..hw_threads {
+            events.push(0, Ev::CoreWake { core: i });
+        }
+
+        Platform {
+            cfg: cfg.clone(),
+            spec: *spec,
+            cores,
+            llc: SetAssocCache::new(CacheConfig { ..cfg.llc }),
+            groups,
+            mecs,
+            numa,
+            pcie,
+            pending: FastMap::default(),
+            next_txn: 1,
+            events,
+            mlp: LevelMeter::new(),
+            now: 0,
+            finished_cores: 0,
+            deadlocked: false,
+        }
+    }
+
+    /// Find the channel group serving `vaddr`.
+    fn group_of(&self, vaddr: u64) -> usize {
+        if self.cfg.mechanism == Mechanism::Pcie {
+            return 0; // everything lives in local DRAM (resident pages)
+        }
+        for (i, g) in self.groups.iter().enumerate() {
+            if vaddr >= g.base && vaddr < g.base + g.span {
+                return i;
+            }
+        }
+        // Shadow addresses fall inside the MEC group's span; anything else
+        // is a bug in the generators.
+        panic!("address {vaddr:#x} outside all channel groups");
+    }
+
+    /// Enqueue a read/write transaction; schedules a pump.
+    /// `read_for`: `Some(Some(core))` demand read, `Some(None)` hardware
+    /// prefetch, `None` posted write.
+    fn submit(&mut self, line: u64, arrive: Ps, read_for: Option<Option<usize>>) {
+        let gi = self.group_of(line);
+        let mut arrive = arrive;
+        if self.groups[gi].kind == GroupKind::ExtRemote {
+            arrive = self.numa.as_mut().expect("numa link").cross(arrive);
+        }
+        let (ch, ch_addr) = self.groups[gi].route(line);
+        let id = self.next_txn;
+        self.next_txn += 1;
+        if let Some(kind) = read_for {
+            self.pending.insert(id, PendingTxn { core: kind, line });
+            self.mlp.up(self.now);
+        }
+        let g = &mut self.groups[gi];
+        let addr = g.map.decode(ch_addr);
+        g.channels[ch].enqueue(Transaction {
+            id,
+            addr,
+            is_write: read_for.is_none(),
+            arrive,
+        });
+        self.schedule_pump(gi, arrive.max(self.now));
+    }
+
+    /// Schedule a Pump for group `gi` no later than `t` (dedup guard).
+    fn schedule_pump(&mut self, gi: usize, t: Ps) {
+        let g = &mut self.groups[gi];
+        match g.next_pump {
+            Some(s) if s <= t => {}
+            _ => {
+                g.next_pump = Some(t);
+                self.events.push(t, Ev::Pump { group: gi });
+            }
+        }
+    }
+
+    /// Advance one core at `now`, then flush its outbox.
+    fn advance_core(&mut self, ci: usize, now: Ps) {
+        let mut outbox = Outbox::default();
+        let was_finished = self.cores[ci].core.finished();
+        {
+            let b = &mut self.cores[ci];
+            if matches!(b.next_wake, Some(w) if w <= now) {
+                b.next_wake = None;
+            }
+            let mut port = Port {
+                cfg: &self.cfg,
+                l1: &mut b.l1,
+                tlb: &mut b.tlb,
+                mshr: &mut b.mshr,
+                waiters: &mut b.waiters,
+                next_req: &mut b.next_req,
+                walker_free: &mut b.walker_free,
+                streams: &mut b.streams,
+                stream_clock: &mut b.stream_clock,
+                llc: &mut self.llc,
+                pcie: &mut self.pcie,
+                outbox: &mut outbox,
+            };
+            if let Some(wake) = b.core.advance(now, &mut b.source, &mut port) {
+                // Dedup: keep only the earliest outstanding wake per core.
+                match b.next_wake {
+                    Some(s) if s <= wake => {}
+                    _ => {
+                        b.next_wake = Some(wake);
+                        self.events.push(wake, Ev::CoreWake { core: ci });
+                    }
+                }
+            }
+        }
+        for (line, at) in outbox.reads.drain(..) {
+            self.submit(line, at, Some(Some(ci)));
+        }
+        for (line, at) in outbox.prefetches.drain(..) {
+            self.submit(line, at, Some(None));
+        }
+        for (line, at) in outbox.writes.drain(..) {
+            self.submit(line, at, None);
+        }
+        if !was_finished && self.cores[ci].core.finished() {
+            self.finished_cores += 1;
+        }
+    }
+
+    /// Pump all controllers of a group at `now`; deliver service results.
+    fn pump_group(&mut self, gi: usize, now: Ps) {
+        if matches!(self.groups[gi].next_pump, Some(s) if s <= now) {
+            self.groups[gi].next_pump = None;
+        }
+        let kind = self.groups[gi].kind;
+        let mut next_wake: Option<Ps> = None;
+        let nch = self.groups[gi].channels.len();
+        for ch in 0..nch {
+            let (results, wake) = self.groups[gi].channels[ch].pump(now);
+            if let Some(w) = wake {
+                next_wake = Some(next_wake.map_or(w, |x: Ps| x.min(w)));
+            }
+            for r in results {
+                // The channel's MEC observes its command stream.
+                let mut data = DataKind::Real;
+                if kind == GroupKind::ExtMec {
+                    let mec = &mut self.mecs[ch];
+                    for cmd in &r.commands {
+                        if let Some(outcome) = mec.on_command(cmd) {
+                            data = outcome.data();
+                        }
+                    }
+                    if self.cfg.emulate_content {
+                        // Paper-emulation content model (§5): extended
+                        // lines hold real values, shadow lines fake —
+                        // the MEC machinery above still sets the timing
+                        // and statistics.
+                        if let Some(p) = self.pending.get(&r.id) {
+                            data = if self.cfg.layout.is_shadow(p.line) {
+                                DataKind::Fake
+                            } else {
+                                DataKind::Real
+                            };
+                        }
+                    }
+                }
+                if r.is_write {
+                    continue;
+                }
+                let Some(p) = self.pending.remove(&r.id) else {
+                    continue;
+                };
+                let mut done = r.data_end + self.cfg.llc_lat; // fill path back up
+                if kind == GroupKind::ExtRemote {
+                    done += self.numa.as_ref().expect("numa").one_way;
+                }
+                match p.core {
+                    Some(core) => {
+                        self.events.push(done, Ev::Deliver { core, line: p.line, data })
+                    }
+                    None => {
+                        // Hardware prefetch: fill the LLC, wake nobody.
+                        self.mlp.down(now.max(self.now));
+                        if let Some(ev) = self.llc.fill(p.line, false, data) {
+                            if ev.dirty {
+                                self.submit(ev.addr, r.data_end, None);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(w) = next_wake {
+            self.schedule_pump(gi, w.max(now));
+        }
+    }
+
+    /// A line arrived for a core: fill caches, wake waiters.
+    fn deliver(&mut self, ci: usize, line: u64, data: DataKind, at: Ps) {
+        self.mlp.down(at);
+        // Fill LLC (evictions → writebacks).
+        if let Some(ev) = self.llc.fill(line, false, data) {
+            if ev.dirty {
+                self.submit(ev.addr, at, None);
+            }
+        }
+        let waiters = self.cores[ci].waiters.remove(&line).unwrap_or_default();
+        let any_store = waiters.iter().any(|&(_, s)| s);
+        if let Some(ev) = self.cores[ci].l1.fill(line, any_store, data) {
+            if ev.dirty {
+                // L1 dirty eviction merges into LLC if present.
+                match self.llc.probe(ev.addr) {
+                    Some(_) => {
+                        self.llc.access(ev.addr, true);
+                    }
+                    None => self.submit(ev.addr, at, None),
+                }
+            }
+        }
+        self.cores[ci].mshr.complete(line);
+        for (req, _) in waiters {
+            self.cores[ci].core.complete(req, at, data);
+        }
+        self.advance_core(ci, at);
+    }
+
+    /// Run to completion.
+    pub fn run(&mut self) {
+        let mut steps: u64 = 0;
+        while let Some(evt) = self.events.pop() {
+            debug_assert!(evt.t >= self.now, "time went backwards");
+            self.now = evt.t.max(self.now);
+            match evt.ev {
+                Ev::CoreWake { core } => self.advance_core(core, self.now),
+                Ev::Pump { group } => self.pump_group(group, self.now),
+                Ev::Deliver { core, line, data } => self.deliver(core, line, data, self.now),
+            }
+            steps += 1;
+            if steps % 1_000_000 == 0 && std::env::var_os("TWINLOAD_TRACE").is_some() {
+                eprintln!(
+                    "[trace] steps={steps} now={} events={} finished={}/{} pending={}",
+                    self.now,
+                    self.events.len(),
+                    self.finished_cores,
+                    self.cores.len(),
+                    self.pending.len()
+                );
+            }
+            if steps > 2_000_000_000 {
+                self.deadlocked = true;
+                break;
+            }
+        }
+        if self.finished_cores != self.cores.len() {
+            self.deadlocked = true;
+            if std::env::var_os("TWINLOAD_TRACE").is_some() {
+                eprintln!("[deadlock] now={} pending_txns={}", self.now, self.pending.len());
+                for (i, b) in self.cores.iter().enumerate() {
+                    if !b.core.finished() {
+                        eprintln!(
+                            "[deadlock] core {i}: {} mshr={} waiters={}",
+                            b.core.debug_state(),
+                            b.mshr.outstanding(),
+                            b.waiters.len()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Collect the run's statistics.
+    pub fn report(&self) -> SimReport {
+        SimReport::collect(self)
+    }
+
+    // --- accessors for report.rs ---
+    pub(crate) fn cfg(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    pub(crate) fn spec(&self) -> &RunSpec {
+        &self.spec
+    }
+
+    pub(crate) fn core_stats(&self) -> Vec<crate::cpu::CoreStats> {
+        self.cores.iter().map(|b| b.core.stats).collect()
+    }
+
+    pub(crate) fn transform_stats(&self) -> Vec<crate::twinload::TransformStats> {
+        self.cores.iter().map(|b| b.source.stats).collect()
+    }
+
+    pub(crate) fn llc_stats(&self) -> (u64, u64) {
+        (self.llc.hits, self.llc.misses)
+    }
+
+    pub(crate) fn tlb_misses(&self) -> u64 {
+        self.cores.iter().map(|b| b.tlb.misses).sum()
+    }
+
+    pub(crate) fn tlb_accesses(&self) -> u64 {
+        self.cores.iter().map(|b| b.tlb.hits + b.tlb.misses).sum()
+    }
+
+    pub(crate) fn dram_totals(&self) -> (u64, u64, u64, u64, f64) {
+        let (mut reads, mut writes, mut rbytes, mut wbytes) = (0, 0, 0, 0);
+        let (mut hits, mut total) = (0u64, 0u64);
+        for g in &self.groups {
+            for c in &g.channels {
+                reads += c.stats.reads;
+                writes += c.stats.writes;
+                rbytes += c.stats.read_bytes;
+                wbytes += c.stats.write_bytes;
+                hits += c.stats.row_hits;
+                total += c.stats.row_hits + c.stats.row_misses + c.stats.row_conflicts;
+            }
+        }
+        let hit_rate = if total == 0 { 0.0 } else { hits as f64 / total as f64 };
+        (reads, writes, rbytes, wbytes, hit_rate)
+    }
+
+    pub(crate) fn mlp_meter(&self) -> &LevelMeter {
+        &self.mlp
+    }
+
+    pub(crate) fn now(&self) -> Ps {
+        self.now
+    }
+
+    pub(crate) fn mec_refs(&self) -> &[Mec1] {
+        &self.mecs
+    }
+
+    pub(crate) fn pcie_ref(&self) -> Option<&PcieSwap> {
+        self.pcie.as_ref()
+    }
+}

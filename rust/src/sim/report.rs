@@ -1,0 +1,172 @@
+//! Aggregated run statistics — the raw material of Figures 7–13.
+
+use super::platform::Platform;
+use crate::twinload::TransformStats;
+use crate::util::time::{gbps, ps_to_ns, Ps};
+
+/// Everything a figure bench needs from one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub mechanism: &'static str,
+    pub workload: &'static str,
+    pub cores: usize,
+    /// Wall-clock of the simulated execution (max core finish).
+    pub finish: Ps,
+    pub cpu_period: Ps,
+    // Core aggregates.
+    pub retired_insts: u64,
+    pub retired_ops: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub fences: u64,
+    pub twin_retries: u64,
+    pub safe_paths: u64,
+    pub cas_fails: u64,
+    // Hierarchy.
+    pub llc_hits: u64,
+    pub llc_misses: u64,
+    pub tlb_misses: u64,
+    pub tlb_accesses: u64,
+    // DRAM.
+    pub dram_reads: u64,
+    pub dram_writes: u64,
+    pub dram_read_bytes: u64,
+    pub dram_write_bytes: u64,
+    pub row_hit_rate: f64,
+    // Concurrency.
+    pub mlp_mean: f64,
+    pub mlp_peak: u64,
+    // Transform.
+    pub transform: TransformStats,
+    // Mechanism extras.
+    pub mec_first_loads: u64,
+    pub mec_second_real: u64,
+    pub mec_second_late: u64,
+    pub lvc_evictions: u64,
+    pub pcie_faults: u64,
+    pub deadlocked: bool,
+}
+
+impl SimReport {
+    pub(crate) fn collect(p: &Platform) -> SimReport {
+        let cfg = p.cfg();
+        let spec = p.spec();
+        let core_stats = p.core_stats();
+        let finish = core_stats.iter().map(|s| s.finish).max().unwrap_or(0);
+        let (llc_hits, llc_misses) = p.llc_stats();
+        let (dram_reads, dram_writes, dram_read_bytes, dram_write_bytes, row_hit_rate) =
+            p.dram_totals();
+        let mut transform = TransformStats::default();
+        for t in p.transform_stats() {
+            transform.logical_mem += t.logical_mem;
+            transform.logical_insts += t.logical_insts;
+            transform.ext_loads += t.ext_loads;
+            transform.ext_stores += t.ext_stores;
+            transform.local_accesses += t.local_accesses;
+            transform.micro_insts += t.micro_insts;
+            transform.fences += t.fences;
+        }
+        let (mut mec_first_loads, mut mec_second_real, mut mec_second_late, mut lvc_evictions) =
+            (0, 0, 0, 0);
+        for m in p.mec_refs() {
+            mec_first_loads += m.stats.first_loads;
+            mec_second_real += m.stats.second_real;
+            mec_second_late += m.stats.second_late;
+            lvc_evictions += m.lvc().evictions;
+        }
+        SimReport {
+            mechanism: cfg.mechanism.name(),
+            workload: spec.workload.name(),
+            cores: cfg.cores,
+            finish,
+            cpu_period: cfg.core.period,
+            retired_insts: core_stats.iter().map(|s| s.retired_insts).sum(),
+            retired_ops: core_stats.iter().map(|s| s.retired_ops).sum(),
+            loads: core_stats.iter().map(|s| s.loads).sum(),
+            stores: core_stats.iter().map(|s| s.stores).sum(),
+            fences: core_stats.iter().map(|s| s.fences).sum(),
+            twin_retries: core_stats.iter().map(|s| s.twin_retries).sum(),
+            safe_paths: core_stats.iter().map(|s| s.safe_paths).sum(),
+            cas_fails: core_stats.iter().map(|s| s.cas_fails).sum(),
+            llc_hits,
+            llc_misses,
+            tlb_misses: p.tlb_misses(),
+            tlb_accesses: p.tlb_accesses(),
+            dram_reads,
+            dram_writes,
+            dram_read_bytes,
+            dram_write_bytes,
+            row_hit_rate,
+            mlp_mean: p.mlp_meter().mean(p.now()),
+            mlp_peak: p.mlp_meter().peak(),
+            transform,
+            mec_first_loads,
+            mec_second_real,
+            mec_second_late,
+            lvc_evictions,
+            pcie_faults: p.pcie_ref().map(|s| s.faults).unwrap_or(0),
+            deadlocked: p.deadlocked,
+        }
+    }
+
+    /// Aggregate IPC across cores (instructions / wall-clock cycles,
+    /// single-core-equivalent denominator × cores).
+    pub fn ipc(&self) -> f64 {
+        if self.finish == 0 {
+            return 0.0;
+        }
+        let cycles = self.finish as f64 / self.cpu_period as f64;
+        self.retired_insts as f64 / (cycles * self.cores as f64)
+    }
+
+    /// Run time in nanoseconds (the normalized-performance numerator).
+    pub fn runtime_ns(&self) -> f64 {
+        ps_to_ns(self.finish)
+    }
+
+    /// Performance relative to a baseline run (paper Figure 7:
+    /// `baseline.time / self.time`, so 1.0 = as fast as Ideal).
+    pub fn perf_vs(&self, baseline: &SimReport) -> f64 {
+        if self.finish == 0 {
+            return 0.0;
+        }
+        baseline.finish as f64 / self.finish as f64
+    }
+
+    /// LLC misses per kilo-instruction relative to an instruction base
+    /// (the paper plots TL-OoO MPKI against *Ideal* retired instructions).
+    pub fn llc_mpki(&self, inst_base: u64) -> f64 {
+        if inst_base == 0 {
+            return 0.0;
+        }
+        self.llc_misses as f64 * 1000.0 / inst_base as f64
+    }
+
+    pub fn tlb_mpki(&self, inst_base: u64) -> f64 {
+        if inst_base == 0 {
+            return 0.0;
+        }
+        self.tlb_misses as f64 * 1000.0 / inst_base as f64
+    }
+
+    /// Average DRAM read bandwidth over the run (Figure 12).
+    pub fn read_bandwidth_gbps(&self) -> f64 {
+        gbps(self.dram_read_bytes, self.finish)
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}/{}: {:.3} ms, IPC {:.2}, LLC miss {}k, TLB miss {}k, BW {:.2} GB/s, MLP {:.1}{}",
+            self.mechanism,
+            self.workload,
+            self.runtime_ns() / 1e6,
+            self.ipc(),
+            self.llc_misses / 1000,
+            self.tlb_misses / 1000,
+            self.read_bandwidth_gbps(),
+            self.mlp_mean,
+            if self.deadlocked { " [DEADLOCK]" } else { "" },
+        )
+    }
+}

@@ -1,0 +1,289 @@
+//! Simulation statistics: counters, histograms, time-weighted averages,
+//! and the table / CSV renderers used by the figure-reproduction benches.
+
+pub mod hist;
+pub mod table;
+
+pub use hist::Histogram;
+pub use table::Table;
+
+use crate::util::time::{ps_to_s, Ps};
+use std::collections::BTreeMap;
+
+/// A named bag of monotonically increasing counters.
+///
+/// `BTreeMap` keeps deterministic iteration order for reporting.
+#[derive(Debug, Default, Clone)]
+pub struct Counters {
+    map: BTreeMap<&'static str, u64>,
+}
+
+impl Counters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, key: &'static str, v: u64) {
+        *self.map.entry(key).or_insert(0) += v;
+    }
+
+    #[inline]
+    pub fn inc(&mut self, key: &'static str) {
+        self.add(key, 1);
+    }
+
+    #[inline]
+    pub fn get(&self, key: &str) -> u64 {
+        self.map.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&'static str, u64)> + '_ {
+        self.map.iter().map(|(k, v)| (*k, *v))
+    }
+
+    /// Merge another counter bag into this one (used when aggregating
+    /// per-core stats into a platform total).
+    pub fn merge(&mut self, other: &Counters) {
+        for (k, v) in other.iter() {
+            self.add(k, v);
+        }
+    }
+
+    /// Ratio of two counters, `0.0` when the denominator is zero.
+    pub fn ratio(&self, num: &str, den: &str) -> f64 {
+        let d = self.get(den);
+        if d == 0 {
+            0.0
+        } else {
+            self.get(num) as f64 / d as f64
+        }
+    }
+
+    /// Misses per kilo-instruction style metric against an explicit
+    /// instruction count (the paper normalizes TL-OoO MPKI to *Ideal*
+    /// retired instructions, so the denominator must be injectable).
+    pub fn mpki(&self, miss_key: &str, instructions: u64) -> f64 {
+        if instructions == 0 {
+            0.0
+        } else {
+            self.get(miss_key) as f64 * 1000.0 / instructions as f64
+        }
+    }
+}
+
+/// Time-weighted running average of an integer level (e.g. outstanding
+/// off-core reads, Figure 11). Integrates `level × dt`.
+#[derive(Debug, Clone)]
+pub struct LevelMeter {
+    level: u64,
+    last_change: Ps,
+    integral: u128,
+    peak: u64,
+}
+
+impl LevelMeter {
+    pub fn new() -> Self {
+        LevelMeter { level: 0, last_change: 0, integral: 0, peak: 0 }
+    }
+
+    /// Record that the level changed to `level` at time `now`.
+    pub fn set(&mut self, now: Ps, level: u64) {
+        debug_assert!(now >= self.last_change, "time went backwards");
+        self.integral += self.level as u128 * (now - self.last_change) as u128;
+        self.level = level;
+        self.last_change = now;
+        self.peak = self.peak.max(level);
+    }
+
+    #[inline]
+    pub fn up(&mut self, now: Ps) {
+        self.set(now, self.level + 1);
+    }
+
+    #[inline]
+    pub fn down(&mut self, now: Ps) {
+        debug_assert!(self.level > 0, "level underflow");
+        self.set(now, self.level - 1);
+    }
+
+    #[inline]
+    pub fn level(&self) -> u64 {
+        self.level
+    }
+
+    #[inline]
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    /// Time-weighted mean level over `[0, now]`.
+    pub fn mean(&self, now: Ps) -> f64 {
+        if now == 0 {
+            return self.level as f64;
+        }
+        let integral =
+            self.integral + self.level as u128 * (now.saturating_sub(self.last_change)) as u128;
+        integral as f64 / now as f64
+    }
+}
+
+impl Default for LevelMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Byte-rate meter for bandwidth reporting (Figure 12).
+#[derive(Debug, Default, Clone)]
+pub struct RateMeter {
+    bytes: u64,
+}
+
+impl RateMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, bytes: u64) {
+        self.bytes += bytes;
+    }
+
+    #[inline]
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// GB/s over the elapsed interval.
+    pub fn gbps(&self, elapsed: Ps) -> f64 {
+        if elapsed == 0 {
+            0.0
+        } else {
+            self.bytes as f64 / ps_to_s(elapsed) / 1e9
+        }
+    }
+}
+
+/// Summary statistics over a sample of f64s (benches use trimmed means).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary::default();
+        }
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = if n % 2 == 1 {
+            sorted[n / 2]
+        } else {
+            0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+        };
+        Summary {
+            n,
+            mean,
+            stddev: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            median,
+        }
+    }
+
+    /// Geometric mean of strictly positive samples (the paper's "average"
+    /// for normalized performance is closer to geomean semantics).
+    pub fn geomean(samples: &[f64]) -> f64 {
+        if samples.is_empty() {
+            return 0.0;
+        }
+        let log_sum: f64 = samples.iter().map(|x| x.max(1e-300).ln()).sum();
+        (log_sum / samples.len() as f64).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_add_get_merge() {
+        let mut a = Counters::new();
+        a.inc("x");
+        a.add("x", 2);
+        a.add("y", 5);
+        let mut b = Counters::new();
+        b.add("x", 10);
+        a.merge(&b);
+        assert_eq!(a.get("x"), 13);
+        assert_eq!(a.get("y"), 5);
+        assert_eq!(a.get("missing"), 0);
+    }
+
+    #[test]
+    fn counters_ratio_and_mpki() {
+        let mut c = Counters::new();
+        c.add("miss", 50);
+        c.add("acc", 200);
+        assert_eq!(c.ratio("miss", "acc"), 0.25);
+        assert_eq!(c.ratio("miss", "nothing"), 0.0);
+        assert_eq!(c.mpki("miss", 10_000), 5.0);
+        assert_eq!(c.mpki("miss", 0), 0.0);
+    }
+
+    #[test]
+    fn level_meter_integrates() {
+        let mut m = LevelMeter::new();
+        m.set(0, 2); // level 2 during [0, 10)
+        m.set(10, 4); // level 4 during [10, 20)
+        assert_eq!(m.peak(), 4);
+        let mean = m.mean(20);
+        assert!((mean - 3.0).abs() < 1e-9, "mean={mean}");
+    }
+
+    #[test]
+    fn level_meter_up_down() {
+        let mut m = LevelMeter::new();
+        m.up(0);
+        m.up(5);
+        m.down(10);
+        assert_eq!(m.level(), 1);
+        // integral: 1*5 + 2*5 = 15 over 10 => 1.5
+        assert!((m.mean(10) - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rate_meter_gbps() {
+        let mut r = RateMeter::new();
+        r.add(128);
+        // 128 B over 10 ns = 12.8 GB/s
+        assert!((r.gbps(10_000) - 12.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summary_of_samples() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.median - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn geomean_basics() {
+        let g = Summary::geomean(&[1.0, 4.0]);
+        assert!((g - 2.0).abs() < 1e-12);
+        assert_eq!(Summary::geomean(&[]), 0.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! In-house property-testing harness.
+//!
+//! The vendored registry carries no `proptest`, so this module provides
+//! the subset the test-suite needs: seeded case generation with
+//! per-failure reproduction seeds, and linear input shrinking for
+//! integer parameters. Properties return `Ok(())` or a failure message.
+
+use crate::util::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: u32,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // Env knobs mirror proptest's: TWINLOAD_PROP_CASES / _SEED.
+        let cases = std::env::var("TWINLOAD_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        let seed = std::env::var("TWINLOAD_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x7e57_5eed);
+        PropConfig { cases, seed }
+    }
+}
+
+/// Run `prop` against `cases` seeded RNGs; panics with the failing case
+/// seed on the first failure (re-run with `TWINLOAD_PROP_SEED=<seed>
+/// TWINLOAD_PROP_CASES=1` to reproduce).
+pub fn check<F>(name: &str, cfg: PropConfig, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {case_seed:#x}): {msg}\n\
+                 reproduce: TWINLOAD_PROP_SEED={case_seed} TWINLOAD_PROP_CASES=1"
+            );
+        }
+    }
+}
+
+/// Shrink a failing integer input toward `lo` while `fails` keeps
+/// failing; returns the smallest failing value found.
+pub fn shrink_u64<F: Fn(u64) -> bool>(mut failing: u64, lo: u64, fails: F) -> u64 {
+    debug_assert!(fails(failing));
+    while failing > lo {
+        let candidate = lo + (failing - lo) / 2;
+        if fails(candidate) {
+            failing = candidate;
+        } else if failing - candidate <= 1 {
+            break;
+        } else {
+            // Try closer to the failing point.
+            let near = failing - 1;
+            if fails(near) {
+                failing = near;
+            } else {
+                break;
+            }
+        }
+    }
+    failing
+}
+
+/// Sample helpers for common simulation inputs.
+pub mod gen {
+    use crate::util::Rng;
+
+    /// A random cache-line-aligned address below `span`.
+    pub fn line_addr(rng: &mut Rng, span: u64) -> u64 {
+        rng.below(span / 64) * 64
+    }
+
+    /// A vector of `n` random values in `[0, bound)`.
+    pub fn vec_below(rng: &mut Rng, n: usize, bound: u64) -> Vec<u64> {
+        (0..n).map(|_| rng.below(bound)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", PropConfig { cases: 16, seed: 1 }, |rng| {
+            let v = rng.below(100);
+            if v < 100 {
+                Ok(())
+            } else {
+                Err(format!("{v} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", PropConfig { cases: 4, seed: 2 }, |_| {
+            Err("nope".to_string())
+        });
+    }
+
+    #[test]
+    fn shrink_finds_boundary() {
+        // Fails for v >= 37.
+        let smallest = shrink_u64(1000, 0, |v| v >= 37);
+        assert_eq!(smallest, 37);
+    }
+
+    #[test]
+    fn gen_helpers_in_bounds() {
+        let mut rng = crate::util::Rng::new(3);
+        for _ in 0..100 {
+            let a = gen::line_addr(&mut rng, 1 << 20);
+            assert_eq!(a % 64, 0);
+            assert!(a < 1 << 20);
+        }
+        let v = gen::vec_below(&mut rng, 10, 5);
+        assert!(v.iter().all(|&x| x < 5));
+    }
+}

@@ -1,0 +1,87 @@
+//! Logical (pre-transform) operation stream — what the *program* does,
+//! before the access mechanism decides how each access is realized.
+
+/// A logical memory access.
+#[derive(Debug, Clone, Copy)]
+pub struct LogicalMem {
+    /// Virtual address (cache-line aligned by generators).
+    pub vaddr: u64,
+    pub is_store: bool,
+    /// Logical index of an earlier access whose loaded *value* this
+    /// access's address depends on (pointer chase), if any.
+    pub dep_on: Option<u64>,
+}
+
+/// One logical operation.
+#[derive(Debug, Clone, Copy)]
+pub enum LogicalOp {
+    Mem(LogicalMem),
+    /// `n` non-memory instructions between accesses.
+    Compute(u32),
+}
+
+impl LogicalOp {
+    pub fn load(vaddr: u64) -> LogicalOp {
+        LogicalOp::Mem(LogicalMem { vaddr, is_store: false, dep_on: None })
+    }
+
+    pub fn store(vaddr: u64) -> LogicalOp {
+        LogicalOp::Mem(LogicalMem { vaddr, is_store: true, dep_on: None })
+    }
+
+    pub fn load_dep(vaddr: u64, dep_on: u64) -> LogicalOp {
+        LogicalOp::Mem(LogicalMem { vaddr, is_store: false, dep_on: Some(dep_on) })
+    }
+
+    /// Instruction count of the logical op (mem = 1).
+    pub fn insts(&self) -> u32 {
+        match self {
+            LogicalOp::Compute(n) => *n,
+            LogicalOp::Mem(_) => 1,
+        }
+    }
+}
+
+/// Pull-based logical stream (implemented by every workload generator).
+pub trait LogicalSource {
+    fn next_logical(&mut self) -> Option<LogicalOp>;
+}
+
+impl<I: Iterator<Item = LogicalOp>> LogicalSource for I {
+    fn next_logical(&mut self) -> Option<LogicalOp> {
+        self.next()
+    }
+}
+
+impl LogicalSource for Box<dyn LogicalSource + Send> {
+    fn next_logical(&mut self) -> Option<LogicalOp> {
+        (**self).next_logical()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors() {
+        assert!(matches!(LogicalOp::load(64), LogicalOp::Mem(m) if !m.is_store));
+        assert!(matches!(LogicalOp::store(64), LogicalOp::Mem(m) if m.is_store));
+        assert!(
+            matches!(LogicalOp::load_dep(64, 3), LogicalOp::Mem(m) if m.dep_on == Some(3))
+        );
+    }
+
+    #[test]
+    fn inst_weights() {
+        assert_eq!(LogicalOp::Compute(9).insts(), 9);
+        assert_eq!(LogicalOp::load(0).insts(), 1);
+    }
+
+    #[test]
+    fn iterators_are_sources() {
+        let mut s = vec![LogicalOp::Compute(1)].into_iter();
+        assert!(s.next_logical().is_some());
+        assert!(s.next_logical().is_none());
+    }
+}

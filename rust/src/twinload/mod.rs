@@ -1,0 +1,28 @@
+//! The twin-load access discipline (paper §3, §4.1, Figure 5).
+//!
+//! This module is the *software half* of the paper's contribution: the
+//! compiler/programmer transform that replaces loads and stores to
+//! identified extended-memory objects with inlined twin-load sequences:
+//!
+//! * **TL-OoO** — `load_type(p)`: issue loads to `p` and its shadow `p'`
+//!   concurrently, compare both returned values against the fake pattern
+//!   and keep the real one; retry via invalidate+fence if both are fake
+//!   (Table 2 state 4). `store_type(p,v)`: twin-load first, then an
+//!   atomic CAS so an interrupt-induced eviction can never corrupt memory
+//!   (§3.2).
+//! * **TL-LF** — issue the shadow prefetch, a load fence, then the demand
+//!   load; simple and latency-tolerant but serializing (§3.1).
+//! * **TL-LF-batched** — the §6.1 future-work optimization: batch k
+//!   prefetches, one fence, then k demand loads.
+//!
+//! [`protocol::Transform`] lowers a workload's logical operation stream
+//! into the micro-op stream the core executes; the hardware half (MEC1's
+//! first/second-load handling) lives in [`crate::mec`]. The runtime retry
+//! and safe-path sequences are injected by the core when twin pairs
+//! resolve fake (see `cpu::core`), mirroring the inlined retry handlers.
+
+pub mod logical;
+pub mod protocol;
+
+pub use logical::{LogicalMem, LogicalOp, LogicalSource};
+pub use protocol::{Mechanism, Transform, TransformStats};

@@ -1,0 +1,510 @@
+//! Lowering logical operations into mechanism-specific micro-op streams
+//! (paper Figure 5: `load_type` / `store_type` inlined functions).
+
+use super::logical::{LogicalMem, LogicalOp, LogicalSource};
+use crate::cpu::trace::{AccessKind, MemAccess, MicroOp, OpSource};
+use crate::memmgr::MemLayout;
+use std::collections::VecDeque;
+
+/// Access mechanism under evaluation (paper Table 3 bottom row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mechanism {
+    /// All memory local (no transform).
+    Ideal,
+    /// Extended memory behind a QPI hop (no transform; latency added by
+    /// the platform).
+    Numa,
+    /// Extended memory behind PCIe page swapping (no transform; faults
+    /// modeled by the platform).
+    Pcie,
+    /// Twin-load with a load fence between the twins.
+    TlLf,
+    /// Twin-load with dynamic first/second identification.
+    TlOoO,
+    /// §6.1 future-work: batch `k` prefetches behind one fence.
+    TlLfBatched(u32),
+    /// §7.2 comparison: single loads with tRL increased by the given
+    /// extra latency (no transform; ext-channel timing altered).
+    IncreasedTrl,
+}
+
+impl Mechanism {
+    /// Does this mechanism rewrite extended-memory accesses?
+    pub fn transforms(&self) -> bool {
+        matches!(self, Mechanism::TlLf | Mechanism::TlOoO | Mechanism::TlLfBatched(_))
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mechanism::Ideal => "ideal",
+            Mechanism::Numa => "numa",
+            Mechanism::Pcie => "pcie",
+            Mechanism::TlLf => "tl-lf",
+            Mechanism::TlOoO => "tl-ooo",
+            Mechanism::TlLfBatched(_) => "tl-lf-batched",
+            Mechanism::IncreasedTrl => "inc-trl",
+        }
+    }
+}
+
+/// Instruction overheads of the inlined twin-load functions. Calibrated
+/// so extended-heavy workloads land near the paper's +64 % retired
+/// instructions (Figure 8): compute `p'`, two value compares against the
+/// fake pattern, a select, and loop/branch glue.
+pub const OOO_LOAD_CHECK: u32 = 8;
+pub const OOO_STORE_CAS: u32 = 6;
+pub const LF_LOAD_CHECK: u32 = 4;
+
+/// Transform statistics (feeds the Table-4 "% in extended" validation and
+/// the Figure-8 instruction accounting).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct TransformStats {
+    pub logical_mem: u64,
+    pub logical_insts: u64,
+    pub ext_loads: u64,
+    pub ext_stores: u64,
+    pub local_accesses: u64,
+    pub micro_insts: u64,
+    pub fences: u64,
+}
+
+impl TransformStats {
+    /// Fraction of logical accesses that targeted extended memory.
+    pub fn ext_fraction(&self) -> f64 {
+        if self.logical_mem == 0 {
+            0.0
+        } else {
+            (self.ext_loads + self.ext_stores) as f64 / self.logical_mem as f64
+        }
+    }
+
+    /// Ratio of emitted to logical instructions (Figure 8 x-axis).
+    pub fn inst_expansion(&self) -> f64 {
+        if self.logical_insts == 0 {
+            0.0
+        } else {
+            self.micro_insts as f64 / self.logical_insts as f64
+        }
+    }
+}
+
+/// Lowers a [`LogicalSource`] into the core's micro-op stream.
+pub struct Transform<S: LogicalSource> {
+    source: S,
+    mech: Mechanism,
+    layout: MemLayout,
+    /// Ready-to-emit micro-ops.
+    out: VecDeque<MicroOp>,
+    /// TL-LF-batched: demand halves waiting for the fence.
+    batch: Vec<LogicalMem>,
+    batch_logicals: Vec<u64>,
+    next_logical: u64,
+    next_pair: u64,
+    pub stats: TransformStats,
+}
+
+impl<S: LogicalSource> Transform<S> {
+    pub fn new(source: S, mech: Mechanism, layout: MemLayout) -> Transform<S> {
+        Transform {
+            source,
+            mech,
+            layout,
+            out: VecDeque::with_capacity(8),
+            batch: Vec::new(),
+            batch_logicals: Vec::new(),
+            next_logical: 0,
+            next_pair: 0,
+            stats: TransformStats::default(),
+        }
+    }
+
+    fn push(&mut self, op: MicroOp) {
+        self.stats.micro_insts += op.insts() as u64;
+        if matches!(op, MicroOp::Fence) {
+            self.stats.fences += 1;
+        }
+        self.out.push_back(op);
+    }
+
+    fn fresh_pair(&mut self) -> u64 {
+        let p = self.next_pair;
+        self.next_pair += 1;
+        p
+    }
+
+    /// Emit a plain (local / untransformed) access.
+    fn passthrough(&mut self, m: &LogicalMem, logical: u64) {
+        let kind = if m.is_store { AccessKind::Store } else { AccessKind::Load };
+        self.push(MicroOp::Mem(MemAccess {
+            vaddr: m.vaddr,
+            kind,
+            logical,
+            dep_on: m.dep_on,
+            pair: None,
+            retry: false,
+        }));
+    }
+
+    /// TL-OoO lowering of one extended access (Figure 5).
+    fn lower_ooo(&mut self, m: &LogicalMem, logical: u64) {
+        let pair = self.fresh_pair();
+        let shadow = self.layout.shadow_of(m.vaddr);
+        let ld = |vaddr, dep| MicroOp::Mem(MemAccess {
+            vaddr,
+            kind: AccessKind::Load,
+            logical,
+            dep_on: dep,
+            pair: Some(pair),
+            retry: false,
+        });
+        // Both twins issue concurrently — the OoO window interleaves them
+        // with whatever else is ready. The SHADOW load is emitted first:
+        // in program order it tends to reach MEC1 first, so the demand
+        // address `p` samples the *real* value — which the CAS of a
+        // following store compares against (§3.2). Loads are indifferent
+        // to the order (software selects the real register value).
+        self.push(ld(shadow, m.dep_on));
+        self.push(ld(m.vaddr, m.dep_on));
+        if m.is_store {
+            // value check + CAS (§3.2); the store's RFO rechecks content.
+            self.push(MicroOp::Compute(OOO_STORE_CAS));
+            self.push(MicroOp::Mem(MemAccess {
+                vaddr: m.vaddr,
+                kind: AccessKind::Store,
+                logical,
+                dep_on: Some(logical),
+                pair: None,
+                retry: false,
+            }));
+        } else {
+            self.push(MicroOp::Compute(OOO_LOAD_CHECK));
+        }
+    }
+
+    /// TL-LF lowering: prefetch → fence → demand (§3.1).
+    fn lower_lf(&mut self, m: &LogicalMem, logical: u64) {
+        let pair = self.fresh_pair();
+        let shadow = self.layout.shadow_of(m.vaddr);
+        self.push(MicroOp::Mem(MemAccess {
+            vaddr: shadow,
+            kind: AccessKind::Load,
+            logical,
+            dep_on: m.dep_on,
+            pair: Some(pair),
+            retry: false,
+        }));
+        self.push(MicroOp::Fence);
+        self.push(MicroOp::Mem(MemAccess {
+            vaddr: m.vaddr,
+            kind: AccessKind::Load,
+            logical,
+            dep_on: m.dep_on,
+            pair: Some(pair),
+            retry: false,
+        }));
+        self.push(MicroOp::Compute(LF_LOAD_CHECK));
+        if m.is_store {
+            self.push(MicroOp::Compute(2));
+            self.push(MicroOp::Mem(MemAccess {
+                vaddr: m.vaddr,
+                kind: AccessKind::Store,
+                logical,
+                dep_on: Some(logical),
+                pair: None,
+                retry: false,
+            }));
+        }
+    }
+
+    /// Flush the TL-LF batch: k prefetches, one fence, k demands.
+    fn flush_batch(&mut self) {
+        if self.batch.is_empty() {
+            return;
+        }
+        let items: Vec<(LogicalMem, u64)> = self
+            .batch
+            .drain(..)
+            .zip(self.batch_logicals.drain(..))
+            .collect();
+        let mut pairs = Vec::with_capacity(items.len());
+        for (m, logical) in &items {
+            let pair = self.fresh_pair();
+            pairs.push(pair);
+            let shadow = self.layout.shadow_of(m.vaddr);
+            self.push(MicroOp::Mem(MemAccess {
+                vaddr: shadow,
+                kind: AccessKind::Load,
+                logical: *logical,
+                dep_on: m.dep_on,
+                pair: Some(pair),
+                retry: false,
+            }));
+        }
+        self.push(MicroOp::Fence);
+        for ((m, logical), pair) in items.iter().zip(&pairs) {
+            self.push(MicroOp::Mem(MemAccess {
+                vaddr: m.vaddr,
+                kind: AccessKind::Load,
+                logical: *logical,
+                dep_on: m.dep_on,
+                pair: Some(*pair),
+                retry: false,
+            }));
+            self.push(MicroOp::Compute(LF_LOAD_CHECK));
+            if m.is_store {
+                self.push(MicroOp::Compute(2));
+                self.push(MicroOp::Mem(MemAccess {
+                    vaddr: m.vaddr,
+                    kind: AccessKind::Store,
+                    logical: *logical,
+                    dep_on: Some(*logical),
+                    pair: None,
+                    retry: false,
+                }));
+            }
+        }
+    }
+
+    /// Does `m` depend on a logical access still waiting in the batch?
+    fn depends_on_batch(&self, m: &LogicalMem) -> bool {
+        match m.dep_on {
+            Some(d) => self.batch_logicals.contains(&d),
+            None => false,
+        }
+    }
+
+    fn lower(&mut self, op: LogicalOp) {
+        self.stats.logical_insts += op.insts() as u64;
+        match op {
+            LogicalOp::Compute(n) => {
+                // Compute passes through without flushing the batch —
+                // non-memory work neither reads the batched values nor
+                // needs ordering against loads, and flushing here would
+                // cap batches at one access for compute-interleaved code.
+                self.push(MicroOp::Compute(n));
+            }
+            LogicalOp::Mem(m) => {
+                let logical = self.next_logical;
+                self.next_logical += 1;
+                self.stats.logical_mem += 1;
+                let ext = self.layout.is_extended(m.vaddr);
+                if !ext || !self.mech.transforms() {
+                    self.stats.local_accesses += u64::from(!ext);
+                    if ext {
+                        if m.is_store {
+                            self.stats.ext_stores += 1;
+                        } else {
+                            self.stats.ext_loads += 1;
+                        }
+                    }
+                    self.passthrough(&m, logical);
+                    return;
+                }
+                if m.is_store {
+                    self.stats.ext_stores += 1;
+                } else {
+                    self.stats.ext_loads += 1;
+                }
+                match self.mech {
+                    Mechanism::TlOoO => self.lower_ooo(&m, logical),
+                    Mechanism::TlLf => self.lower_lf(&m, logical),
+                    Mechanism::TlLfBatched(k) => {
+                        if m.is_store || self.depends_on_batch(&m) {
+                            self.flush_batch();
+                        }
+                        if m.is_store {
+                            self.lower_lf(&m, logical);
+                        } else {
+                            self.batch.push(m);
+                            self.batch_logicals.push(logical);
+                            if self.batch.len() >= k as usize {
+                                self.flush_batch();
+                            }
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        }
+    }
+}
+
+impl<S: LogicalSource> OpSource for Transform<S> {
+    fn next_op(&mut self) -> Option<MicroOp> {
+        loop {
+            if let Some(op) = self.out.pop_front() {
+                return Some(op);
+            }
+            match self.source.next_logical() {
+                Some(op) => self.lower(op),
+                None => {
+                    if self.batch.is_empty() {
+                        return None;
+                    }
+                    self.flush_batch();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> MemLayout {
+        MemLayout::new(1 << 20, 1 << 20)
+    }
+
+    fn ext(a: u64) -> u64 {
+        layout().ext_base() + a
+    }
+
+    fn drain<S: LogicalSource>(t: &mut Transform<S>) -> Vec<MicroOp> {
+        let mut v = Vec::new();
+        while let Some(op) = t.next_op() {
+            v.push(op);
+        }
+        v
+    }
+
+    fn mem_kinds(ops: &[MicroOp]) -> Vec<&'static str> {
+        ops.iter()
+            .map(|o| match o {
+                MicroOp::Compute(_) => "c",
+                MicroOp::Fence => "f",
+                MicroOp::Mem(m) => match m.kind {
+                    AccessKind::Load => "L",
+                    AccessKind::Store => "S",
+                    AccessKind::Invalidate => "I",
+                    AccessKind::SafePath => "X",
+                },
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ideal_passes_through() {
+        let ops = vec![LogicalOp::load(ext(0)), LogicalOp::Compute(5)];
+        let mut t = Transform::new(ops.into_iter(), Mechanism::Ideal, layout());
+        let out = drain(&mut t);
+        assert_eq!(mem_kinds(&out), vec!["L", "c"]);
+        assert_eq!(t.stats.inst_expansion(), 1.0);
+    }
+
+    #[test]
+    fn ooo_load_becomes_twin_pair_plus_check() {
+        let ops = vec![LogicalOp::load(ext(0x40))];
+        let mut t = Transform::new(ops.into_iter(), Mechanism::TlOoO, layout());
+        let out = drain(&mut t);
+        assert_eq!(mem_kinds(&out), vec!["L", "L", "c"]);
+        // The two loads form one pair, to twin addresses.
+        let (a, b) = match (&out[0], &out[1]) {
+            (MicroOp::Mem(a), MicroOp::Mem(b)) => (*a, *b),
+            _ => panic!(),
+        };
+        assert_eq!(a.pair, b.pair);
+        assert!(a.pair.is_some());
+        assert_eq!(a.logical, b.logical);
+        // Shadow twin is emitted first (see lower_ooo), demand second.
+        assert!(layout().is_shadow(a.vaddr));
+        assert!(layout().is_extended(b.vaddr));
+        assert_eq!(a.vaddr - b.vaddr, layout().ext_size);
+        assert!(t.stats.inst_expansion() > 2.0);
+    }
+
+    #[test]
+    fn ooo_local_access_untouched() {
+        let ops = vec![LogicalOp::load(0x40)];
+        let mut t = Transform::new(ops.into_iter(), Mechanism::TlOoO, layout());
+        let out = drain(&mut t);
+        assert_eq!(mem_kinds(&out), vec!["L"]);
+        assert_eq!(t.stats.local_accesses, 1);
+        assert_eq!(t.stats.ext_loads, 0);
+    }
+
+    #[test]
+    fn ooo_store_is_twinload_then_cas_store() {
+        let ops = vec![LogicalOp::store(ext(0x80))];
+        let mut t = Transform::new(ops.into_iter(), Mechanism::TlOoO, layout());
+        let out = drain(&mut t);
+        assert_eq!(mem_kinds(&out), vec!["L", "L", "c", "S"]);
+        // The store depends on the twin value (CAS compares it).
+        let st = match &out[3] {
+            MicroOp::Mem(m) => *m,
+            _ => panic!(),
+        };
+        assert_eq!(st.dep_on, Some(st.logical));
+        assert_eq!(t.stats.ext_stores, 1);
+    }
+
+    #[test]
+    fn lf_load_has_fence_between_twins() {
+        let ops = vec![LogicalOp::load(ext(0))];
+        let mut t = Transform::new(ops.into_iter(), Mechanism::TlLf, layout());
+        let out = drain(&mut t);
+        assert_eq!(mem_kinds(&out), vec!["L", "f", "L", "c"]);
+        // Prefetch goes to the shadow, demand to the extended address.
+        let (pre, dem) = match (&out[0], &out[2]) {
+            (MicroOp::Mem(a), MicroOp::Mem(b)) => (*a, *b),
+            _ => panic!(),
+        };
+        assert!(layout().is_shadow(pre.vaddr));
+        assert!(layout().is_extended(dem.vaddr));
+    }
+
+    #[test]
+    fn batched_lf_shares_one_fence() {
+        let ops: Vec<LogicalOp> = (0..4).map(|i| LogicalOp::load(ext(i * 64))).collect();
+        let mut t =
+            Transform::new(ops.into_iter(), Mechanism::TlLfBatched(4), layout());
+        let out = drain(&mut t);
+        // 4 prefetches, 1 fence, 4 × (demand + check).
+        assert_eq!(
+            mem_kinds(&out),
+            vec!["L", "L", "L", "L", "f", "L", "c", "L", "c", "L", "c", "L", "c"]
+        );
+        assert_eq!(t.stats.fences, 1);
+    }
+
+    #[test]
+    fn batched_lf_flushes_on_dependency() {
+        // Second load depends on the first (still in batch) → flush.
+        let ops = vec![LogicalOp::load(ext(0)), LogicalOp::load_dep(ext(0x100), 0)];
+        let mut t =
+            Transform::new(ops.into_iter(), Mechanism::TlLfBatched(8), layout());
+        let out = drain(&mut t);
+        // Two separate fenced groups.
+        assert_eq!(t.stats.fences, 2);
+        assert!(out.len() >= 8);
+    }
+
+    #[test]
+    fn ext_fraction_statistic() {
+        let ops = vec![
+            LogicalOp::load(0),
+            LogicalOp::load(ext(0)),
+            LogicalOp::load(ext(64)),
+            LogicalOp::store(ext(128)),
+        ];
+        let mut t = Transform::new(ops.into_iter(), Mechanism::TlOoO, layout());
+        drain(&mut t);
+        assert!((t.stats.ext_fraction() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn numa_does_not_transform() {
+        let ops = vec![LogicalOp::load(ext(0))];
+        let mut t = Transform::new(ops.into_iter(), Mechanism::Numa, layout());
+        let out = drain(&mut t);
+        assert_eq!(mem_kinds(&out), vec!["L"]);
+        assert_eq!(t.stats.ext_loads, 1, "ext accesses still counted");
+    }
+
+    #[test]
+    fn mechanism_names() {
+        assert_eq!(Mechanism::TlOoO.name(), "tl-ooo");
+        assert!(Mechanism::TlLfBatched(8).transforms());
+        assert!(!Mechanism::IncreasedTrl.transforms());
+    }
+}

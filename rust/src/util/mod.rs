@@ -1,0 +1,82 @@
+//! Foundation utilities: deterministic PRNGs, time units, and small math
+//! helpers shared by every layer of the simulator.
+//!
+//! The vendored registry has no `rand` crate, so we carry our own
+//! SplitMix64 / xoshiro256** implementations (public-domain algorithms by
+//! Vigna et al.). All simulation randomness flows through [`Rng`] so runs
+//! are reproducible from a single seed.
+
+pub mod fastmap;
+pub mod rng;
+pub mod time;
+
+pub use fastmap::FastMap;
+pub use rng::Rng;
+pub use time::{Ps, CYCLE_800MHZ, GHZ, KHZ, MHZ, NS, US};
+
+/// Integer ceiling division for unsigned quantities.
+#[inline]
+pub fn div_ceil(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Round `v` up to the next multiple of `align` (power of two not required).
+#[inline]
+pub fn round_up(v: u64, align: u64) -> u64 {
+    debug_assert!(align > 0);
+    div_ceil(v, align) * align
+}
+
+/// `log2` of a power-of-two `v`; panics in debug if `v` is not a power of two.
+#[inline]
+pub fn log2_exact(v: u64) -> u32 {
+    debug_assert!(v.is_power_of_two(), "log2_exact({v}): not a power of two");
+    v.trailing_zeros()
+}
+
+/// Population-weighted mean of `(value, weight)` pairs; 0.0 when empty.
+pub fn weighted_mean(pairs: &[(f64, f64)]) -> f64 {
+    let (num, den) = pairs
+        .iter()
+        .fold((0.0, 0.0), |(n, d), &(v, w)| (n + v * w, d + w));
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn div_ceil_basics() {
+        assert_eq!(div_ceil(0, 4), 0);
+        assert_eq!(div_ceil(1, 4), 1);
+        assert_eq!(div_ceil(4, 4), 1);
+        assert_eq!(div_ceil(5, 4), 2);
+    }
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 64), 0);
+        assert_eq!(round_up(1, 64), 64);
+        assert_eq!(round_up(64, 64), 64);
+        assert_eq!(round_up(65, 64), 128);
+    }
+
+    #[test]
+    fn log2_exact_powers() {
+        assert_eq!(log2_exact(1), 0);
+        assert_eq!(log2_exact(4096), 12);
+    }
+
+    #[test]
+    fn weighted_mean_basics() {
+        assert_eq!(weighted_mean(&[]), 0.0);
+        let m = weighted_mean(&[(1.0, 1.0), (3.0, 3.0)]);
+        assert!((m - 2.5).abs() < 1e-12);
+    }
+}

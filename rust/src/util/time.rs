@@ -1,0 +1,81 @@
+//! Simulation time base.
+//!
+//! All timestamps are **picoseconds** in a `u64` (`Ps`). Picoseconds give
+//! exact representation of every JEDEC parameter (e.g. tCK(DDR3-1600) =
+//! 1250 ps, tCL = 13.75 ns = 13_750 ps) with headroom for ~213 days of
+//! simulated time — far beyond any run we do.
+
+/// Picosecond timestamp / duration.
+pub type Ps = u64;
+
+/// One nanosecond in `Ps`.
+pub const NS: Ps = 1_000;
+/// One microsecond in `Ps`.
+pub const US: Ps = 1_000_000;
+/// One millisecond in `Ps`.
+pub const MS: Ps = 1_000_000_000;
+
+/// Clock helper constants: period of common frequencies, in `Ps`.
+pub const GHZ: Ps = 1_000; // 1 GHz -> 1000 ps period
+pub const MHZ: Ps = 1_000_000; // 1 MHz -> 1e6 ps period
+pub const KHZ: Ps = 1_000_000_000;
+
+/// Period of the DDR3-1600 command clock (800 MHz).
+pub const CYCLE_800MHZ: Ps = 1_250;
+
+/// Convert a frequency in MHz to its period in `Ps`.
+#[inline]
+pub fn period_of_mhz(mhz: u64) -> Ps {
+    debug_assert!(mhz > 0);
+    MHZ / mhz
+}
+
+/// Convert picoseconds to (fractional) nanoseconds for reporting.
+#[inline]
+pub fn ps_to_ns(ps: Ps) -> f64 {
+    ps as f64 / NS as f64
+}
+
+/// Convert picoseconds to seconds for bandwidth math.
+#[inline]
+pub fn ps_to_s(ps: Ps) -> f64 {
+    ps as f64 * 1e-12
+}
+
+/// Bandwidth in GB/s given bytes moved over a `Ps` interval.
+#[inline]
+pub fn gbps(bytes: u64, interval: Ps) -> f64 {
+    if interval == 0 {
+        return 0.0;
+    }
+    bytes as f64 / ps_to_s(interval) / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ddr3_1600_period() {
+        assert_eq!(period_of_mhz(800), CYCLE_800MHZ);
+    }
+
+    #[test]
+    fn jedec_params_representable() {
+        // tCL = 13.75 ns must be exact in ps.
+        let tcl = 13_750;
+        assert_eq!(ps_to_ns(tcl), 13.75);
+    }
+
+    #[test]
+    fn bandwidth_math() {
+        // 64 bytes in 5 ns -> 12.8 GB/s (one DDR3-1600 burst).
+        let bw = gbps(64, 5 * NS);
+        assert!((bw - 12.8).abs() < 1e-9, "bw={bw}");
+    }
+
+    #[test]
+    fn zero_interval_bandwidth_is_zero() {
+        assert_eq!(gbps(100, 0), 0.0);
+    }
+}

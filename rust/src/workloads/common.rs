@@ -1,0 +1,184 @@
+//! Shared trace-building machinery for the workload generators.
+
+use super::DataRegions;
+use crate::twinload::{LogicalMem, LogicalOp};
+use crate::util::Rng;
+use std::collections::VecDeque;
+
+/// Buffered logical-op builder. Tracks the same logical-index numbering
+/// the protocol transform will assign (one index per `Mem` op, in order),
+/// so generators can express value dependencies (`dep_on`) correctly.
+#[derive(Debug)]
+pub struct TraceBuf {
+    pub rng: Rng,
+    pub data: DataRegions,
+    pending: VecDeque<LogicalOp>,
+    emitted: u64,
+    budget: u64,
+    mem_count: u64,
+    seq_cursor: u64,
+    /// Sub-line stepping for element-granularity streams.
+    seq_subline: u32,
+    accesses_per_line: u32,
+    /// Most recent mem op (for value-dependence chains).
+    last_mem: Option<u64>,
+}
+
+impl TraceBuf {
+    /// Seed-mixing constant: decorrelates workload streams from other
+    /// consumers of the same master seed.
+    const SEED_MIX: u64 = 0x5A5A_5A5A_F00D_CAFE;
+
+    pub fn new(data: DataRegions, ops_budget: u64, seed: u64) -> TraceBuf {
+        let mut rng = Rng::new(seed ^ Self::SEED_MIX);
+        // Start sequential cursors at a random offset so cores don't
+        // convoy on the same lines.
+        let seq_cursor = rng.next_u64() % (data.ext_len / 64);
+        TraceBuf {
+            rng,
+            data,
+            pending: VecDeque::with_capacity(16),
+            emitted: 0,
+            budget: ops_budget,
+            mem_count: 0,
+            seq_cursor,
+            seq_subline: 0,
+            accesses_per_line: 1,
+            last_mem: None,
+        }
+    }
+
+    /// Enable element-granularity streaming (see SignatureParams).
+    pub fn set_accesses_per_line(&mut self, k: u32) {
+        self.accesses_per_line = k.max(1);
+    }
+
+    /// With probability `p`, chain this access's address on the most
+    /// recent memory op's value (pointer-dependence).
+    pub fn chain(&mut self, p: f64) -> Option<u64> {
+        if self.rng.chance(p) {
+            self.last_mem
+        } else {
+            None
+        }
+    }
+
+    /// Ops still owed (generators stop iterating when this hits zero).
+    pub fn exhausted(&self) -> bool {
+        self.emitted >= self.budget
+    }
+
+    pub fn pop(&mut self) -> Option<LogicalOp> {
+        self.pending.pop_front()
+    }
+
+    pub fn compute(&mut self, n: u32) {
+        self.emitted += 1;
+        self.pending.push_back(LogicalOp::Compute(n));
+    }
+
+    /// Emit a memory op; returns its logical index for later `dep_on`s.
+    pub fn mem(&mut self, vaddr: u64, is_store: bool, dep_on: Option<u64>) -> u64 {
+        let idx = self.mem_count;
+        self.mem_count += 1;
+        self.emitted += 1;
+        self.last_mem = Some(idx);
+        self.pending
+            .push_back(LogicalOp::Mem(LogicalMem { vaddr, is_store, dep_on }));
+        idx
+    }
+
+    /// Random line in the extended object.
+    pub fn ext_random(&mut self) -> u64 {
+        let r = self.rng.next_u64();
+        self.data.ext_line(r)
+    }
+
+    /// Random line within the hot subset (first `hot` lines of ext).
+    pub fn ext_hot(&mut self, hot_lines: u64) -> u64 {
+        let lines = (self.data.ext_len / 64).min(hot_lines.max(1));
+        let r = self.rng.below(lines);
+        self.data.ext_base + r * 64
+    }
+
+    /// Next sequential access in the extended object (wrapping stream):
+    /// the line advances only every `accesses_per_line` calls, modeling
+    /// element-granularity scans.
+    pub fn ext_next_seq(&mut self) -> u64 {
+        let a = self.data.ext_seq(self.seq_cursor);
+        self.seq_subline += 1;
+        if self.seq_subline >= self.accesses_per_line {
+            self.seq_subline = 0;
+            self.seq_cursor = self.seq_cursor.wrapping_add(1);
+        }
+        a
+    }
+
+    /// Jump the sequential cursor to a random position (new run).
+    pub fn reseek(&mut self) {
+        self.seq_cursor = self.rng.next_u64() % (self.data.ext_len / 64);
+        self.seq_subline = 0;
+    }
+
+    /// Random line in the local object.
+    pub fn local_random(&mut self) -> u64 {
+        let r = self.rng.next_u64();
+        self.data.local_line(r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::params::WorkloadKind;
+    use crate::workloads::testutil::small_regions;
+
+    #[test]
+    fn logical_indices_count_mem_ops_only() {
+        let data = small_regions(&WorkloadKind::Gups.signature());
+        let mut t = TraceBuf::new(data, 100, 1);
+        t.compute(5);
+        let i0 = t.mem(data.ext_base, false, None);
+        t.compute(2);
+        let i1 = t.mem(data.ext_base + 64, false, Some(i0));
+        assert_eq!(i0, 0);
+        assert_eq!(i1, 1);
+    }
+
+    #[test]
+    fn budget_counts_all_ops() {
+        let data = small_regions(&WorkloadKind::Gups.signature());
+        let mut t = TraceBuf::new(data, 3, 1);
+        t.compute(1);
+        t.mem(data.ext_base, false, None);
+        assert!(!t.exhausted());
+        t.compute(1);
+        assert!(t.exhausted());
+    }
+
+    #[test]
+    fn addresses_in_bounds() {
+        let data = small_regions(&WorkloadKind::Gups.signature());
+        let mut t = TraceBuf::new(data, 1000, 9);
+        for _ in 0..1000 {
+            let a = t.ext_random();
+            assert!(a >= data.ext_base && a < data.ext_base + data.ext_len);
+            let h = t.ext_hot(128);
+            assert!(h >= data.ext_base && h < data.ext_base + 128 * 64);
+            let l = t.local_random();
+            assert!(l >= data.local_base && l < data.local_base + data.local_len);
+            let s = t.ext_next_seq();
+            assert!(s >= data.ext_base && s < data.ext_base + data.ext_len);
+        }
+    }
+
+    #[test]
+    fn seq_cursor_advances_linewise() {
+        let data = small_regions(&WorkloadKind::Gups.signature());
+        let mut t = TraceBuf::new(data, 10, 2);
+        let a = t.ext_next_seq();
+        let b = t.ext_next_seq();
+        // wraps at the region end; otherwise adjacent
+        assert!(b == a + 64 || b == data.ext_base);
+    }
+}

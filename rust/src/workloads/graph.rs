@@ -1,0 +1,174 @@
+//! Graph workloads: BFS (Graph500), BC (SSCA2), PageRank (in-house).
+//!
+//! The defining features (paper §6.1–6.2): irregular accesses with
+//! *dependent* address chains (frontier → neighbor list → vertex state),
+//! small hot vertex-metadata structures that thrash the TLB, and limited
+//! intra-thread MLP — which is why TL-OoO beats NUMA on these.
+
+use super::common::TraceBuf;
+use super::params::{SignatureParams, WorkloadKind};
+use super::DataRegions;
+use crate::twinload::{LogicalOp, LogicalSource};
+
+pub struct GraphWalk {
+    buf: TraceBuf,
+    sig: SignatureParams,
+    kind: WorkloadKind,
+}
+
+impl GraphWalk {
+    pub fn bfs(data: DataRegions, ops: u64, seed: u64) -> GraphWalk {
+        GraphWalk {
+            buf: TraceBuf::new(data, ops, seed),
+            sig: WorkloadKind::Bfs.signature(),
+            kind: WorkloadKind::Bfs,
+        }
+    }
+
+    pub fn bc(data: DataRegions, ops: u64, seed: u64) -> GraphWalk {
+        GraphWalk {
+            buf: TraceBuf::new(data, ops, seed),
+            sig: WorkloadKind::Bc.signature(),
+            kind: WorkloadKind::Bc,
+        }
+    }
+
+    pub fn pagerank(data: DataRegions, ops: u64, seed: u64) -> GraphWalk {
+        GraphWalk {
+            buf: TraceBuf::new(data, ops, seed),
+            sig: WorkloadKind::PageRank.signature(),
+            kind: WorkloadKind::PageRank,
+        }
+    }
+
+    /// One vertex visit: pop from the frontier (hot), chase into the
+    /// adjacency list (dependent, random), stream a few edges, touch
+    /// destination vertex state (dependent, random), update.
+    ///
+    /// Every access independently lands in local memory with probability
+    /// `1 - ext_fraction` — BC keeps ~23 % of its data local (Table 4).
+    fn visit(&mut self) {
+        let sig = self.sig;
+        let b = &mut self.buf;
+        let place = |b: &mut TraceBuf, preferred: u64| -> u64 {
+            if b.rng.chance(sig.ext_fraction) {
+                preferred
+            } else {
+                b.local_random()
+            }
+        };
+
+        // Frontier / work-queue access (hot lines, metadata).
+        let hot = b.ext_hot(sig.hot_lines);
+        let frontier = place(b, hot);
+        let f = b.mem(frontier, false, None);
+        b.compute(sig.compute_per_access);
+
+        // Dependent chase into the adjacency array.
+        let adj_pref = if b.rng.chance(sig.reuse_fraction) {
+            b.ext_hot(sig.hot_lines * 8)
+        } else {
+            b.ext_random()
+        };
+        let adj = place(b, adj_pref);
+        let dep = if b.rng.chance(sig.dep_fraction) { Some(f) } else { None };
+        let a = b.mem(adj, false, dep);
+
+        // Stream a short edge run.
+        b.reseek();
+        let run = b.rng.burst(sig.seq_locality, 4);
+        for _ in 0..run {
+            let seq = b.ext_next_seq();
+            let e = place(b, seq);
+            b.mem(e, false, None);
+            b.compute(2);
+        }
+
+        // Dependent destination-vertex access (+ occasional update).
+        let dst_pref = b.ext_random();
+        let dst = place(b, dst_pref);
+        let chase = if b.rng.chance(sig.dep_fraction) { Some(a) } else { None };
+        let d = b.mem(dst, false, chase);
+        if b.rng.chance(sig.store_fraction * 3.0) {
+            b.mem(dst, true, Some(d));
+        }
+        b.compute(sig.compute_per_access / 2 + 1);
+    }
+}
+
+impl LogicalSource for GraphWalk {
+    fn next_logical(&mut self) -> Option<LogicalOp> {
+        loop {
+            if let Some(op) = self.buf.pop() {
+                return Some(op);
+            }
+            if self.buf.exhausted() {
+                return None;
+            }
+            self.visit();
+            let _ = self.kind;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::testutil::{characterize, small_regions};
+
+    #[test]
+    fn bfs_has_dependency_chains() {
+        let data = small_regions(&WorkloadKind::Bfs.signature());
+        let mut g = GraphWalk::bfs(data, 20_000, 3);
+        let (mut deps, mut loads) = (0u64, 0u64);
+        while let Some(op) = g.next_logical() {
+            if let LogicalOp::Mem(m) = op {
+                if !m.is_store {
+                    loads += 1;
+                    if m.dep_on.is_some() {
+                        deps += 1;
+                    }
+                }
+            }
+        }
+        let frac = deps as f64 / loads as f64;
+        assert!(frac > 0.1, "dep fraction {frac}");
+    }
+
+    #[test]
+    fn bc_has_local_fraction_near_table4() {
+        let data = small_regions(&WorkloadKind::Bc.signature());
+        let (mem, ext, _, _) = characterize(Box::new(GraphWalk::bc(data, 40_000, 3)));
+        let frac = ext as f64 / mem as f64;
+        assert!((frac - 0.7692).abs() < 0.15, "bc ext fraction {frac}");
+    }
+
+    #[test]
+    fn pagerank_mostly_extended() {
+        let data = small_regions(&WorkloadKind::PageRank.signature());
+        let (mem, ext, _, _) =
+            characterize(Box::new(GraphWalk::pagerank(data, 40_000, 3)));
+        let frac = ext as f64 / mem as f64;
+        assert!((frac - 0.8793).abs() < 0.15, "pagerank ext fraction {frac}");
+    }
+
+    #[test]
+    fn metadata_is_hot_and_small() {
+        // A meaningful share of accesses concentrate in the hot metadata
+        // region (the TLB-thrash driver of Figure 10).
+        let data = small_regions(&WorkloadKind::Bfs.signature());
+        let sig = WorkloadKind::Bfs.signature();
+        let hot_end = data.ext_base + sig.hot_lines * 64;
+        let mut g = GraphWalk::bfs(data, 20_000, 3);
+        let (mut hot, mut total) = (0u64, 0u64);
+        while let Some(op) = g.next_logical() {
+            if let LogicalOp::Mem(m) = op {
+                total += 1;
+                if m.vaddr >= data.ext_base && m.vaddr < hot_end {
+                    hot += 1;
+                }
+            }
+        }
+        assert!(hot as f64 / total as f64 > 0.15);
+    }
+}

@@ -1,0 +1,72 @@
+//! GUPS (HPC Challenge RandomAccess): uniformly random read-modify-write
+//! updates over a giant table — the paper's worst case (Table 4: 100 % in
+//! extended memory; Figure 13: 0.0003× under PCIe swapping).
+
+use super::common::TraceBuf;
+use super::params::WorkloadKind;
+use super::DataRegions;
+use crate::twinload::{LogicalOp, LogicalSource};
+
+pub struct Gups {
+    buf: TraceBuf,
+    compute: u32,
+}
+
+impl Gups {
+    pub fn new(data: DataRegions, ops: u64, seed: u64) -> Gups {
+        Gups {
+            buf: TraceBuf::new(data, ops, seed),
+            compute: WorkloadKind::Gups.signature().compute_per_access,
+        }
+    }
+}
+
+impl LogicalSource for Gups {
+    fn next_logical(&mut self) -> Option<LogicalOp> {
+        loop {
+            if let Some(op) = self.buf.pop() {
+                return Some(op);
+            }
+            if self.buf.exhausted() {
+                return None;
+            }
+            // for i in ...: table[rand()] ^= rand_value
+            let addr = self.buf.ext_random();
+            self.buf.compute(self.compute);
+            let ld = self.buf.mem(addr, false, None);
+            self.buf.compute(2); // the xor
+            self.buf.mem(addr, true, Some(ld));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::testutil::{characterize, small_regions};
+
+    #[test]
+    fn pure_random_rmw_all_extended() {
+        let data = small_regions(&WorkloadKind::Gups.signature());
+        let (mem, ext, stores, _) = characterize(Box::new(Gups::new(data, 10_000, 3)));
+        assert_eq!(mem, ext, "GUPS is 100% extended");
+        // RMW: half the accesses are stores.
+        let sf = stores as f64 / mem as f64;
+        assert!((sf - 0.5).abs() < 0.01, "store fraction {sf}");
+    }
+
+    #[test]
+    fn addresses_spread_widely() {
+        let data = small_regions(&WorkloadKind::Gups.signature());
+        let mut g = Gups::new(data, 4_000, 3);
+        let mut lines = std::collections::HashSet::new();
+        while let Some(op) = g.next_logical() {
+            if let LogicalOp::Mem(m) = op {
+                lines.insert(m.vaddr);
+            }
+        }
+        // RMW pairs share addresses; distinct lines ≈ mem/2, far beyond
+        // any cache-friendly hot set.
+        assert!(lines.len() > 500, "only {} distinct lines", lines.len());
+    }
+}

@@ -1,0 +1,130 @@
+//! Memcached-1.4.20 serving small objects via memslap (paper Table 4 /
+//! §5): zipf-popular keys, hash-bucket chain walks (dependent loads),
+//! mostly GETs, item data preallocated in one big slab (97.30 % extended).
+
+use super::common::TraceBuf;
+use super::params::{SignatureParams, WorkloadKind};
+use super::DataRegions;
+use crate::twinload::{LogicalOp, LogicalSource};
+
+pub struct Memcached {
+    buf: TraceBuf,
+    sig: SignatureParams,
+    items: u64,
+}
+
+impl Memcached {
+    pub fn new(data: DataRegions, ops: u64, seed: u64) -> Memcached {
+        let items = (data.ext_len / 64 / 2).max(1);
+        Memcached {
+            buf: TraceBuf::new(data, ops, seed),
+            sig: WorkloadKind::Memcached.signature(),
+            items,
+        }
+    }
+
+    /// One request: hash table bucket (hot) → item chain (dependent,
+    /// zipf-popular) → value lines; SETs additionally write the item.
+    fn request(&mut self) {
+        let sig = self.sig;
+        let b = &mut self.buf;
+        // Protocol parsing / hashing compute.
+        b.compute(sig.compute_per_access);
+
+        // Hash-bucket array access.
+        let bucket = b.ext_hot(sig.hot_lines);
+        let h = b.mem(bucket, false, None);
+
+        // Zipf-popular item, reached by a dependent chain walk of 1–2.
+        let zipf_line = b.rng.zipf(self.items, 0.9);
+        let item = b.data.ext_base + zipf_line * 64;
+        let chain1 = b.mem(item, false, Some(h));
+        let item2 = if b.rng.chance(0.3) {
+            // Collision chain: one more dependent hop.
+            let next = b.ext_random();
+            Some(b.mem(next, false, Some(chain1)))
+        } else {
+            None
+        };
+        b.compute(4); // key compare
+
+        // Value read (next line of the item).
+        let val_dep = item2.unwrap_or(chain1);
+        let v = b.mem(item + 64, false, Some(val_dep));
+
+        if b.rng.chance(sig.store_fraction) {
+            // SET: write item header + value.
+            b.mem(item, true, Some(v));
+            b.mem(item + 64, true, Some(v));
+        }
+        // Response assembly.
+        b.compute(sig.compute_per_access / 2);
+    }
+}
+
+impl LogicalSource for Memcached {
+    fn next_logical(&mut self) -> Option<LogicalOp> {
+        loop {
+            if let Some(op) = self.buf.pop() {
+                return Some(op);
+            }
+            if self.buf.exhausted() {
+                return None;
+            }
+            self.request();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::testutil::{characterize, small_regions};
+    use std::collections::HashMap;
+
+    #[test]
+    fn mostly_reads_mostly_extended() {
+        let data = small_regions(&WorkloadKind::Memcached.signature());
+        let (mem, ext, stores, _) =
+            characterize(Box::new(Memcached::new(data, 30_000, 13)));
+        assert!(ext as f64 / mem as f64 > 0.9);
+        assert!((stores as f64 / mem as f64) < 0.2);
+    }
+
+    #[test]
+    fn popularity_is_skewed() {
+        let data = small_regions(&WorkloadKind::Memcached.signature());
+        let mut m = Memcached::new(data, 30_000, 13);
+        let mut counts: HashMap<u64, u64> = HashMap::new();
+        while let Some(op) = m.next_logical() {
+            if let LogicalOp::Mem(a) = op {
+                *counts.entry(a.vaddr).or_insert(0) += 1;
+            }
+        }
+        let mut freqs: Vec<u64> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        let total: u64 = freqs.iter().sum();
+        let top1pct: u64 = freqs.iter().take(freqs.len() / 100 + 1).sum();
+        assert!(
+            top1pct as f64 / total as f64 > 0.05,
+            "no hot keys: top1% = {:.3}",
+            top1pct as f64 / total as f64
+        );
+    }
+
+    #[test]
+    fn chain_walks_are_dependent() {
+        let data = small_regions(&WorkloadKind::Memcached.signature());
+        let mut m = Memcached::new(data, 10_000, 13);
+        let (mut dep, mut loads) = (0u64, 0u64);
+        while let Some(op) = m.next_logical() {
+            if let LogicalOp::Mem(a) = op {
+                if !a.is_store {
+                    loads += 1;
+                    dep += u64::from(a.dep_on.is_some());
+                }
+            }
+        }
+        assert!(dep as f64 / loads as f64 > 0.5, "chains not dependent");
+    }
+}

@@ -1,0 +1,216 @@
+//! The ten Table-4 benchmark workloads as statistical trace generators.
+//!
+//! Each generator reproduces the *memory-access signature* of its
+//! benchmark — footprint split between local and extended space (the
+//! Table-4 "Proportion in extended memory" column), spatial locality,
+//! store ratio, pointer-chase dependency depth, and compute density —
+//! which are the inputs that determine every figure in the paper's
+//! evaluation (LLC/TLB MPKI, MLP, bandwidth, and therefore normalized
+//! performance). See DESIGN.md's substitution table: we do not execute
+//! the real programs; we generate dependency-annotated logical traces in
+//! their image, exactly the methodology of the paper's own §7.2
+//! trace-driven comparison.
+
+pub mod common;
+pub mod graph;
+pub mod gups;
+pub mod memcached;
+pub mod params;
+pub mod radix;
+pub mod scientific;
+pub mod stream;
+
+pub use params::{SignatureParams, WorkloadKind, ALL_WORKLOADS, FIG13_WORKLOADS};
+
+use crate::memmgr::{Allocator, Space};
+use crate::twinload::LogicalSource;
+
+/// Build a generator for one core's share of the workload.
+///
+/// `alloc` places the shared data objects (call once per *system*, then
+/// clone regions per core via the returned builder); `ops` is the number
+/// of logical operations this core will emit; `seed` decorrelates cores.
+pub fn build(
+    kind: WorkloadKind,
+    alloc: &mut Allocator,
+    footprint: u64,
+    ops: u64,
+    seed: u64,
+) -> Box<dyn LogicalSource + Send> {
+    let sig = kind.signature();
+    let data = DataRegions::place(alloc, footprint, &sig);
+    build_with_regions(kind, data, ops, seed)
+}
+
+/// Build with pre-placed regions (multi-core setups share one placement).
+pub fn build_with_regions(
+    kind: WorkloadKind,
+    data: DataRegions,
+    ops: u64,
+    seed: u64,
+) -> Box<dyn LogicalSource + Send> {
+    match kind {
+        WorkloadKind::Gups => Box::new(gups::Gups::new(data, ops, seed)),
+        WorkloadKind::Radix => Box::new(radix::Radix::new(data, ops, seed)),
+        WorkloadKind::Cg => Box::new(scientific::Cg::new(data, ops, seed)),
+        WorkloadKind::Fmm => Box::new(scientific::Fmm::new(data, ops, seed)),
+        WorkloadKind::Bfs => Box::new(graph::GraphWalk::bfs(data, ops, seed)),
+        WorkloadKind::Bc => Box::new(graph::GraphWalk::bc(data, ops, seed)),
+        WorkloadKind::PageRank => Box::new(graph::GraphWalk::pagerank(data, ops, seed)),
+        WorkloadKind::ScalParC => Box::new(stream::ScalParC::new(data, ops, seed)),
+        WorkloadKind::StreamCluster => Box::new(stream::StreamCluster::new(data, ops, seed)),
+        WorkloadKind::Memcached => Box::new(memcached::Memcached::new(data, ops, seed)),
+    }
+}
+
+/// The shared data placement: one extended-space object (the big data)
+/// and one local object (stack/metadata/indices), sized by the Table-4
+/// extended proportion.
+#[derive(Debug, Clone, Copy)]
+pub struct DataRegions {
+    pub ext_base: u64,
+    pub ext_len: u64,
+    pub local_base: u64,
+    pub local_len: u64,
+}
+
+impl DataRegions {
+    pub fn place(alloc: &mut Allocator, footprint: u64, sig: &SignatureParams) -> DataRegions {
+        let ext_len = ((footprint as f64 * sig.ext_fraction) as u64).max(1 << 20);
+        let local_len = (footprint - ext_len.min(footprint)).max(1 << 20);
+        let ext = alloc
+            .alloc(Space::Extended, ext_len)
+            .expect("extended space exhausted — shrink the footprint");
+        let local = alloc
+            .alloc(Space::Local, local_len)
+            .expect("local space exhausted — shrink the footprint");
+        DataRegions {
+            ext_base: ext.base,
+            ext_len: ext.len,
+            local_base: local.base,
+            local_len: local.len,
+        }
+    }
+
+    /// A random cache line in the extended object.
+    #[inline]
+    pub fn ext_line(&self, r: u64) -> u64 {
+        self.ext_base + (r % (self.ext_len / 64)) * 64
+    }
+
+    /// A random cache line in the local object.
+    #[inline]
+    pub fn local_line(&self, r: u64) -> u64 {
+        self.local_base + (r % (self.local_len / 64)) * 64
+    }
+
+    /// Sequential line `i` (wrapping) in the extended object.
+    #[inline]
+    pub fn ext_seq(&self, i: u64) -> u64 {
+        self.ext_base + (i % (self.ext_len / 64)) * 64
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::memmgr::MemLayout;
+    use crate::twinload::{LogicalOp, LogicalSource};
+
+    pub fn small_regions(sig: &SignatureParams) -> DataRegions {
+        let mut alloc = Allocator::new(MemLayout::new(32 << 20, 64 << 20), 1 << 20);
+        DataRegions::place(&mut alloc, 16 << 20, sig)
+    }
+
+    /// Drain a source, asserting basic well-formedness; returns
+    /// (mem_ops, ext_accesses, stores, insts).
+    pub fn characterize(mut src: Box<dyn LogicalSource + Send>) -> (u64, u64, u64, u64) {
+        let layout = MemLayout::new(32 << 20, 64 << 20);
+        let (mut mem, mut ext, mut stores, mut insts) = (0u64, 0u64, 0u64, 0u64);
+        while let Some(op) = src.next_logical() {
+            insts += op.insts() as u64;
+            if let LogicalOp::Mem(m) = op {
+                mem += 1;
+                assert_eq!(m.vaddr % 64, 0, "unaligned access");
+                assert!(
+                    layout.is_local(m.vaddr) || layout.is_extended(m.vaddr),
+                    "address {:#x} outside data spaces",
+                    m.vaddr
+                );
+                if layout.is_extended(m.vaddr) {
+                    ext += 1;
+                }
+                if m.is_store {
+                    stores += 1;
+                }
+            }
+        }
+        (mem, ext, stores, insts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memmgr::MemLayout;
+
+    #[test]
+    fn every_workload_builds_and_terminates() {
+        for &kind in ALL_WORKLOADS {
+            let mut alloc = Allocator::new(MemLayout::new(32 << 20, 64 << 20), 1 << 20);
+            let src = build(kind, &mut alloc, 16 << 20, 2_000, 7);
+            let (mem, _ext, _stores, insts) = testutil::characterize(src);
+            assert!(mem > 100, "{kind:?}: too few mem ops ({mem})");
+            assert!(insts > mem, "{kind:?}: no compute between accesses");
+        }
+    }
+
+    #[test]
+    fn ext_fraction_tracks_table4() {
+        // The generated access mix should land near the Table-4 extended
+        // proportion for every workload (within 15 points: proportions in
+        // the table are *data* fractions; access fractions track them).
+        for &kind in ALL_WORKLOADS {
+            let mut alloc = Allocator::new(MemLayout::new(32 << 20, 64 << 20), 1 << 20);
+            let src = build(kind, &mut alloc, 16 << 20, 20_000, 11);
+            let (mem, ext, _, _) = testutil::characterize(src);
+            let frac = ext as f64 / mem as f64;
+            let want = kind.signature().ext_fraction;
+            assert!(
+                (frac - want).abs() < 0.15,
+                "{kind:?}: access ext fraction {frac:.2} vs table {want:.2}"
+            );
+        }
+    }
+
+    #[test]
+    fn seeds_decorrelate() {
+        let sig = WorkloadKind::Gups.signature();
+        let data = testutil::small_regions(&sig);
+        let a = build_with_regions(WorkloadKind::Gups, data, 500, 1);
+        let b = build_with_regions(WorkloadKind::Gups, data, 500, 2);
+        let (_, _, _, ia) = testutil::characterize(a);
+        let (_, _, _, ib) = testutil::characterize(b);
+        // Same structure, but not byte-identical traces (checked via the
+        // op count which matches and addresses which differ — proxied by
+        // instruction totals being equal and a direct spot check below).
+        assert_eq!(ia, ib);
+        let mut a = build_with_regions(WorkloadKind::Gups, data, 500, 1);
+        let mut b = build_with_regions(WorkloadKind::Gups, data, 500, 2);
+        let mut diff = 0;
+        for _ in 0..200 {
+            match (a.next_logical(), b.next_logical()) {
+                (
+                    Some(crate::twinload::LogicalOp::Mem(x)),
+                    Some(crate::twinload::LogicalOp::Mem(y)),
+                ) => {
+                    if x.vaddr != y.vaddr {
+                        diff += 1;
+                    }
+                }
+                _ => {}
+            }
+        }
+        assert!(diff > 10, "seeds produced identical address streams");
+    }
+}

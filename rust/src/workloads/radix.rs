@@ -1,0 +1,103 @@
+//! Radix sort (PARSEC kernel): streaming key reads + scattered
+//! bucket-counter updates and permuted writes (Table 4: 100 % extended).
+
+use super::common::TraceBuf;
+use super::params::WorkloadKind;
+use super::DataRegions;
+use crate::twinload::{LogicalOp, LogicalSource};
+
+pub struct Radix {
+    buf: TraceBuf,
+    compute: u32,
+    hot_lines: u64,
+    phase: u8,
+}
+
+impl Radix {
+    pub fn new(data: DataRegions, ops: u64, seed: u64) -> Radix {
+        let sig = WorkloadKind::Radix.signature();
+        let mut buf = TraceBuf::new(data, ops, seed);
+        buf.set_accesses_per_line(sig.accesses_per_line);
+        Radix {
+            buf,
+            compute: sig.compute_per_access,
+            hot_lines: sig.hot_lines,
+            phase: 0,
+        }
+    }
+}
+
+impl LogicalSource for Radix {
+    fn next_logical(&mut self) -> Option<LogicalOp> {
+        loop {
+            if let Some(op) = self.buf.pop() {
+                return Some(op);
+            }
+            if self.buf.exhausted() {
+                return None;
+            }
+            match self.phase {
+                // Counting pass: a sequential run of key reads, then hot
+                // histogram bumps for the digit counts.
+                0 => {
+                    let run = self.buf.rng.burst(0.7, 4);
+                    let mut last = None;
+                    for _ in 0..run {
+                        let key = self.buf.ext_next_seq();
+                        last = Some(self.buf.mem(key, false, None));
+                    }
+                    self.buf.compute(self.compute * run as u32);
+                    let hist = self.buf.ext_hot(self.hot_lines);
+                    self.buf.mem(hist, false, last);
+                    self.buf.mem(hist, true, last);
+                }
+                // Permute pass: sequential read, scattered write.
+                _ => {
+                    let key = self.buf.ext_next_seq();
+                    self.buf.compute(self.compute);
+                    let ld = self.buf.mem(key, false, None);
+                    let dst = self.buf.ext_random();
+                    self.buf.mem(dst, true, Some(ld));
+                }
+            }
+            self.phase = (self.phase + 1) % 2;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::testutil::{characterize, small_regions};
+
+    #[test]
+    fn all_extended_with_heavy_stores() {
+        let data = small_regions(&WorkloadKind::Radix.signature());
+        let (mem, ext, stores, _) = characterize(Box::new(Radix::new(data, 10_000, 5)));
+        assert_eq!(mem, ext);
+        let sf = stores as f64 / mem as f64;
+        assert!(sf > 0.25 && sf < 0.6, "store fraction {sf}");
+    }
+
+    #[test]
+    fn mixes_sequential_and_scattered() {
+        let data = small_regions(&WorkloadKind::Radix.signature());
+        let mut r = Radix::new(data, 8_000, 5);
+        let mut prev = None;
+        let mut seq_pairs = 0;
+        let mut total = 0;
+        while let Some(op) = r.next_logical() {
+            if let LogicalOp::Mem(m) = op {
+                if let Some(p) = prev {
+                    total += 1;
+                    if m.vaddr == p + 64 {
+                        seq_pairs += 1;
+                    }
+                }
+                prev = Some(m.vaddr);
+            }
+        }
+        assert!(seq_pairs > 0, "no sequential runs");
+        assert!(seq_pairs < total, "no scattered accesses");
+    }
+}

@@ -1,0 +1,168 @@
+//! Streaming / data-mining workloads: ScalParC (NU-MineBench parallel
+//! classification) and StreamCluster (PARSEC online clustering).
+//!
+//! Both have the best locality of the suite (paper §6.3: ScalParC's low
+//! LLC and TLB MPKI make it the most PCIe-swap-tolerant workload).
+
+use super::common::TraceBuf;
+use super::params::{SignatureParams, WorkloadKind};
+use super::DataRegions;
+use crate::twinload::{LogicalOp, LogicalSource};
+
+/// ScalParC: long sequential scans of attribute arrays with periodic
+/// split-point updates into a hot structure; 94.48 % extended.
+pub struct ScalParC {
+    buf: TraceBuf,
+    sig: SignatureParams,
+}
+
+impl ScalParC {
+    pub fn new(data: DataRegions, ops: u64, seed: u64) -> ScalParC {
+        let sig = WorkloadKind::ScalParC.signature();
+        let mut buf = TraceBuf::new(data, ops, seed);
+        buf.set_accesses_per_line(sig.accesses_per_line);
+        ScalParC { buf, sig }
+    }
+}
+
+impl LogicalSource for ScalParC {
+    fn next_logical(&mut self) -> Option<LogicalOp> {
+        loop {
+            if let Some(op) = self.buf.pop() {
+                return Some(op);
+            }
+            if self.buf.exhausted() {
+                return None;
+            }
+            let run =
+                self.buf.rng.burst(self.sig.seq_locality, 32) * self.sig.accesses_per_line as u64;
+            for _ in 0..run {
+                let ext = self.buf.rng.chance(self.sig.ext_fraction);
+                let a = if ext { self.buf.ext_next_seq() } else { self.buf.local_random() };
+                self.buf.mem(a, false, None);
+                self.buf.compute(self.sig.compute_per_access);
+            }
+            // Split-point histogram update (hot; index depends on the
+            // just-scanned attribute values).
+            let h = self.buf.ext_hot(self.sig.hot_lines);
+            let dep = self.buf.chain(self.sig.dep_fraction * 4.0);
+            let ld = self.buf.mem(h, false, dep);
+            if self.buf.rng.chance(self.sig.store_fraction * 4.0) {
+                self.buf.mem(h, true, Some(ld));
+            }
+            self.buf.reseek();
+        }
+    }
+}
+
+/// StreamCluster: distance evaluation of streamed points against a hot
+/// set of cluster centers; compute-heavy; 92.93 % extended.
+pub struct StreamCluster {
+    buf: TraceBuf,
+    sig: SignatureParams,
+}
+
+impl StreamCluster {
+    pub fn new(data: DataRegions, ops: u64, seed: u64) -> StreamCluster {
+        let sig = WorkloadKind::StreamCluster.signature();
+        let mut buf = TraceBuf::new(data, ops, seed);
+        buf.set_accesses_per_line(sig.accesses_per_line);
+        StreamCluster { buf, sig }
+    }
+}
+
+impl LogicalSource for StreamCluster {
+    fn next_logical(&mut self) -> Option<LogicalOp> {
+        loop {
+            if let Some(op) = self.buf.pop() {
+                return Some(op);
+            }
+            if self.buf.exhausted() {
+                return None;
+            }
+            // Stream one point (a few lines), compare against k centers.
+            let point_lines =
+                self.buf.rng.burst(self.sig.seq_locality, 4) * self.sig.accesses_per_line as u64;
+            for _ in 0..point_lines {
+                let ext = self.buf.rng.chance(self.sig.ext_fraction);
+                let p = if ext { self.buf.ext_next_seq() } else { self.buf.local_random() };
+                self.buf.mem(p, false, None);
+            }
+            for _ in 0..3 {
+                let c = self.buf.ext_hot(self.sig.hot_lines);
+                let dep = self.buf.chain(self.sig.dep_fraction);
+                self.buf.mem(c, false, dep);
+                self.buf.compute(self.sig.compute_per_access);
+            }
+            if self.buf.rng.chance(self.sig.store_fraction * 8.0) {
+                let c = self.buf.ext_hot(self.sig.hot_lines);
+                self.buf.mem(c, true, None);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::testutil::{characterize, small_regions};
+
+    #[test]
+    fn scalparc_is_sequential_dominated() {
+        let data = small_regions(&WorkloadKind::ScalParC.signature());
+        let mut s = ScalParC::new(data, 20_000, 9);
+        let (mut seq, mut total) = (0u64, 0u64);
+        let mut prev = None;
+        while let Some(op) = s.next_logical() {
+            if let LogicalOp::Mem(m) = op {
+                if let Some(p) = prev {
+                    total += 1;
+                    // Element-granular scans: same line or the next one.
+                    if m.vaddr == p || m.vaddr == p + 64 {
+                        seq += 1;
+                    }
+                }
+                prev = Some(m.vaddr);
+            }
+        }
+        let frac = seq as f64 / total as f64;
+        assert!(frac > 0.4, "sequential fraction {frac}");
+    }
+
+    #[test]
+    fn streamcluster_center_reuse() {
+        let data = small_regions(&WorkloadKind::StreamCluster.signature());
+        let sig = WorkloadKind::StreamCluster.signature();
+        let hot_end = data.ext_base + sig.hot_lines * 64;
+        let mut s = StreamCluster::new(data, 20_000, 9);
+        let (mut hot, mut total) = (0u64, 0u64);
+        while let Some(op) = s.next_logical() {
+            if let LogicalOp::Mem(m) = op {
+                total += 1;
+                if m.vaddr >= data.ext_base && m.vaddr < hot_end {
+                    hot += 1;
+                }
+            }
+        }
+        // Centers are a small share of accesses once points stream at
+        // element granularity, but must still be visibly reused.
+        assert!(hot as f64 / total as f64 > 0.08, "center reuse too low");
+    }
+
+    #[test]
+    fn both_have_low_store_fractions() {
+        for (kind, src) in [
+            (WorkloadKind::ScalParC, 0usize),
+            (WorkloadKind::StreamCluster, 1usize),
+        ] {
+            let data = small_regions(&kind.signature());
+            let boxed: Box<dyn LogicalSource + Send> = if src == 0 {
+                Box::new(ScalParC::new(data, 20_000, 4))
+            } else {
+                Box::new(StreamCluster::new(data, 20_000, 4))
+            };
+            let (mem, _, stores, _) = characterize(boxed);
+            assert!((stores as f64 / mem as f64) < 0.2, "{kind:?}");
+        }
+    }
+}

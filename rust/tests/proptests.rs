@@ -1,0 +1,251 @@
+//! Property-based tests over the coordinator's core invariants (routing,
+//! batching, state machines), via the in-house `testing` harness — the
+//! proptest-equivalent coverage DESIGN.md's toolchain-substitution note
+//! commits to.
+
+use twinload::cache::{CacheConfig, DataKind, SetAssocCache};
+use twinload::config::geometry_for;
+use twinload::dram::address::{AddressMapping, DecodedAddr};
+use twinload::dram::timing::{Geometry, TimingParams};
+use twinload::dram::{MemController, Transaction};
+use twinload::mec::LoadValueCache;
+use twinload::memmgr::{Allocator, MemLayout, Space};
+use twinload::testing::{check, PropConfig};
+use twinload::twinload::{LogicalOp, Mechanism, Transform};
+use twinload::cpu::trace::{MicroOp, OpSource};
+
+fn cfg() -> PropConfig {
+    PropConfig::default()
+}
+
+#[test]
+fn prop_address_mapping_roundtrips() {
+    check("address-roundtrip", cfg(), |rng| {
+        // Random pow2 geometry.
+        let geo = Geometry {
+            ranks: 1 << rng.below(2),
+            banks_per_rank: 1 << (2 + rng.below(2)),
+            rows_per_bank: 1 << (6 + rng.below(8)),
+            cols_per_row: 1 << (5 + rng.below(3)),
+        };
+        let channels = 1 << rng.below(3);
+        let m = AddressMapping::new(&geo, channels);
+        for _ in 0..64 {
+            let addr = rng.below(m.capacity() / 64) * 64;
+            let d = m.decode(addr);
+            if m.encode(&d) != addr {
+                return Err(format!("roundtrip failed: {addr:#x} -> {d:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_twin_is_same_bank_other_row_involution() {
+    check("twin-property", cfg(), |rng| {
+        let geo = geometry_for(1 << (24 + rng.below(4)));
+        let m = AddressMapping::new(&geo, 1);
+        for _ in 0..64 {
+            let addr = rng.below(m.capacity() / 64) * 64;
+            let t = m.twin(addr);
+            if m.twin(t) != addr {
+                return Err("twin not an involution".into());
+            }
+            let (a, b) = (m.decode(addr), m.decode(t));
+            if a.bank != b.bank || a.rank != b.rank || a.col != b.col {
+                return Err(format!("twin moved off-bank: {a:?} vs {b:?}"));
+            }
+            if a.row == b.row {
+                return Err("twin did not change the row".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_controller_conserves_and_orders_transactions() {
+    check("controller-conservation", cfg(), |rng| {
+        let geo = Geometry::sim_small();
+        let p = TimingParams::ddr3_1600();
+        let mut ctrl = MemController::new(p, geo);
+        let n = 1 + rng.below(48);
+        let mut ids: Vec<u64> = Vec::new();
+        for i in 0..n {
+            let addr = DecodedAddr {
+                channel: 0,
+                rank: rng.below(2) as u32,
+                bank: rng.below(8) as u32,
+                row: rng.below(512) as u32,
+                col: rng.below(128) as u32,
+            };
+            let is_write = rng.chance(0.3);
+            if !is_write {
+                ids.push(i);
+            }
+            ctrl.enqueue(Transaction { id: i, addr, is_write, arrive: rng.below(2000) });
+        }
+        // Pump to quiescence; every read must be serviced exactly once,
+        // with data strictly after its column command.
+        let mut now = 0;
+        let mut seen = Vec::new();
+        for _ in 0..10_000 {
+            let (results, wake) = ctrl.pump(now);
+            for r in results {
+                if !r.is_write {
+                    seen.push(r.id);
+                }
+                if r.data_end <= r.col_cmd_at {
+                    return Err("data before column command".into());
+                }
+                if !r.is_write && r.data_start != r.col_cmd_at + p.t_rl {
+                    return Err(format!(
+                        "synchronous tRL violated: rd@{} data@{}",
+                        r.col_cmd_at, r.data_start
+                    ));
+                }
+            }
+            match wake {
+                Some(w) => now = w,
+                None => break,
+            }
+        }
+        seen.sort_unstable();
+        ids.sort_unstable();
+        if seen != ids {
+            return Err(format!("lost/duplicated reads: {} vs {}", seen.len(), ids.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cache_accounting_is_consistent() {
+    check("cache-accounting", cfg(), |rng| {
+        let mut c = SetAssocCache::new(CacheConfig {
+            size_bytes: 1 << (12 + rng.below(4)),
+            ways: 1 << (1 + rng.below(3)),
+            line_bytes: 64,
+        });
+        let span = 1 << (14 + rng.below(6));
+        let n = 2_000;
+        let mut resident = std::collections::HashSet::new();
+        for _ in 0..n {
+            let a = rng.below(span / 64) * 64;
+            match c.access(a, rng.chance(0.3)) {
+                twinload::cache::LookupResult::Hit(_) => {
+                    if !resident.contains(&a) {
+                        return Err(format!("hit on non-resident line {a:#x}"));
+                    }
+                }
+                twinload::cache::LookupResult::Miss => {
+                    if let Some(ev) = c.fill(a, false, DataKind::Real) {
+                        if !resident.remove(&ev.addr) {
+                            return Err("evicted a line that was never resident".into());
+                        }
+                    }
+                    resident.insert(a);
+                }
+            }
+        }
+        if c.hits + c.misses != n {
+            return Err("hits + misses != accesses".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lvc_occupancy_bounded() {
+    check("lvc-occupancy", cfg(), |rng| {
+        let cap = 1 + rng.below(32) as usize;
+        let mut lvc = LoadValueCache::new(cap);
+        for _ in 0..500 {
+            let tag = rng.below(64);
+            match lvc.lookup(tag) {
+                twinload::mec::lvc::LvcLookup::Miss => lvc.allocate(tag, rng.below(1000)),
+                twinload::mec::lvc::LvcLookup::Hit { .. } => {
+                    if rng.chance(0.7) {
+                        lvc.release(tag);
+                    }
+                }
+            }
+            if lvc.occupancy() > cap {
+                return Err(format!("occupancy {} > capacity {cap}", lvc.occupancy()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_transform_twins_are_well_formed() {
+    check("transform-twins", cfg(), |rng| {
+        let layout = MemLayout::new(1 << 22, 1 << 22);
+        let n = 50 + rng.below(100);
+        let mut ops = Vec::new();
+        for _ in 0..n {
+            let ext = rng.chance(0.7);
+            let base = if ext { layout.ext_base() } else { 0 };
+            let addr = base + rng.below(1 << 20) * 64;
+            if rng.chance(0.2) {
+                ops.push(LogicalOp::store(addr));
+            } else {
+                ops.push(LogicalOp::load(addr));
+            }
+        }
+        let mut t = Transform::new(ops.into_iter(), Mechanism::TlOoO, layout);
+        let mut pair_addr: std::collections::HashMap<u64, Vec<u64>> = Default::default();
+        while let Some(op) = t.next_op() {
+            if let MicroOp::Mem(m) = op {
+                if let Some(p) = m.pair {
+                    pair_addr.entry(p).or_default().push(m.vaddr);
+                }
+            }
+        }
+        for (p, addrs) in &pair_addr {
+            if addrs.len() != 2 {
+                return Err(format!("pair {p} has {} members", addrs.len()));
+            }
+            let (a, b) = (addrs[0].min(addrs[1]), addrs[0].max(addrs[1]));
+            if b - a != layout.ext_size {
+                return Err(format!("pair {p} not twins: {a:#x}/{b:#x}"));
+            }
+            if !layout.is_extended(a) || !layout.is_shadow(b) {
+                return Err("pair members in wrong spaces".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allocator_regions_disjoint() {
+    check("allocator-disjoint", cfg(), |rng| {
+        let layout = MemLayout::new(1 << 24, 1 << 25);
+        let mut alloc = Allocator::new(layout, 1 << 20);
+        let mut regions: Vec<twinload::memmgr::Region> = Vec::new();
+        for _ in 0..rng.below(40) {
+            let space = if rng.chance(0.5) { Space::Local } else { Space::Extended };
+            let bytes = (1 + rng.below(4)) << 20;
+            if rng.chance(0.2) {
+                if let Some(r) = regions.pop() {
+                    alloc.free(r);
+                    continue;
+                }
+            }
+            if let Some(r) = alloc.alloc(space, bytes) {
+                for other in &regions {
+                    let overlap = r.base < other.base + other.len
+                        && other.base < r.base + r.len;
+                    if overlap {
+                        return Err(format!("overlap: {r:?} vs {other:?}"));
+                    }
+                }
+                regions.push(r);
+            }
+        }
+        Ok(())
+    });
+}
