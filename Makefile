@@ -1,0 +1,36 @@
+# Twin-Load reproduction — build / test / perf entry points.
+
+.PHONY: build test fmt clippy perf smoke artifacts clean
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+fmt:
+	cargo fmt --check
+
+clippy:
+	cargo clippy --all-targets -- -D warnings
+
+# Full hot-path benchmark; writes BENCH_hotpath.json at the repo root.
+perf:
+	cargo bench --bench hotpath
+
+# Reduced-size smoke run of the same benchmark (CI).
+smoke:
+	TWINLOAD_BENCH_QUICK=1 cargo bench --bench hotpath
+
+# PJRT fast-path artifacts. Producing the real AOT-compiled artifacts
+# requires the python/compile JAX/Pallas toolchain (see python/compile/aot.py);
+# everything else — simulator, tests, benches — runs without them, and the
+# hotpath bench degrades gracefully when the directory is empty.
+artifacts:
+	mkdir -p artifacts
+	@echo "artifacts/: stub created. To build the PJRT fast-path artifacts run:"
+	@echo "  python -m python.compile.aot --out artifacts/   (requires JAX/Pallas)"
+
+clean:
+	cargo clean
+	rm -f BENCH_hotpath.json

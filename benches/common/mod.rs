@@ -1,14 +1,22 @@
-//! Shared bench plumbing: scale selection + timed table emission.
+//! Shared bench plumbing: quick-mode detection, scale selection, timed
+//! table emission.
+
+// Each bench target includes this module but uses its own subset.
+#![allow(dead_code)]
 
 use std::time::Instant;
 use twinload::coordinator::experiments::Scale;
 use twinload::stats::Table;
 
-/// `TWINLOAD_BENCH_QUICK=1` (or --quick in argv) shrinks every sweep.
+/// `TWINLOAD_BENCH_QUICK=1` (or `--quick` in argv) shrinks every sweep;
+/// unset, empty, or `0` means a full run.
+pub fn quick() -> bool {
+    std::env::var("TWINLOAD_BENCH_QUICK").is_ok_and(|v| !v.is_empty() && v != "0")
+        || std::env::args().any(|a| a == "--quick")
+}
+
 pub fn scale() -> Scale {
-    let quick = std::env::var_os("TWINLOAD_BENCH_QUICK").is_some()
-        || std::env::args().any(|a| a == "--quick");
-    if quick {
+    if quick() {
         Scale::quick()
     } else {
         Scale::full()

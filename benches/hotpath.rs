@@ -1,6 +1,11 @@
 //! Hot-path microbenchmarks (the §Perf baseline/after numbers in
 //! EXPERIMENTS.md): DRAM controller service rate, end-to-end simulator
 //! throughput, cache ops, and PJRT fast-path classification rate.
+//!
+//! Emits a human table on stdout and a machine-readable
+//! `BENCH_hotpath.json` at the repo root so the perf trajectory can be
+//! tracked across PRs. `TWINLOAD_BENCH_QUICK=1` (or `--quick`) shrinks
+//! every run for CI smoke coverage.
 
 mod common;
 
@@ -10,13 +15,27 @@ use twinload::config::{RunSpec, SystemConfig};
 use twinload::coordinator::fastpath;
 use twinload::dram::address::DecodedAddr;
 use twinload::dram::timing::{Geometry, TimingParams};
-use twinload::dram::{MemController, Transaction};
+use twinload::dram::{MemController, SchedPolicy, ServiceResult, Transaction};
 use twinload::sim::run_spec;
 use twinload::twinload::Mechanism;
 use twinload::util::Rng;
 use twinload::workloads::WorkloadKind;
 
-fn timeit(name: &str, units: f64, unit_name: &str, f: impl FnOnce()) {
+/// One timed row: name, wall seconds, work units, unit label.
+struct Row {
+    name: String,
+    seconds: f64,
+    units: f64,
+    unit: String,
+}
+
+impl Row {
+    fn rate(&self) -> f64 {
+        self.units / self.seconds
+    }
+}
+
+fn timeit(rows: &mut Vec<Row>, name: &str, units: f64, unit_name: &str, f: impl FnOnce()) {
     let t0 = Instant::now();
     f();
     let dt = t0.elapsed().as_secs_f64();
@@ -25,14 +44,48 @@ fn timeit(name: &str, units: f64, unit_name: &str, f: impl FnOnce()) {
         dt,
         units / dt
     );
+    rows.push(Row {
+        name: name.to_string(),
+        seconds: dt,
+        units,
+        unit: unit_name.to_string(),
+    });
 }
 
-fn bench_controller(n: u64) {
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Hand-rolled JSON (the crate carries no serde): one object per row.
+fn write_json(path: &str, rows: &[Row]) {
+    let mut body = String::from("{\n  \"bench\": \"hotpath\",\n  \"rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        body.push_str(&format!(
+            "    {{\"name\": \"{}\", \"seconds\": {:.6}, \"units\": {}, \
+             \"unit\": \"{}\", \"units_per_s\": {:.1}}}{}\n",
+            json_escape(&r.name),
+            r.seconds,
+            r.units,
+            json_escape(&r.unit),
+            r.rate(),
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    body.push_str("  ]\n}\n");
+    match std::fs::write(path, body) {
+        Ok(()) => println!("[bench] wrote {path}"),
+        Err(e) => eprintln!("[bench] could not write {path}: {e}"),
+    }
+}
+
+fn bench_controller(n: u64, policy: SchedPolicy) {
     let geo = Geometry::sim_small();
-    let mut ctrl = MemController::new(TimingParams::ddr3_1600(), geo);
+    let mut ctrl = MemController::with_policy(TimingParams::ddr3_1600(), geo, policy);
     let mut rng = Rng::new(1);
     let mut now = 0u64;
     let mut done = 0u64;
+    let mut id = 0u64;
+    let mut out: Vec<ServiceResult> = Vec::with_capacity(64);
     while done < n {
         // Keep ~32 in flight.
         for _ in 0..32 {
@@ -43,11 +96,13 @@ fn bench_controller(n: u64) {
                 row: (rng.below(1024)) as u32,
                 col: (rng.below(128)) as u32,
             };
-            ctrl.enqueue(Transaction { id: done, addr, is_write: false, arrive: now });
+            ctrl.enqueue(Transaction { id, addr, is_write: false, arrive: now });
+            id += 1;
         }
         loop {
-            let (res, wake) = ctrl.pump(now);
-            done += res.len() as u64;
+            out.clear();
+            let wake = ctrl.pump(now, &mut out);
+            done += out.len() as u64;
             match wake {
                 Some(w) => now = w,
                 None => break,
@@ -76,16 +131,25 @@ fn bench_sim(kind: WorkloadKind, cfg: &SystemConfig, ops: u64) -> u64 {
 }
 
 fn main() {
-    println!("== hot-path microbenchmarks ==");
-    let n_ctrl = 2_000_000u64;
-    timeit("dram controller (random txns)", n_ctrl as f64, "txn", || {
-        bench_controller(n_ctrl)
+    let quick = common::quick();
+    let scale = if quick { 20 } else { 1 };
+    println!("== hot-path microbenchmarks =={}", if quick { " (quick)" } else { "" });
+    let mut rows: Vec<Row> = Vec::new();
+
+    let n_ctrl = 2_000_000u64 / scale;
+    timeit(&mut rows, "dram controller (random txns)", n_ctrl as f64, "txn", || {
+        bench_controller(n_ctrl, SchedPolicy::BankIndexed)
+    });
+    timeit(&mut rows, "dram controller (reference scan)", n_ctrl as f64, "txn", || {
+        bench_controller(n_ctrl, SchedPolicy::ReferenceScan)
     });
 
-    let n_cache = 20_000_000u64;
-    timeit("LLC access+fill (random)", n_cache as f64, "op", || bench_cache(n_cache));
+    let n_cache = 20_000_000u64 / scale;
+    timeit(&mut rows, "LLC access+fill (random)", n_cache as f64, "op", || {
+        bench_cache(n_cache)
+    });
 
-    let ops = 200_000u64;
+    let ops = 200_000u64 / scale;
     for (name, cfg) in [
         ("sim ideal/gups", SystemConfig::ideal()),
         ("sim tl-ooo/gups", SystemConfig::tl_ooo()),
@@ -99,22 +163,25 @@ fn main() {
         let mut cfg = cfg;
         cfg.cores = 4;
         let total_ops = ops * cfg.cores as u64;
-        timeit(name, total_ops as f64, "logical-op", || {
+        timeit(&mut rows, name, total_ops as f64, "logical-op", || {
             bench_sim(wl, &cfg, ops);
         });
     }
 
     // PJRT fast-path classification throughput.
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    if let Ok(fp) = fastpath::FastPath::new(dir) {
-        let cfg = SystemConfig::tl_ooo();
-        let (b, r) =
-            fastpath::synthesize_trace(&cfg, WorkloadKind::Gups, Mechanism::TlOoO, 8, 9);
-        let n = b.len() as f64;
-        timeit("pjrt trace classification", n, "access", || {
-            fp.classify(&b, &r).expect("classify");
-        });
-    } else {
-        println!("(pjrt fast path unavailable — run `make artifacts`)");
+    match fastpath::FastPath::new(dir) {
+        Ok(fp) => {
+            let cfg = SystemConfig::tl_ooo();
+            let (b, r) =
+                fastpath::synthesize_trace(&cfg, WorkloadKind::Gups, Mechanism::TlOoO, 8, 9);
+            let n = b.len() as f64;
+            timeit(&mut rows, "pjrt trace classification", n, "access", || {
+                fp.classify(&b, &r).expect("classify");
+            });
+        }
+        Err(e) => println!("(pjrt fast path unavailable: {e})"),
     }
+
+    write_json(concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_hotpath.json"), &rows);
 }

@@ -67,6 +67,16 @@ impl Bank {
         self.next_pre
     }
 
+    /// Earliest column command of the given direction (intra-bank only).
+    #[inline]
+    pub fn earliest_col(&self, is_write: bool) -> Ps {
+        if is_write {
+            self.next_wr
+        } else {
+            self.next_rd
+        }
+    }
+
     /// Apply an ACT at `t` opening `row`.
     pub fn do_act(&mut self, t: Ps, row: u32, p: &TimingParams) {
         debug_assert!(t >= self.next_act, "ACT issued too early");

@@ -85,6 +85,17 @@ impl Channel {
         }
         latest
     }
+
+    /// Run *all* refreshes due up to `now` (long idle gaps may owe several
+    /// back-to-back). Returns whether any fired — the controller uses that
+    /// as the signal to invalidate its cached bank ready times.
+    pub fn catch_up_refresh(&mut self, now: Ps, p: &TimingParams) -> bool {
+        let mut fired = false;
+        while self.maybe_refresh(now, p).is_some() {
+            fired = true;
+        }
+        fired
+    }
 }
 
 #[cfg(test)]

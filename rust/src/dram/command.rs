@@ -58,6 +58,63 @@ impl Command {
     }
 }
 
+/// Inline, fixed-capacity command sequence.
+///
+/// One serviced transaction issues at most PRE + ACT + RD/WR, so the hot
+/// path can carry its command stream by value instead of allocating a
+/// `Vec<Command>` per `ServiceResult`. Derefs to `[Command]`, so indexing,
+/// `len()`, and iteration all work as on a slice.
+/// Worst case per transaction: PRE, ACT, then the column command.
+const CMD_SEQ_CAP: usize = 3;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CommandSeq {
+    cmds: [Command; CMD_SEQ_CAP],
+    len: u8,
+}
+
+impl CommandSeq {
+    /// Maximum commands one serviced transaction can issue.
+    pub const CAP: usize = CMD_SEQ_CAP;
+
+    pub fn new() -> CommandSeq {
+        CommandSeq { cmds: [Command::pre(0, 0, 0); CMD_SEQ_CAP], len: 0 }
+    }
+
+    pub fn push(&mut self, c: Command) {
+        assert!((self.len as usize) < CommandSeq::CAP, "command sequence overflow");
+        self.cmds[self.len as usize] = c;
+        self.len += 1;
+    }
+
+    pub fn as_slice(&self) -> &[Command] {
+        &self.cmds[..self.len as usize]
+    }
+}
+
+impl Default for CommandSeq {
+    fn default() -> Self {
+        CommandSeq::new()
+    }
+}
+
+impl std::ops::Deref for CommandSeq {
+    type Target = [Command];
+
+    fn deref(&self) -> &[Command] {
+        self.as_slice()
+    }
+}
+
+impl<'a> IntoIterator for &'a CommandSeq {
+    type Item = &'a Command;
+    type IntoIter = std::slice::Iter<'a, Command>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -74,5 +131,29 @@ mod tests {
     fn flat_bank_rank_major() {
         let c = Command::rd(1, 3, 0, 0);
         assert_eq!(c.flat_bank(8), 11);
+    }
+
+    #[test]
+    fn command_seq_acts_like_a_slice() {
+        let mut s = CommandSeq::new();
+        assert!(s.is_empty());
+        s.push(Command::act(0, 1, 2, 10));
+        s.push(Command::rd(0, 1, 5, 20));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].kind, CommandKind::Act);
+        assert_eq!(s[1].col, 5);
+        let ats: Vec<_> = s.iter().map(|c| c.at).collect();
+        assert_eq!(ats, vec![10, 20]);
+        let by_ref: Vec<_> = (&s).into_iter().map(|c| c.kind).collect();
+        assert_eq!(by_ref, vec![CommandKind::Act, CommandKind::Rd]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn command_seq_overflow_panics() {
+        let mut s = CommandSeq::new();
+        for _ in 0..=CommandSeq::CAP {
+            s.push(Command::pre(0, 0, 0));
+        }
     }
 }

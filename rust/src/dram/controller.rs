@@ -7,10 +7,27 @@
 //! row hits are prioritized over misses, ties broken by arrival order —
 //! the policy commodity controllers implement and the one that produces
 //! the twin-load row-miss spacing the paper relies on.
+//!
+//! ## Scheduling structure
+//!
+//! The queues are kept **per (rank, bank)**, sorted by `(arrive, id)`, with
+//! a cached per-bank candidate summary ([`BankCand`]). The FR-FCFS pick
+//! only has to compare two representatives per bank — the oldest row hit
+//! and the oldest row miss — because within one bank every hit shares the
+//! same column-ready time and every miss shares the same PRE/ACT-ready
+//! time (bank and rank constraints are uniform across the bank's queue).
+//! Servicing a transaction perturbs only its own rank's state (bank
+//! timings, tRRD/tFAW window, read/write turnaround), so only that rank's
+//! cached summaries are invalidated; the data-bus claim is channel-global
+//! but does not enter first-command readiness. The result is an exact
+//! replacement for the full-queue scan: same pick, same timestamps,
+//! bit-identical [`ServiceResult`]s. The original full scan is retained as
+//! [`SchedPolicy::ReferenceScan`] and cross-checked by a differential
+//! property test (`rust/tests/proptests.rs`).
 
 use super::address::DecodedAddr;
 use super::channel::Channel;
-use super::command::Command;
+use super::command::{Command, CommandSeq};
 use super::timing::{Geometry, TimingParams};
 use crate::util::time::Ps;
 
@@ -24,7 +41,7 @@ pub struct Transaction {
 }
 
 /// Outcome of servicing one transaction.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct ServiceResult {
     pub id: u64,
     pub is_write: bool,
@@ -37,8 +54,9 @@ pub struct ServiceResult {
     pub row_hit: bool,
     /// Full command sequence issued — consumed by the MEC model, which
     /// observes the DDR bus exactly as §4.3 describes (BST from ACTs,
-    /// address reconstruction on RDs).
-    pub commands: Vec<Command>,
+    /// address reconstruction on RDs). Inline (at most PRE+ACT+column),
+    /// so the hot path allocates nothing per serviced transaction.
+    pub commands: CommandSeq,
 }
 
 /// Per-controller statistics.
@@ -54,6 +72,33 @@ pub struct CtrlStats {
     pub queue_peak: usize,
 }
 
+/// Which FR-FCFS pick implementation a controller runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// Per-bank queues with cached ready-time summaries (the default).
+    BankIndexed,
+    /// The original O(queue) full scan, retained as the oracle for
+    /// differential testing. Identical pick order and timestamps.
+    ReferenceScan,
+}
+
+/// Cached scheduling summary for one bank's queue (one per direction).
+///
+/// Valid until the bank's queue or its rank's timing state changes;
+/// `None` in the cache slot marks it stale.
+#[derive(Debug, Clone, Copy)]
+struct BankCand {
+    /// Oldest row-hit candidate: (arrive, id, queue position).
+    hit: Option<(Ps, u64, u32)>,
+    /// Oldest row-miss/conflict candidate.
+    miss: Option<(Ps, u64, u32)>,
+    /// Ready component shared by every hit: the column command time.
+    col_ready: Ps,
+    /// Ready component shared by every miss: PRE if a row is open,
+    /// ACT if the bank is closed.
+    miss_ready: Ps,
+}
+
 /// Write-queue drain thresholds.
 const WQ_HIGH: usize = 32;
 const WQ_LOW: usize = 8;
@@ -65,21 +110,39 @@ pub struct MemController {
     p: TimingParams,
     geo: Geometry,
     channel: Channel,
-    reads: Vec<Transaction>,
-    writes: Vec<Transaction>,
+    /// Per-(rank, bank) read/write queues (rank-major flat index), each
+    /// kept sorted by (arrive, id).
+    rq: Vec<Vec<Transaction>>,
+    wq: Vec<Vec<Transaction>>,
+    rq_len: usize,
+    wq_len: usize,
+    /// Cached per-bank candidate summaries; `None` = stale.
+    cand_r: Vec<Option<BankCand>>,
+    cand_w: Vec<Option<BankCand>>,
     draining: bool,
+    policy: SchedPolicy,
     pub stats: CtrlStats,
 }
 
 impl MemController {
     pub fn new(p: TimingParams, geo: Geometry) -> MemController {
+        MemController::with_policy(p, geo, SchedPolicy::BankIndexed)
+    }
+
+    pub fn with_policy(p: TimingParams, geo: Geometry, policy: SchedPolicy) -> MemController {
+        let nb = geo.total_banks() as usize;
         MemController {
             channel: Channel::new(&geo, &p),
             p,
             geo,
-            reads: Vec::with_capacity(RQ_CAP),
-            writes: Vec::with_capacity(WQ_HIGH + 4),
+            rq: (0..nb).map(|_| Vec::with_capacity(8)).collect(),
+            wq: (0..nb).map(|_| Vec::with_capacity(8)).collect(),
+            rq_len: 0,
+            wq_len: 0,
+            cand_r: vec![None; nb],
+            cand_w: vec![None; nb],
             draining: false,
+            policy,
             stats: CtrlStats::default(),
         }
     }
@@ -88,36 +151,65 @@ impl MemController {
         &self.p
     }
 
+    pub fn policy(&self) -> SchedPolicy {
+        self.policy
+    }
+
     pub fn queue_len(&self) -> usize {
-        self.reads.len() + self.writes.len()
+        self.rq_len + self.wq_len
     }
 
     pub fn has_room(&self) -> bool {
-        self.reads.len() < RQ_CAP
+        self.rq_len < RQ_CAP
+    }
+
+    #[inline]
+    fn flat_bank(&self, a: &DecodedAddr) -> usize {
+        debug_assert!(a.rank < self.geo.ranks && a.bank < self.geo.banks_per_rank);
+        (a.rank * self.geo.banks_per_rank + a.bank) as usize
     }
 
     pub fn enqueue(&mut self, t: Transaction) {
-        if t.is_write {
-            self.writes.push(t);
+        let fb = self.flat_bank(&t.addr);
+        let key = (t.arrive, t.id);
+        let (q, cand) = if t.is_write {
+            self.wq_len += 1;
+            (&mut self.wq[fb], &mut self.cand_w[fb])
         } else {
-            self.reads.push(t);
+            self.rq_len += 1;
+            (&mut self.rq[fb], &mut self.cand_r[fb])
+        };
+        let pos = q.partition_point(|x| (x.arrive, x.id) <= key);
+        q.insert(pos, t);
+        *cand = None;
+        self.stats.queue_peak = self.stats.queue_peak.max(self.rq_len + self.wq_len);
+    }
+
+    fn invalidate_rank(&mut self, rank: u32) {
+        let bpr = self.geo.banks_per_rank as usize;
+        let base = rank as usize * bpr;
+        for fb in base..base + bpr {
+            self.cand_r[fb] = None;
+            self.cand_w[fb] = None;
         }
-        self.stats.queue_peak = self.stats.queue_peak.max(self.queue_len());
+    }
+
+    fn invalidate_all(&mut self) {
+        self.cand_r.fill(None);
+        self.cand_w.fill(None);
     }
 
     /// Earliest time the *first* command of `t` could issue, plus whether
-    /// it would be a row hit, given current bank state.
+    /// it would be a row hit, given current bank state. (Used by the
+    /// reference scan; the indexed path computes the same quantities once
+    /// per bank in [`MemController::cand`].)
     fn first_cmd_time(&self, t: &Transaction) -> (Ps, bool) {
         let rank = &self.channel.ranks[t.addr.rank as usize];
         let bank = &rank.banks[t.addr.bank as usize];
         let base = t.arrive;
         match bank.open_row() {
             Some(r) if r == t.addr.row => {
-                let col = if t.is_write {
-                    rank.earliest_wr(t.addr.bank)
-                } else {
-                    rank.earliest_rd(t.addr.bank)
-                };
+                let col = rank.earliest_col(t.addr.bank, t.is_write);
                 (self.channel.earliest_cmd(col.max(base)), true)
             }
             Some(_) => {
@@ -131,32 +223,142 @@ impl MemController {
         }
     }
 
+    /// Cached per-bank candidate summary; recomputes on a stale slot by a
+    /// single pass over that bank's (sorted) queue.
+    fn cand(&mut self, fb: usize, is_write: bool) -> BankCand {
+        let cached = if is_write { self.cand_w[fb] } else { self.cand_r[fb] };
+        if let Some(c) = cached {
+            return c;
+        }
+        let bpr = self.geo.banks_per_rank as usize;
+        let rank = &self.channel.ranks[fb / bpr];
+        let bank_i = (fb % bpr) as u32;
+        let bank = &rank.banks[bank_i as usize];
+        let open = bank.open_row();
+        let col_ready = rank.earliest_col(bank_i, is_write);
+        let miss_ready = match open {
+            Some(_) => bank.earliest_pre(),
+            None => rank.earliest_act(bank_i, &self.p),
+        };
+        let q = if is_write { &self.wq[fb] } else { &self.rq[fb] };
+        let mut hit = None;
+        let mut miss = None;
+        for (pos, t) in q.iter().enumerate() {
+            let slot = if open == Some(t.addr.row) { &mut hit } else { &mut miss };
+            if slot.is_none() {
+                *slot = Some((t.arrive, t.id, pos as u32));
+            }
+            if hit.is_some() && miss.is_some() {
+                break;
+            }
+        }
+        let c = BankCand { hit, miss, col_ready, miss_ready };
+        if is_write {
+            self.cand_w[fb] = Some(c);
+        } else {
+            self.cand_r[fb] = Some(c);
+        }
+        c
+    }
+
+    /// One FR-FCFS pick over the given pool: the best candidate ready at
+    /// `now` as (flat bank, queue position), plus the minimum ready time
+    /// across the whole pool (the wake time when nothing is ready).
+    fn scan(&mut self, now: Ps, is_write: bool) -> (Option<(usize, usize)>, Ps) {
+        match self.policy {
+            SchedPolicy::BankIndexed => self.scan_indexed(now, is_write),
+            SchedPolicy::ReferenceScan => self.scan_reference(now, is_write),
+        }
+    }
+
+    fn scan_indexed(&mut self, now: Ps, is_write: bool) -> (Option<(usize, usize)>, Ps) {
+        let nb = self.rq.len();
+        // (is_hit, arrive, id, flat bank, queue position)
+        let mut best: Option<(bool, Ps, u64, usize, usize)> = None;
+        let mut min_ready = Ps::MAX;
+        for fb in 0..nb {
+            let empty = if is_write { self.wq[fb].is_empty() } else { self.rq[fb].is_empty() };
+            if empty {
+                continue;
+            }
+            let c = self.cand(fb, is_write);
+            // Two representatives cover the bank: the oldest hit and the
+            // oldest miss. Any other queued access of the same class has a
+            // later (arrive, id) and the same ready component, so it can
+            // be neither the pick nor the minimum ready time.
+            let reprs = [(c.hit, true, c.col_ready), (c.miss, false, c.miss_ready)];
+            for (repr, is_hit, component) in reprs {
+                let Some((arrive, id, pos)) = repr else { continue };
+                let ready = component.max(arrive);
+                min_ready = min_ready.min(ready);
+                if ready > now {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some((bhit, barr, bid, _, _)) => {
+                        (is_hit && !bhit) || (is_hit == bhit && (arrive, id) < (barr, bid))
+                    }
+                };
+                if better {
+                    best = Some((is_hit, arrive, id, fb, pos as usize));
+                }
+            }
+        }
+        (best.map(|(_, _, _, fb, pos)| (fb, pos)), min_ready)
+    }
+
+    fn scan_reference(&mut self, now: Ps, is_write: bool) -> (Option<(usize, usize)>, Ps) {
+        let queues = if is_write { &self.wq } else { &self.rq };
+        let mut best: Option<(bool, Ps, u64, usize, usize)> = None;
+        let mut min_ready = Ps::MAX;
+        for (fb, q) in queues.iter().enumerate() {
+            for (pos, t) in q.iter().enumerate() {
+                let (ready, hit) = self.first_cmd_time(t);
+                min_ready = min_ready.min(ready);
+                if ready > now {
+                    continue;
+                }
+                let better = match best {
+                    None => true,
+                    Some((bhit, barr, bid, _, _)) => {
+                        (hit && !bhit) || (hit == bhit && (t.arrive, t.id) < (barr, bid))
+                    }
+                };
+                if better {
+                    best = Some((hit, t.arrive, t.id, fb, pos));
+                }
+            }
+        }
+        (best.map(|(_, _, _, fb, pos)| (fb, pos)), min_ready)
+    }
+
     /// Service one chosen transaction: walk its command sequence through
     /// the algebra and return the timed result.
     fn service(&mut self, t: Transaction) -> ServiceResult {
         let (rank_i, bank_i, row) = (t.addr.rank, t.addr.bank, t.addr.row);
-        let mut commands = Vec::with_capacity(3);
+        let mut commands = CommandSeq::new();
         let p = self.p;
 
         // 1. PRE if a different row is open (row conflict).
         let open = self.channel.ranks[rank_i as usize].open_row(bank_i);
         let row_hit = open == Some(row);
-        if let Some(r) = open {
-            if r != row {
-                let pre_t = {
-                    let rank = &self.channel.ranks[rank_i as usize];
-                    self.channel
-                        .earliest_cmd(rank.banks[bank_i as usize].earliest_pre().max(t.arrive))
-                };
-                self.channel.claim_cmd(pre_t, &p);
-                self.channel.ranks[rank_i as usize].do_pre(pre_t, bank_i, &p);
-                commands.push(Command::pre(rank_i, bank_i, pre_t));
-                self.stats.row_conflicts += 1;
-                self.channel.ranks[rank_i as usize].banks[bank_i as usize].row_conflicts += 1;
-            }
+        let row_conflict = open.is_some() && !row_hit;
+        if row_conflict {
+            let pre_t = {
+                let rank = &self.channel.ranks[rank_i as usize];
+                self.channel
+                    .earliest_cmd(rank.banks[bank_i as usize].earliest_pre().max(t.arrive))
+            };
+            self.channel.claim_cmd(pre_t, &p);
+            self.channel.ranks[rank_i as usize].do_pre(pre_t, bank_i, &p);
+            commands.push(Command::pre(rank_i, bank_i, pre_t));
+            self.stats.row_conflicts += 1;
+            self.channel.ranks[rank_i as usize].banks[bank_i as usize].row_conflicts += 1;
         }
 
-        // 2. ACT if the bank is (now) closed.
+        // 2. ACT if the bank is (now) closed. A conflict already counted
+        // above — the re-opening ACT must not also count as a miss.
         if self.channel.ranks[rank_i as usize].open_row(bank_i).is_none() {
             let act_t = {
                 let rank = &self.channel.ranks[rank_i as usize];
@@ -165,7 +367,7 @@ impl MemController {
             self.channel.claim_cmd(act_t, &p);
             self.channel.ranks[rank_i as usize].do_act(act_t, bank_i, row, &p);
             commands.push(Command::act(rank_i, bank_i, row, act_t));
-            if !row_hit {
+            if !row_hit && !row_conflict {
                 self.stats.row_misses += 1;
                 self.channel.ranks[rank_i as usize].banks[bank_i as usize].row_misses += 1;
             }
@@ -178,12 +380,7 @@ impl MemController {
         let lat = if t.is_write { p.t_wl } else { p.t_rl };
         let col_t = {
             let rank = &self.channel.ranks[rank_i as usize];
-            let ready = if t.is_write {
-                rank.earliest_wr(bank_i)
-            } else {
-                rank.earliest_rd(bank_i)
-            }
-            .max(t.arrive);
+            let ready = rank.earliest_col(bank_i, t.is_write).max(t.arrive);
             // Data burst starts `lat` after the column command: back-solve
             // so the data bus is free when the burst arrives.
             let mut ct = self.channel.earliest_cmd(ready);
@@ -232,74 +429,56 @@ impl MemController {
     }
 
     /// Advance the controller to `now`: run refreshes, service everything
-    /// that is first-ready, and report `(results, next_wake)`.
+    /// that is first-ready, appending results to the caller-owned `out`
+    /// buffer (not cleared here — reuse it across calls to keep the hot
+    /// loop allocation-free), and return the next wake time.
     ///
-    /// `next_wake` is `Some(t)` when work remains that becomes ready at `t`.
-    pub fn pump(&mut self, now: Ps) -> (Vec<ServiceResult>, Option<Ps>) {
-        let mut out = Vec::new();
-        // Catch up on refreshes (loop: long idle periods may owe several).
-        while self.channel.maybe_refresh(now, &self.p).is_some() {}
+    /// The wake is `Some(t)` when work remains that becomes ready at `t`.
+    pub fn pump(&mut self, now: Ps, out: &mut Vec<ServiceResult>) -> Option<Ps> {
+        // Catch up on refreshes; a refresh rewrites every bank's timing.
+        if self.channel.catch_up_refresh(now, &self.p) {
+            self.invalidate_all();
+        }
 
         loop {
             // Enter/leave write-drain mode.
-            if self.writes.len() >= WQ_HIGH || (self.reads.is_empty() && !self.writes.is_empty()) {
+            if self.wq_len >= WQ_HIGH || (self.rq_len == 0 && self.wq_len > 0) {
                 self.draining = true;
             }
-            if self.writes.len() <= WQ_LOW && !self.reads.is_empty() {
+            if self.wq_len <= WQ_LOW && self.rq_len > 0 {
                 self.draining = false;
             }
 
-            // Candidate pool: reads normally; writes when draining.
-            let pool: &Vec<Transaction> =
-                if self.draining && !self.writes.is_empty() { &self.writes } else { &self.reads };
-            if pool.is_empty() {
-                let wake = if self.writes.is_empty() && self.reads.is_empty() {
-                    None
-                } else {
-                    // The other queue has work (e.g. reads while draining off).
-                    let other = if self.draining { &self.reads } else { &self.writes };
-                    other.iter().map(|t| self.first_cmd_time(t).0).min()
-                };
-                return (out, wake);
+            // Candidate pool: reads normally; writes when draining. The
+            // hysteresis above always selects a non-empty pool when either
+            // queue has work, so an empty pool means an idle controller.
+            let use_writes = self.draining && self.wq_len > 0;
+            let pool_len = if use_writes { self.wq_len } else { self.rq_len };
+            if pool_len == 0 {
+                debug_assert!(self.rq_len == 0 && self.wq_len == 0);
+                return None;
             }
 
-            // FR-FCFS pick among candidates ready at `now`; ties on
-            // arrival break by transaction id so the outcome does not
-            // depend on queue layout (swap_remove shuffles positions).
-            let mut best: Option<(usize, bool, Ps, u64)> = None; // (idx, hit, arrive, id)
-            let mut min_ready = Ps::MAX;
-            for (i, t) in pool.iter().enumerate() {
-                let (ready, hit) = self.first_cmd_time(t);
-                min_ready = min_ready.min(ready);
-                if ready > now {
-                    continue;
-                }
-                let better = match best {
-                    None => true,
-                    Some((_, bhit, barr, bid)) => {
-                        (hit && !bhit)
-                            || (hit == bhit
-                                && (t.arrive, t.id) < (barr, bid))
-                    }
-                };
-                if better {
-                    best = Some((i, hit, t.arrive, t.id));
-                }
-            }
-
-            match best {
-                Some((i, _, _, _)) => {
-                    // swap_remove is safe: FR-FCFS selects by (row-hit,
-                    // arrival time), never by queue position.
-                    let t = if self.draining && !self.writes.is_empty() {
-                        self.writes.swap_remove(i)
+            let (pick, min_ready) = self.scan(now, use_writes);
+            match pick {
+                Some((fb, pos)) => {
+                    let t = if use_writes {
+                        self.wq_len -= 1;
+                        self.wq[fb].remove(pos)
                     } else {
-                        self.reads.swap_remove(i)
+                        self.rq_len -= 1;
+                        self.rq[fb].remove(pos)
                     };
                     out.push(self.service(t));
+                    // Rank-granular invalidation: the serviced commands
+                    // moved this rank's bank timings, ACT window, and
+                    // turnaround state; other ranks' summaries still hold.
+                    // (The data-bus claim is channel-global but does not
+                    // enter first-command readiness.)
+                    self.invalidate_rank(t.addr.rank);
                 }
                 None => {
-                    return (out, if min_ready == Ps::MAX { None } else { Some(min_ready) });
+                    return if min_ready == Ps::MAX { None } else { Some(min_ready) };
                 }
             }
         }
@@ -336,17 +515,30 @@ mod tests {
         (MemController::new(TimingParams::ddr3_1600(), geo), AddressMapping::new(&geo, 1))
     }
 
-    fn read_to(map: &AddressMapping, id: u64, row: u32, col: u32, bank: u32, arrive: Ps) -> Transaction {
+    fn read_to(
+        map: &AddressMapping,
+        id: u64,
+        row: u32,
+        col: u32,
+        bank: u32,
+        arrive: Ps,
+    ) -> Transaction {
         let addr = DecodedAddr { channel: 0, rank: 0, bank, row, col };
         let _ = map;
         Transaction { id, addr, is_write: false, arrive }
+    }
+
+    fn pump_all(c: &mut MemController, now: Ps) -> (Vec<ServiceResult>, Option<Ps>) {
+        let mut out = Vec::new();
+        let wake = c.pump(now, &mut out);
+        (out, wake)
     }
 
     #[test]
     fn single_read_closed_bank_latency() {
         let (mut c, m) = ctrl();
         c.enqueue(read_to(&m, 1, 5, 0, 0, 0));
-        let (res, wake) = c.pump(0);
+        let (res, wake) = pump_all(&mut c, 0);
         assert_eq!(res.len(), 1);
         let r = &res[0];
         assert!(!r.row_hit);
@@ -361,12 +553,12 @@ mod tests {
         let (mut c, m) = ctrl();
         // Open row 1 on bank 0.
         c.enqueue(read_to(&m, 1, 1, 0, 0, 0));
-        let _ = c.pump(0);
+        let _ = pump_all(&mut c, 0);
         // Older request misses (row 2), newer hits (row 1): FR-FCFS serves
         // the hit first.
         c.enqueue(read_to(&m, 2, 2, 0, 0, 10));
         c.enqueue(read_to(&m, 3, 1, 1, 0, 11));
-        let (res, _) = c.pump(200 * NS);
+        let (res, _) = pump_all(&mut c, 200 * NS);
         let order: Vec<u64> = res.iter().map(|r| r.id).collect();
         assert_eq!(order, vec![3, 2]);
         assert!(res[0].row_hit && !res[1].row_hit);
@@ -381,7 +573,7 @@ mod tests {
         let twin_row = row | (1 << 9); // MSB of sim_small's 10-bit row space
         c.enqueue(read_to(&m, 1, row, 7, 3, 0));
         c.enqueue(read_to(&m, 2, twin_row, 7, 3, 0));
-        let (res, _) = c.pump(1_000 * NS);
+        let (res, _) = pump_all(&mut c, 1_000 * NS);
         assert_eq!(res.len(), 2);
         let gap = res[1].col_cmd_at - res[0].col_cmd_at;
         assert!(
@@ -395,7 +587,7 @@ mod tests {
         let (mut c, m) = ctrl();
         c.enqueue(read_to(&m, 1, 1, 0, 0, 0));
         c.enqueue(read_to(&m, 2, 1, 0, 1, 0));
-        let (res, _) = c.pump(1_000 * NS);
+        let (res, _) = pump_all(&mut c, 1_000 * NS);
         let p = TimingParams::ddr3_1600();
         // Both finish well before 2x the serial closed-access latency.
         let last = res.iter().map(|r| r.data_end).max().unwrap();
@@ -408,7 +600,7 @@ mod tests {
         let mut t = read_to(&m, 1, 3, 0, 0, 0);
         t.is_write = true;
         c.enqueue(t);
-        let (res, _) = c.pump(0);
+        let (res, _) = pump_all(&mut c, 0);
         assert_eq!(res.len(), 1);
         assert!(res[0].is_write);
         assert_eq!(c.stats.writes, 1);
@@ -418,11 +610,11 @@ mod tests {
     fn not_ready_returns_wake_time() {
         let (mut c, m) = ctrl();
         c.enqueue(read_to(&m, 1, 1, 0, 0, 0));
-        let _ = c.pump(0);
+        let _ = pump_all(&mut c, 0);
         // Conflict on same bank: PRE can't go until tRAS; pumping at t=1
         // must return a wake time instead of servicing.
         c.enqueue(read_to(&m, 2, 9, 0, 0, 1));
-        let (res, wake) = c.pump(1);
+        let (res, wake) = pump_all(&mut c, 1);
         assert!(res.is_empty());
         let w = wake.expect("needs wake");
         assert!(w >= TimingParams::ddr3_1600().t_ras);
@@ -432,7 +624,7 @@ mod tests {
     fn commands_stream_observable() {
         let (mut c, m) = ctrl();
         c.enqueue(read_to(&m, 1, 4, 2, 1, 0));
-        let (res, _) = c.pump(0);
+        let (res, _) = pump_all(&mut c, 0);
         let cmds = &res[0].commands;
         assert_eq!(cmds.len(), 2);
         assert_eq!(cmds[0].kind, CommandKind::Act);
@@ -448,8 +640,84 @@ mod tests {
         c.enqueue(read_to(&m, 1, 1, 0, 0, 0));
         c.enqueue(read_to(&m, 2, 1, 1, 0, 0));
         c.enqueue(read_to(&m, 3, 1, 2, 0, 0));
-        let _ = c.pump(1_000 * NS);
+        let _ = pump_all(&mut c, 1_000 * NS);
         // First is a miss, next two are hits.
         assert!((c.hit_rate() - 2.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn row_conflict_counted_exactly_once() {
+        // Regression: the ACT that re-opens a precharged bank after a
+        // conflict must not also increment the miss counter.
+        let (mut c, m) = ctrl();
+        c.enqueue(read_to(&m, 1, 1, 0, 0, 0));
+        let _ = pump_all(&mut c, 1_000 * NS);
+        c.enqueue(read_to(&m, 2, 2, 0, 0, 1_000 * NS));
+        let _ = pump_all(&mut c, 10_000 * NS);
+        assert_eq!(c.stats.row_misses, 1, "only the initial closed-bank miss");
+        assert_eq!(c.stats.row_conflicts, 1);
+        assert_eq!(c.stats.row_hits, 0);
+        // Denominator no longer double-counts the conflict.
+        assert_eq!(c.stats.row_hits + c.stats.row_misses + c.stats.row_conflicts, 2);
+        assert_eq!(c.hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn pump_appends_without_clearing() {
+        let (mut c, m) = ctrl();
+        c.enqueue(read_to(&m, 1, 1, 0, 0, 0));
+        let mut out = Vec::new();
+        c.pump(0, &mut out);
+        c.enqueue(read_to(&m, 2, 1, 1, 0, 100 * NS));
+        c.pump(200 * NS, &mut out);
+        let ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2]);
+    }
+
+    #[test]
+    fn reference_scan_policy_matches_bank_indexed() {
+        let geo = Geometry::sim_small();
+        let p = TimingParams::ddr3_1600();
+        let mut fast = MemController::new(p, geo);
+        let mut slow = MemController::with_policy(p, geo, SchedPolicy::ReferenceScan);
+        let m = AddressMapping::new(&geo, 1);
+        // Same-bank conflicts, a row hit, a cross-rank read, and a write.
+        let txns = [
+            read_to(&m, 1, 1, 0, 0, 0),
+            read_to(&m, 2, 2, 0, 0, 5),
+            read_to(&m, 3, 1, 3, 0, 10),
+            read_to(&m, 4, 7, 0, 5, 12),
+            Transaction {
+                id: 5,
+                addr: DecodedAddr { channel: 0, rank: 1, bank: 2, row: 9, col: 4 },
+                is_write: true,
+                arrive: 20,
+            },
+        ];
+        for t in txns {
+            fast.enqueue(t);
+            slow.enqueue(t);
+        }
+        let mut now = 0;
+        for _ in 0..100 {
+            let (rf, wf) = pump_all(&mut fast, now);
+            let (rs, ws) = pump_all(&mut slow, now);
+            assert_eq!(rf.len(), rs.len());
+            for (a, b) in rf.iter().zip(rs.iter()) {
+                assert_eq!(
+                    (a.id, a.col_cmd_at, a.data_start, a.data_end, a.row_hit),
+                    (b.id, b.col_cmd_at, b.data_start, b.data_end, b.row_hit)
+                );
+            }
+            assert_eq!(wf, ws);
+            match wf {
+                Some(w) => now = w,
+                None => break,
+            }
+        }
+        assert_eq!(fast.queue_len(), 0);
+        assert_eq!(fast.stats.row_hits, slow.stats.row_hits);
+        assert_eq!(fast.stats.row_misses, slow.stats.row_misses);
+        assert_eq!(fast.stats.row_conflicts, slow.stats.row_conflicts);
     }
 }

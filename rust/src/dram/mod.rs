@@ -25,6 +25,6 @@ pub mod rank;
 pub mod timing;
 
 pub use address::{AddressMapping, DecodedAddr};
-pub use command::{Command, CommandKind};
-pub use controller::{MemController, ServiceResult, Transaction};
+pub use command::{Command, CommandKind, CommandSeq};
+pub use controller::{MemController, SchedPolicy, ServiceResult, Transaction};
 pub use timing::TimingParams;

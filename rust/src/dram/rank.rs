@@ -57,6 +57,16 @@ impl Rank {
         self.banks[bank as usize].earliest_wr().max(self.next_wr_turn)
     }
 
+    /// Earliest column command of the given direction on `bank`, including
+    /// same-rank turnaround — uniform across every queued access of that
+    /// direction to the bank, which is what lets the controller cache one
+    /// ready time per (bank, direction) instead of one per transaction.
+    #[inline]
+    pub fn earliest_col(&self, bank: u32, is_write: bool) -> Ps {
+        let turn = if is_write { self.next_wr_turn } else { self.next_rd_turn };
+        self.banks[bank as usize].earliest_col(is_write).max(turn)
+    }
+
     pub fn do_act(&mut self, t: Ps, bank: u32, row: u32, p: &TimingParams) {
         self.banks[bank as usize].do_act(t, row, p);
         self.act_window[self.act_ptr] = t;

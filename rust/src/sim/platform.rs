@@ -8,7 +8,7 @@ use crate::cache::{CacheConfig, DataKind, LookupResult, MshrFile, MshrOutcome, S
 use crate::config::{RunSpec, SystemConfig};
 use crate::cpu::{Core, IssueResult, MemAccess, MemoryPort, AccessKind};
 use crate::dram::address::AddressMapping;
-use crate::dram::{MemController, Transaction};
+use crate::dram::{MemController, ServiceResult, Transaction};
 use crate::mec::Mec1;
 use crate::memmgr::Allocator;
 use crate::stats::LevelMeter;
@@ -97,6 +97,9 @@ pub struct Platform {
     pcie: Option<PcieSwap>,
     pending: FastMap<u64, PendingTxn>,
     next_txn: u64,
+    /// Reusable service-result buffer for controller pumps (the pump hot
+    /// loop appends into it instead of allocating a Vec per call).
+    svc_buf: Vec<ServiceResult>,
     events: EventQueue,
     mlp: LevelMeter,
     now: Ps,
@@ -443,6 +446,7 @@ impl Platform {
             pcie,
             pending: FastMap::default(),
             next_txn: 1,
+            svc_buf: Vec::new(),
             events,
             mlp: LevelMeter::new(),
             now: 0,
@@ -561,12 +565,16 @@ impl Platform {
         let kind = self.groups[gi].kind;
         let mut next_wake: Option<Ps> = None;
         let nch = self.groups[gi].channels.len();
+        // Reusable buffer: pump appends; we clear per channel. Taken out
+        // of self so the result loop below can borrow self freely.
+        let mut results = std::mem::take(&mut self.svc_buf);
         for ch in 0..nch {
-            let (results, wake) = self.groups[gi].channels[ch].pump(now);
+            results.clear();
+            let wake = self.groups[gi].channels[ch].pump(now, &mut results);
             if let Some(w) = wake {
                 next_wake = Some(next_wake.map_or(w, |x: Ps| x.min(w)));
             }
-            for r in results {
+            for r in &results {
                 // The channel's MEC observes its command stream.
                 let mut data = DataKind::Real;
                 if kind == GroupKind::ExtMec {
@@ -616,6 +624,7 @@ impl Platform {
                 }
             }
         }
+        self.svc_buf = results;
         if let Some(w) = next_wake {
             self.schedule_pump(gi, w.max(now));
         }
