@@ -1,6 +1,6 @@
 # Twin-Load reproduction — build / test / perf entry points.
 
-.PHONY: build test fmt clippy perf smoke artifacts clean
+.PHONY: build test fmt clippy perf smoke perf-gate baseline artifacts clean
 
 build:
 	cargo build --release
@@ -21,6 +21,20 @@ perf:
 # Reduced-size smoke run of the same benchmark (CI).
 smoke:
 	TWINLOAD_BENCH_QUICK=1 cargo bench --bench hotpath
+
+# Compare a fresh BENCH_hotpath.json (from `make smoke`/`make perf`)
+# against the checked-in baseline; fails on >25% median regression on any
+# benchmarked policy/engine, and whenever an optimized engine falls
+# behind its retained reference implementation.
+perf-gate:
+	cargo run --release --bin perf_gate -- BENCH_hotpath.json BENCH_baseline.json
+
+# Regenerate the perf-gate baseline after an *intentional* perf change
+# (run on the CI runner class; commit the result). The emitted file has
+# no "provisional" flag, so committing it arms the full 25% gate.
+baseline:
+	TWINLOAD_BENCH_QUICK=1 cargo bench --bench hotpath
+	cp BENCH_hotpath.json BENCH_baseline.json
 
 # PJRT fast-path artifacts. Producing the real AOT-compiled artifacts
 # requires the python/compile JAX/Pallas toolchain (see python/compile/aot.py);

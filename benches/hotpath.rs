@@ -1,11 +1,19 @@
 //! Hot-path microbenchmarks (the §Perf baseline/after numbers in
-//! EXPERIMENTS.md): DRAM controller service rate, end-to-end simulator
-//! throughput, cache ops, and PJRT fast-path classification rate.
+//! EXPERIMENTS.md): DRAM controller service rate, event-engine push/pop
+//! rate, end-to-end simulator throughput, cache ops, and PJRT fast-path
+//! classification rate.
+//!
+//! Every optimized engine/policy is benched next to its retained
+//! reference implementation (`… [calendar]` vs `… [ref-heap]`,
+//! `… [bank-indexed]` vs `… [ref-scan]`), so the before/after ratio is
+//! read directly off one run and the CI perf gate can enforce it.
 //!
 //! Emits a human table on stdout and a machine-readable
 //! `BENCH_hotpath.json` at the repo root so the perf trajectory can be
-//! tracked across PRs. `TWINLOAD_BENCH_QUICK=1` (or `--quick`) shrinks
-//! every run for CI smoke coverage.
+//! tracked across PRs (compared against `BENCH_baseline.json` by
+//! `perf_gate`). `TWINLOAD_BENCH_QUICK=1` (or `--quick`) shrinks every
+//! run for CI smoke coverage and repeats each bench 3× (the JSON then
+//! carries the median, which is what the gate thresholds).
 
 mod common;
 
@@ -16,17 +24,20 @@ use twinload::coordinator::fastpath;
 use twinload::dram::address::DecodedAddr;
 use twinload::dram::timing::{Geometry, TimingParams};
 use twinload::dram::{MemController, SchedPolicy, ServiceResult, Transaction};
+use twinload::sim::engine::{EngineKind, Ev, EventQueue};
 use twinload::sim::run_spec;
 use twinload::twinload::Mechanism;
 use twinload::util::Rng;
 use twinload::workloads::WorkloadKind;
 
-/// One timed row: name, wall seconds, work units, unit label.
+/// One timed row: name, median wall seconds across trials, work units,
+/// unit label.
 struct Row {
     name: String,
     seconds: f64,
     units: f64,
     unit: String,
+    trials: u32,
 }
 
 impl Row {
@@ -35,12 +46,26 @@ impl Row {
     }
 }
 
-fn timeit(rows: &mut Vec<Row>, name: &str, units: f64, unit_name: &str, f: impl FnOnce()) {
-    let t0 = Instant::now();
-    f();
-    let dt = t0.elapsed().as_secs_f64();
+/// Time `f` `trials` times and record the median wall time (upper median
+/// for even counts — the conservative side).
+fn timeit(
+    rows: &mut Vec<Row>,
+    name: &str,
+    units: f64,
+    unit_name: &str,
+    trials: u32,
+    mut f: impl FnMut(),
+) {
+    let mut secs: Vec<f64> = Vec::with_capacity(trials as usize);
+    for _ in 0..trials.max(1) {
+        let t0 = Instant::now();
+        f();
+        secs.push(t0.elapsed().as_secs_f64());
+    }
+    secs.sort_by(|a, b| a.total_cmp(b));
+    let dt = secs[secs.len() / 2];
     println!(
-        "{name:<34} {:>9.3} s   {:>12.0} {unit_name}/s",
+        "{name:<40} {:>9.3} s   {:>12.0} {unit_name}/s",
         dt,
         units / dt
     );
@@ -49,6 +74,7 @@ fn timeit(rows: &mut Vec<Row>, name: &str, units: f64, unit_name: &str, f: impl 
         seconds: dt,
         units,
         unit: unit_name.to_string(),
+        trials: trials.max(1),
     });
 }
 
@@ -57,17 +83,19 @@ fn json_escape(s: &str) -> String {
 }
 
 /// Hand-rolled JSON (the crate carries no serde): one object per row.
+/// Parsed back by `twinload::stats::bench::BenchReport`.
 fn write_json(path: &str, rows: &[Row]) {
     let mut body = String::from("{\n  \"bench\": \"hotpath\",\n  \"rows\": [\n");
     for (i, r) in rows.iter().enumerate() {
         body.push_str(&format!(
             "    {{\"name\": \"{}\", \"seconds\": {:.6}, \"units\": {}, \
-             \"unit\": \"{}\", \"units_per_s\": {:.1}}}{}\n",
+             \"unit\": \"{}\", \"units_per_s\": {:.1}, \"trials\": {}}}{}\n",
             json_escape(&r.name),
             r.seconds,
             r.units,
             json_escape(&r.unit),
             r.rate(),
+            r.trials,
             if i + 1 == rows.len() { "" } else { "," }
         ));
     }
@@ -111,6 +139,31 @@ fn bench_controller(n: u64, policy: SchedPolicy) {
     }
 }
 
+/// Event-engine push/pop throughput on a simulator-shaped stream: 256
+/// events in flight (a production-scale platform's wakes + pumps +
+/// in-flight deliveries), clustered arrivals over a ~40 ns horizon,
+/// occasional refresh-scale far-future events.
+fn bench_engine(n: u64, kind: EngineKind) {
+    const IN_FLIGHT: usize = 256;
+    let mut q = EventQueue::with_kind(kind, 1_250);
+    let mut rng = Rng::new(3);
+    for i in 0..IN_FLIGHT {
+        q.push(rng.below(40_000), Ev::CoreWake { core: i });
+    }
+    let mut done = 0u64;
+    while done < n {
+        let e = q.pop().expect("queue kept primed");
+        let t = if rng.chance(0.01) {
+            e.t + 7_800_000
+        } else {
+            e.t + rng.below(40_000)
+        };
+        q.push(t, e.ev);
+        done += 1;
+    }
+    assert_eq!(q.len(), IN_FLIGHT);
+}
+
 fn bench_cache(n: u64) {
     let mut c = SetAssocCache::new(CacheConfig::llc_scaled());
     let mut rng = Rng::new(2);
@@ -133,39 +186,53 @@ fn bench_sim(kind: WorkloadKind, cfg: &SystemConfig, ops: u64) -> u64 {
 fn main() {
     let quick = common::quick();
     let scale = if quick { 20 } else { 1 };
+    // Quick (CI) runs repeat each bench and keep the median so the perf
+    // gate compares medians, not single noisy samples.
+    let trials = if quick { 3 } else { 1 };
     println!("== hot-path microbenchmarks =={}", if quick { " (quick)" } else { "" });
     let mut rows: Vec<Row> = Vec::new();
 
     let n_ctrl = 2_000_000u64 / scale;
-    timeit(&mut rows, "dram controller (random txns)", n_ctrl as f64, "txn", || {
+    timeit(&mut rows, "dram controller [bank-indexed]", n_ctrl as f64, "txn", trials, || {
         bench_controller(n_ctrl, SchedPolicy::BankIndexed)
     });
-    timeit(&mut rows, "dram controller (reference scan)", n_ctrl as f64, "txn", || {
+    timeit(&mut rows, "dram controller [ref-scan]", n_ctrl as f64, "txn", trials, || {
         bench_controller(n_ctrl, SchedPolicy::ReferenceScan)
     });
 
+    let n_evq = 10_000_000u64 / scale;
+    timeit(&mut rows, "event engine [calendar]", n_evq as f64, "event", trials, || {
+        bench_engine(n_evq, EngineKind::Calendar)
+    });
+    timeit(&mut rows, "event engine [ref-heap]", n_evq as f64, "event", trials, || {
+        bench_engine(n_evq, EngineKind::ReferenceHeap)
+    });
+
     let n_cache = 20_000_000u64 / scale;
-    timeit(&mut rows, "LLC access+fill (random)", n_cache as f64, "op", || {
+    timeit(&mut rows, "LLC access+fill (random)", n_cache as f64, "op", trials, || {
         bench_cache(n_cache)
     });
 
+    // End-to-end simulator throughput, both event engines per workload so
+    // the pair rule reads the win off the same run.
     let ops = 200_000u64 / scale;
-    for (name, cfg) in [
-        ("sim ideal/gups", SystemConfig::ideal()),
-        ("sim tl-ooo/gups", SystemConfig::tl_ooo()),
-        ("sim tl-ooo/memcached", SystemConfig::tl_ooo()),
-    ] {
-        let wl = if name.contains("memcached") {
-            WorkloadKind::Memcached
-        } else {
-            WorkloadKind::Gups
-        };
-        let mut cfg = cfg;
-        cfg.cores = 4;
-        let total_ops = ops * cfg.cores as u64;
-        timeit(&mut rows, name, total_ops as f64, "logical-op", || {
-            bench_sim(wl, &cfg, ops);
-        });
+    for (engine_tag, engine) in
+        [(" [calendar]", EngineKind::Calendar), (" [ref-heap]", EngineKind::ReferenceHeap)]
+    {
+        for (name, wl, cfg) in [
+            ("sim ideal/gups", WorkloadKind::Gups, SystemConfig::ideal()),
+            ("sim tl-ooo/gups", WorkloadKind::Gups, SystemConfig::tl_ooo()),
+            ("sim tl-ooo/memcached", WorkloadKind::Memcached, SystemConfig::tl_ooo()),
+        ] {
+            let mut cfg = cfg;
+            cfg.cores = 4;
+            cfg.engine = engine;
+            let total_ops = ops * cfg.cores as u64;
+            let row_name = format!("{name}{engine_tag}");
+            timeit(&mut rows, &row_name, total_ops as f64, "logical-op", trials, || {
+                bench_sim(wl, &cfg, ops);
+            });
+        }
     }
 
     // PJRT fast-path classification throughput.
@@ -176,7 +243,7 @@ fn main() {
             let (b, r) =
                 fastpath::synthesize_trace(&cfg, WorkloadKind::Gups, Mechanism::TlOoO, 8, 9);
             let n = b.len() as f64;
-            timeit(&mut rows, "pjrt trace classification", n, "access", || {
+            timeit(&mut rows, "pjrt trace classification", n, "access", trials, || {
                 fp.classify(&b, &r).expect("classify");
             });
         }

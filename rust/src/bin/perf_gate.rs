@@ -1,0 +1,63 @@
+//! CI perf-regression gate.
+//!
+//! ```text
+//! perf_gate [BENCH_hotpath.json] [BENCH_baseline.json]
+//! ```
+//!
+//! Compares a fresh hotpath bench run against the checked-in baseline
+//! (see `twinload::stats::bench` for the rules) and exits non-zero when
+//! the gate fails: 1 for a perf regression, 2 for missing/unreadable
+//! inputs. Run via `make perf-gate`.
+
+use twinload::stats::bench::{perf_gate, BenchReport, MAX_REGRESSION, PAIR_TOLERANCE};
+
+fn load(path: &str) -> Result<BenchReport, String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    BenchReport::parse(&text).map_err(|e| format!("parsing {path}: {e}"))
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cur_path = args.first().map(String::as_str).unwrap_or("BENCH_hotpath.json");
+    let base_path = args.get(1).map(String::as_str).unwrap_or("BENCH_baseline.json");
+    let (current, baseline) = match (load(cur_path), load(base_path)) {
+        (Ok(c), Ok(b)) => (c, b),
+        (c, b) => {
+            for r in [c.err(), b.err()].into_iter().flatten() {
+                eprintln!("perf-gate: {r}");
+            }
+            std::process::exit(2);
+        }
+    };
+
+    println!(
+        "== perf gate: {cur_path} vs {base_path}{} ==",
+        if baseline.provisional { " (provisional baseline)" } else { "" }
+    );
+    let gate = perf_gate(&current, &baseline);
+    for line in &gate.lines {
+        println!("{line}");
+    }
+    for w in &gate.warnings {
+        println!("[warn] {w}");
+    }
+    if gate.passed() {
+        println!(
+            "perf gate OK ({} row comparisons; thresholds: {:.0} % regression, {:.2}x pair)",
+            gate.lines.len(),
+            MAX_REGRESSION * 100.0,
+            PAIR_TOLERANCE
+        );
+        return;
+    }
+    for f in &gate.failures {
+        eprintln!("[FAIL] {f}");
+    }
+    eprintln!(
+        "perf gate FAILED ({} failure{}). If this slowdown is intentional, regenerate the \
+         baseline with `make baseline` and commit BENCH_baseline.json.",
+        gate.failures.len(),
+        if gate.failures.len() == 1 { "" } else { "s" }
+    );
+    std::process::exit(1);
+}

@@ -8,6 +8,7 @@ use crate::cpu::CoreParams;
 use crate::dram::timing::{Geometry, TimingParams, QPI_EXTRA_NS};
 use crate::mec::MecConfig;
 use crate::memmgr::MemLayout;
+use crate::sim::engine::EngineKind;
 use crate::twinload::Mechanism;
 use crate::util::time::{Ps, NS};
 
@@ -42,6 +43,10 @@ pub struct SystemConfig {
     pub pcie_local_frac: f64,
     /// Increased-tRL system: extra read latency.
     pub trl_extra: Ps,
+    /// Event-queue engine for the platform simulator (calendar queue by
+    /// default; the reference binary heap is retained for differential
+    /// testing and benchmarking).
+    pub engine: EngineKind,
     /// Content model for the TL extended channel. `true` (default)
     /// reproduces the paper's emulation (§5): extended-space lines carry
     /// real values and shadow-space lines fake ones, unconditionally —
@@ -80,6 +85,7 @@ impl SystemConfig {
             numa_gbps: 25.6, // dual QPI links on E5-2600
             pcie_local_frac: 0.75,
             trl_extra: 0,
+            engine: EngineKind::Calendar,
             emulate_content: true,
             l1_lat: 1_600,      // 4 cycles @ 2.5 GHz
             llc_lat: 14 * NS,   // ~35 cycles

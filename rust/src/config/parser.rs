@@ -109,6 +109,10 @@ pub fn apply(
                     cfg.trl_extra =
                         v.parse::<u64>().map_err(|_| "bad trl_extra_ns")? * 1_000
                 }
+                "engine" => {
+                    cfg.engine = crate::sim::engine::EngineKind::by_name(v)
+                        .ok_or_else(|| format!("unknown engine '{v}'"))?
+                }
                 other => return Err(format!("unknown [system] key '{other}'")),
             }
         }
@@ -169,6 +173,18 @@ mod tests {
         assert_eq!(spec.workload, WorkloadKind::Bfs);
         assert_eq!(spec.ops_per_core, 5);
         assert_eq!(spec.footprint, 32 << 20);
+    }
+
+    #[test]
+    fn engine_key_selects_event_engine() {
+        use crate::sim::engine::EngineKind;
+        let ini = Ini::parse("[system]\nengine = reference-heap\n").unwrap();
+        let mut cfg = SystemConfig::ideal();
+        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+        apply(&ini, &mut cfg, &mut spec).unwrap();
+        assert_eq!(cfg.engine, EngineKind::ReferenceHeap);
+        let bad = Ini::parse("[system]\nengine = bogus\n").unwrap();
+        assert!(apply(&bad, &mut cfg, &mut spec).is_err());
     }
 
     #[test]

@@ -60,6 +60,40 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "scoped thread panicked")]
+    fn worker_panic_propagates() {
+        // Documented behavior: a panic in any worker propagates out of
+        // run_parallel (std::thread::scope re-panics after joining). An
+        // invalid config makes Platform::build panic inside the worker.
+        let mut cfg = SystemConfig::ideal();
+        cfg.cores = 0;
+        let spec = RunSpec::smoke(WorkloadKind::Gups);
+        let _ = run_parallel(&[(cfg, spec)], 2);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_reports() {
+        // Mixed-mechanism job list: 1 thread vs N must be bit-identical.
+        let mut jobs = Vec::new();
+        for name in ["ideal", "tl-ooo", "tl-lf", "numa", "pcie"] {
+            let mut c = SystemConfig::by_name(name).unwrap();
+            c.cores = 2;
+            let mut s = RunSpec::smoke(WorkloadKind::Gups);
+            s.ops_per_core = 1_500;
+            jobs.push((c, s));
+        }
+        let serial = run_parallel(&jobs, 1);
+        let fanned = run_parallel(&jobs, 4);
+        for (a, b) in serial.iter().zip(&fanned) {
+            assert_eq!(a.mechanism, b.mechanism);
+            assert_eq!(a.finish, b.finish, "{} diverged", a.mechanism);
+            assert_eq!(a.retired_insts, b.retired_insts, "{} diverged", a.mechanism);
+            assert_eq!(a.llc_misses, b.llc_misses, "{} diverged", a.mechanism);
+            assert_eq!(a.dram_reads, b.dram_reads, "{} diverged", a.mechanism);
+        }
+    }
+
+    #[test]
     fn preserves_job_order() {
         let mut spec = RunSpec::smoke(WorkloadKind::Gups);
         spec.ops_per_core = 500;

@@ -25,6 +25,7 @@ const VALUE_FLAGS: &[&str] = &[
     "csv-dir",
     "trl-extra-ns",
     "pcie-local-frac",
+    "engine",
 ];
 
 fn main() {
@@ -56,6 +57,7 @@ fn print_usage() {
          \n\
          twinload run --mechanism tl-ooo --workload gups [--ops N] [--cores C]\n\
          \x20            [--footprint-mb M] [--seed S] [--config file.ini]\n\
+         \x20            [--engine calendar|reference-heap]\n\
          twinload repro <table1|table2|table3|table4|table5|fig7|fig8|fig9|\n\
          \x20            fig10|fig11|fig12|fig13|fig14|fig15|all> [--quick] [--csv-dir DIR]\n\
          twinload ablate <lvc|layers|batch> [--quick]\n\
@@ -125,6 +127,13 @@ fn cmd_run(args: &Args) -> i32 {
     if let Ok(Some(f)) = args.get_f64("pcie-local-frac") {
         cfg.pcie_local_frac = f;
     }
+    if let Some(name) = args.get("engine") {
+        let Some(kind) = twinload::sim::engine::EngineKind::by_name(name) else {
+            eprintln!("unknown engine '{name}' (calendar | reference-heap)");
+            return 2;
+        };
+        cfg.engine = kind;
+    }
 
     let report = run_spec(&cfg, &spec);
     println!("{}", report.summary());
@@ -147,6 +156,15 @@ fn cmd_run(args: &Args) -> i32 {
         report.transform.ext_fraction() * 100.0,
         report.twin_retries,
         report.cas_fails,
+    );
+    println!(
+        "  engine        {:>12} ({} events, peak {}, {} buckets, {} resizes, {} overflowed)",
+        report.engine,
+        report.engine_events,
+        report.engine_peak,
+        report.engine_buckets,
+        report.engine_resizes,
+        report.engine_overflow,
     );
     if report.deadlocked {
         eprintln!("simulation DEADLOCKED — report is partial");

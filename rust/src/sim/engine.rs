@@ -1,9 +1,25 @@
-//! Deterministic event queue for the platform simulator.
+//! Deterministic event queues for the platform simulator.
+//!
+//! Two interchangeable engines sit behind [`EventQueue`]:
+//!
+//! * [`EngineKind::Calendar`] (default) — a calendar/bucket queue: an
+//!   array of time-bucketed FIFO lanes whose width comes from the host
+//!   command-clock tick, a far-future overflow heap for refresh-scale
+//!   gaps, and occupancy-watermark resizing. Push and pop are O(1) at
+//!   the short-horizon, high-density event distributions a DRAM-timing
+//!   simulator produces.
+//! * [`EngineKind::ReferenceHeap`] — the original `BinaryHeap` engine,
+//!   retained as the oracle for differential testing (the same pattern
+//!   as the controller's `SchedPolicy::ReferenceScan`).
+//!
+//! Both engines pop in strictly identical order: ascending `(t, seq)`,
+//! where `seq` is the global insertion counter — the `engine-equivalence`
+//! proptest proves bit-identical streams.
 
 use crate::cache::DataKind;
-use crate::util::time::Ps;
+use crate::util::time::{Ps, CYCLE_800MHZ};
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// Event payloads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -38,35 +54,327 @@ impl PartialOrd for Event {
     }
 }
 
-/// Min-heap event queue with deterministic tie-breaking.
-#[derive(Debug, Default)]
+/// Which event-queue implementation a platform runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Time-bucketed calendar queue (the default).
+    Calendar,
+    /// The original binary-heap engine, retained as the differential
+    /// oracle. Identical pop order.
+    ReferenceHeap,
+}
+
+impl EngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Calendar => "calendar",
+            EngineKind::ReferenceHeap => "reference-heap",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<EngineKind> {
+        match name {
+            "calendar" => Some(EngineKind::Calendar),
+            "reference-heap" | "ref-heap" | "heap" => Some(EngineKind::ReferenceHeap),
+            _ => None,
+        }
+    }
+}
+
+/// Occupancy / housekeeping counters for one queue's lifetime.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineStats {
+    pub kind: EngineKind,
+    /// Total events ever pushed.
+    pub pushed: u64,
+    /// Peak simultaneous occupancy.
+    pub peak_len: u64,
+    /// Watermark-triggered bucket-array resizes (calendar only).
+    pub resizes: u64,
+    /// Events routed through the far-future overflow heap (calendar only).
+    pub overflow_pushes: u64,
+    /// Final bucket count (calendar only; 0 for the heap).
+    pub buckets: u64,
+}
+
+/// Initial bucket count (power of two).
+const INIT_BUCKETS: usize = 256;
+/// Resize floor.
+const MIN_BUCKETS: usize = 64;
+
+/// Calendar-queue state. A "day" is `t / width`; each day maps to bucket
+/// `day & mask`. Buckets hold events of several wheel rotations at once,
+/// each kept sorted by `(t, seq)`, so the current day's events are always
+/// a prefix of their bucket.
+#[derive(Debug)]
+struct Calendar {
+    /// Bucket span in ps (≥ 1; from the host command-clock tick).
+    width: Ps,
+    buckets: Vec<VecDeque<Event>>,
+    /// `buckets.len() - 1`; bucket count is a power of two.
+    mask: u64,
+    /// Drain position: no stored event has a day below this.
+    cursor: u64,
+    /// Events currently in buckets (excludes the overflow heap).
+    in_buckets: usize,
+    /// Events at least one full wheel beyond the cursor at push time.
+    overflow: BinaryHeap<Event>,
+    resizes: u64,
+    overflow_pushes: u64,
+}
+
+impl Calendar {
+    fn new(width: Ps) -> Calendar {
+        Calendar {
+            width: width.max(1),
+            buckets: (0..INIT_BUCKETS).map(|_| VecDeque::new()).collect(),
+            mask: INIT_BUCKETS as u64 - 1,
+            cursor: 0,
+            in_buckets: 0,
+            overflow: BinaryHeap::new(),
+            resizes: 0,
+            overflow_pushes: 0,
+        }
+    }
+
+    #[inline]
+    fn day_of(&self, t: Ps) -> u64 {
+        t / self.width
+    }
+
+    #[inline]
+    fn horizon(&self) -> u64 {
+        self.cursor + self.buckets.len() as u64
+    }
+
+    fn push(&mut self, e: Event) {
+        let day = self.day_of(e.t);
+        if day < self.cursor {
+            // An event behind the drain point (the platform never does
+            // this, but pop order must stay globally `(t, seq)` for the
+            // differential oracle): move the cursor back. Bucket slots
+            // are a pure function of the day, so stored events keep
+            // their positions.
+            self.cursor = day;
+        }
+        if day >= self.horizon() {
+            self.overflow.push(e);
+            self.overflow_pushes += 1;
+            return;
+        }
+        self.insert_bucket(e, day);
+        self.in_buckets += 1;
+        if self.in_buckets > 2 * self.buckets.len() {
+            self.resize_to(self.buckets.len() * 2);
+        }
+    }
+
+    /// Sorted insert by `(t, seq)`; the common case appends at the back.
+    fn insert_bucket(&mut self, e: Event, day: u64) {
+        let q = &mut self.buckets[(day & self.mask) as usize];
+        let mut i = q.len();
+        while i > 0 {
+            let prev = &q[i - 1];
+            if (prev.t, prev.seq) <= (e.t, e.seq) {
+                break;
+            }
+            i -= 1;
+        }
+        q.insert(i, e);
+    }
+
+    /// Pull far-future events whose day is now within the wheel horizon
+    /// out of the overflow heap and into their buckets.
+    fn migrate_overflow(&mut self) {
+        loop {
+            let within = match self.overflow.peek() {
+                Some(top) => self.day_of(top.t) < self.horizon(),
+                None => false,
+            };
+            if !within {
+                break;
+            }
+            let e = self.overflow.pop().expect("peeked");
+            let day = self.day_of(e.t);
+            self.insert_bucket(e, day);
+            self.in_buckets += 1;
+            if self.in_buckets > 2 * self.buckets.len() {
+                self.resize_to(self.buckets.len() * 2);
+            }
+        }
+    }
+
+    fn pop(&mut self) -> Option<Event> {
+        if self.in_buckets == 0 && self.overflow.is_empty() {
+            return None;
+        }
+        loop {
+            self.migrate_overflow();
+            // Scan one wheel rotation from the cursor. A bucket's front
+            // is its minimum, so a front on the scanned day is the global
+            // minimum: earlier days were just checked empty, same-bucket
+            // events of later rotations sort behind it, and overflow
+            // events all lie at or beyond the horizon.
+            let nb = self.buckets.len() as u64;
+            for k in 0..nb {
+                let day = self.cursor + k;
+                let b = (day & self.mask) as usize;
+                if let Some(front) = self.buckets[b].front() {
+                    if self.day_of(front.t) == day {
+                        self.cursor = day;
+                        let e = self.buckets[b].pop_front();
+                        self.in_buckets -= 1;
+                        if self.buckets.len() > MIN_BUCKETS
+                            && self.in_buckets * 8 < self.buckets.len()
+                        {
+                            self.resize_to(self.buckets.len() / 2);
+                        }
+                        return e;
+                    }
+                }
+            }
+            // Nothing within one rotation: jump the cursor across the gap
+            // to the earliest remaining event (refresh-scale idle periods).
+            let bucket_min = self
+                .buckets
+                .iter()
+                .filter_map(|q| q.front())
+                .min_by_key(|e| (e.t, e.seq))
+                .map(|e| self.day_of(e.t));
+            let over_min = self.overflow.peek().map(|e| self.day_of(e.t));
+            self.cursor = match (bucket_min, over_min) {
+                (Some(a), Some(b)) => a.min(b),
+                (Some(a), None) => a,
+                (None, Some(b)) => b,
+                (None, None) => return None,
+            };
+        }
+    }
+
+    /// Rebuild the wheel at `new_nb` buckets (clamped to the floor and
+    /// rounded to a power of two). Events beyond the new horizon spill to
+    /// the overflow heap; in-window events redistribute in global sorted
+    /// order, which keeps every bucket individually sorted.
+    fn resize_to(&mut self, new_nb: usize) {
+        let new_nb = new_nb.max(MIN_BUCKETS).next_power_of_two();
+        if new_nb == self.buckets.len() {
+            return;
+        }
+        self.resizes += 1;
+        let mut all: Vec<Event> = Vec::with_capacity(self.in_buckets);
+        for q in self.buckets.iter_mut() {
+            all.extend(q.drain(..));
+        }
+        all.sort_unstable_by_key(|e| (e.t, e.seq));
+        self.buckets = (0..new_nb).map(|_| VecDeque::new()).collect();
+        self.mask = new_nb as u64 - 1;
+        self.in_buckets = 0;
+        let horizon = self.cursor + new_nb as u64;
+        for e in all {
+            let day = self.day_of(e.t);
+            if day >= horizon {
+                self.overflow.push(e);
+                self.overflow_pushes += 1;
+            } else {
+                self.buckets[(day & self.mask) as usize].push_back(e);
+                self.in_buckets += 1;
+            }
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Imp {
+    Heap(BinaryHeap<Event>),
+    Calendar(Calendar),
+}
+
+/// Min-queue of events with deterministic tie-breaking, over a selectable
+/// engine. Pops ascending `(t, seq)` regardless of the engine.
+#[derive(Debug)]
 pub struct EventQueue {
-    heap: BinaryHeap<Event>,
+    imp: Imp,
     next_seq: u64,
+    len: usize,
+    peak_len: usize,
     pub pushed: u64,
 }
 
+impl Default for EventQueue {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
 impl EventQueue {
+    /// Calendar engine at the default DDR3-1600 command-clock tick.
     pub fn new() -> EventQueue {
-        EventQueue { heap: BinaryHeap::with_capacity(1024), next_seq: 0, pushed: 0 }
+        EventQueue::with_kind(EngineKind::Calendar, CYCLE_800MHZ)
+    }
+
+    /// Build the selected engine; `tick` is the calendar bucket width in
+    /// ps (the host `TimingParams::t_ck`; ignored by the heap).
+    pub fn with_kind(kind: EngineKind, tick: Ps) -> EventQueue {
+        let imp = match kind {
+            EngineKind::Calendar => Imp::Calendar(Calendar::new(tick)),
+            EngineKind::ReferenceHeap => Imp::Heap(BinaryHeap::with_capacity(1024)),
+        };
+        EventQueue { imp, next_seq: 0, len: 0, peak_len: 0, pushed: 0 }
+    }
+
+    pub fn kind(&self) -> EngineKind {
+        match self.imp {
+            Imp::Heap(_) => EngineKind::ReferenceHeap,
+            Imp::Calendar(_) => EngineKind::Calendar,
+        }
     }
 
     pub fn push(&mut self, t: Ps, ev: Ev) {
-        self.heap.push(Event { t, seq: self.next_seq, ev });
+        let e = Event { t, seq: self.next_seq, ev };
         self.next_seq += 1;
         self.pushed += 1;
+        self.len += 1;
+        if self.len > self.peak_len {
+            self.peak_len = self.len;
+        }
+        match &mut self.imp {
+            Imp::Heap(h) => h.push(e),
+            Imp::Calendar(c) => c.push(e),
+        }
     }
 
     pub fn pop(&mut self) -> Option<Event> {
-        self.heap.pop()
+        let e = match &mut self.imp {
+            Imp::Heap(h) => h.pop(),
+            Imp::Calendar(c) => c.pop(),
+        };
+        if e.is_some() {
+            self.len -= 1;
+        }
+        e
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        let (resizes, overflow_pushes, buckets) = match &self.imp {
+            Imp::Heap(_) => (0, 0, 0),
+            Imp::Calendar(c) => (c.resizes, c.overflow_pushes, c.buckets.len() as u64),
+        };
+        EngineStats {
+            kind: self.kind(),
+            pushed: self.pushed,
+            peak_len: self.peak_len as u64,
+            resizes,
+            overflow_pushes,
+            buckets,
+        }
     }
 }
 
@@ -74,34 +382,106 @@ impl EventQueue {
 mod tests {
     use super::*;
 
+    fn both() -> [EventQueue; 2] {
+        [
+            EventQueue::with_kind(EngineKind::Calendar, CYCLE_800MHZ),
+            EventQueue::with_kind(EngineKind::ReferenceHeap, 0),
+        ]
+    }
+
     #[test]
     fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.push(30, Ev::CoreWake { core: 0 });
-        q.push(10, Ev::CoreWake { core: 1 });
-        q.push(20, Ev::CoreWake { core: 2 });
-        let order: Vec<Ps> = std::iter::from_fn(|| q.pop().map(|e| e.t)).collect();
-        assert_eq!(order, vec![10, 20, 30]);
+        for mut q in both() {
+            q.push(30, Ev::CoreWake { core: 0 });
+            q.push(10, Ev::CoreWake { core: 1 });
+            q.push(20, Ev::CoreWake { core: 2 });
+            let order: Vec<Ps> = std::iter::from_fn(|| q.pop().map(|e| e.t)).collect();
+            assert_eq!(order, vec![10, 20, 30], "{:?}", q.kind());
+        }
     }
 
     #[test]
     fn ties_break_by_insertion() {
-        let mut q = EventQueue::new();
-        q.push(5, Ev::CoreWake { core: 0 });
-        q.push(5, Ev::CoreWake { core: 1 });
-        let a = q.pop().unwrap();
-        let b = q.pop().unwrap();
-        assert_eq!(a.ev, Ev::CoreWake { core: 0 });
-        assert_eq!(b.ev, Ev::CoreWake { core: 1 });
+        for mut q in both() {
+            q.push(5, Ev::CoreWake { core: 0 });
+            q.push(5, Ev::CoreWake { core: 1 });
+            let a = q.pop().unwrap();
+            let b = q.pop().unwrap();
+            assert_eq!(a.ev, Ev::CoreWake { core: 0 }, "{:?}", q.kind());
+            assert_eq!(b.ev, Ev::CoreWake { core: 1 }, "{:?}", q.kind());
+        }
     }
 
     #[test]
     fn empty_and_len() {
-        let mut q = EventQueue::new();
-        assert!(q.is_empty());
-        q.push(1, Ev::Pump { group: 0 });
-        assert_eq!(q.len(), 1);
-        q.pop();
-        assert!(q.is_empty());
+        for mut q in both() {
+            assert!(q.is_empty());
+            q.push(1, Ev::Pump { group: 0 });
+            assert_eq!(q.len(), 1);
+            q.pop();
+            assert!(q.is_empty(), "{:?}", q.kind());
+        }
+    }
+
+    #[test]
+    fn far_future_events_overflow_and_return() {
+        let mut q = EventQueue::with_kind(EngineKind::Calendar, CYCLE_800MHZ);
+        // One wheel is INIT_BUCKETS * 1250 ps = 320 ns; a refresh-scale
+        // 7.8 us event must take the overflow path and still pop last.
+        q.push(7_800_000, Ev::Pump { group: 1 });
+        q.push(100, Ev::CoreWake { core: 0 });
+        q.push(200_000, Ev::CoreWake { core: 1 });
+        assert!(q.stats().overflow_pushes >= 1);
+        let order: Vec<Ps> = std::iter::from_fn(|| q.pop().map(|e| e.t)).collect();
+        assert_eq!(order, vec![100, 200_000, 7_800_000]);
+    }
+
+    #[test]
+    fn occupancy_watermark_grows_and_shrinks_buckets() {
+        let mut q = EventQueue::with_kind(EngineKind::Calendar, 1_000);
+        let n = 4 * INIT_BUCKETS as u64;
+        for i in 0..n {
+            // Dense same-window cluster: forces the high watermark.
+            q.push(i % 50_000, Ev::CoreWake { core: i as usize });
+        }
+        let grown = q.stats();
+        assert!(grown.buckets > INIT_BUCKETS as u64, "no growth: {grown:?}");
+        assert!(grown.resizes >= 1);
+        let mut last = 0;
+        let mut popped = 0u64;
+        while let Some(e) = q.pop() {
+            assert!(e.t >= last, "order violated: {} after {last}", e.t);
+            last = e.t;
+            popped += 1;
+        }
+        assert_eq!(popped, n);
+        let drained = q.stats();
+        assert_eq!(drained.buckets, MIN_BUCKETS as u64, "no shrink: {drained:?}");
+        assert_eq!(drained.peak_len, n);
+        assert_eq!(drained.pushed, n);
+    }
+
+    #[test]
+    fn past_push_after_pop_still_orders() {
+        // The heap oracle accepts pushes behind the last pop; the
+        // calendar must regress its cursor and agree.
+        for mut q in both() {
+            q.push(10_000_000, Ev::CoreWake { core: 0 });
+            let first = q.pop().unwrap();
+            assert_eq!(first.t, 10_000_000);
+            q.push(5_000, Ev::CoreWake { core: 1 });
+            q.push(20_000_000, Ev::CoreWake { core: 2 });
+            let order: Vec<Ps> = std::iter::from_fn(|| q.pop().map(|e| e.t)).collect();
+            assert_eq!(order, vec![5_000, 20_000_000], "{:?}", q.kind());
+        }
+    }
+
+    #[test]
+    fn engine_kind_names_round_trip() {
+        for kind in [EngineKind::Calendar, EngineKind::ReferenceHeap] {
+            assert_eq!(EngineKind::by_name(kind.name()), Some(kind));
+        }
+        assert_eq!(EngineKind::by_name("ref-heap"), Some(EngineKind::ReferenceHeap));
+        assert!(EngineKind::by_name("bogus").is_none());
     }
 }

@@ -9,6 +9,7 @@ pub mod engine;
 pub mod platform;
 pub mod report;
 
+pub use engine::EngineKind;
 pub use platform::Platform;
 pub use report::SimReport;
 

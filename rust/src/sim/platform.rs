@@ -430,7 +430,7 @@ impl Platform {
             })
             .collect();
 
-        let mut events = EventQueue::new();
+        let mut events = EventQueue::with_kind(cfg.engine, cfg.host_timing.t_ck);
         for i in 0..hw_threads {
             events.push(0, Ev::CoreWake { core: i });
         }
@@ -761,6 +761,10 @@ impl Platform {
 
     pub(crate) fn now(&self) -> Ps {
         self.now
+    }
+
+    pub(crate) fn engine_stats(&self) -> super::engine::EngineStats {
+        self.events.stats()
     }
 
     pub(crate) fn mec_refs(&self) -> &[Mec1] {

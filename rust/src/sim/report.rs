@@ -45,6 +45,15 @@ pub struct SimReport {
     pub lvc_evictions: u64,
     pub pcie_faults: u64,
     pub deadlocked: bool,
+    // Event-engine occupancy/housekeeping (engine-agnostic fields like
+    // `engine_events`/`engine_peak` must match across engines; resize and
+    // overflow counters are calendar-specific diagnostics).
+    pub engine: &'static str,
+    pub engine_events: u64,
+    pub engine_peak: u64,
+    pub engine_resizes: u64,
+    pub engine_overflow: u64,
+    pub engine_buckets: u64,
 }
 
 impl SimReport {
@@ -66,6 +75,7 @@ impl SimReport {
             transform.micro_insts += t.micro_insts;
             transform.fences += t.fences;
         }
+        let engine = p.engine_stats();
         let (mut mec_first_loads, mut mec_second_real, mut mec_second_late, mut lvc_evictions) =
             (0, 0, 0, 0);
         for m in p.mec_refs() {
@@ -106,6 +116,12 @@ impl SimReport {
             lvc_evictions,
             pcie_faults: p.pcie_ref().map(|s| s.faults).unwrap_or(0),
             deadlocked: p.deadlocked,
+            engine: engine.kind.name(),
+            engine_events: engine.pushed,
+            engine_peak: engine.peak_len,
+            engine_resizes: engine.resizes,
+            engine_overflow: engine.overflow_pushes,
+            engine_buckets: engine.buckets,
         }
     }
 

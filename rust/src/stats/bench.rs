@@ -1,0 +1,550 @@
+//! `BENCH_*.json` model and the CI perf-regression gate.
+//!
+//! `benches/hotpath.rs` emits a small hand-rolled JSON document (the
+//! vendored registry carries no serde); this module parses that subset,
+//! models the rows, and implements the gate the `perf_gate` binary and
+//! the `make perf-gate` / CI step run: compare a fresh
+//! `BENCH_hotpath.json` against the checked-in `BENCH_baseline.json`
+//! and fail on large throughput regressions.
+//!
+//! Two rule families:
+//!
+//! * **Baseline rule** — per matching row, fail when median throughput
+//!   drops more than [`MAX_REGRESSION`] below the baseline. A baseline
+//!   marked `"provisional": true` (placeholder numbers, not yet measured
+//!   on the CI runner class) only fails on catastrophic (>
+//!   [`PROVISIONAL_FACTOR`]×) slowdowns and downgrades the rest to
+//!   warnings.
+//! * **Pair rule** — machine-independent: an optimized engine/policy row
+//!   (`… [calendar]`, `… [bank-indexed]`) must not run slower than its
+//!   retained reference row (`… [ref-heap]`, `… [ref-scan]`) measured in
+//!   the same process, beyond a small [`PAIR_TOLERANCE`] noise band.
+//!   This holds even while the baseline is provisional.
+
+/// Hard-fail threshold for the baseline rule: >25 % median regression.
+pub const MAX_REGRESSION: f64 = 0.25;
+/// Provisional baselines only catch catastrophic (>4×) slowdowns.
+pub const PROVISIONAL_FACTOR: f64 = 4.0;
+/// Pair rule hard floor: the optimized row must reach at least 85 % of
+/// its reference row's throughput (CI-runner noise band on top of the
+/// "no slower" target; anything between the floor and parity is
+/// reported as a warning, not a failure).
+pub const PAIR_TOLERANCE: f64 = 0.85;
+
+/// (reference suffix, optimized suffix) row-name pairs the pair rule
+/// checks within one run.
+const ENGINE_PAIRS: &[(&str, &str)] =
+    &[(" [ref-heap]", " [calendar]"), (" [ref-scan]", " [bank-indexed]")];
+
+// ---------------------------------------------------------------------
+// Minimal JSON (subset) parser.
+// ---------------------------------------------------------------------
+
+/// Parsed JSON value (subset: no number niceties beyond f64).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser { s: text.as_bytes(), i: 0 };
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.s.len() {
+            return Err(format!("trailing data at byte {}", p.i));
+        }
+        Ok(v)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.i).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", b as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(format!("unexpected input at byte {}", self.i)),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.s[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.s[start..self.i]).map_err(|e| e.to_string())?;
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number '{text}' at byte {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        // Accumulate bytes so multi-byte UTF-8 runs pass through intact.
+        let mut out: Vec<u8> = Vec::new();
+        let mut buf = [0u8; 4];
+        loop {
+            let Some(c) = self.peek() else {
+                return Err("unterminated string".into());
+            };
+            self.i += 1;
+            match c {
+                b'"' => {
+                    return String::from_utf8(out).map_err(|_| "invalid UTF-8 in string".into())
+                }
+                b'\\' => {
+                    let Some(esc) = self.peek() else {
+                        return Err("unterminated escape".into());
+                    };
+                    self.i += 1;
+                    let ch = match esc {
+                        b'"' => '"',
+                        b'\\' => '\\',
+                        b'/' => '/',
+                        b'n' => '\n',
+                        b't' => '\t',
+                        b'r' => '\r',
+                        b'b' => '\u{8}',
+                        b'f' => '\u{c}',
+                        b'u' => {
+                            if self.i + 4 > self.s.len() {
+                                return Err("truncated \\u escape".into());
+                            }
+                            let hex = std::str::from_utf8(&self.s[self.i..self.i + 4])
+                                .map_err(|e| e.to_string())?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| format!("bad \\u escape '{hex}'"))?;
+                            self.i += 4;
+                            char::from_u32(code).unwrap_or('\u{fffd}')
+                        }
+                        other => return Err(format!("bad escape '\\{}'", other as char)),
+                    };
+                    out.extend_from_slice(ch.encode_utf8(&mut buf).as_bytes());
+                }
+                _ => out.push(c),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut kv = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(kv));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let v = self.value()?;
+            kv.push((k, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(kv));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bench-report model.
+// ---------------------------------------------------------------------
+
+/// One benchmark row (median across the run's trials).
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    pub name: String,
+    pub seconds: f64,
+    pub units: f64,
+    pub unit: String,
+    pub units_per_s: f64,
+    pub trials: u32,
+}
+
+/// A parsed `BENCH_*.json` document.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub bench: String,
+    /// Placeholder baseline not yet measured on the CI runner class:
+    /// the baseline rule downgrades to catastrophic-only.
+    pub provisional: bool,
+    pub rows: Vec<BenchRow>,
+}
+
+impl BenchReport {
+    pub fn parse(text: &str) -> Result<BenchReport, String> {
+        let root = Json::parse(text)?;
+        let bench = root.get("bench").and_then(Json::as_str).unwrap_or("").to_string();
+        let provisional = root.get("provisional").and_then(Json::as_bool).unwrap_or(false);
+        let Some(Json::Arr(raw_rows)) = root.get("rows") else {
+            return Err("missing 'rows' array".into());
+        };
+        let mut rows = Vec::with_capacity(raw_rows.len());
+        for (i, r) in raw_rows.iter().enumerate() {
+            let name = r
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("row {i}: missing 'name'"))?
+                .to_string();
+            let seconds = r.get("seconds").and_then(Json::as_f64).unwrap_or(0.0);
+            let units = r.get("units").and_then(Json::as_f64).unwrap_or(0.0);
+            let unit = r.get("unit").and_then(Json::as_str).unwrap_or("").to_string();
+            let units_per_s = match r.get("units_per_s").and_then(Json::as_f64) {
+                Some(v) => v,
+                None if seconds > 0.0 => units / seconds,
+                None => 0.0,
+            };
+            let trials = r.get("trials").and_then(Json::as_f64).unwrap_or(1.0) as u32;
+            rows.push(BenchRow { name, seconds, units, unit, units_per_s, trials });
+        }
+        Ok(BenchReport { bench, provisional, rows })
+    }
+
+    pub fn row(&self, name: &str) -> Option<&BenchRow> {
+        self.rows.iter().find(|r| r.name == name)
+    }
+}
+
+// ---------------------------------------------------------------------
+// The gate.
+// ---------------------------------------------------------------------
+
+/// Outcome of one gate evaluation.
+#[derive(Debug, Default)]
+pub struct GateReport {
+    /// Per-row comparison lines (informational).
+    pub lines: Vec<String>,
+    /// Non-fatal notes (missing rows, provisional downgrades).
+    pub warnings: Vec<String>,
+    /// Hard failures; non-empty means the CI step must fail.
+    pub failures: Vec<String>,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Compare a fresh bench run against the checked-in baseline.
+pub fn perf_gate(current: &BenchReport, baseline: &BenchReport) -> GateReport {
+    let mut g = GateReport::default();
+
+    // Baseline rule: per-row median throughput vs the baseline.
+    for base in &baseline.rows {
+        let Some(cur) = current.row(&base.name) else {
+            g.warnings.push(format!("baseline row '{}' missing from current run", base.name));
+            continue;
+        };
+        if base.units_per_s <= 0.0 {
+            g.warnings.push(format!("baseline row '{}' has no throughput; skipped", base.name));
+            continue;
+        }
+        let ratio = cur.units_per_s / base.units_per_s;
+        g.lines.push(format!(
+            "{:<40} baseline {:>14.0}/s   current {:>14.0}/s   ({:+.1} %)",
+            base.name,
+            base.units_per_s,
+            cur.units_per_s,
+            (ratio - 1.0) * 100.0
+        ));
+        if ratio < 1.0 - MAX_REGRESSION {
+            let msg = format!(
+                "'{}' regressed {:.0} % vs baseline ({:.0}/s -> {:.0}/s)",
+                base.name,
+                (1.0 - ratio) * 100.0,
+                base.units_per_s,
+                cur.units_per_s
+            );
+            if !baseline.provisional {
+                g.failures.push(msg);
+            } else if ratio < 1.0 / PROVISIONAL_FACTOR {
+                g.failures.push(format!("{msg} [catastrophic; provisional baseline]"));
+            } else {
+                g.warnings.push(format!("{msg} [provisional baseline: warning only]"));
+            }
+        }
+    }
+    for cur in &current.rows {
+        if baseline.row(&cur.name).is_none() {
+            g.warnings.push(format!("no baseline for new row '{}'", cur.name));
+        }
+    }
+
+    // Pair rule: optimized engines/policies must keep up with their
+    // retained reference implementations measured in the same run.
+    for reference in &current.rows {
+        for (ref_sfx, fast_sfx) in ENGINE_PAIRS {
+            let Some(stem) = reference.name.strip_suffix(ref_sfx) else {
+                continue;
+            };
+            let partner = format!("{stem}{fast_sfx}");
+            let Some(fast) = current.row(&partner) else {
+                g.warnings.push(format!(
+                    "'{}' has no optimized partner row '{partner}'",
+                    reference.name
+                ));
+                continue;
+            };
+            if reference.units_per_s <= 0.0 {
+                continue;
+            }
+            let speedup = fast.units_per_s / reference.units_per_s;
+            g.lines.push(format!(
+                "{partner:<40} {speedup:>6.2}x its reference implementation"
+            ));
+            if speedup < PAIR_TOLERANCE {
+                g.failures.push(format!(
+                    "'{partner}' slower than its reference '{}': {:.0}/s vs {:.0}/s ({:.2}x)",
+                    reference.name, fast.units_per_s, reference.units_per_s, speedup
+                ));
+            } else if speedup < 1.0 {
+                g.warnings.push(format!(
+                    "'{partner}' within the noise floor of its reference ({speedup:.2}x)"
+                ));
+            }
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(rows: &[(&str, f64)], provisional: bool) -> BenchReport {
+        BenchReport {
+            bench: "hotpath".into(),
+            provisional,
+            rows: rows
+                .iter()
+                .map(|&(name, rate)| BenchRow {
+                    name: name.into(),
+                    seconds: 1.0,
+                    units: rate,
+                    unit: "op".into(),
+                    units_per_s: rate,
+                    trials: 3,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn parses_the_emitted_format() {
+        let text = r#"{
+  "bench": "hotpath",
+  "provisional": true,
+  "rows": [
+    {"name": "sim tl-ooo/gups [calendar]", "seconds": 0.5, "units": 1000,
+     "unit": "logical-op", "units_per_s": 2000.0, "trials": 3},
+    {"name": "quote \" backslash \\", "seconds": 2, "units": 10, "unit": "op"}
+  ]
+}
+"#;
+        let r = BenchReport::parse(text).unwrap();
+        assert_eq!(r.bench, "hotpath");
+        assert!(r.provisional);
+        assert_eq!(r.rows.len(), 2);
+        let row = r.row("sim tl-ooo/gups [calendar]").unwrap();
+        assert_eq!(row.units_per_s, 2000.0);
+        assert_eq!(row.trials, 3);
+        // units_per_s derived when absent; default trials = 1.
+        let q = &r.rows[1];
+        assert_eq!(q.name, "quote \" backslash \\");
+        assert_eq!(q.units_per_s, 5.0);
+        assert_eq!(q.trials, 1);
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        assert!(BenchReport::parse("{").is_err());
+        assert!(BenchReport::parse("{\"bench\": \"x\"}").is_err()); // no rows
+        assert!(BenchReport::parse("{\"rows\": [{\"seconds\": 1}]}").is_err()); // no name
+        assert!(Json::parse("[1, 2,]").is_err());
+        assert!(Json::parse("{\"a\": 1} trailing").is_err());
+    }
+
+    #[test]
+    fn flat_run_passes() {
+        let base = report(&[("a", 100.0), ("b", 200.0)], false);
+        let cur = report(&[("a", 101.0), ("b", 190.0)], false);
+        let g = perf_gate(&cur, &base);
+        assert!(g.passed(), "{:?}", g.failures);
+        assert_eq!(g.lines.len(), 2);
+    }
+
+    #[test]
+    fn small_regression_within_threshold_passes() {
+        let base = report(&[("a", 100.0)], false);
+        let cur = report(&[("a", 80.0)], false); // -20 % < 25 %
+        assert!(perf_gate(&cur, &base).passed());
+    }
+
+    #[test]
+    fn large_regression_fails_the_gate() {
+        let base = report(&[("a", 100.0), ("b", 100.0)], false);
+        let cur = report(&[("a", 70.0), ("b", 100.0)], false); // -30 %
+        let g = perf_gate(&cur, &base);
+        assert!(!g.passed());
+        assert_eq!(g.failures.len(), 1);
+        assert!(g.failures[0].contains("'a'"), "{}", g.failures[0]);
+    }
+
+    #[test]
+    fn provisional_baseline_downgrades_to_warning() {
+        let base = report(&[("a", 100.0)], true);
+        let cur = report(&[("a", 50.0)], false); // -50 %: warn, don't fail
+        let g = perf_gate(&cur, &base);
+        assert!(g.passed(), "{:?}", g.failures);
+        assert_eq!(g.warnings.len(), 1);
+        assert!(g.warnings[0].contains("provisional"));
+    }
+
+    #[test]
+    fn provisional_baseline_still_catches_catastrophic_slowdowns() {
+        let base = report(&[("a", 100.0)], true);
+        let cur = report(&[("a", 20.0)], false); // 5x below
+        let g = perf_gate(&cur, &base);
+        assert!(!g.passed());
+        assert!(g.failures[0].contains("catastrophic"));
+    }
+
+    #[test]
+    fn pair_rule_fails_when_optimized_engine_lags_reference() {
+        let rows = report(
+            &[("event engine [calendar]", 50.0), ("event engine [ref-heap]", 100.0)],
+            false,
+        );
+        let g = perf_gate(&rows, &rows); // baseline == current: no regressions
+        assert!(!g.passed());
+        assert!(g.failures[0].contains("event engine [calendar]"), "{}", g.failures[0]);
+    }
+
+    #[test]
+    fn pair_rule_passes_when_optimized_engine_keeps_up() {
+        for policy_pair in [
+            [("event engine [calendar]", 300.0), ("event engine [ref-heap]", 100.0)],
+            [("dram controller [bank-indexed]", 95.0), ("dram controller [ref-scan]", 100.0)],
+        ] {
+            let rows = report(&policy_pair, false);
+            let g = perf_gate(&rows, &rows);
+            assert!(g.passed(), "{:?}", g.failures);
+        }
+    }
+
+    #[test]
+    fn missing_rows_warn_but_do_not_fail() {
+        let base = report(&[("gone", 100.0)], false);
+        let cur = report(&[("new", 100.0)], false);
+        let g = perf_gate(&cur, &base);
+        assert!(g.passed());
+        assert_eq!(g.warnings.len(), 2);
+    }
+}

@@ -1,6 +1,7 @@
 //! Simulation statistics: counters, histograms, time-weighted averages,
 //! and the table / CSV renderers used by the figure-reproduction benches.
 
+pub mod bench;
 pub mod hist;
 pub mod table;
 

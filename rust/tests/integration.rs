@@ -155,6 +155,61 @@ fn static_tables_are_paper_faithful() {
     assert!(t5.contains("3963") || t5.contains("3962") || t5.contains("3964"));
 }
 
+/// The calendar event engine is observationally identical to the
+/// reference heap: every mechanism must produce an identical SimReport
+/// under both engines (engine-diagnostic counters excluded — resize and
+/// overflow counts are calendar-specific by construction).
+#[test]
+fn event_engines_equivalent_across_all_mechanisms() {
+    use twinload::sim::EngineKind;
+    let systems = [
+        SystemConfig::ideal(),
+        SystemConfig::tl_ooo(),
+        SystemConfig::tl_lf(),
+        SystemConfig::tl_lf_batched(8),
+        SystemConfig::numa(),
+        SystemConfig::pcie(0.5),
+        SystemConfig::increased_trl(35 * NS),
+    ];
+    for base in systems {
+        let mut cal = base.clone();
+        cal.engine = EngineKind::Calendar;
+        let mut heap = base;
+        heap.engine = EngineKind::ReferenceHeap;
+        let a = run(&cal, WorkloadKind::Gups, 4_000);
+        let b = run(&heap, WorkloadKind::Gups, 4_000);
+        let core = |r: &SimReport| {
+            (r.finish, r.retired_insts, r.retired_ops, r.loads, r.stores, r.fences, r.twin_retries)
+        };
+        let memory = |r: &SimReport| {
+            (r.llc_hits, r.llc_misses, r.tlb_misses, r.dram_reads, r.dram_writes, r.mlp_peak)
+        };
+        let mech = |r: &SimReport| {
+            (r.mec_first_loads, r.mec_second_real, r.mec_second_late, r.pcie_faults, r.cas_fails)
+        };
+        assert_eq!(core(&a), core(&b), "{}: core stats diverged", a.mechanism);
+        assert_eq!(memory(&a), memory(&b), "{}: memory stats diverged", a.mechanism);
+        assert_eq!(mech(&a), mech(&b), "{}: mechanism stats diverged", a.mechanism);
+        assert_eq!(
+            a.row_hit_rate.to_bits(),
+            b.row_hit_rate.to_bits(),
+            "{}: row-hit rate diverged",
+            a.mechanism
+        );
+        assert_eq!(
+            a.mlp_mean.to_bits(),
+            b.mlp_mean.to_bits(),
+            "{}: MLP diverged",
+            a.mechanism
+        );
+        // Every event pushed under one engine is pushed under the other.
+        assert_eq!(a.engine_events, b.engine_events, "{}: event count diverged", a.mechanism);
+        assert_eq!(a.engine_peak, b.engine_peak, "{}: occupancy diverged", a.mechanism);
+        assert_eq!(a.engine, "calendar");
+        assert_eq!(b.engine, "reference-heap");
+    }
+}
+
 /// Determinism across the parallel runner with mixed job kinds.
 #[test]
 fn parallel_repro_is_deterministic() {

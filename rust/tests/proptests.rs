@@ -213,6 +213,82 @@ fn prop_bank_indexed_scheduler_matches_reference_scan() {
 }
 
 #[test]
+fn prop_calendar_engine_matches_reference_heap() {
+    // Differential oracle for the simulator's event queue: the calendar
+    // (bucket) engine must pop the exact same stream — timestamps,
+    // payloads, and same-tick tie-breaks — as the retained binary-heap
+    // engine, under clustered short-horizon pushes, same-tick ties,
+    // far-future refresh-scale events, occasional pushes behind the
+    // drain point, and interleaved push/pop.
+    use twinload::sim::engine::{EngineKind, Ev, EventQueue};
+    check("engine-equivalence", cfg(), |rng| {
+        // Vary the bucket width across cases: 1 ps (degenerate), odd,
+        // the DDR3 tick, and coarse enough that many distinct
+        // timestamps share a bucket.
+        let tick = [1u64, 617, 1_250, 20_000][rng.below(4) as usize];
+        let mut cal = EventQueue::with_kind(EngineKind::Calendar, tick);
+        let mut heap = EventQueue::with_kind(EngineKind::ReferenceHeap, tick);
+        let mut now: u64 = 0;
+        let ops = 200 + rng.below(600);
+        for _ in 0..ops {
+            if rng.chance(0.55) || cal.is_empty() {
+                for _ in 0..1 + rng.below(8) {
+                    let t = if rng.chance(0.05) {
+                        // Far-future refresh-style event (overflow path).
+                        now + 7_800_000 + rng.below(1_000_000)
+                    } else if rng.chance(0.1) {
+                        // Behind the drain point (cursor regression).
+                        now.saturating_sub(rng.below(50_000))
+                    } else if rng.chance(0.35) {
+                        // Same-tick ties.
+                        now + rng.below(3)
+                    } else {
+                        // Clustered short horizon.
+                        now + rng.below(30_000)
+                    };
+                    let ev = match rng.below(3) {
+                        0 => Ev::CoreWake { core: rng.below(8) as usize },
+                        1 => Ev::Pump { group: rng.below(4) as usize },
+                        _ => Ev::Deliver {
+                            core: rng.below(8) as usize,
+                            line: rng.below(1 << 20) * 64,
+                            data: DataKind::Real,
+                        },
+                    };
+                    cal.push(t, ev);
+                    heap.push(t, ev);
+                }
+            } else {
+                let (a, b) = (cal.pop(), heap.pop());
+                if a != b {
+                    return Err(format!("pop diverged: {a:?} vs {b:?}"));
+                }
+                if let Some(e) = a {
+                    now = now.max(e.t);
+                }
+            }
+            if cal.len() != heap.len() {
+                return Err(format!("len diverged: {} vs {}", cal.len(), heap.len()));
+            }
+        }
+        // Drain both to empty; the full residual streams must agree.
+        loop {
+            let (a, b) = (cal.pop(), heap.pop());
+            if a != b {
+                return Err(format!("drain diverged: {a:?} vs {b:?}"));
+            }
+            if a.is_none() {
+                break;
+            }
+        }
+        if !cal.is_empty() || !heap.is_empty() {
+            return Err("queues did not drain".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_cache_accounting_is_consistent() {
     check("cache-accounting", cfg(), |rng| {
         let mut c = SetAssocCache::new(CacheConfig {
