@@ -1,6 +1,6 @@
 # Twin-Load reproduction — build / test / perf entry points.
 
-.PHONY: build test fmt clippy perf smoke perf-gate baseline artifacts clean
+.PHONY: build test fmt clippy perf smoke perf-gate baseline golden-update artifacts clean
 
 build:
 	cargo build --release
@@ -35,6 +35,11 @@ perf-gate:
 baseline:
 	TWINLOAD_BENCH_QUICK=1 cargo bench --bench hotpath
 	cp BENCH_hotpath.json BENCH_baseline.json
+
+# Regenerate the golden SimReport snapshot corpus (rust/tests/golden.snap)
+# after an *intentional* end-to-end behaviour change; commit the result.
+golden-update:
+	TWINLOAD_GOLDEN_UPDATE=1 cargo test --test golden -- --nocapture
 
 # PJRT fast-path artifacts. Producing the real AOT-compiled artifacts
 # requires the python/compile JAX/Pallas toolchain (see python/compile/aot.py);

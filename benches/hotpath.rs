@@ -4,9 +4,10 @@
 //! classification rate.
 //!
 //! Every optimized engine/policy is benched next to its retained
-//! reference implementation (`… [calendar]` vs `… [ref-heap]`,
-//! `… [bank-indexed]` vs `… [ref-scan]`), so the before/after ratio is
-//! read directly off one run and the CI perf gate can enforce it.
+//! reference implementation (`… [calendar]` / `… [adaptive]` vs
+//! `… [ref-heap]`, `… [bank-indexed]` / `… [rank-inval]` vs
+//! `… [ref-scan]`), so the before/after ratio is read directly off one
+//! run and the CI perf gate can enforce it.
 //!
 //! Emits a human table on stdout and a machine-readable
 //! `BENCH_hotpath.json` at the repo root so the perf trajectory can be
@@ -193,32 +194,42 @@ fn main() {
     let mut rows: Vec<Row> = Vec::new();
 
     let n_ctrl = 2_000_000u64 / scale;
-    timeit(&mut rows, "dram controller [bank-indexed]", n_ctrl as f64, "txn", trials, || {
-        bench_controller(n_ctrl, SchedPolicy::BankIndexed)
-    });
-    timeit(&mut rows, "dram controller [ref-scan]", n_ctrl as f64, "txn", trials, || {
-        bench_controller(n_ctrl, SchedPolicy::ReferenceScan)
-    });
+    for (tag, policy) in [
+        ("bank-indexed", SchedPolicy::BankIndexed),
+        ("rank-inval", SchedPolicy::RankInval),
+        ("ref-scan", SchedPolicy::ReferenceScan),
+    ] {
+        let name = format!("dram controller [{tag}]");
+        timeit(&mut rows, &name, n_ctrl as f64, "txn", trials, || {
+            bench_controller(n_ctrl, policy)
+        });
+    }
 
     let n_evq = 10_000_000u64 / scale;
-    timeit(&mut rows, "event engine [calendar]", n_evq as f64, "event", trials, || {
-        bench_engine(n_evq, EngineKind::Calendar)
-    });
-    timeit(&mut rows, "event engine [ref-heap]", n_evq as f64, "event", trials, || {
-        bench_engine(n_evq, EngineKind::ReferenceHeap)
-    });
+    for (tag, kind) in [
+        ("calendar", EngineKind::Calendar),
+        ("adaptive", EngineKind::AdaptiveCalendar),
+        ("ref-heap", EngineKind::ReferenceHeap),
+    ] {
+        let name = format!("event engine [{tag}]");
+        timeit(&mut rows, &name, n_evq as f64, "event", trials, || {
+            bench_engine(n_evq, kind)
+        });
+    }
 
     let n_cache = 20_000_000u64 / scale;
     timeit(&mut rows, "LLC access+fill (random)", n_cache as f64, "op", trials, || {
         bench_cache(n_cache)
     });
 
-    // End-to-end simulator throughput, both event engines per workload so
-    // the pair rule reads the win off the same run.
+    // End-to-end simulator throughput, all three event engines per
+    // workload so the pair rule reads the win off the same run.
     let ops = 200_000u64 / scale;
-    for (engine_tag, engine) in
-        [(" [calendar]", EngineKind::Calendar), (" [ref-heap]", EngineKind::ReferenceHeap)]
-    {
+    for (engine_tag, engine) in [
+        (" [calendar]", EngineKind::Calendar),
+        (" [adaptive]", EngineKind::AdaptiveCalendar),
+        (" [ref-heap]", EngineKind::ReferenceHeap),
+    ] {
         for (name, wl, cfg) in [
             ("sim ideal/gups", WorkloadKind::Gups, SystemConfig::ideal()),
             ("sim tl-ooo/gups", WorkloadKind::Gups, SystemConfig::tl_ooo()),

@@ -6,6 +6,7 @@ pub mod parser;
 use crate::cache::CacheConfig;
 use crate::cpu::CoreParams;
 use crate::dram::timing::{Geometry, TimingParams, QPI_EXTRA_NS};
+use crate::dram::SchedPolicy;
 use crate::mec::MecConfig;
 use crate::memmgr::MemLayout;
 use crate::sim::engine::EngineKind;
@@ -44,9 +45,15 @@ pub struct SystemConfig {
     /// Increased-tRL system: extra read latency.
     pub trl_extra: Ps,
     /// Event-queue engine for the platform simulator (calendar queue by
-    /// default; the reference binary heap is retained for differential
-    /// testing and benchmarking).
+    /// default; the adaptive calendar resamples its bucket width from
+    /// observed event spacing; the reference binary heap is retained for
+    /// differential testing and benchmarking).
     pub engine: EngineKind,
+    /// FR-FCFS scheduler implementation for every memory controller
+    /// (bank-indexed with bank-granular invalidation by default; the
+    /// rank-granular and full-scan variants are retained for
+    /// differential testing and benchmarking).
+    pub sched: SchedPolicy,
     /// Content model for the TL extended channel. `true` (default)
     /// reproduces the paper's emulation (§5): extended-space lines carry
     /// real values and shadow-space lines fake ones, unconditionally —
@@ -86,6 +93,7 @@ impl SystemConfig {
             pcie_local_frac: 0.75,
             trl_extra: 0,
             engine: EngineKind::Calendar,
+            sched: SchedPolicy::BankIndexed,
             emulate_content: true,
             l1_lat: 1_600,      // 4 cycles @ 2.5 GHz
             llc_lat: 14 * NS,   // ~35 cycles

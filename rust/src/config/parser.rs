@@ -113,6 +113,10 @@ pub fn apply(
                     cfg.engine = crate::sim::engine::EngineKind::by_name(v)
                         .ok_or_else(|| format!("unknown engine '{v}'"))?
                 }
+                "sched" => {
+                    cfg.sched = crate::dram::SchedPolicy::by_name(v)
+                        .ok_or_else(|| format!("unknown sched policy '{v}'"))?
+                }
                 other => return Err(format!("unknown [system] key '{other}'")),
             }
         }
@@ -184,6 +188,18 @@ mod tests {
         apply(&ini, &mut cfg, &mut spec).unwrap();
         assert_eq!(cfg.engine, EngineKind::ReferenceHeap);
         let bad = Ini::parse("[system]\nengine = bogus\n").unwrap();
+        assert!(apply(&bad, &mut cfg, &mut spec).is_err());
+    }
+
+    #[test]
+    fn sched_key_selects_scheduler_policy() {
+        use crate::dram::SchedPolicy;
+        let ini = Ini::parse("[system]\nsched = reference-scan\n").unwrap();
+        let mut cfg = SystemConfig::ideal();
+        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+        apply(&ini, &mut cfg, &mut spec).unwrap();
+        assert_eq!(cfg.sched, SchedPolicy::ReferenceScan);
+        let bad = Ini::parse("[system]\nsched = bogus\n").unwrap();
         assert!(apply(&bad, &mut cfg, &mut spec).is_err());
     }
 

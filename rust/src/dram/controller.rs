@@ -17,13 +17,23 @@
 //! same column-ready time and every miss shares the same PRE/ACT-ready
 //! time (bank and rank constraints are uniform across the bank's queue).
 //! Servicing a transaction perturbs only its own rank's state (bank
-//! timings, tRRD/tFAW window, read/write turnaround), so only that rank's
-//! cached summaries are invalidated; the data-bus claim is channel-global
-//! but does not enter first-command readiness. The result is an exact
-//! replacement for the full-queue scan: same pick, same timestamps,
-//! bit-identical [`ServiceResult`]s. The original full scan is retained as
-//! [`SchedPolicy::ReferenceScan`] and cross-checked by a differential
-//! property test (`rust/tests/proptests.rs`).
+//! timings, tRRD/tFAW window, read/write turnaround); the data-bus claim
+//! is channel-global but does not enter first-command readiness.
+//!
+//! ## Invalidation granularity
+//!
+//! A cached summary only goes stale when a value it folded actually
+//! moved. Rank-level changes are monotone `max` floors (turnaround,
+//! tRRD/tFAW ACT bound), so a serviced command moves another bank's
+//! summary **iff** the new floor exceeds the cached ready time — and the
+//! bank-granular default ([`SchedPolicy::BankIndexed`]) invalidates
+//! exactly those banks plus the serviced bank itself. The PR-1
+//! whole-rank invalidation is retained as [`SchedPolicy::RankInval`]
+//! (the intermediate differential stage) and the original full scan as
+//! [`SchedPolicy::ReferenceScan`] (the oracle); all three are proven to
+//! produce the same pick, same timestamps, bit-identical
+//! [`ServiceResult`]s by differential property tests
+//! (`rust/tests/proptests.rs`).
 
 use super::address::DecodedAddr;
 use super::channel::Channel;
@@ -75,11 +85,35 @@ pub struct CtrlStats {
 /// Which FR-FCFS pick implementation a controller runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SchedPolicy {
-    /// Per-bank queues with cached ready-time summaries (the default).
+    /// Per-bank queues with cached ready-time summaries and
+    /// bank-granular invalidation (the default): a serviced command
+    /// invalidates only the banks whose cached ready times it moved.
     BankIndexed,
+    /// Bank-indexed scheduling with the PR-1 rank-granular
+    /// invalidation, retained as the intermediate differential stage.
+    RankInval,
     /// The original O(queue) full scan, retained as the oracle for
     /// differential testing. Identical pick order and timestamps.
     ReferenceScan,
+}
+
+impl SchedPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedPolicy::BankIndexed => "bank-indexed",
+            SchedPolicy::RankInval => "rank-inval",
+            SchedPolicy::ReferenceScan => "reference-scan",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<SchedPolicy> {
+        match name {
+            "bank-indexed" | "bank" => Some(SchedPolicy::BankIndexed),
+            "rank-inval" | "rank" => Some(SchedPolicy::RankInval),
+            "reference-scan" | "ref-scan" | "scan" => Some(SchedPolicy::ReferenceScan),
+            _ => None,
+        }
+    }
 }
 
 /// Cached scheduling summary for one bank's queue (one per direction).
@@ -194,6 +228,50 @@ impl MemController {
         }
     }
 
+    /// Bank-granular invalidation: after servicing a transaction on
+    /// `serviced_fb`, drop only the summaries whose cached ready times
+    /// actually moved. Rank-level state advances as monotone `max`
+    /// floors, so for any *other* bank of the rank:
+    ///
+    /// * hits fold the rank turnaround into `col_ready`: the summary
+    ///   moved iff the new turnaround floor exceeds the cached value;
+    /// * misses on a *closed* bank fold the tRRD/tFAW ACT bound into
+    ///   `miss_ready`: moved iff the new bound exceeds the cached value;
+    /// * misses on an *open* bank wait on that bank's own PRE time,
+    ///   which no other bank's commands can move.
+    ///
+    /// The serviced bank itself changed its queue, open row, and every
+    /// timing field, so both its summaries always drop. Other ranks are
+    /// untouched (the data-bus claim is channel-global but does not
+    /// enter first-command readiness).
+    fn invalidate_moved(&mut self, rank_i: u32, serviced_fb: usize) {
+        let bpr = self.geo.banks_per_rank as usize;
+        let base = rank_i as usize * bpr;
+        let rank = &self.channel.ranks[rank_i as usize];
+        let rd_turn = rank.rd_turn();
+        let wr_turn = rank.wr_turn();
+        let act_bound = rank.act_bound(&self.p);
+        for b in 0..bpr {
+            let fb = base + b;
+            if fb == serviced_fb {
+                self.cand_r[fb] = None;
+                self.cand_w[fb] = None;
+                continue;
+            }
+            let closed = rank.banks[b].open_row().is_none();
+            if let Some(c) = self.cand_r[fb] {
+                if rd_turn > c.col_ready || (closed && act_bound > c.miss_ready) {
+                    self.cand_r[fb] = None;
+                }
+            }
+            if let Some(c) = self.cand_w[fb] {
+                if wr_turn > c.col_ready || (closed && act_bound > c.miss_ready) {
+                    self.cand_w[fb] = None;
+                }
+            }
+        }
+    }
+
     fn invalidate_all(&mut self) {
         self.cand_r.fill(None);
         self.cand_w.fill(None);
@@ -266,7 +344,9 @@ impl MemController {
     /// across the whole pool (the wake time when nothing is ready).
     fn scan(&mut self, now: Ps, is_write: bool) -> (Option<(usize, usize)>, Ps) {
         match self.policy {
-            SchedPolicy::BankIndexed => self.scan_indexed(now, is_write),
+            SchedPolicy::BankIndexed | SchedPolicy::RankInval => {
+                self.scan_indexed(now, is_write)
+            }
             SchedPolicy::ReferenceScan => self.scan_reference(now, is_write),
         }
     }
@@ -470,12 +550,15 @@ impl MemController {
                         self.rq[fb].remove(pos)
                     };
                     out.push(self.service(t));
-                    // Rank-granular invalidation: the serviced commands
-                    // moved this rank's bank timings, ACT window, and
-                    // turnaround state; other ranks' summaries still hold.
-                    // (The data-bus claim is channel-global but does not
-                    // enter first-command readiness.)
-                    self.invalidate_rank(t.addr.rank);
+                    // The serviced commands moved this rank's bank
+                    // timings, ACT window, and turnaround state; other
+                    // ranks' summaries always hold. The default narrows
+                    // further to the banks whose cached ready times the
+                    // service actually moved.
+                    match self.policy {
+                        SchedPolicy::BankIndexed => self.invalidate_moved(t.addr.rank, fb),
+                        _ => self.invalidate_rank(t.addr.rank),
+                    }
                 }
                 None => {
                     return if min_ready == Ps::MAX { None } else { Some(min_ready) };
@@ -675,11 +758,14 @@ mod tests {
     }
 
     #[test]
-    fn reference_scan_policy_matches_bank_indexed() {
+    fn all_policies_match_reference_scan() {
         let geo = Geometry::sim_small();
         let p = TimingParams::ddr3_1600();
-        let mut fast = MemController::new(p, geo);
         let mut slow = MemController::with_policy(p, geo, SchedPolicy::ReferenceScan);
+        let mut others = [
+            MemController::with_policy(p, geo, SchedPolicy::BankIndexed),
+            MemController::with_policy(p, geo, SchedPolicy::RankInval),
+        ];
         let m = AddressMapping::new(&geo, 1);
         // Same-bank conflicts, a row hit, a cross-rank read, and a write.
         let txns = [
@@ -695,19 +781,74 @@ mod tests {
             },
         ];
         for t in txns {
+            slow.enqueue(t);
+            for c in others.iter_mut() {
+                c.enqueue(t);
+            }
+        }
+        let mut now = 0;
+        for _ in 0..100 {
+            let (rs, ws) = pump_all(&mut slow, now);
+            for fast in others.iter_mut() {
+                let tag = fast.policy().name();
+                let (rf, wf) = pump_all(fast, now);
+                assert_eq!(rf.len(), rs.len(), "{tag}");
+                for (a, b) in rf.iter().zip(rs.iter()) {
+                    assert_eq!(
+                        (a.id, a.col_cmd_at, a.data_start, a.data_end, a.row_hit),
+                        (b.id, b.col_cmd_at, b.data_start, b.data_end, b.row_hit),
+                        "{tag}"
+                    );
+                }
+                assert_eq!(wf, ws, "{tag}");
+            }
+            match ws {
+                Some(w) => now = w,
+                None => break,
+            }
+        }
+        assert_eq!(slow.queue_len(), 0);
+        for fast in &others {
+            let tag = fast.policy().name();
+            assert_eq!(fast.queue_len(), 0, "{tag}");
+            assert_eq!(fast.stats.row_hits, slow.stats.row_hits, "{tag}");
+            assert_eq!(fast.stats.row_misses, slow.stats.row_misses, "{tag}");
+            assert_eq!(fast.stats.row_conflicts, slow.stats.row_conflicts, "{tag}");
+        }
+    }
+
+    #[test]
+    fn sched_policy_names_round_trip() {
+        for p in [SchedPolicy::BankIndexed, SchedPolicy::RankInval, SchedPolicy::ReferenceScan] {
+            assert_eq!(SchedPolicy::by_name(p.name()), Some(p));
+        }
+        assert_eq!(SchedPolicy::by_name("ref-scan"), Some(SchedPolicy::ReferenceScan));
+        assert!(SchedPolicy::by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn bank_granular_invalidation_preserves_cross_bank_act_bound() {
+        // Four fast ACTs on banks 0-3 put tFAW in play; a queued miss on
+        // bank 5 cached its ACT-ready before the window filled. The
+        // bank-granular policy must still serve it no earlier than the
+        // reference scan says it may.
+        let geo = Geometry::sim_small();
+        let p = TimingParams::ddr3_1600();
+        let mut fast = MemController::new(p, geo);
+        let mut slow = MemController::with_policy(p, geo, SchedPolicy::ReferenceScan);
+        let m = AddressMapping::new(&geo, 1);
+        for (i, bank) in [0u32, 1, 2, 3, 5].iter().enumerate() {
+            let t = read_to(&m, i as u64 + 1, 1, 0, *bank, i as u64);
             fast.enqueue(t);
             slow.enqueue(t);
         }
         let mut now = 0;
-        for _ in 0..100 {
+        loop {
             let (rf, wf) = pump_all(&mut fast, now);
             let (rs, ws) = pump_all(&mut slow, now);
             assert_eq!(rf.len(), rs.len());
             for (a, b) in rf.iter().zip(rs.iter()) {
-                assert_eq!(
-                    (a.id, a.col_cmd_at, a.data_start, a.data_end, a.row_hit),
-                    (b.id, b.col_cmd_at, b.data_start, b.data_end, b.row_hit)
-                );
+                assert_eq!((a.id, a.col_cmd_at), (b.id, b.col_cmd_at));
             }
             assert_eq!(wf, ws);
             match wf {
@@ -715,9 +856,7 @@ mod tests {
                 None => break,
             }
         }
-        assert_eq!(fast.queue_len(), 0);
-        assert_eq!(fast.stats.row_hits, slow.stats.row_hits);
-        assert_eq!(fast.stats.row_misses, slow.stats.row_misses);
-        assert_eq!(fast.stats.row_conflicts, slow.stats.row_conflicts);
+        // The 5th ACT (bank 5) was tFAW-bound against the first.
+        assert_eq!(fast.stats.row_misses, 5);
     }
 }

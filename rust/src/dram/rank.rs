@@ -40,13 +40,32 @@ impl Rank {
 
     /// Earliest ACT time for `bank` including tRRD and tFAW.
     pub fn earliest_act(&self, bank: u32, p: &TimingParams) -> Ps {
-        let b = &self.banks[bank as usize];
-        // tFAW binds the 5th ACT to 4-ago's issue time; tRRD binds to the
-        // previous ACT. Neither applies before any ACT has issued.
-        let faw_bound =
-            if self.act_count >= 4 { self.act_window[self.act_ptr] + p.t_faw } else { 0 };
-        let rrd_bound = if self.act_count >= 1 { self.last_act + p.t_rrd } else { 0 };
-        b.earliest_act().max(rrd_bound).max(faw_bound)
+        self.banks[bank as usize].earliest_act().max(self.act_bound(p))
+    }
+
+    /// Rank-wide component of the next ACT time (tRRD from the previous
+    /// ACT, tFAW from the 4-ago ACT; neither applies before that many
+    /// ACTs have issued). The controller's bank-granular invalidation
+    /// watches this bound to decide which cached summaries an ACT moved.
+    #[inline]
+    pub fn act_bound(&self, p: &TimingParams) -> Ps {
+        let last = if self.act_count >= 1 { Some(self.last_act) } else { None };
+        let fourth =
+            if self.act_count >= 4 { Some(self.act_window[self.act_ptr]) } else { None };
+        p.act_spacing_bound(last, fourth)
+    }
+
+    /// Rank-wide read-turnaround component of the next RD (tCCD / tWTR
+    /// floors shared by every bank of the rank).
+    #[inline]
+    pub fn rd_turn(&self) -> Ps {
+        self.next_rd_turn
+    }
+
+    /// Rank-wide write-turnaround component of the next WR.
+    #[inline]
+    pub fn wr_turn(&self) -> Ps {
+        self.next_wr_turn
     }
 
     pub fn earliest_rd(&self, bank: u32) -> Ps {
@@ -132,6 +151,23 @@ mod tests {
         let mut r = Rank::new(8, &p);
         r.do_act(0, 0, 10, &p);
         assert!(r.earliest_act(1, &p) >= p.t_rrd);
+    }
+
+    #[test]
+    fn act_bound_decomposes_earliest_act() {
+        let p = p();
+        let mut r = Rank::new(8, &p);
+        assert_eq!(r.act_bound(&p), 0);
+        r.do_act(0, 0, 10, &p);
+        assert_eq!(r.act_bound(&p), p.t_rrd);
+        // earliest_act is exactly the bank component ∨ the rank bound —
+        // the decomposition the bank-granular invalidation relies on.
+        for bank in 0..8 {
+            assert_eq!(
+                r.earliest_act(bank, &p),
+                r.banks[bank as usize].earliest_act().max(r.act_bound(&p))
+            );
+        }
     }
 
     #[test]

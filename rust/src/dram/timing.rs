@@ -120,6 +120,19 @@ impl TimingParams {
         self.t_rtp + self.t_rp + self.t_rcd
     }
 
+    /// Rank-level ACT spacing bound: tRRD measured from the previous ACT
+    /// and tFAW from the fourth-previous. `None` means that ACT has not
+    /// issued yet, so the corresponding constraint does not yet apply.
+    /// Shared by `Rank::earliest_act` and the controller's bank-granular
+    /// cache invalidation, which must agree exactly on when this bound
+    /// moves.
+    #[inline]
+    pub fn act_spacing_bound(&self, last_act: Option<Ps>, fourth_last_act: Option<Ps>) -> Ps {
+        let rrd = last_act.map_or(0, |t| t + self.t_rrd);
+        let faw = fourth_last_act.map_or(0, |t| t + self.t_faw);
+        rrd.max(faw)
+    }
+
     /// Closed-bank access latency: ACT → RD → data end.
     pub fn closed_access(&self) -> Ps {
         self.t_rcd + self.t_rl + self.t_burst
@@ -241,6 +254,18 @@ mod tests {
     fn presets_validate() {
         TimingParams::ddr3_1866().validate().unwrap();
         TimingParams::scm_leaf().validate().unwrap();
+    }
+
+    #[test]
+    fn act_spacing_bound_applies_constraints_in_order() {
+        let t = TimingParams::ddr3_1600();
+        // No ACT yet: unconstrained.
+        assert_eq!(t.act_spacing_bound(None, None), 0);
+        // Only tRRD once one ACT has issued.
+        assert_eq!(t.act_spacing_bound(Some(100), None), 100 + t.t_rrd);
+        // tFAW dominates once four have issued close together.
+        let b = t.act_spacing_bound(Some(3 * t.t_rrd), Some(0));
+        assert_eq!(b, t.t_faw, "tFAW must bind: {b}");
     }
 
     #[test]

@@ -26,6 +26,7 @@ const VALUE_FLAGS: &[&str] = &[
     "trl-extra-ns",
     "pcie-local-frac",
     "engine",
+    "sched",
 ];
 
 fn main() {
@@ -57,7 +58,8 @@ fn print_usage() {
          \n\
          twinload run --mechanism tl-ooo --workload gups [--ops N] [--cores C]\n\
          \x20            [--footprint-mb M] [--seed S] [--config file.ini]\n\
-         \x20            [--engine calendar|reference-heap]\n\
+         \x20            [--engine calendar|adaptive-calendar|reference-heap]\n\
+         \x20            [--sched bank-indexed|rank-inval|reference-scan]\n\
          twinload repro <table1|table2|table3|table4|table5|fig7|fig8|fig9|\n\
          \x20            fig10|fig11|fig12|fig13|fig14|fig15|all> [--quick] [--csv-dir DIR]\n\
          twinload ablate <lvc|layers|batch> [--quick]\n\
@@ -129,10 +131,17 @@ fn cmd_run(args: &Args) -> i32 {
     }
     if let Some(name) = args.get("engine") {
         let Some(kind) = twinload::sim::engine::EngineKind::by_name(name) else {
-            eprintln!("unknown engine '{name}' (calendar | reference-heap)");
+            eprintln!("unknown engine '{name}' (calendar | adaptive-calendar | reference-heap)");
             return 2;
         };
         cfg.engine = kind;
+    }
+    if let Some(name) = args.get("sched") {
+        let Some(policy) = twinload::dram::SchedPolicy::by_name(name) else {
+            eprintln!("unknown sched policy '{name}' (bank-indexed | rank-inval | reference-scan)");
+            return 2;
+        };
+        cfg.sched = policy;
     }
 
     let report = run_spec(&cfg, &spec);
@@ -158,12 +167,15 @@ fn cmd_run(args: &Args) -> i32 {
         report.cas_fails,
     );
     println!(
-        "  engine        {:>12} ({} events, peak {}, {} buckets, {} resizes, {} overflowed)",
+        "  engine        {:>12} ({} events, peak {}, {} buckets x {} ps, {} resizes, \
+         {} resamples, {} overflowed)",
         report.engine,
         report.engine_events,
         report.engine_peak,
         report.engine_buckets,
+        report.engine_width,
         report.engine_resizes,
+        report.engine_resamples,
         report.engine_overflow,
     );
     if report.deadlocked {

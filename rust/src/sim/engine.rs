@@ -1,6 +1,6 @@
 //! Deterministic event queues for the platform simulator.
 //!
-//! Two interchangeable engines sit behind [`EventQueue`]:
+//! Three interchangeable engines sit behind [`EventQueue`]:
 //!
 //! * [`EngineKind::Calendar`] (default) — a calendar/bucket queue: an
 //!   array of time-bucketed FIFO lanes whose width comes from the host
@@ -8,11 +8,19 @@
 //!   gaps, and occupancy-watermark resizing. Push and pop are O(1) at
 //!   the short-horizon, high-density event distributions a DRAM-timing
 //!   simulator produces.
+//! * [`EngineKind::AdaptiveCalendar`] — the calendar queue with the
+//!   classic adaptive-width refinement: a watermark trip opens a
+//!   sampling window over the next [`SAMPLE_POPS`] dequeues, and the
+//!   observed inter-dequeue spacing re-derives the bucket width (with
+//!   hysteresis), so workloads whose event density drifts over a run
+//!   keep ~O(1) behaviour instead of degrading toward the overflow
+//!   heap. The chosen width and resample count surface through
+//!   [`EngineStats`] / `SimReport`.
 //! * [`EngineKind::ReferenceHeap`] — the original `BinaryHeap` engine,
 //!   retained as the oracle for differential testing (the same pattern
 //!   as the controller's `SchedPolicy::ReferenceScan`).
 //!
-//! Both engines pop in strictly identical order: ascending `(t, seq)`,
+//! All engines pop in strictly identical order: ascending `(t, seq)`,
 //! where `seq` is the global insertion counter — the `engine-equivalence`
 //! proptest proves bit-identical streams.
 
@@ -57,8 +65,11 @@ impl PartialOrd for Event {
 /// Which event-queue implementation a platform runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
-    /// Time-bucketed calendar queue (the default).
+    /// Time-bucketed calendar queue at a fixed bucket width (the default).
     Calendar,
+    /// Calendar queue that resamples its bucket width from observed
+    /// inter-dequeue spacing after each watermark trip.
+    AdaptiveCalendar,
     /// The original binary-heap engine, retained as the differential
     /// oracle. Identical pop order.
     ReferenceHeap,
@@ -68,6 +79,7 @@ impl EngineKind {
     pub fn name(&self) -> &'static str {
         match self {
             EngineKind::Calendar => "calendar",
+            EngineKind::AdaptiveCalendar => "adaptive-calendar",
             EngineKind::ReferenceHeap => "reference-heap",
         }
     }
@@ -75,6 +87,7 @@ impl EngineKind {
     pub fn by_name(name: &str) -> Option<EngineKind> {
         match name {
             "calendar" => Some(EngineKind::Calendar),
+            "adaptive-calendar" | "adaptive" => Some(EngineKind::AdaptiveCalendar),
             "reference-heap" | "ref-heap" | "heap" => Some(EngineKind::ReferenceHeap),
             _ => None,
         }
@@ -95,12 +108,24 @@ pub struct EngineStats {
     pub overflow_pushes: u64,
     /// Final bucket count (calendar only; 0 for the heap).
     pub buckets: u64,
+    /// Current bucket width in ps (calendar only; 0 for the heap).
+    pub width: Ps,
+    /// Completed adaptive width re-bucketings (adaptive calendar only).
+    pub resamples: u64,
 }
 
 /// Initial bucket count (power of two).
 const INIT_BUCKETS: usize = 256;
 /// Resize floor.
 const MIN_BUCKETS: usize = 64;
+/// Dequeues sampled per adaptive resample window.
+pub const SAMPLE_POPS: usize = 32;
+/// Hysteresis factor: re-bucket only when the resampled width leaves
+/// the `[width / 2, width * 2)` band, preventing oscillation.
+const WIDTH_HYSTERESIS: Ps = 2;
+/// Widest bucket the resampler will pick (1 µs): beyond that, gaps are
+/// refresh-scale and the overflow heap already absorbs them.
+const MAX_WIDTH: Ps = 1_000_000;
 
 /// Calendar-queue state. A "day" is `t / width`; each day maps to bucket
 /// `day & mask`. Buckets hold events of several wheel rotations at once,
@@ -108,7 +133,8 @@ const MIN_BUCKETS: usize = 64;
 /// a prefix of their bucket.
 #[derive(Debug)]
 struct Calendar {
-    /// Bucket span in ps (≥ 1; from the host command-clock tick).
+    /// Bucket span in ps (≥ 1; seeded from the host command-clock tick,
+    /// resampled from observed spacing when `adaptive`).
     width: Ps,
     buckets: Vec<VecDeque<Event>>,
     /// `buckets.len() - 1`; bucket count is a power of two.
@@ -121,10 +147,17 @@ struct Calendar {
     overflow: BinaryHeap<Event>,
     resizes: u64,
     overflow_pushes: u64,
+    /// Adaptive width resampling: a watermark trip opens a sampling
+    /// window; the next `SAMPLE_POPS` dequeue timestamps derive the new
+    /// width.
+    adaptive: bool,
+    sampling: bool,
+    sample: Vec<Ps>,
+    resamples: u64,
 }
 
 impl Calendar {
-    fn new(width: Ps) -> Calendar {
+    fn new(width: Ps, adaptive: bool) -> Calendar {
         Calendar {
             width: width.max(1),
             buckets: (0..INIT_BUCKETS).map(|_| VecDeque::new()).collect(),
@@ -134,6 +167,10 @@ impl Calendar {
             overflow: BinaryHeap::new(),
             resizes: 0,
             overflow_pushes: 0,
+            adaptive,
+            sampling: false,
+            sample: Vec::new(),
+            resamples: 0,
         }
     }
 
@@ -205,6 +242,17 @@ impl Calendar {
     }
 
     fn pop(&mut self) -> Option<Event> {
+        let e = self.pop_min()?;
+        if self.sampling {
+            self.sample.push(e.t);
+            if self.sample.len() >= SAMPLE_POPS {
+                self.finish_resample();
+            }
+        }
+        Some(e)
+    }
+
+    fn pop_min(&mut self) -> Option<Event> {
         if self.in_buckets == 0 && self.overflow.is_empty() {
             return None;
         }
@@ -252,29 +300,97 @@ impl Calendar {
     }
 
     /// Rebuild the wheel at `new_nb` buckets (clamped to the floor and
-    /// rounded to a power of two). Events beyond the new horizon spill to
-    /// the overflow heap; in-window events redistribute in global sorted
-    /// order, which keeps every bucket individually sorted.
+    /// rounded to a power of two). The adaptive engine additionally opens
+    /// a width-sampling window on every trip: the resize is the signal
+    /// that event density moved.
     fn resize_to(&mut self, new_nb: usize) {
         let new_nb = new_nb.max(MIN_BUCKETS).next_power_of_two();
         if new_nb == self.buckets.len() {
             return;
         }
         self.resizes += 1;
-        let mut all: Vec<Event> = Vec::with_capacity(self.in_buckets);
-        for q in self.buckets.iter_mut() {
-            all.extend(q.drain(..));
+        // Keep the drain point: cursor is in day units, width unchanged.
+        let floor_t = self.cursor.saturating_mul(self.width);
+        self.rebuild(new_nb, self.width, floor_t);
+        if self.adaptive && !self.sampling {
+            self.sampling = true;
+            self.sample.clear();
         }
-        all.sort_unstable_by_key(|e| (e.t, e.seq));
-        self.buckets = (0..new_nb).map(|_| VecDeque::new()).collect();
-        self.mask = new_nb as u64 - 1;
+    }
+
+    /// Close an adaptive sampling window: derive the bucket width from
+    /// the observed mean inter-dequeue gap (targeting ~2 dequeues per
+    /// bucket-day) and re-bucket when it moved past the hysteresis band.
+    fn finish_resample(&mut self) {
+        self.sampling = false;
+        let first = self.sample[0];
+        let last = *self.sample.last().expect("non-empty sample window");
+        self.sample.clear();
+        let mean_gap = last.saturating_sub(first) / (SAMPLE_POPS as Ps - 1);
+        let new_width = (2 * mean_gap).clamp(1, MAX_WIDTH);
+        if new_width.saturating_mul(WIDTH_HYSTERESIS) < self.width
+            || new_width >= self.width.saturating_mul(WIDTH_HYSTERESIS)
+        {
+            // `last` was just popped, so every pending event has
+            // `(t, seq)` beyond it: it is an exact cursor floor under
+            // the new width.
+            self.rebuild(self.buckets.len(), new_width, last);
+            self.resamples += 1;
+        }
+    }
+
+    /// Redistribute every stored event (buckets *and* overflow heap —
+    /// a width change moves the horizon in both directions) over
+    /// `new_nb` buckets of `new_width`. Events are reinserted in global
+    /// `(t, seq)` order, which keeps each bucket individually sorted,
+    /// so pop order is bit-identical across rebuilds. `floor_t` is a
+    /// timestamp at or before every pending event; it re-anchors the
+    /// cursor when the wheel is empty.
+    fn rebuild(&mut self, new_nb: usize, new_width: Ps, floor_t: Ps) {
+        let mut wheel: Vec<Event> = Vec::with_capacity(self.in_buckets);
+        for q in self.buckets.iter_mut() {
+            wheel.extend(q.drain(..));
+        }
+        let mut ovf = std::mem::take(&mut self.overflow).into_vec();
+        wheel.sort_unstable_by_key(|e| (e.t, e.seq));
+        ovf.sort_unstable_by_key(|e| (e.t, e.seq));
+        self.width = new_width.max(1);
+        if new_nb != self.buckets.len() {
+            self.buckets = (0..new_nb).map(|_| VecDeque::new()).collect();
+            self.mask = new_nb as u64 - 1;
+        }
         self.in_buckets = 0;
-        let horizon = self.cursor + new_nb as u64;
-        for e in all {
+        let first_t = match (wheel.first(), ovf.first()) {
+            (Some(a), Some(b)) => a.t.min(b.t),
+            (Some(a), None) => a.t,
+            (None, Some(b)) => b.t,
+            (None, None) => floor_t,
+        };
+        self.cursor = first_t / self.width;
+        let horizon = self.horizon();
+        // Merge the two sorted runs so buckets fill in global `(t, seq)`
+        // order. Spills that originate in the wheel count as overflow
+        // routing; returning overflow events do not recount.
+        let (mut i, mut j) = (0, 0);
+        while i < wheel.len() || j < ovf.len() {
+            let take_wheel = match (wheel.get(i), ovf.get(j)) {
+                (Some(a), Some(b)) => (a.t, a.seq) <= (b.t, b.seq),
+                (Some(_), None) => true,
+                (None, _) => false,
+            };
+            let (e, from_wheel) = if take_wheel {
+                i += 1;
+                (wheel[i - 1], true)
+            } else {
+                j += 1;
+                (ovf[j - 1], false)
+            };
             let day = self.day_of(e.t);
             if day >= horizon {
                 self.overflow.push(e);
-                self.overflow_pushes += 1;
+                if from_wheel {
+                    self.overflow_pushes += 1;
+                }
             } else {
                 self.buckets[(day & self.mask) as usize].push_back(e);
                 self.in_buckets += 1;
@@ -312,19 +428,22 @@ impl EventQueue {
         EventQueue::with_kind(EngineKind::Calendar, CYCLE_800MHZ)
     }
 
-    /// Build the selected engine; `tick` is the calendar bucket width in
-    /// ps (the host `TimingParams::t_ck`; ignored by the heap).
+    /// Build the selected engine; `tick` is the (initial) calendar
+    /// bucket width in ps (the host `TimingParams::t_ck`; ignored by the
+    /// heap, refined at runtime by the adaptive calendar).
     pub fn with_kind(kind: EngineKind, tick: Ps) -> EventQueue {
         let imp = match kind {
-            EngineKind::Calendar => Imp::Calendar(Calendar::new(tick)),
+            EngineKind::Calendar => Imp::Calendar(Calendar::new(tick, false)),
+            EngineKind::AdaptiveCalendar => Imp::Calendar(Calendar::new(tick, true)),
             EngineKind::ReferenceHeap => Imp::Heap(BinaryHeap::with_capacity(1024)),
         };
         EventQueue { imp, next_seq: 0, len: 0, peak_len: 0, pushed: 0 }
     }
 
     pub fn kind(&self) -> EngineKind {
-        match self.imp {
+        match &self.imp {
             Imp::Heap(_) => EngineKind::ReferenceHeap,
+            Imp::Calendar(c) if c.adaptive => EngineKind::AdaptiveCalendar,
             Imp::Calendar(_) => EngineKind::Calendar,
         }
     }
@@ -363,9 +482,11 @@ impl EventQueue {
     }
 
     pub fn stats(&self) -> EngineStats {
-        let (resizes, overflow_pushes, buckets) = match &self.imp {
-            Imp::Heap(_) => (0, 0, 0),
-            Imp::Calendar(c) => (c.resizes, c.overflow_pushes, c.buckets.len() as u64),
+        let (resizes, overflow_pushes, buckets, width, resamples) = match &self.imp {
+            Imp::Heap(_) => (0, 0, 0, 0, 0),
+            Imp::Calendar(c) => {
+                (c.resizes, c.overflow_pushes, c.buckets.len() as u64, c.width, c.resamples)
+            }
         };
         EngineStats {
             kind: self.kind(),
@@ -374,6 +495,8 @@ impl EventQueue {
             resizes,
             overflow_pushes,
             buckets,
+            width,
+            resamples,
         }
     }
 }
@@ -382,9 +505,10 @@ impl EventQueue {
 mod tests {
     use super::*;
 
-    fn both() -> [EventQueue; 2] {
+    fn both() -> [EventQueue; 3] {
         [
             EventQueue::with_kind(EngineKind::Calendar, CYCLE_800MHZ),
+            EventQueue::with_kind(EngineKind::AdaptiveCalendar, CYCLE_800MHZ),
             EventQueue::with_kind(EngineKind::ReferenceHeap, 0),
         ]
     }
@@ -478,10 +602,94 @@ mod tests {
 
     #[test]
     fn engine_kind_names_round_trip() {
-        for kind in [EngineKind::Calendar, EngineKind::ReferenceHeap] {
+        for kind in
+            [EngineKind::Calendar, EngineKind::AdaptiveCalendar, EngineKind::ReferenceHeap]
+        {
             assert_eq!(EngineKind::by_name(kind.name()), Some(kind));
         }
         assert_eq!(EngineKind::by_name("ref-heap"), Some(EngineKind::ReferenceHeap));
+        assert_eq!(EngineKind::by_name("adaptive"), Some(EngineKind::AdaptiveCalendar));
         assert!(EngineKind::by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn adaptive_narrows_width_on_dense_streams() {
+        // A dense burst (events ~1 ps apart, far tighter than the DDR
+        // tick) trips the grow watermark; the sampling window over the
+        // next SAMPLE_POPS dequeues must narrow the bucket width.
+        let mut q = EventQueue::with_kind(EngineKind::AdaptiveCalendar, CYCLE_800MHZ);
+        assert_eq!(q.stats().width, CYCLE_800MHZ);
+        let n = 4 * INIT_BUCKETS as u64;
+        for i in 0..n {
+            q.push(i, Ev::CoreWake { core: i as usize });
+        }
+        assert!(q.stats().resizes >= 1, "no watermark trip: {:?}", q.stats());
+        let mut last = 0;
+        while let Some(e) = q.pop() {
+            assert!(e.t >= last);
+            last = e.t;
+        }
+        let s = q.stats();
+        assert!(s.resamples >= 1, "no resample: {s:?}");
+        assert!(s.width < CYCLE_800MHZ, "width did not narrow: {s:?}");
+    }
+
+    #[test]
+    fn adaptive_widens_width_on_sparse_streams() {
+        // Seeded far too narrow (1 ps) for a ~1 ns-spaced stream: the
+        // near-empty wheel shrink-trips, and the resample must widen the
+        // buckets toward the observed spacing.
+        let mut q = EventQueue::with_kind(EngineKind::AdaptiveCalendar, 1);
+        for i in 0..INIT_BUCKETS as u64 {
+            q.push(i * 1_000, Ev::CoreWake { core: i as usize });
+        }
+        let mut last = 0;
+        while let Some(e) = q.pop() {
+            assert!(e.t >= last);
+            last = e.t;
+        }
+        let s = q.stats();
+        assert!(s.resamples >= 1, "no resample: {s:?}");
+        assert!(s.width > 1, "width did not widen: {s:?}");
+    }
+
+    #[test]
+    fn adaptive_resample_preserves_exact_order() {
+        // Drifting density with same-tick ties: the adaptive queue must
+        // still pop ascending (t, seq) — including across re-bucketings.
+        let mut adp = EventQueue::with_kind(EngineKind::AdaptiveCalendar, CYCLE_800MHZ);
+        let mut heap = EventQueue::with_kind(EngineKind::ReferenceHeap, 0);
+        let mut t = 0;
+        for i in 0..(3 * INIT_BUCKETS as u64) {
+            // Phase 1 dense (ties every 4th) — long enough to trip the
+            // grow watermark and open a sampling window — phase 2 sparse.
+            t += if i < 2 * INIT_BUCKETS as u64 + 64 {
+                if i % 4 == 0 { 0 } else { 100 }
+            } else {
+                500_000
+            };
+            adp.push(t, Ev::CoreWake { core: i as usize });
+            heap.push(t, Ev::CoreWake { core: i as usize });
+        }
+        loop {
+            let (a, b) = (adp.pop(), heap.pop());
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_calendar_never_resamples() {
+        let mut q = EventQueue::with_kind(EngineKind::Calendar, 1_000);
+        for i in 0..4 * INIT_BUCKETS as u64 {
+            q.push(i % 50_000, Ev::CoreWake { core: i as usize });
+        }
+        while q.pop().is_some() {}
+        let s = q.stats();
+        assert!(s.resizes >= 1);
+        assert_eq!(s.resamples, 0);
+        assert_eq!(s.width, 1_000);
     }
 }

@@ -303,7 +303,7 @@ impl Platform {
                 span: layout.local_size,
                 map: AddressMapping::new(&geo, 1),
                 channels: (0..cfg.local_channels)
-                    .map(|_| MemController::new(cfg.host_timing, geo))
+                    .map(|_| MemController::with_policy(cfg.host_timing, geo, cfg.sched))
                     .collect(),
                 next_pump: None,
             });
@@ -326,7 +326,7 @@ impl Platform {
                     span: 2 * layout.ext_size,
                     map,
                     channels: (0..nch)
-                        .map(|_| MemController::new(cfg.host_timing, geo))
+                        .map(|_| MemController::with_policy(cfg.host_timing, geo, cfg.sched))
                         .collect(),
                     next_pump: None,
                 });
@@ -348,7 +348,9 @@ impl Platform {
                     base: layout.ext_base(),
                     span: layout.ext_size,
                     map: AddressMapping::new(&geo, 1),
-                    channels: (0..4).map(|_| MemController::new(cfg.host_timing, geo)).collect(),
+                    channels: (0..4)
+                        .map(|_| MemController::with_policy(cfg.host_timing, geo, cfg.sched))
+                        .collect(),
                     next_pump: None,
                 });
             }
@@ -359,7 +361,9 @@ impl Platform {
                     base: layout.ext_base(),
                     span: layout.ext_size,
                     map: AddressMapping::new(&geo, 1),
-                    channels: (0..4).map(|_| MemController::new(cfg.host_timing, geo)).collect(),
+                    channels: (0..4)
+                        .map(|_| MemController::with_policy(cfg.host_timing, geo, cfg.sched))
+                        .collect(),
                     next_pump: None,
                 });
                 numa = Some(NumaLink::new(cfg.numa_one_way, cfg.numa_gbps));
@@ -374,7 +378,9 @@ impl Platform {
                     base: layout.ext_base(),
                     span: layout.ext_size,
                     map: AddressMapping::new(&geo, 1),
-                    channels: (0..4).map(|_| MemController::new(timing, geo)).collect(),
+                    channels: (0..4)
+                        .map(|_| MemController::with_policy(timing, geo, cfg.sched))
+                        .collect(),
                     next_pump: None,
                 });
             }

@@ -46,14 +46,20 @@ pub struct SimReport {
     pub pcie_faults: u64,
     pub deadlocked: bool,
     // Event-engine occupancy/housekeeping (engine-agnostic fields like
-    // `engine_events`/`engine_peak` must match across engines; resize and
-    // overflow counters are calendar-specific diagnostics).
+    // `engine_events`/`engine_peak` must match across engines; resize,
+    // overflow, width, and resample counters are calendar-specific
+    // diagnostics).
     pub engine: &'static str,
     pub engine_events: u64,
     pub engine_peak: u64,
     pub engine_resizes: u64,
     pub engine_overflow: u64,
     pub engine_buckets: u64,
+    /// Current calendar bucket width in ps (0 for the reference heap;
+    /// differs from the seed `t_ck` only under the adaptive engine).
+    pub engine_width: u64,
+    /// Completed adaptive width re-bucketings (adaptive calendar only).
+    pub engine_resamples: u64,
 }
 
 impl SimReport {
@@ -122,6 +128,8 @@ impl SimReport {
             engine_resizes: engine.resizes,
             engine_overflow: engine.overflow_pushes,
             engine_buckets: engine.buckets,
+            engine_width: engine.width,
+            engine_resamples: engine.resamples,
         }
     }
 

@@ -32,9 +32,15 @@ pub const PROVISIONAL_FACTOR: f64 = 4.0;
 pub const PAIR_TOLERANCE: f64 = 0.85;
 
 /// (reference suffix, optimized suffix) row-name pairs the pair rule
-/// checks within one run.
-const ENGINE_PAIRS: &[(&str, &str)] =
-    &[(" [ref-heap]", " [calendar]"), (" [ref-scan]", " [bank-indexed]")];
+/// checks within one run. A reference row may anchor several optimized
+/// rows (e.g. both calendar variants against the heap, both candidate-
+/// cache invalidation granularities against the full scan).
+const ENGINE_PAIRS: &[(&str, &str)] = &[
+    (" [ref-heap]", " [calendar]"),
+    (" [ref-heap]", " [adaptive]"),
+    (" [ref-scan]", " [bank-indexed]"),
+    (" [ref-scan]", " [rank-inval]"),
+];
 
 // ---------------------------------------------------------------------
 // Minimal JSON (subset) parser.
@@ -531,12 +537,32 @@ mod tests {
     fn pair_rule_passes_when_optimized_engine_keeps_up() {
         for policy_pair in [
             [("event engine [calendar]", 300.0), ("event engine [ref-heap]", 100.0)],
+            [("event engine [adaptive]", 290.0), ("event engine [ref-heap]", 100.0)],
             [("dram controller [bank-indexed]", 95.0), ("dram controller [ref-scan]", 100.0)],
+            [("dram controller [rank-inval]", 95.0), ("dram controller [ref-scan]", 100.0)],
         ] {
             let rows = report(&policy_pair, false);
             let g = perf_gate(&rows, &rows);
             assert!(g.passed(), "{:?}", g.failures);
         }
+    }
+
+    #[test]
+    fn pair_rule_checks_every_optimized_row_of_a_shared_reference() {
+        // One reference row anchors two optimized rows; a lagging
+        // adaptive engine must fail even when the fixed calendar wins.
+        let rows = report(
+            &[
+                ("event engine [calendar]", 300.0),
+                ("event engine [adaptive]", 50.0),
+                ("event engine [ref-heap]", 100.0),
+            ],
+            false,
+        );
+        let g = perf_gate(&rows, &rows);
+        assert!(!g.passed());
+        assert_eq!(g.failures.len(), 1);
+        assert!(g.failures[0].contains("[adaptive]"), "{}", g.failures[0]);
     }
 
     #[test]

@@ -1,0 +1,166 @@
+//! Golden end-to-end regression corpus.
+//!
+//! Runs every mechanism over a small workload subset at smoke scale and
+//! diffs a stable rendering of each [`SimReport`] against the checked-in
+//! snapshot `rust/tests/golden.snap`. The pairwise differential tests
+//! (`engine-equivalence`, `sched-equivalence`) prove *relative*
+//! equivalence between implementations; this corpus freezes the
+//! *absolute* end-to-end numbers, so a refactor that changes behaviour
+//! identically in the optimized path and its retained reference (and
+//! therefore slips past the pairwise oracles) still trips here.
+//!
+//! The simulation is deterministic (seeded PRNG, discrete time, no host
+//! dependence) — the only theoretical machine-dependence is libm
+//! (`powf` in the Zipf sampler), which is identical across the CI
+//! runner class the snapshot is generated on.
+//!
+//! Maintenance:
+//! * `make golden-update` (or `TWINLOAD_GOLDEN_UPDATE=1 cargo test
+//!   --test golden`) regenerates the snapshot after an *intentional*
+//!   behaviour change — commit the result.
+//! * If the snapshot file is missing (fresh corpus), the test writes it
+//!   and passes, so the corpus bootstraps on the first toolchain that
+//!   runs it.
+
+use twinload::config::{RunSpec, SystemConfig};
+use twinload::sim::{run_spec, SimReport};
+use twinload::workloads::WorkloadKind;
+
+const SNAP_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden.snap");
+
+/// Workload subset: one TLB-thrashing pointer chaser and one skewed
+/// key-value mix — the two ends of the locality spectrum.
+const WORKLOADS: &[WorkloadKind] = &[WorkloadKind::Gups, WorkloadKind::Memcached];
+
+fn mechanisms() -> Vec<SystemConfig> {
+    vec![
+        SystemConfig::ideal(),
+        SystemConfig::tl_ooo(),
+        SystemConfig::tl_lf(),
+        SystemConfig::tl_lf_batched(8),
+        SystemConfig::numa(),
+        SystemConfig::pcie(0.75),
+        SystemConfig::increased_trl(35_000),
+    ]
+}
+
+/// Stable one-line rendering of the fields a refactor must not move.
+/// Engine-diagnostic counters (buckets, resizes, width…) are excluded by
+/// design: they differ across engines while behaviour is identical.
+fn render(r: &SimReport) -> String {
+    format!(
+        "{}/{} finish={} insts={} ops={} loads={} stores={} fences={} retries={} safe={} \
+         cas={} llc_hits={} llc_miss={} tlb_miss={} tlb_acc={} dram_r={} dram_w={} \
+         dram_rb={} dram_wb={} row_hit={:.6} mlp_mean={:.6} mlp_peak={} micro={} ext_ld={} \
+         ext_st={} mec1={} mec2r={} mec2l={} lvc_ev={} pcie_faults={} events={} peak={}\n",
+        r.mechanism,
+        r.workload,
+        r.finish,
+        r.retired_insts,
+        r.retired_ops,
+        r.loads,
+        r.stores,
+        r.fences,
+        r.twin_retries,
+        r.safe_paths,
+        r.cas_fails,
+        r.llc_hits,
+        r.llc_misses,
+        r.tlb_misses,
+        r.tlb_accesses,
+        r.dram_reads,
+        r.dram_writes,
+        r.dram_read_bytes,
+        r.dram_write_bytes,
+        r.row_hit_rate,
+        r.mlp_mean,
+        r.mlp_peak,
+        r.transform.micro_insts,
+        r.transform.ext_loads,
+        r.transform.ext_stores,
+        r.mec_first_loads,
+        r.mec_second_real,
+        r.mec_second_late,
+        r.lvc_evictions,
+        r.pcie_faults,
+        r.engine_events,
+        r.engine_peak,
+    )
+}
+
+fn corpus() -> String {
+    let mut out = String::new();
+    for cfg in mechanisms() {
+        for &wl in WORKLOADS {
+            let mut cfg = cfg.clone();
+            cfg.cores = 2;
+            let mut spec = RunSpec::smoke(wl);
+            spec.ops_per_core = 4_000;
+            let r = run_spec(&cfg, &spec);
+            assert!(!r.deadlocked, "{}/{} deadlocked", r.mechanism, r.workload);
+            out.push_str(&render(&r));
+        }
+    }
+    out
+}
+
+#[test]
+fn golden_reports_match_snapshot() {
+    let actual = corpus();
+    let update = std::env::var_os("TWINLOAD_GOLDEN_UPDATE").is_some();
+    let expected = if update { None } else { std::fs::read_to_string(SNAP_PATH).ok() };
+    let Some(expected) = expected else {
+        std::fs::write(SNAP_PATH, &actual).expect("write golden snapshot");
+        eprintln!(
+            "golden: wrote {} ({} runs){}",
+            SNAP_PATH,
+            actual.lines().count(),
+            if update { "" } else { " [bootstrap: no snapshot was checked in]" }
+        );
+        return;
+    };
+    if expected == actual {
+        return;
+    }
+    let mut diffs = expected
+        .lines()
+        .zip(actual.lines())
+        .filter(|(e, a)| e != a)
+        .map(|(e, a)| format!("  - {e}\n  + {a}"));
+    let first = diffs.next().unwrap_or_else(|| {
+        format!(
+            "  line counts differ: snapshot {} vs run {}",
+            expected.lines().count(),
+            actual.lines().count()
+        )
+    });
+    let more = diffs.count();
+    panic!(
+        "golden corpus diverged from {SNAP_PATH} ({more} further differing line(s)).\n\
+         First difference:\n{first}\n\
+         If this end-to-end change is intentional, regenerate with `make golden-update` \
+         and commit the snapshot."
+    );
+}
+
+/// The snapshot must be engine-independent: the adaptive calendar and
+/// the reference heap reproduce the frozen corpus bit-for-bit, not just
+/// the default engine that happened to write it.
+#[test]
+fn golden_corpus_is_engine_independent() {
+    use twinload::sim::EngineKind;
+    let mut base = SystemConfig::tl_ooo();
+    base.cores = 2;
+    let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+    spec.ops_per_core = 4_000;
+    let mut lines = Vec::new();
+    for kind in [EngineKind::Calendar, EngineKind::AdaptiveCalendar, EngineKind::ReferenceHeap] {
+        let mut cfg = base.clone();
+        cfg.engine = kind;
+        let r = run_spec(&cfg, &spec);
+        assert!(!r.deadlocked);
+        lines.push(render(&r));
+    }
+    assert_eq!(lines[0], lines[1], "adaptive calendar diverged from calendar");
+    assert_eq!(lines[0], lines[2], "reference heap diverged from calendar");
+}

@@ -155,10 +155,11 @@ fn static_tables_are_paper_faithful() {
     assert!(t5.contains("3963") || t5.contains("3962") || t5.contains("3964"));
 }
 
-/// The calendar event engine is observationally identical to the
-/// reference heap: every mechanism must produce an identical SimReport
-/// under both engines (engine-diagnostic counters excluded — resize and
-/// overflow counts are calendar-specific by construction).
+/// Both calendar event engines (fixed-width and adaptive) are
+/// observationally identical to the reference heap: every mechanism must
+/// produce an identical SimReport under all three engines
+/// (engine-diagnostic counters excluded — resize, overflow, width, and
+/// resample counts are calendar-specific by construction).
 #[test]
 fn event_engines_equivalent_across_all_mechanisms() {
     use twinload::sim::EngineKind;
@@ -172,41 +173,95 @@ fn event_engines_equivalent_across_all_mechanisms() {
         SystemConfig::increased_trl(35 * NS),
     ];
     for base in systems {
-        let mut cal = base.clone();
-        cal.engine = EngineKind::Calendar;
-        let mut heap = base;
+        let mut heap = base.clone();
         heap.engine = EngineKind::ReferenceHeap;
-        let a = run(&cal, WorkloadKind::Gups, 4_000);
         let b = run(&heap, WorkloadKind::Gups, 4_000);
-        let core = |r: &SimReport| {
-            (r.finish, r.retired_insts, r.retired_ops, r.loads, r.stores, r.fences, r.twin_retries)
-        };
-        let memory = |r: &SimReport| {
-            (r.llc_hits, r.llc_misses, r.tlb_misses, r.dram_reads, r.dram_writes, r.mlp_peak)
-        };
-        let mech = |r: &SimReport| {
-            (r.mec_first_loads, r.mec_second_real, r.mec_second_late, r.pcie_faults, r.cas_fails)
-        };
-        assert_eq!(core(&a), core(&b), "{}: core stats diverged", a.mechanism);
-        assert_eq!(memory(&a), memory(&b), "{}: memory stats diverged", a.mechanism);
-        assert_eq!(mech(&a), mech(&b), "{}: mechanism stats diverged", a.mechanism);
-        assert_eq!(
-            a.row_hit_rate.to_bits(),
-            b.row_hit_rate.to_bits(),
-            "{}: row-hit rate diverged",
-            a.mechanism
-        );
-        assert_eq!(
-            a.mlp_mean.to_bits(),
-            b.mlp_mean.to_bits(),
-            "{}: MLP diverged",
-            a.mechanism
-        );
-        // Every event pushed under one engine is pushed under the other.
-        assert_eq!(a.engine_events, b.engine_events, "{}: event count diverged", a.mechanism);
-        assert_eq!(a.engine_peak, b.engine_peak, "{}: occupancy diverged", a.mechanism);
-        assert_eq!(a.engine, "calendar");
         assert_eq!(b.engine, "reference-heap");
+        for kind in [EngineKind::Calendar, EngineKind::AdaptiveCalendar] {
+            let mut cal = base.clone();
+            cal.engine = kind;
+            let a = run(&cal, WorkloadKind::Gups, 4_000);
+            let tag = a.engine;
+            let core = |r: &SimReport| {
+                (
+                    r.finish,
+                    r.retired_insts,
+                    r.retired_ops,
+                    r.loads,
+                    r.stores,
+                    r.fences,
+                    r.twin_retries,
+                )
+            };
+            let memory = |r: &SimReport| {
+                (r.llc_hits, r.llc_misses, r.tlb_misses, r.dram_reads, r.dram_writes, r.mlp_peak)
+            };
+            let mech = |r: &SimReport| {
+                (
+                    r.mec_first_loads,
+                    r.mec_second_real,
+                    r.mec_second_late,
+                    r.pcie_faults,
+                    r.cas_fails,
+                )
+            };
+            assert_eq!(core(&a), core(&b), "{}/{tag}: core stats diverged", a.mechanism);
+            assert_eq!(memory(&a), memory(&b), "{}/{tag}: memory stats diverged", a.mechanism);
+            assert_eq!(mech(&a), mech(&b), "{}/{tag}: mechanism stats diverged", a.mechanism);
+            assert_eq!(
+                a.row_hit_rate.to_bits(),
+                b.row_hit_rate.to_bits(),
+                "{}/{tag}: row-hit rate diverged",
+                a.mechanism
+            );
+            assert_eq!(
+                a.mlp_mean.to_bits(),
+                b.mlp_mean.to_bits(),
+                "{}/{tag}: MLP diverged",
+                a.mechanism
+            );
+            // Every event pushed under one engine is pushed under the
+            // others.
+            assert_eq!(
+                a.engine_events, b.engine_events,
+                "{}/{tag}: event count diverged",
+                a.mechanism
+            );
+            assert_eq!(a.engine_peak, b.engine_peak, "{}/{tag}: occupancy diverged", a.mechanism);
+            assert_eq!(a.engine, kind.name());
+        }
+    }
+}
+
+/// The scheduler policies are observationally identical end to end:
+/// bank-granular invalidation (default), rank-granular, and the
+/// reference scan must produce the same SimReport on a full platform.
+#[test]
+fn sched_policies_equivalent_end_to_end() {
+    use twinload::dram::SchedPolicy;
+    for base in [SystemConfig::tl_ooo(), SystemConfig::ideal()] {
+        let mut reference = base.clone();
+        reference.sched = SchedPolicy::ReferenceScan;
+        let b = run(&reference, WorkloadKind::Gups, 4_000);
+        for policy in [SchedPolicy::BankIndexed, SchedPolicy::RankInval] {
+            let mut cfg = base.clone();
+            cfg.sched = policy;
+            let a = run(&cfg, WorkloadKind::Gups, 4_000);
+            assert_eq!(
+                (a.finish, a.retired_insts, a.llc_misses, a.dram_reads, a.dram_writes),
+                (b.finish, b.retired_insts, b.llc_misses, b.dram_reads, b.dram_writes),
+                "{}/{}: diverged from reference scan",
+                a.mechanism,
+                policy.name()
+            );
+            assert_eq!(
+                a.row_hit_rate.to_bits(),
+                b.row_hit_rate.to_bits(),
+                "{}/{}: row-hit rate diverged",
+                a.mechanism,
+                policy.name()
+            );
+        }
     }
 }
 

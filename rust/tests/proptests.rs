@@ -213,79 +213,149 @@ fn prop_bank_indexed_scheduler_matches_reference_scan() {
 }
 
 #[test]
-fn prop_calendar_engine_matches_reference_heap() {
-    // Differential oracle for the simulator's event queue: the calendar
-    // (bucket) engine must pop the exact same stream — timestamps,
-    // payloads, and same-tick tie-breaks — as the retained binary-heap
-    // engine, under clustered short-horizon pushes, same-tick ties,
-    // far-future refresh-scale events, occasional pushes behind the
-    // drain point, and interleaved push/pop.
+fn prop_calendar_engines_match_reference_heap() {
+    // Differential oracle for the simulator's event queue: both calendar
+    // engines (fixed-width and adaptive) must pop the exact same stream —
+    // timestamps, payloads, and same-tick tie-breaks — as the retained
+    // binary-heap engine, under *drifting event density*: dense
+    // watermark-tripping floods (which open the adaptive engine's
+    // sampling windows), sparse phases with microsecond gaps, same-tick
+    // ties, far-future refresh-scale events, pushes behind the drain
+    // point, and interleaved push/pop runs long enough to complete
+    // sampling windows mid-stream.
+    use std::cell::Cell;
     use twinload::sim::engine::{EngineKind, Ev, EventQueue};
+    let resamples_seen = Cell::new(0u64);
     check("engine-equivalence", cfg(), |rng| {
-        // Vary the bucket width across cases: 1 ps (degenerate), odd,
-        // the DDR3 tick, and coarse enough that many distinct
+        // Vary the seed bucket width across cases: 1 ps (degenerate),
+        // odd, the DDR3 tick, and coarse enough that many distinct
         // timestamps share a bucket.
         let tick = [1u64, 617, 1_250, 20_000][rng.below(4) as usize];
-        let mut cal = EventQueue::with_kind(EngineKind::Calendar, tick);
+        let mut cals = [
+            EventQueue::with_kind(EngineKind::Calendar, tick),
+            EventQueue::with_kind(EngineKind::AdaptiveCalendar, tick),
+        ];
         let mut heap = EventQueue::with_kind(EngineKind::ReferenceHeap, tick);
         let mut now: u64 = 0;
-        let ops = 200 + rng.below(600);
+        // Mean inter-event gap of the current density regime; drifts
+        // over the run (the adaptive engine's reason to exist).
+        let mut gap: u64 = 30_000;
+        fn push_all(cals: &mut [EventQueue; 2], heap: &mut EventQueue, t: u64, ev: Ev) {
+            for c in cals.iter_mut() {
+                c.push(t, ev);
+            }
+            heap.push(t, ev);
+        }
+        let ops = 60 + rng.below(120);
         for _ in 0..ops {
-            if rng.chance(0.55) || cal.is_empty() {
-                for _ in 0..1 + rng.below(8) {
-                    let t = if rng.chance(0.05) {
-                        // Far-future refresh-style event (overflow path).
-                        now + 7_800_000 + rng.below(1_000_000)
-                    } else if rng.chance(0.1) {
-                        // Behind the drain point (cursor regression).
-                        now.saturating_sub(rng.below(50_000))
-                    } else if rng.chance(0.35) {
-                        // Same-tick ties.
-                        now + rng.below(3)
-                    } else {
-                        // Clustered short horizon.
-                        now + rng.below(30_000)
-                    };
-                    let ev = match rng.below(3) {
-                        0 => Ev::CoreWake { core: rng.below(8) as usize },
-                        1 => Ev::Pump { group: rng.below(4) as usize },
-                        _ => Ev::Deliver {
-                            core: rng.below(8) as usize,
-                            line: rng.below(1 << 20) * 64,
-                            data: DataKind::Real,
-                        },
-                    };
-                    cal.push(t, ev);
-                    heap.push(t, ev);
+            match rng.below(10) {
+                0 => {
+                    // Density drift: jump regimes by orders of magnitude.
+                    gap = [2, 500, 30_000, 2_500_000][rng.below(4) as usize];
                 }
-            } else {
-                let (a, b) = (cal.pop(), heap.pop());
-                if a != b {
-                    return Err(format!("pop diverged: {a:?} vs {b:?}"));
+                1 => {
+                    // Flood: enough in-flight events to trip the grow
+                    // watermark (> 2 * 256 buckets) and open a sampling
+                    // window on the adaptive engine.
+                    let n = 600 + rng.below(300);
+                    for _ in 0..n {
+                        now += rng.below(gap.min(200) + 1);
+                        let ev = Ev::CoreWake { core: rng.below(8) as usize };
+                        push_all(&mut cals, &mut heap, now, ev);
+                    }
                 }
-                if let Some(e) = a {
-                    now = now.max(e.t);
+                2..=5 if !heap.is_empty() => {
+                    // Pop run (long enough to complete sampling windows).
+                    let n = 1 + rng.below(64);
+                    for _ in 0..n {
+                        let b = heap.pop();
+                        for c in cals.iter_mut() {
+                            let a = c.pop();
+                            if a != b {
+                                return Err(format!(
+                                    "{:?} pop diverged: {a:?} vs {b:?}",
+                                    c.kind()
+                                ));
+                            }
+                        }
+                        match b {
+                            Some(e) => now = now.max(e.t),
+                            None => break,
+                        }
+                    }
+                }
+                _ => {
+                    // A few pushes in the current regime.
+                    for _ in 0..1 + rng.below(8) {
+                        let t = if rng.chance(0.05) {
+                            // Far-future refresh-style event (overflow).
+                            now + 7_800_000 + rng.below(1_000_000)
+                        } else if rng.chance(0.1) {
+                            // Behind the drain point (cursor regression).
+                            now.saturating_sub(rng.below(50_000))
+                        } else if rng.chance(0.3) {
+                            // Same-tick ties.
+                            now + rng.below(3)
+                        } else {
+                            now + rng.below(2 * gap + 1)
+                        };
+                        let ev = match rng.below(3) {
+                            0 => Ev::CoreWake { core: rng.below(8) as usize },
+                            1 => Ev::Pump { group: rng.below(4) as usize },
+                            _ => Ev::Deliver {
+                                core: rng.below(8) as usize,
+                                line: rng.below(1 << 20) * 64,
+                                data: DataKind::Real,
+                            },
+                        };
+                        push_all(&mut cals, &mut heap, t, ev);
+                    }
                 }
             }
-            if cal.len() != heap.len() {
-                return Err(format!("len diverged: {} vs {}", cal.len(), heap.len()));
+            for c in &cals {
+                if c.len() != heap.len() {
+                    return Err(format!(
+                        "{:?} len diverged: {} vs {}",
+                        c.kind(),
+                        c.len(),
+                        heap.len()
+                    ));
+                }
             }
         }
-        // Drain both to empty; the full residual streams must agree.
+        // Drain all to empty; the full residual streams must agree.
         loop {
-            let (a, b) = (cal.pop(), heap.pop());
-            if a != b {
-                return Err(format!("drain diverged: {a:?} vs {b:?}"));
+            let b = heap.pop();
+            for c in cals.iter_mut() {
+                let a = c.pop();
+                if a != b {
+                    return Err(format!("{:?} drain diverged: {a:?} vs {b:?}", c.kind()));
+                }
             }
-            if a.is_none() {
+            if b.is_none() {
                 break;
             }
         }
-        if !cal.is_empty() || !heap.is_empty() {
-            return Err("queues did not drain".into());
+        for c in &cals {
+            if !c.is_empty() {
+                return Err(format!("{:?} did not drain", c.kind()));
+            }
         }
+        resamples_seen.set(resamples_seen.get() + cals[1].stats().resamples);
         Ok(())
     });
+    // The generator must actually reach the adaptive resampling path
+    // (floods + drift + long pop runs), or the equivalence proof above
+    // is vacuous for the rebucketing code. A single short case may
+    // legitimately never complete a resample, so skip the vacuity check
+    // when the case count is overridden downward for a failure repro
+    // (TWINLOAD_PROP_CASES=1).
+    if cfg().cases >= 16 {
+        assert!(
+            resamples_seen.get() > 0,
+            "no case exercised the adaptive resample path"
+        );
+    }
 }
 
 #[test]
@@ -412,6 +482,280 @@ fn prop_allocator_regions_disjoint() {
                     }
                 }
                 regions.push(r);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_invalidation_granularities_three_way_equivalent() {
+    // Three-way differential oracle for the controller's candidate-cache
+    // invalidation: bank-granular (default) vs the retained rank-granular
+    // stage vs the full-scan reference must produce bit-identical service
+    // streams, wake times, and stats. The generator stresses exactly the
+    // state the bank-granular narrowing reasons about: tFAW/tRRD window
+    // shifts (bank sweeps of closed-bank ACTs across one rank),
+    // read/write turnaround flips (write bursts between read runs), row
+    // hits whose cached column-ready must move with tCCD, and
+    // refresh-spanning idle gaps.
+    check("sched-three-way", cfg(), |rng| {
+        let geo = Geometry::sim_small();
+        let p = TimingParams::ddr3_1600();
+        let mut ctrls = [
+            MemController::with_policy(p, geo, SchedPolicy::ReferenceScan),
+            MemController::with_policy(p, geo, SchedPolicy::BankIndexed),
+            MemController::with_policy(p, geo, SchedPolicy::RankInval),
+        ];
+        let mut txns = Vec::new();
+        let mut t = 0u64;
+        let mut id = 0u64;
+        while txns.len() < 64 {
+            if rng.chance(0.05) {
+                // Refresh-spanning gap.
+                t += p.t_refi * (1 + rng.below(2));
+            }
+            if rng.chance(0.4) {
+                // Bank sweep: 5+ closed-bank ACT candidates on one rank
+                // in a tight window — the 5th+ is tFAW-bound, and every
+                // non-serviced bank's cached ACT-ready must move (or
+                // provably not move) with the window.
+                let rank = rng.below(2) as u32;
+                let row = 1 + rng.below(8) as u32;
+                let sweep = 5 + rng.below(4);
+                for k in 0..sweep {
+                    let addr = DecodedAddr {
+                        channel: 0,
+                        rank,
+                        bank: ((k + rng.below(2)) % 8) as u32,
+                        row,
+                        col: rng.below(128) as u32,
+                    };
+                    txns.push(Transaction {
+                        id,
+                        addr,
+                        is_write: false,
+                        arrive: t + rng.below(40),
+                    });
+                    id += 1;
+                }
+                t += rng.below(200);
+            } else if rng.chance(0.3) {
+                // Write burst on a hot bank: WR→RD turnaround moves the
+                // rank-wide column floors both directions.
+                let rank = rng.below(2) as u32;
+                let bank = rng.below(2) as u32;
+                let burst = 2 + rng.below(4);
+                for _ in 0..burst {
+                    let addr = DecodedAddr {
+                        channel: 0,
+                        rank,
+                        bank,
+                        row: rng.below(4) as u32,
+                        col: rng.below(128) as u32,
+                    };
+                    txns.push(Transaction {
+                        id,
+                        addr,
+                        is_write: rng.chance(0.7),
+                        arrive: t + rng.below(60),
+                    });
+                    id += 1;
+                }
+                t += rng.below(500);
+            } else {
+                // Background traffic: hits, misses, cross-rank.
+                let addr = DecodedAddr {
+                    channel: 0,
+                    rank: rng.below(2) as u32,
+                    bank: rng.below(8) as u32,
+                    row: rng.below(16) as u32,
+                    col: rng.below(128) as u32,
+                };
+                txns.push(Transaction {
+                    id,
+                    addr,
+                    is_write: rng.chance(0.3),
+                    arrive: t,
+                });
+                id += 1;
+                t += rng.below(150);
+            }
+        }
+        txns.sort_by_key(|x| (x.arrive, x.id));
+
+        let mut now = 0u64;
+        let mut next = 0usize;
+        let mut bufs = [Vec::new(), Vec::new(), Vec::new()];
+        for _ in 0..100_000 {
+            while next < txns.len() && txns[next].arrive <= now {
+                for c in ctrls.iter_mut() {
+                    c.enqueue(txns[next]);
+                }
+                next += 1;
+            }
+            let mut wake = None;
+            for (i, c) in ctrls.iter_mut().enumerate() {
+                bufs[i].clear();
+                let w = c.pump(now, &mut bufs[i]);
+                if i == 0 {
+                    wake = w;
+                } else if w != wake {
+                    return Err(format!(
+                        "{} wake diverged at {now}: {w:?} vs {wake:?}",
+                        c.policy().name()
+                    ));
+                }
+            }
+            for i in 1..3 {
+                if bufs[i].len() != bufs[0].len() {
+                    return Err(format!(
+                        "{} count diverged at {now}: {} vs {}",
+                        ctrls[i].policy().name(),
+                        bufs[i].len(),
+                        bufs[0].len()
+                    ));
+                }
+                for (a, b) in bufs[i].iter().zip(bufs[0].iter()) {
+                    let ka = (a.id, a.col_cmd_at, a.data_start, a.data_end, a.row_hit);
+                    let kb = (b.id, b.col_cmd_at, b.data_start, b.data_end, b.row_hit);
+                    if ka != kb {
+                        return Err(format!(
+                            "{} service diverged at {now}: {ka:?} vs {kb:?}",
+                            ctrls[i].policy().name()
+                        ));
+                    }
+                }
+            }
+            let horizon = match (wake, next < txns.len()) {
+                (Some(w), true) => w.min(txns[next].arrive),
+                (Some(w), false) => w,
+                (None, true) => txns[next].arrive,
+                (None, false) => break,
+            };
+            now = horizon.max(now + 1);
+        }
+        for c in &ctrls {
+            if c.queue_len() != 0 {
+                return Err(format!("{} did not quiesce", c.policy().name()));
+            }
+            if c.stats.row_hits != ctrls[0].stats.row_hits
+                || c.stats.row_misses != ctrls[0].stats.row_misses
+                || c.stats.row_conflicts != ctrls[0].stats.row_conflicts
+            {
+                return Err(format!("{} stats diverged", c.policy().name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_config_ini_round_trips_and_rejects() {
+    // The INI parser and `apply` had no property coverage: generate
+    // random-but-valid [system]/[run] files (random key order, spacing,
+    // comments, engine=/sched= values), assert every field round-trips
+    // through parse+apply, then corrupt the file (unknown key, bogus
+    // enum value, malformed line) and assert rejection.
+    use twinload::config::parser::{apply, Ini};
+    use twinload::config::{RunSpec, SystemConfig};
+    use twinload::dram::SchedPolicy;
+    use twinload::sim::engine::EngineKind;
+    use twinload::workloads::ALL_WORKLOADS;
+    check("config-roundtrip", cfg(), |rng| {
+        let mech = ["ideal", "tl-ooo", "tl-lf", "tl-lf-batched", "numa", "pcie", "inc-trl"]
+            [rng.below(7) as usize];
+        let engine = ["calendar", "adaptive-calendar", "reference-heap"][rng.below(3) as usize];
+        let sched = ["bank-indexed", "rank-inval", "reference-scan"][rng.below(3) as usize];
+        let cores = 1 + rng.below(8);
+        let mshrs = 1 + rng.below(16);
+        let wl = ALL_WORKLOADS[rng.below(ALL_WORKLOADS.len() as u64) as usize];
+        let ops = 1 + rng.below(1_000_000);
+        let seed = rng.below(1 << 40);
+        let footprint_mb = 1 + rng.below(256);
+
+        // Random decoration: spacing around '=', optional comments.
+        let kv = |k: &str, v: String, rng: &mut twinload::util::Rng| {
+            let pad = ["", " ", "  "][rng.below(3) as usize];
+            let comment = if rng.chance(0.3) { " # c" } else { "" };
+            format!("{k}{pad}={pad}{v}{comment}\n")
+        };
+        let mut sys_keys = vec![
+            kv("mechanism", mech.to_string(), rng),
+            kv("engine", engine.to_string(), rng),
+            kv("sched", sched.to_string(), rng),
+            kv("cores", cores.to_string(), rng),
+            kv("mshrs", mshrs.to_string(), rng),
+        ];
+        rng.shuffle(&mut sys_keys);
+        let mut run_keys = vec![
+            kv("workload", wl.name().to_string(), rng),
+            kv("ops", ops.to_string(), rng),
+            kv("seed", seed.to_string(), rng),
+            kv("footprint_mb", footprint_mb.to_string(), rng),
+        ];
+        rng.shuffle(&mut run_keys);
+        let mut text = String::from("# generated\n[system]\n");
+        for k in &sys_keys {
+            text.push_str(k);
+            if rng.chance(0.2) {
+                text.push('\n'); // blank lines between keys
+            }
+        }
+        text.push_str("[run]\n");
+        for k in &run_keys {
+            text.push_str(k);
+        }
+
+        let ini = Ini::parse(&text).map_err(|e| format!("parse failed: {e}\n{text}"))?;
+        let mut cfg = SystemConfig::ideal();
+        let mut spec = RunSpec::smoke(*ALL_WORKLOADS.first().expect("workloads"));
+        apply(&ini, &mut cfg, &mut spec).map_err(|e| format!("apply failed: {e}\n{text}"))?;
+
+        if cfg.mechanism.name() != mech {
+            return Err(format!("mechanism lost: {} vs {mech}", cfg.mechanism.name()));
+        }
+        if EngineKind::by_name(engine) != Some(cfg.engine) {
+            return Err(format!("engine lost: {:?} vs {engine}", cfg.engine));
+        }
+        if SchedPolicy::by_name(sched) != Some(cfg.sched) {
+            return Err(format!("sched lost: {:?} vs {sched}", cfg.sched));
+        }
+        if cfg.cores as u64 != cores || cfg.mshrs_per_core as u64 != mshrs {
+            return Err("numeric [system] key lost".into());
+        }
+        if spec.workload != wl
+            || spec.ops_per_core != ops
+            || spec.seed != seed
+            || spec.footprint != footprint_mb << 20
+        {
+            return Err("numeric [run] key lost".into());
+        }
+
+        // Corruptions must be rejected, not silently absorbed.
+        let bad_key = format!("{text}unheard_of_key = 1\n");
+        let bad_ini = Ini::parse(&bad_key).map_err(|e| format!("bad-key parse: {e}"))?;
+        if apply(&bad_ini, &mut cfg, &mut spec).is_ok() {
+            return Err("unknown [run] key accepted".into());
+        }
+        let bad_enum = ["engine", "sched", "mechanism", "workload"][rng.below(4) as usize];
+        let section = if bad_enum == "workload" { "[run]" } else { "[system]" };
+        let bad_val = format!("{section}\n{bad_enum} = definitely-not-a-{bad_enum}\n");
+        let bad_ini = Ini::parse(&bad_val).map_err(|e| format!("bad-enum parse: {e}"))?;
+        if apply(&bad_ini, &mut cfg, &mut spec).is_ok() {
+            return Err(format!("bogus {bad_enum} value accepted"));
+        }
+        // Malformed lines: glued onto the [run] section so an "empty
+        // key" survives parsing only to be rejected by apply.
+        let malformed =
+            ["[unterminated\n", "key_without_value\n", "= v\n"][rng.below(3) as usize];
+        let glued = format!("{text}{malformed}");
+        match Ini::parse(&glued) {
+            Err(_) => {}
+            Ok(ini) => {
+                if apply(&ini, &mut cfg, &mut spec).is_ok() {
+                    return Err(format!("malformed line accepted: {malformed:?}"));
+                }
             }
         }
         Ok(())
