@@ -6,8 +6,9 @@
 //! Every optimized engine/policy is benched next to its retained
 //! reference implementation (`… [calendar]` / `… [adaptive]` vs
 //! `… [ref-heap]`, `… [bank-indexed]` / `… [rank-inval]` vs
-//! `… [ref-scan]`), so the before/after ratio is read directly off one
-//! run and the CI perf gate can enforce it.
+//! `… [ref-scan]`, `… [frontend]` vs `… [frontend-ref]`), so the
+//! before/after ratio is read directly off one run and the CI perf gate
+//! can enforce it.
 //!
 //! Emits a human table on stdout and a machine-readable
 //! `BENCH_hotpath.json` at the repo root so the perf trajectory can be
@@ -25,6 +26,7 @@ use twinload::coordinator::fastpath;
 use twinload::dram::address::DecodedAddr;
 use twinload::dram::timing::{Geometry, TimingParams};
 use twinload::dram::{MemController, SchedPolicy, ServiceResult, Transaction};
+use twinload::cpu::FrontEnd;
 use twinload::sim::engine::{EngineKind, Ev, EventQueue};
 use twinload::sim::run_spec;
 use twinload::twinload::Mechanism;
@@ -240,6 +242,29 @@ fn main() {
             cfg.engine = engine;
             let total_ops = ops * cfg.cores as u64;
             let row_name = format!("{name}{engine_tag}");
+            timeit(&mut rows, &row_name, total_ops as f64, "logical-op", trials, || {
+                bench_sim(wl, &cfg, ops);
+            });
+        }
+    }
+
+    // Front-end pair: the slab issue/complete path vs the retained
+    // map-based reference, end to end on the same workloads (default
+    // engine/sched so the row isolates the front-end change).
+    for (fe_tag, fe) in [
+        (" [frontend]", FrontEnd::Slab),
+        (" [frontend-ref]", FrontEnd::Reference),
+    ] {
+        for (name, wl, cfg) in [
+            ("sim ideal/gups", WorkloadKind::Gups, SystemConfig::ideal()),
+            ("sim tl-ooo/gups", WorkloadKind::Gups, SystemConfig::tl_ooo()),
+            ("sim tl-ooo/memcached", WorkloadKind::Memcached, SystemConfig::tl_ooo()),
+        ] {
+            let mut cfg = cfg;
+            cfg.cores = 4;
+            cfg.frontend = fe;
+            let total_ops = ops * cfg.cores as u64;
+            let row_name = format!("{name}{fe_tag}");
             timeit(&mut rows, &row_name, total_ops as f64, "logical-op", trials, || {
                 bench_sim(wl, &cfg, ops);
             });

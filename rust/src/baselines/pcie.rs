@@ -9,7 +9,7 @@
 //! bench applies the same compensation.
 
 use crate::util::time::{Ps, NS};
-use std::collections::HashMap;
+use crate::util::FastMap;
 
 /// Default page size (matches the TLB model).
 pub const PAGE_BYTES: u64 = 4 << 10;
@@ -29,8 +29,12 @@ pub enum SwapOutcome {
 pub struct PcieSwap {
     /// Local frame budget in pages.
     capacity: usize,
-    /// page number -> LRU stamp.
-    resident: HashMap<u64, u64>,
+    /// page number -> LRU stamp. Keyed by the fast integer hasher (the
+    /// last std-hasher map on a simulated path); LRU stamps are unique
+    /// (one clock tick per access), so the victim scan's result is
+    /// independent of iteration order and the hasher swap is
+    /// behavior-preserving.
+    resident: FastMap<u64, u64>,
     clock: u64,
     /// Swap service time per page (paper: 7.8 µs).
     pub swap_cost: Ps,
@@ -45,7 +49,7 @@ impl PcieSwap {
         assert!(capacity_pages > 0);
         PcieSwap {
             capacity: capacity_pages,
-            resident: HashMap::with_capacity(capacity_pages * 2),
+            resident: FastMap::with_capacity_and_hasher(capacity_pages * 2, Default::default()),
             clock: 0,
             swap_cost,
             next_free: 0,

@@ -4,7 +4,7 @@
 pub mod parser;
 
 use crate::cache::CacheConfig;
-use crate::cpu::CoreParams;
+use crate::cpu::{CoreParams, FrontEnd};
 use crate::dram::timing::{Geometry, TimingParams, QPI_EXTRA_NS};
 use crate::dram::SchedPolicy;
 use crate::mec::MecConfig;
@@ -54,6 +54,10 @@ pub struct SystemConfig {
     /// rank-granular and full-scan variants are retained for
     /// differential testing and benchmarking).
     pub sched: SchedPolicy,
+    /// Front-end request-tracking implementation (generational slabs +
+    /// intrusive waiter chains by default; the map-based path is retained
+    /// for differential testing and benchmarking).
+    pub frontend: FrontEnd,
     /// Content model for the TL extended channel. `true` (default)
     /// reproduces the paper's emulation (§5): extended-space lines carry
     /// real values and shadow-space lines fake ones, unconditionally —
@@ -94,6 +98,7 @@ impl SystemConfig {
             trl_extra: 0,
             engine: EngineKind::Calendar,
             sched: SchedPolicy::BankIndexed,
+            frontend: FrontEnd::Slab,
             emulate_content: true,
             l1_lat: 1_600,      // 4 cycles @ 2.5 GHz
             llc_lat: 14 * NS,   // ~35 cycles
@@ -245,6 +250,12 @@ mod tests {
         );
         let g_mec = c.mec_channel_geometry();
         assert_eq!(g_mec.capacity_bytes(), 2 * c.layout.ext_size);
+    }
+
+    #[test]
+    fn frontend_defaults_to_slab() {
+        assert_eq!(SystemConfig::ideal().frontend, FrontEnd::Slab);
+        assert_eq!(FrontEnd::by_name("reference"), Some(FrontEnd::Reference));
     }
 
     #[test]

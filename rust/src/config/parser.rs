@@ -117,6 +117,10 @@ pub fn apply(
                     cfg.sched = crate::dram::SchedPolicy::by_name(v)
                         .ok_or_else(|| format!("unknown sched policy '{v}'"))?
                 }
+                "frontend" => {
+                    cfg.frontend = crate::cpu::FrontEnd::by_name(v)
+                        .ok_or_else(|| format!("unknown frontend '{v}'"))?
+                }
                 other => return Err(format!("unknown [system] key '{other}'")),
             }
         }
@@ -200,6 +204,21 @@ mod tests {
         apply(&ini, &mut cfg, &mut spec).unwrap();
         assert_eq!(cfg.sched, SchedPolicy::ReferenceScan);
         let bad = Ini::parse("[system]\nsched = bogus\n").unwrap();
+        assert!(apply(&bad, &mut cfg, &mut spec).is_err());
+    }
+
+    #[test]
+    fn frontend_key_selects_request_tracking() {
+        use crate::cpu::FrontEnd;
+        let ini = Ini::parse("[system]\nfrontend = reference\n").unwrap();
+        let mut cfg = SystemConfig::ideal();
+        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+        apply(&ini, &mut cfg, &mut spec).unwrap();
+        assert_eq!(cfg.frontend, FrontEnd::Reference);
+        let back = Ini::parse("[system]\nfrontend = slab\n").unwrap();
+        apply(&back, &mut cfg, &mut spec).unwrap();
+        assert_eq!(cfg.frontend, FrontEnd::Slab);
+        let bad = Ini::parse("[system]\nfrontend = bogus\n").unwrap();
         assert!(apply(&bad, &mut cfg, &mut spec).is_err());
     }
 

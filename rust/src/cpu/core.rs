@@ -11,6 +11,7 @@
 //! * twin-pair content checking with software retry and the safe path
 //!   (§4.4, §4.5) → correctness under all Table-2 cache states.
 
+use super::frontend::{BoardRing, FrontEnd, PairRing, ReqSeqTable, BOARD_WINDOW};
 use super::trace::{AccessKind, MemAccess, MicroOp, OpSource};
 use crate::cache::DataKind;
 use crate::util::time::Ps;
@@ -134,8 +135,6 @@ struct LogicalBoard {
     inserts: u64,
 }
 
-const BOARD_WINDOW: u64 = 4096;
-
 impl LogicalBoard {
     fn resolve(&mut self, logical: u64, at: Ps) {
         self.map.insert(logical, at);
@@ -164,9 +163,15 @@ pub struct Core {
     head_seq: u64,
     frontend_ready: Ps,
     was_full: bool,
+    /// Which bookkeeping implementation backs the board / pairs / request
+    /// tracking below (only one side of each pair is ever populated).
+    fe: FrontEnd,
     board: LogicalBoard,
+    board_ring: BoardRing,
     pairs: FastMap<u64, PairState>,
+    pair_ring: PairRing,
     req_map: FastMap<u64, u64>,
+    req_seqs: ReqSeqTable,
     stall_until: Ps,
     source_done: bool,
     /// Sequence numbers of Waiting memory slots, in fetch order — the
@@ -180,16 +185,29 @@ pub struct Core {
 }
 
 impl Core {
+    /// Reference (map-based) core — the historical default; tests and
+    /// standalone users keep this constructor.
     pub fn new(p: CoreParams) -> Core {
+        Core::with_frontend(p, FrontEnd::Reference)
+    }
+
+    /// Core with an explicit front-end implementation. Only the selected
+    /// side's structures are sized; the other stays empty.
+    pub fn with_frontend(p: CoreParams, fe: FrontEnd) -> Core {
+        let slab = fe == FrontEnd::Slab;
         Core {
             p,
             rob: VecDeque::with_capacity(p.rob_size),
             head_seq: 0,
             frontend_ready: 0,
             was_full: false,
+            fe,
             board: LogicalBoard::default(),
+            board_ring: if slab { BoardRing::new() } else { BoardRing::default() },
             pairs: FastMap::default(),
+            pair_ring: if slab { PairRing::new(p.rob_size) } else { PairRing::default() },
             req_map: FastMap::default(),
+            req_seqs: ReqSeqTable::default(),
             stall_until: 0,
             source_done: false,
             waiting: VecDeque::with_capacity(64),
@@ -225,22 +243,33 @@ impl Core {
                 ),
             },
         };
+        let (pairs, reqs) = match self.fe {
+            FrontEnd::Reference => (self.pairs.len(), self.req_map.len()),
+            FrontEnd::Slab => (self.pair_ring.len(), self.req_seqs.len()),
+        };
         format!(
-            "rob={} head=[{}] src_done={} pairs={} reqs={} stall_until={}",
+            "rob={} head=[{}] src_done={} pairs={pairs} reqs={reqs} stall_until={}",
             self.rob.len(),
             head,
             self.source_done,
-            self.pairs.len(),
-            self.req_map.len(),
             self.stall_until
         )
+    }
+
+    /// Record the resolution time of a logical load's value.
+    #[inline]
+    fn board_resolve(&mut self, logical: u64, at: Ps) {
+        match self.fe {
+            FrontEnd::Reference => self.board.resolve(logical, at),
+            FrontEnd::Slab => self.board_ring.resolve(logical, at),
+        }
     }
 
     fn fetch_cost(&self, insts: u32) -> Ps {
         (insts as u64 * self.p.period) / self.p.fetch_per_cycle as u64
     }
 
-    fn fill(&mut self, now: Ps, source: &mut dyn OpSource) {
+    fn fill<S: OpSource + ?Sized>(&mut self, now: Ps, source: &mut S) {
         if self.was_full && self.rob.len() < self.p.rob_size {
             // Frontend resumed after a full window: it cannot have fetched
             // in the past.
@@ -277,7 +306,7 @@ impl Core {
 
     /// Issue ready memory ops / resolve fences. Returns
     /// `(made_progress, earliest_future_ready)`.
-    fn issue(&mut self, now: Ps, port: &mut dyn MemoryPort) -> (bool, Option<Ps>) {
+    fn issue<P: MemoryPort + ?Sized>(&mut self, now: Ps, port: &mut P) -> (bool, Option<Ps>) {
         if self.fences_in_rob == 0 {
             return self.issue_fast(now, port);
         }
@@ -286,7 +315,7 @@ impl Core {
 
     /// Fence-free fast path: only Waiting slots are visited, via the
     /// `waiting` index (fetch order preserved, matching the full scan).
-    fn issue_fast(&mut self, now: Ps, port: &mut dyn MemoryPort) -> (bool, Option<Ps>) {
+    fn issue_fast<P: MemoryPort + ?Sized>(&mut self, now: Ps, port: &mut P) -> (bool, Option<Ps>) {
         let mut progressed = false;
         let mut wake: Option<Ps> = None;
         let mut done_events: Vec<(u64, Ps, DataKind)> = Vec::new();
@@ -303,9 +332,14 @@ impl Core {
                 unreachable!("waiting index points at a non-mem slot")
             };
             debug_assert!(matches!(state, MemState::Waiting));
+            // Field-level dispatch (a method call would re-borrow self
+            // while the ROB slot borrow is live).
             let dep_ready = match acc.dep_on {
                 None => Some(0),
-                Some(l) => self.board.ready_at(l),
+                Some(l) => match self.fe {
+                    FrontEnd::Reference => self.board.ready_at(l),
+                    FrontEnd::Slab => self.board_ring.ready_at(l),
+                },
             };
             let Some(dep_t) = dep_ready else {
                 self.waiting_scratch.push_back(seq);
@@ -327,7 +361,12 @@ impl Core {
                 }
                 IssueResult::Pending { req_id } => {
                     *state = MemState::Issued;
-                    self.req_map.insert(req_id, seq);
+                    match self.fe {
+                        FrontEnd::Reference => {
+                            self.req_map.insert(req_id, seq);
+                        }
+                        FrontEnd::Slab => self.req_seqs.set(req_id, seq),
+                    }
                     progressed = true;
                 }
                 IssueResult::Stall { retry_at } => {
@@ -348,7 +387,7 @@ impl Core {
     /// Full ordered scan (fences present): resolves fences against prior
     /// memory completion and enforces the issue barrier. Rebuilds the
     /// waiting index as it goes.
-    fn issue_full(&mut self, now: Ps, port: &mut dyn MemoryPort) -> (bool, Option<Ps>) {
+    fn issue_full<P: MemoryPort + ?Sized>(&mut self, now: Ps, port: &mut P) -> (bool, Option<Ps>) {
         self.waiting.clear();
         let mut progressed = false;
         let mut wake: Option<Ps> = None;
@@ -363,6 +402,12 @@ impl Core {
         let mut barrier: Option<Ps> = None;
 
         let mut done_events: Vec<(u64, Ps, DataKind)> = Vec::new();
+        // Set when an MSHR stall aborts the scan: index past the stalled
+        // slot, from which the waiting index must be rebuilt, and the
+        // stall's dominating wake time (applied after the scan, once the
+        // `add_wake` closure's borrow of `wake` has ended).
+        let mut stalled_after: Option<usize> = None;
+        let mut stall_wake: Option<Ps> = None;
         'scan: for (i, slot) in self.rob.iter_mut().enumerate() {
             let seq = self.head_seq + i as u64;
             match &mut slot.kind {
@@ -397,7 +442,10 @@ impl Core {
                         }
                         let dep_ready = match acc.dep_on {
                             None => Some(0),
-                            Some(l) => self.board.ready_at(l),
+                            Some(l) => match self.fe {
+                                FrontEnd::Reference => self.board.ready_at(l),
+                                FrontEnd::Slab => self.board_ring.ready_at(l),
+                            },
                         };
                         let Some(dep_t) = dep_ready else {
                             self.waiting.push_back(seq);
@@ -418,7 +466,12 @@ impl Core {
                             }
                             IssueResult::Pending { req_id } => {
                                 *state = MemState::Issued;
-                                self.req_map.insert(req_id, seq);
+                                match self.fe {
+                                    FrontEnd::Reference => {
+                                        self.req_map.insert(req_id, seq);
+                                    }
+                                    FrontEnd::Slab => self.req_seqs.set(req_id, seq),
+                                }
                                 prior_mem_done = None;
                                 progressed = true;
                             }
@@ -430,17 +483,9 @@ impl Core {
                                 // dominates all finer-grained fetch wakes:
                                 // nothing can issue until a completion (which
                                 // re-advances us) or the retry time.
-                                wake = Some(retry_at);
+                                stall_wake = Some(retry_at);
                                 self.waiting.push_back(seq);
-                                // Remaining Waiting slots must stay indexed.
-                                for (j, s) in self.rob.iter().enumerate().skip(i + 1) {
-                                    if matches!(
-                                        s.kind,
-                                        SlotKind::Mem { state: MemState::Waiting, .. }
-                                    ) {
-                                        self.waiting.push_back(self.head_seq + j as u64);
-                                    }
-                                }
+                                stalled_after = Some(i + 1);
                                 break 'scan;
                             }
                         }
@@ -450,6 +495,19 @@ impl Core {
                         prior_mem_done = prior_mem_done.map(|t| t.max(*at));
                     }
                 },
+            }
+        }
+        if let Some(t) = stall_wake {
+            // The stall dominates any finer-grained wake collected above.
+            wake = Some(t);
+        }
+        if let Some(start) = stalled_after {
+            // Remaining Waiting slots must stay indexed (done here, after
+            // the scan's mutable ROB borrow has ended).
+            for (j, s) in self.rob.iter().enumerate().skip(start) {
+                if matches!(s.kind, SlotKind::Mem { state: MemState::Waiting, .. }) {
+                    self.waiting.push_back(self.head_seq + j as u64);
+                }
             }
         }
         for (seq, at, data) in done_events {
@@ -469,7 +527,7 @@ impl Core {
             AccessKind::Load => {
                 self.stats.loads += 1;
                 match acc.pair {
-                    None => self.board.resolve(acc.logical, at),
+                    None => self.board_resolve(acc.logical, at),
                     Some(p) => {
                         if let Some(late) = self.twin_done(p, &acc, at, data) {
                             // The software retry also delays this load's
@@ -496,15 +554,15 @@ impl Core {
                     // DESIGN.md §Retry-modeling).
                     self.stats.cas_fails += 1;
                     self.charge_retry();
-                    self.board.resolve(acc.logical, at + self.p.retry_penalty);
+                    self.board_resolve(acc.logical, at + self.p.retry_penalty);
                 } else {
-                    self.board.resolve(acc.logical, at);
+                    self.board_resolve(acc.logical, at);
                 }
             }
             AccessKind::Invalidate => {}
             AccessKind::SafePath => {
                 self.stats.loads += 1;
-                self.board.resolve(acc.logical, at);
+                self.board_resolve(acc.logical, at);
             }
         }
     }
@@ -518,37 +576,48 @@ impl Core {
         at: Ps,
         data: DataKind,
     ) -> Option<Ps> {
-        let entry = self.pairs.entry(pair).or_insert(PairState {
-            logical: acc.logical,
-            first: None,
-        });
-        match entry.first {
-            None => {
-                entry.first = Some((at, data));
-                None
-            }
-            Some((t0, d0)) => {
-                let resolved_at = t0.max(at);
-                let got_real = d0.is_real() || data.is_real();
-                let logical = entry.logical;
-                self.pairs.remove(&pair);
-                if got_real {
-                    self.board.resolve(logical, resolved_at);
-                    None
-                } else {
-                    // Table 2 state 4 (or a too-late second load): the
-                    // inlined handler invalidates both lines, fences, and
-                    // twin-loads again — charged as a lump penalty. A
-                    // repeat failure (possible only if the true value
-                    // equals the fake pattern) would take the §4.5 safe
-                    // path, which the penalty's upper bound also covers.
-                    self.stats.twin_retries += 1;
-                    self.charge_retry();
-                    let done = resolved_at + self.p.retry_penalty;
-                    self.board.resolve(logical, done);
-                    Some(done)
+        // First twin: record and wait. Second twin: detach the pair state
+        // (both twins share `logical`, so recording either is identical).
+        let second = match self.fe {
+            FrontEnd::Reference => {
+                let entry = self.pairs.entry(pair).or_insert(PairState {
+                    logical: acc.logical,
+                    first: None,
+                });
+                match entry.first {
+                    None => {
+                        entry.first = Some((at, data));
+                        None
+                    }
+                    Some((t0, d0)) => {
+                        let logical = entry.logical;
+                        self.pairs.remove(&pair);
+                        Some((t0, d0.is_real(), logical))
+                    }
                 }
             }
+            FrontEnd::Slab => self.pair_ring.observe(pair, acc.logical, at, data.is_real()),
+        };
+        let Some((t0, first_real, logical)) = second else {
+            return None;
+        };
+        let resolved_at = t0.max(at);
+        let got_real = first_real || data.is_real();
+        if got_real {
+            self.board_resolve(logical, resolved_at);
+            None
+        } else {
+            // Table 2 state 4 (or a too-late second load): the
+            // inlined handler invalidates both lines, fences, and
+            // twin-loads again — charged as a lump penalty. A
+            // repeat failure (possible only if the true value
+            // equals the fake pattern) would take the §4.5 safe
+            // path, which the penalty's upper bound also covers.
+            self.stats.twin_retries += 1;
+            self.charge_retry();
+            let done = resolved_at + self.p.retry_penalty;
+            self.board_resolve(logical, done);
+            Some(done)
         }
     }
 
@@ -590,8 +659,15 @@ impl Core {
     /// Platform callback: the memory request `req_id` completed at `at`
     /// with content `data`. Returns true if the core should be re-advanced.
     pub fn complete(&mut self, req_id: u64, at: Ps, data: DataKind) -> bool {
-        let Some(seq) = self.req_map.remove(&req_id) else {
-            return false;
+        let seq = match self.fe {
+            FrontEnd::Reference => match self.req_map.remove(&req_id) {
+                Some(seq) => seq,
+                None => return false,
+            },
+            FrontEnd::Slab => match self.req_seqs.take(req_id) {
+                Some(seq) => seq,
+                None => return false,
+            },
         };
         let idx = (seq - self.head_seq) as usize;
         match &mut self.rob[idx].kind {
@@ -604,11 +680,11 @@ impl Core {
 
     /// Drive the core at `now`. Returns the next time-based wake, or None
     /// when progress depends only on memory completions (or it finished).
-    pub fn advance(
+    pub fn advance<S: OpSource + ?Sized, P: MemoryPort + ?Sized>(
         &mut self,
         now: Ps,
-        source: &mut dyn OpSource,
-        port: &mut dyn MemoryPort,
+        source: &mut S,
+        port: &mut P,
     ) -> Option<Ps> {
         // Fixpoint loop; the final (unproductive) issue() scan already
         // computes the earliest future-ready wake, so no extra scan is
@@ -894,5 +970,90 @@ mod tests {
         assert!(stats.finish >= 50 * NS);
         assert_eq!(stats.retired_ops, 2);
         assert_eq!(stats.retired_insts, 5);
+    }
+
+    /// Both front ends must produce bit-identical core behavior on the
+    /// same micro-op stream and memory timing — including twin retries,
+    /// CAS failures, fences, and dependency stalls.
+    #[test]
+    fn slab_frontend_matches_reference_core() {
+        use crate::cpu::FrontEnd;
+        let scenarios: Vec<(Vec<MicroOp>, Vec<u64>)> = vec![
+            // Twin pair resolving real (shadow fake), dependent load.
+            (
+                vec![
+                    MicroOp::Mem(MemAccess::load(0, 0).with_pair(7)),
+                    MicroOp::Mem(MemAccess::load(1 << 20, 0).with_pair(7)),
+                    MicroOp::Compute(8),
+                    MicroOp::Mem(MemAccess::load(128, 1).with_dep(Some(0))),
+                ],
+                vec![1 << 20],
+            ),
+            // Both-fake pair: software retry path.
+            (
+                vec![
+                    MicroOp::Mem(MemAccess::load(64, 0).with_pair(3)),
+                    MicroOp::Mem(MemAccess::load(1 << 20, 0).with_pair(3)),
+                    MicroOp::Mem(MemAccess::load(4 << 20, 1).with_dep(Some(0))),
+                ],
+                vec![64, 1 << 20],
+            ),
+            // Fenced loads + CAS store seeing fake data + safe path.
+            (
+                vec![
+                    MicroOp::Mem(MemAccess::load(0, 0)),
+                    MicroOp::Fence,
+                    MicroOp::Mem(MemAccess::store(0, 1)),
+                    MicroOp::Mem(MemAccess {
+                        vaddr: 256,
+                        kind: AccessKind::SafePath,
+                        logical: 2,
+                        dep_on: Some(1),
+                        pair: None,
+                        retry: false,
+                    }),
+                    MicroOp::Compute(40),
+                ],
+                vec![0],
+            ),
+        ];
+        for (ops, fakes) in scenarios {
+            let mut results = Vec::new();
+            for fe in [FrontEnd::Reference, FrontEnd::Slab] {
+                let mut core = Core::with_frontend(CoreParams::xeon(), fe);
+                let mut src = ops.clone().into_iter();
+                let mut mem = MockMem::new(100 * NS, 4);
+                mem.fake_addrs = fakes.clone();
+                let mut now = 0;
+                for _ in 0..100_000 {
+                    let wake = core.advance(now, &mut src, &mut mem);
+                    if core.finished() {
+                        break;
+                    }
+                    let next = match (wake, mem.next_event()) {
+                        (Some(a), Some(b)) => a.min(b),
+                        (Some(a), None) => a,
+                        (None, Some(b)) => b,
+                        (None, None) => panic!("deadlock"),
+                    };
+                    now = next;
+                    mem.deliver(now, &mut core);
+                }
+                assert!(core.finished(), "{fe:?} did not finish");
+                let s = core.stats;
+                results.push((
+                    s.finish,
+                    s.retired_insts,
+                    s.retired_ops,
+                    s.loads,
+                    s.stores,
+                    s.fences,
+                    s.twin_retries,
+                    s.cas_fails,
+                    s.safe_paths,
+                ));
+            }
+            assert_eq!(results[0], results[1], "front ends diverged on {ops:?}");
+        }
     }
 }

@@ -1,0 +1,671 @@
+//! Allocation-free front-end bookkeeping: slab transaction tracking and
+//! intrusive waiter chains.
+//!
+//! PRs 1–3 made the memory-side hot loops (FR-FCFS candidate scan, event
+//! queue) allocation-free; this module does the same for the per-access
+//! *front end* — the paper's premise is that twin-load's software path
+//! stays viable only while per-request bookkeeping costs "a few extra
+//! instructions" (§4.4), and the simulator should be no worse. Request
+//! ids become `{tag, index}` handles into dense slabs, so `complete` is
+//! an array index instead of a hash probe, and per-line waiter lists
+//! become intrusive next-links threaded through the request slab instead
+//! of heap-allocated `Vec`s.
+//!
+//! The map-based implementations are retained behind
+//! [`FrontEnd::Reference`] (selected via `SystemConfig.frontend`, CLI
+//! `--frontend`, or INI `frontend=`), following the
+//! `SchedPolicy`/`EngineKind` convention: the optimized default is proven
+//! bit-identical by the `frontend-equivalence` differential proptest and
+//! the all-mechanism `SimReport` equivalence test.
+//!
+//! ## Handle encoding and determinism
+//!
+//! The DRAM controller tie-breaks co-arriving transactions by `(arrive,
+//! id)`, so transaction *id order* is behaviorally significant. Slab
+//! handles therefore pack a monotonically increasing submit counter into
+//! the high 32 bits (`id = counter << 32 | slot`): relative id order is
+//! identical to the reference path's sequential ids, the low bits give
+//! O(1) completion, and the full id doubles as an ABA tag — a stale
+//! handle can never alias a recycled slot because the stored id differs.
+
+use crate::util::time::Ps;
+
+/// Sentinel for "no slot" in intrusive links.
+pub const NIL: u32 = u32::MAX;
+
+/// Resolved-value scoreboard window (shared by the map-based
+/// `LogicalBoard` and the ring-based [`BoardRing`] so both prune on the
+/// same cadence and stay observationally identical).
+pub(crate) const BOARD_WINDOW: u64 = 4096;
+
+/// Which front-end implementation tracks in-flight requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrontEnd {
+    /// Generational slabs + intrusive waiter chains (default): the
+    /// steady-state issue/complete path performs zero heap allocations
+    /// and zero hash probes.
+    Slab,
+    /// The retained map-based path (`FastMap` pending/waiters/pairs/
+    /// req_map), kept for differential testing and benchmarking.
+    Reference,
+}
+
+impl FrontEnd {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FrontEnd::Slab => "slab",
+            FrontEnd::Reference => "reference",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<FrontEnd> {
+        match name {
+            "slab" => Some(FrontEnd::Slab),
+            "reference" => Some(FrontEnd::Reference),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// TagSlab: generational id -> value store (platform pending txns).
+// ---------------------------------------------------------------------
+
+/// A slab keyed by externally supplied tagged handles.
+///
+/// `insert(tag, v)` returns `id = tag << 32 | slot`; `get`/`remove` index
+/// by the low bits and verify the stored id, so a stale handle (freed or
+/// recycled slot) resolves to `None` exactly like a missing map key.
+/// Handles whose low 32 bits are `NIL` (used for untracked writes) never
+/// match a slot. Steady state allocates nothing: freed slots recycle
+/// through a free list whose capacity persists.
+#[derive(Debug)]
+pub struct TagSlab<T> {
+    /// (stored id, value); id == u64::MAX marks a free slot.
+    slots: Vec<(u64, Option<T>)>,
+    free: Vec<u32>,
+    live: usize,
+}
+
+impl<T> Default for TagSlab<T> {
+    fn default() -> TagSlab<T> {
+        TagSlab::new()
+    }
+}
+
+const FREE_ID: u64 = u64::MAX;
+
+impl<T> TagSlab<T> {
+    pub fn new() -> TagSlab<T> {
+        TagSlab { slots: Vec::new(), free: Vec::new(), live: 0 }
+    }
+
+    /// Insert under a caller-supplied monotone tag; returns the handle.
+    /// Tags must be < 2^32 (the simulator's 2e9 event cap is hit first).
+    pub fn insert(&mut self, tag: u64, val: T) -> u64 {
+        debug_assert!(tag < (1 << 32), "txn tag overflow");
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.slots.push((FREE_ID, None));
+                (self.slots.len() - 1) as u32
+            }
+        };
+        let id = (tag << 32) | slot as u64;
+        self.slots[slot as usize] = (id, Some(val));
+        self.live += 1;
+        id
+    }
+
+    pub fn get(&self, id: u64) -> Option<&T> {
+        match self.slots.get((id & 0xFFFF_FFFF) as usize) {
+            Some((sid, Some(v))) if *sid == id => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn remove(&mut self, id: u64) -> Option<T> {
+        let slot = (id & 0xFFFF_FFFF) as usize;
+        match self.slots.get_mut(slot) {
+            Some(e) if e.0 == id => {
+                e.0 = FREE_ID;
+                self.live -= 1;
+                self.free.push(slot as u32);
+                e.1.take()
+            }
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+}
+
+// ---------------------------------------------------------------------
+// ReqSlab + WaiterTable: per-core miss waiters as intrusive chains.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+struct ReqSlot {
+    tag: u32,
+    is_store: bool,
+    /// Next waiter on the same line (or next free slot when freed).
+    next: u32,
+}
+
+/// Per-core slab of outstanding miss requests. Each entry is one waiter
+/// `(req handle, is_store)` with an inline `next` link; the per-line
+/// chain heads live in the companion [`WaiterTable`].
+#[derive(Debug)]
+pub struct ReqSlab {
+    slots: Vec<ReqSlot>,
+    free_head: u32,
+    next_tag: u32,
+    live: usize,
+}
+
+impl Default for ReqSlab {
+    fn default() -> ReqSlab {
+        ReqSlab::new()
+    }
+}
+
+impl ReqSlab {
+    pub fn new() -> ReqSlab {
+        ReqSlab { slots: Vec::new(), free_head: NIL, next_tag: 0, live: 0 }
+    }
+
+    fn alloc(&mut self, is_store: bool) -> u32 {
+        let slot = if self.free_head != NIL {
+            let s = self.free_head;
+            self.free_head = self.slots[s as usize].next;
+            s
+        } else {
+            self.slots.push(ReqSlot { tag: 0, is_store: false, next: NIL });
+            (self.slots.len() - 1) as u32
+        };
+        let tag = self.next_tag;
+        // Skip u32::MAX so the core's seq table can use it as "empty".
+        self.next_tag = match tag.wrapping_add(1) {
+            u32::MAX => 0,
+            t => t,
+        };
+        self.slots[slot as usize] = ReqSlot { tag, is_store, next: NIL };
+        self.live += 1;
+        slot
+    }
+
+    /// Allocate a waiter for `line` and append it to the line's chain
+    /// (FIFO, matching the reference `Vec` push order). Returns the
+    /// request handle.
+    pub fn push_waiter(&mut self, tbl: &mut WaiterTable, line: u64, is_store: bool) -> u64 {
+        let slot = self.alloc(is_store);
+        if let Some(tail) = tbl.link_tail(line, slot) {
+            self.slots[tail as usize].next = slot;
+        }
+        ((self.slots[slot as usize].tag as u64) << 32) | slot as u64
+    }
+
+    #[inline]
+    pub fn is_store(&self, slot: u32) -> bool {
+        self.slots[slot as usize].is_store
+    }
+
+    #[inline]
+    pub fn next_of(&self, slot: u32) -> u32 {
+        self.slots[slot as usize].next
+    }
+
+    /// Free `slot`, returning its request handle and chain successor.
+    pub fn release(&mut self, slot: u32) -> (u64, u32) {
+        let s = self.slots[slot as usize];
+        let id = ((s.tag as u64) << 32) | slot as u64;
+        self.slots[slot as usize] =
+            ReqSlot { tag: u32::MAX, is_store: false, next: self.free_head };
+        self.free_head = slot;
+        self.live -= 1;
+        (id, s.next)
+    }
+
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct WaiterLine {
+    /// u64::MAX marks an empty entry (real lines are bounded addresses).
+    line: u64,
+    head: u32,
+    tail: u32,
+}
+
+const EMPTY_LINE: u64 = u64::MAX;
+
+/// Per-line waiter chain heads. Distinct lines with waiters are bounded
+/// by the MSHR file capacity, so a linear scan over an inline array is
+/// hash-free and effectively O(10); the array only grows past its seeded
+/// capacity defensively.
+#[derive(Debug, Default)]
+pub struct WaiterTable {
+    lines: Vec<WaiterLine>,
+}
+
+impl WaiterTable {
+    pub fn new(capacity: usize) -> WaiterTable {
+        WaiterTable {
+            lines: vec![WaiterLine { line: EMPTY_LINE, head: NIL, tail: NIL }; capacity.max(1)],
+        }
+    }
+
+    /// Make `slot` the new tail of `line`'s chain. Returns the previous
+    /// tail when the chain existed (the caller links it), `None` when a
+    /// new chain was started.
+    fn link_tail(&mut self, line: u64, slot: u32) -> Option<u32> {
+        let mut empty = None;
+        for (i, e) in self.lines.iter_mut().enumerate() {
+            if e.line == line {
+                let prev = e.tail;
+                e.tail = slot;
+                return Some(prev);
+            }
+            if e.line == EMPTY_LINE && empty.is_none() {
+                empty = Some(i);
+            }
+        }
+        let entry = WaiterLine { line, head: slot, tail: slot };
+        match empty {
+            Some(i) => self.lines[i] = entry,
+            None => self.lines.push(entry), // beyond MSHR bound: defensive
+        }
+        None
+    }
+
+    /// Detach and return the chain head for `line` (`NIL` if none).
+    pub fn remove(&mut self, line: u64) -> u32 {
+        for e in self.lines.iter_mut() {
+            if e.line == line {
+                let head = e.head;
+                *e = WaiterLine { line: EMPTY_LINE, head: NIL, tail: NIL };
+                return head;
+            }
+        }
+        NIL
+    }
+
+    /// Lines with live chains (debug/deadlock reporting only).
+    pub fn len(&self) -> usize {
+        self.lines.iter().filter(|e| e.line != EMPTY_LINE).count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------
+// ReqSeqTable: the core's req-handle -> ROB-sequence side table.
+// ---------------------------------------------------------------------
+
+/// Dense array mapping a request handle's slot index to the ROB sequence
+/// of the micro-op waiting on it, tag-checked against the handle's high
+/// bits (replaces the reference `req_map: FastMap<u64, u64>`).
+#[derive(Debug, Default)]
+pub struct ReqSeqTable {
+    /// (tag, seq); tag == u32::MAX marks an empty slot.
+    slots: Vec<(u32, u64)>,
+    live: usize,
+}
+
+impl ReqSeqTable {
+    pub fn set(&mut self, req_id: u64, seq: u64) {
+        let slot = (req_id & 0xFFFF_FFFF) as usize;
+        let tag = (req_id >> 32) as u32;
+        debug_assert!(tag != u32::MAX, "tag collides with the empty marker");
+        if slot >= self.slots.len() {
+            self.slots.resize(slot + 1, (u32::MAX, 0));
+        }
+        debug_assert!(self.slots[slot].0 == u32::MAX, "slot recycled while live");
+        self.slots[slot] = (tag, seq);
+        self.live += 1;
+    }
+
+    pub fn take(&mut self, req_id: u64) -> Option<u64> {
+        let slot = (req_id & 0xFFFF_FFFF) as usize;
+        let tag = (req_id >> 32) as u32;
+        match self.slots.get_mut(slot) {
+            Some(e) if e.0 == tag => {
+                let seq = e.1;
+                *e = (u32::MAX, 0);
+                self.live -= 1;
+                Some(seq)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+}
+
+// ---------------------------------------------------------------------
+// PairRing: twin-pair state without a hash map.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+struct PairSlot {
+    /// Pair id occupying the slot; u64::MAX marks empty.
+    pair: u64,
+    logical: u64,
+    first_t: Ps,
+    first_real: bool,
+}
+
+const EMPTY_PAIR: u64 = u64::MAX;
+
+const EMPTY_SLOT: PairSlot =
+    PairSlot { pair: EMPTY_PAIR, logical: 0, first_t: 0, first_real: false };
+
+/// Twin-pair bookkeeping indexed by `pair & mask`.
+///
+/// Pair ids are assigned in lowering (= fetch) order, so live pair ids
+/// cluster in a window bounded by the ROB plus the TL-LF batch width (a
+/// batched shadow load can complete and retire long before its demand
+/// twin is fetched). The ring is seeded at 2×`rob_size` — ample for the
+/// shipped batch widths — and on the cold collision path doubles and
+/// redistributes its live entries, so arbitrarily wide batches degrade
+/// to a one-time growth instead of silently aliasing pair state.
+#[derive(Debug, Default)]
+pub struct PairRing {
+    slots: Vec<PairSlot>,
+    mask: u64,
+    live: usize,
+}
+
+impl PairRing {
+    pub fn new(rob_size: usize) -> PairRing {
+        let cap = (2 * rob_size.max(1)).next_power_of_two();
+        PairRing { slots: vec![EMPTY_SLOT; cap], mask: cap as u64 - 1, live: 0 }
+    }
+
+    /// Record one twin completion. First arrival stores `(at, real)` and
+    /// returns `None`; the second detaches the entry and returns the
+    /// first twin's `(t0, was_real, logical)`.
+    pub fn observe(
+        &mut self,
+        pair: u64,
+        logical: u64,
+        at: Ps,
+        real: bool,
+    ) -> Option<(Ps, bool, u64)> {
+        loop {
+            let s = (pair & self.mask) as usize;
+            let slot = &mut self.slots[s];
+            if slot.pair == pair {
+                let out = (slot.first_t, slot.first_real, slot.logical);
+                slot.pair = EMPTY_PAIR;
+                self.live -= 1;
+                return Some(out);
+            }
+            if slot.pair == EMPTY_PAIR {
+                *slot = PairSlot { pair, logical, first_t: at, first_real: real };
+                self.live += 1;
+                return None;
+            }
+            // Two live pairs map to one slot (batch wider than the seed
+            // capacity): grow until every live id has its own slot.
+            self.grow();
+        }
+    }
+
+    /// Double the ring until all live entries redistribute without
+    /// collision. Live pair ids are distinct, so any capacity exceeding
+    /// their span succeeds; growth is a one-time cost per capacity step.
+    #[cold]
+    fn grow(&mut self) {
+        let live: Vec<PairSlot> =
+            self.slots.iter().copied().filter(|s| s.pair != EMPTY_PAIR).collect();
+        let mut cap = self.slots.len();
+        'retry: loop {
+            cap *= 2;
+            let mask = cap as u64 - 1;
+            let mut next = vec![EMPTY_SLOT; cap];
+            for e in &live {
+                let s = (e.pair & mask) as usize;
+                if next[s].pair != EMPTY_PAIR {
+                    continue 'retry;
+                }
+                next[s] = *e;
+            }
+            self.slots = next;
+            self.mask = mask;
+            return;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+}
+
+// ---------------------------------------------------------------------
+// BoardRing: the resolved-value scoreboard without a hash map.
+// ---------------------------------------------------------------------
+
+/// Ring-indexed resolved-value scoreboard, observationally identical to
+/// the map-based `LogicalBoard`: entries below the pruning watermark read
+/// as long-resolved (`Some(0)`), in-window resolved entries return their
+/// time, unresolved ones `None`.
+///
+/// Capacity safety: live (≥ watermark) logical indices span at most
+/// `3 × BOARD_WINDOW + rob_size` (the watermark lags the newest resolve
+/// by one window plus one prune period), so a 4×-window power-of-two ring
+/// can never hold two live indices in one slot.
+#[derive(Debug, Default)]
+pub struct BoardRing {
+    /// (logical, resolved-at); logical == u64::MAX marks empty.
+    slots: Vec<(u64, Ps)>,
+    mask: u64,
+    watermark: u64,
+    inserts: u64,
+}
+
+const EMPTY_LOGICAL: u64 = u64::MAX;
+
+impl BoardRing {
+    pub fn new() -> BoardRing {
+        let cap = (4 * BOARD_WINDOW) as usize; // 16384, power of two
+        BoardRing {
+            slots: vec![(EMPTY_LOGICAL, 0); cap],
+            mask: cap as u64 - 1,
+            watermark: 0,
+            inserts: 0,
+        }
+    }
+
+    pub fn resolve(&mut self, logical: u64, at: Ps) {
+        self.slots[(logical & self.mask) as usize] = (logical, at);
+        self.inserts += 1;
+        // Same pruning cadence as the reference board; overwriting stale
+        // slots replaces the map's retain().
+        if self.inserts % (2 * BOARD_WINDOW) == 0 {
+            self.watermark = self.watermark.max(logical.saturating_sub(BOARD_WINDOW));
+        }
+    }
+
+    pub fn ready_at(&self, logical: u64) -> Option<Ps> {
+        if logical < self.watermark {
+            return Some(0);
+        }
+        match self.slots[(logical & self.mask) as usize] {
+            (l, t) if l == logical => Some(t),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frontend_names_roundtrip() {
+        for fe in [FrontEnd::Slab, FrontEnd::Reference] {
+            assert_eq!(FrontEnd::by_name(fe.name()), Some(fe));
+        }
+        assert_eq!(FrontEnd::by_name("bogus"), None);
+    }
+
+    #[test]
+    fn tag_slab_insert_get_remove() {
+        let mut s: TagSlab<u64> = TagSlab::new();
+        let a = s.insert(1, 100);
+        let b = s.insert(2, 200);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(a), Some(&100));
+        assert_eq!(s.get(b), Some(&200));
+        assert_eq!(s.remove(a), Some(100));
+        assert_eq!(s.get(a), None);
+        assert_eq!(s.remove(a), None, "double remove");
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn tag_slab_stale_handle_does_not_alias_recycled_slot() {
+        // Generation reuse: free a slot, re-allocate it under a new tag;
+        // the old handle must not observe (or remove) the new occupant.
+        let mut s: TagSlab<u64> = TagSlab::new();
+        let old = s.insert(7, 700);
+        assert_eq!(s.remove(old), Some(700));
+        let new = s.insert(8, 800);
+        assert_eq!(new & 0xFFFF_FFFF, old & 0xFFFF_FFFF, "slot was recycled");
+        assert_ne!(new, old, "handle carries the new tag");
+        assert_eq!(s.get(old), None, "stale handle aliased a recycled entry");
+        assert_eq!(s.remove(old), None);
+        assert_eq!(s.get(new), Some(&800));
+    }
+
+    #[test]
+    fn tag_slab_write_style_ids_never_match() {
+        let mut s: TagSlab<u64> = TagSlab::new();
+        s.insert(1, 1);
+        let write_id = (2u64 << 32) | NIL as u64;
+        assert_eq!(s.get(write_id), None);
+        assert_eq!(s.remove(write_id), None);
+    }
+
+    #[test]
+    fn waiter_chain_is_fifo_and_recycles() {
+        let mut reqs = ReqSlab::new();
+        let mut tbl = WaiterTable::new(4);
+        let line = 0x40;
+        let r1 = reqs.push_waiter(&mut tbl, line, false);
+        let r2 = reqs.push_waiter(&mut tbl, line, true);
+        let r3 = reqs.push_waiter(&mut tbl, line, false);
+        let other = reqs.push_waiter(&mut tbl, 0x80, false);
+        assert_eq!(reqs.len(), 4);
+        assert_eq!(tbl.len(), 2);
+
+        let head = tbl.remove(line);
+        assert_ne!(head, NIL);
+        // any_store walk sees the store; order preserved.
+        let (mut any, mut got, mut c) = (false, Vec::new(), head);
+        while c != NIL {
+            any |= reqs.is_store(c);
+            c = reqs.next_of(c);
+        }
+        assert!(any);
+        let mut c = head;
+        while c != NIL {
+            let (id, next) = reqs.release(c);
+            got.push(id);
+            c = next;
+        }
+        assert_eq!(got, vec![r1, r2, r3], "chain order is insertion order");
+        assert_eq!(reqs.len(), 1);
+        assert_eq!(tbl.remove(line), NIL, "chain detached");
+
+        // Recycled slots get fresh tags: new handles differ from old.
+        let r4 = reqs.push_waiter(&mut tbl, 0xc0, false);
+        assert!(!got.contains(&r4), "recycled slot reused a stale handle");
+        let _ = other;
+    }
+
+    #[test]
+    fn req_seq_table_tag_checks() {
+        let mut t = ReqSeqTable::default();
+        let id_a = (3u64 << 32) | 5;
+        t.set(id_a, 42);
+        assert_eq!(t.len(), 1);
+        let stale = (2u64 << 32) | 5; // same slot, older tag
+        assert_eq!(t.take(stale), None);
+        assert_eq!(t.take(id_a), Some(42));
+        assert_eq!(t.take(id_a), None, "double take");
+        assert_eq!(t.len(), 0);
+    }
+
+    #[test]
+    fn pair_ring_first_second_and_reuse() {
+        let mut p = PairRing::new(168);
+        assert_eq!(p.observe(0, 9, 100, false), None);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.observe(0, 9, 150, true), Some((100, false, 9)));
+        assert_eq!(p.len(), 0);
+        // The slot is reusable by a later pair that maps to it.
+        let cap = 2 * 168u64.next_power_of_two();
+        assert_eq!(p.observe(cap, 11, 200, true), None);
+        assert_eq!(p.observe(cap, 11, 210, false), Some((200, true, 11)));
+    }
+
+    #[test]
+    fn pair_ring_grows_on_collision_instead_of_aliasing() {
+        // Seed a tiny ring (cap 2) and force two live pairs onto one
+        // slot: ids 0 and 2 both mask to slot 0. The ring must grow and
+        // keep both entries intact (the batched-TL-LF wide-batch case).
+        let mut p = PairRing::new(1);
+        assert_eq!(p.observe(0, 10, 100, false), None);
+        assert_eq!(p.observe(2, 11, 120, true), None, "collision must grow, not alias");
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.observe(0, 10, 200, true), Some((100, false, 10)));
+        assert_eq!(p.observe(2, 11, 210, false), Some((120, true, 11)));
+        assert_eq!(p.len(), 0);
+    }
+
+    #[test]
+    fn board_ring_matches_reference_semantics() {
+        let mut b = BoardRing::new();
+        assert_eq!(b.ready_at(0), None, "unresolved in-window");
+        b.resolve(0, 500);
+        assert_eq!(b.ready_at(0), Some(500));
+        b.resolve(3, 900);
+        assert_eq!(b.ready_at(3), Some(900));
+        assert_eq!(b.ready_at(1), None);
+        // Push the watermark forward: resolve 2*WINDOW entries ending
+        // high, then old indices read as long-resolved.
+        for i in 0..2 * BOARD_WINDOW {
+            b.resolve(10 * BOARD_WINDOW + i, 1_000 + i);
+        }
+        assert!(b.watermark > 0);
+        assert_eq!(b.ready_at(0), Some(0), "pruned entries are long-resolved");
+        let last = 10 * BOARD_WINDOW + 2 * BOARD_WINDOW - 1;
+        assert_eq!(b.ready_at(last), Some(1_000 + 2 * BOARD_WINDOW - 1));
+    }
+}

@@ -10,7 +10,9 @@
 //! misses, load fences, and in-order retire.
 
 pub mod core;
+pub mod frontend;
 pub mod trace;
 
 pub use self::core::{Core, CoreParams, CoreStats, IssueResult, MemoryPort};
+pub use frontend::FrontEnd;
 pub use trace::{AccessKind, MemAccess, MicroOp, OpSource, TwinCheck};

@@ -27,6 +27,7 @@ const VALUE_FLAGS: &[&str] = &[
     "pcie-local-frac",
     "engine",
     "sched",
+    "frontend",
 ];
 
 fn main() {
@@ -60,6 +61,7 @@ fn print_usage() {
          \x20            [--footprint-mb M] [--seed S] [--config file.ini]\n\
          \x20            [--engine calendar|adaptive-calendar|reference-heap]\n\
          \x20            [--sched bank-indexed|rank-inval|reference-scan]\n\
+         \x20            [--frontend slab|reference]\n\
          twinload repro <table1|table2|table3|table4|table5|fig7|fig8|fig9|\n\
          \x20            fig10|fig11|fig12|fig13|fig14|fig15|all> [--quick] [--csv-dir DIR]\n\
          twinload ablate <lvc|layers|batch> [--quick]\n\
@@ -143,6 +145,13 @@ fn cmd_run(args: &Args) -> i32 {
         };
         cfg.sched = policy;
     }
+    if let Some(name) = args.get("frontend") {
+        let Some(fe) = twinload::cpu::FrontEnd::by_name(name) else {
+            eprintln!("unknown frontend '{name}' (slab | reference)");
+            return 2;
+        };
+        cfg.frontend = fe;
+    }
 
     let report = run_spec(&cfg, &spec);
     println!("{}", report.summary());
@@ -178,6 +187,7 @@ fn cmd_run(args: &Args) -> i32 {
         report.engine_resamples,
         report.engine_overflow,
     );
+    println!("  frontend      {:>12}", cfg.frontend.name());
     if report.deadlocked {
         eprintln!("simulation DEADLOCKED — report is partial");
         return 1;

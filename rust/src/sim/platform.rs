@@ -6,7 +6,8 @@ use super::report::SimReport;
 use crate::baselines::{increased_trl, NumaLink, PcieSwap, SwapOutcome};
 use crate::cache::{CacheConfig, DataKind, LookupResult, MshrFile, MshrOutcome, SetAssocCache, Tlb};
 use crate::config::{RunSpec, SystemConfig};
-use crate::cpu::{Core, IssueResult, MemAccess, MemoryPort, AccessKind};
+use crate::cpu::frontend::{ReqSlab, TagSlab, WaiterTable, NIL};
+use crate::cpu::{Core, FrontEnd, IssueResult, MemAccess, MemoryPort, AccessKind};
 use crate::dram::address::AddressMapping;
 use crate::dram::{MemController, ServiceResult, Transaction};
 use crate::mec::Mec1;
@@ -57,13 +58,20 @@ impl ChannelGroup {
 /// Per-core private state.
 struct CoreBundle {
     core: Core,
-    source: Transform<Box<dyn crate::twinload::LogicalSource + Send>>,
+    /// Devirtualized lowering: the transform is instantiated over the
+    /// concrete workload enum, so `next_op` is a direct match.
+    source: Transform<workloads::WorkloadSource>,
     l1: SetAssocCache,
     tlb: Tlb,
     mshr: MshrFile,
-    /// line → (req_id, is_store) waiters for in-flight misses.
+    /// line → (req_id, is_store) waiters for in-flight misses
+    /// (reference front end only).
     waiters: FastMap<u64, Vec<(u64, bool)>>,
     next_req: u64,
+    /// Slab front end: outstanding miss requests with intrusive per-line
+    /// waiter chains (heads in `wtab`, next-links in `reqs`).
+    reqs: ReqSlab,
+    wtab: WaiterTable,
     /// Earliest scheduled CoreWake (dedup guard against wake pileup).
     next_wake: Option<Ps>,
     /// Hardware page-walker occupancy: walks serialize per core (the
@@ -95,7 +103,16 @@ pub struct Platform {
     mecs: Vec<Mec1>,
     numa: Option<NumaLink>,
     pcie: Option<PcieSwap>,
+    /// Which bookkeeping implementation tracks in-flight transactions and
+    /// waiters (`pending` vs `txns`/`reqs`).
+    frontend: FrontEnd,
     pending: FastMap<u64, PendingTxn>,
+    /// Slab front end: in-flight reads keyed by `{counter, slot}` handles
+    /// so completion is an array index. The counter in the handle's high
+    /// bits preserves submit order, which the controller's `(arrive, id)`
+    /// tie-break depends on — both front ends service transactions in the
+    /// exact same order.
+    txns: TagSlab<PendingTxn>,
     next_txn: u64,
     /// Reusable service-result buffer for controller pumps (the pump hot
     /// loop appends into it instead of allocating a Vec per call).
@@ -121,11 +138,14 @@ struct Outbox {
 /// the shared LLC and books MC work into the outbox.
 struct Port<'a> {
     cfg: &'a SystemConfig,
+    fe: FrontEnd,
     l1: &'a mut SetAssocCache,
     tlb: &'a mut Tlb,
     mshr: &'a mut MshrFile,
     waiters: &'a mut FastMap<u64, Vec<(u64, bool)>>,
     next_req: &'a mut u64,
+    reqs: &'a mut ReqSlab,
+    wtab: &'a mut WaiterTable,
     walker_free: &'a mut Ps,
     streams: &'a mut [(u64, u32, u64); 8],
     stream_clock: &'a mut u64,
@@ -140,6 +160,20 @@ const PREFETCH_DEGREE: u64 = 4;
 const PREFETCH_TRAIN: u32 = 2;
 
 impl<'a> Port<'a> {
+    /// Register a miss waiter for `line`; returns the request handle the
+    /// platform will complete with.
+    fn track_waiter(&mut self, line: u64, is_store: bool) -> u64 {
+        match self.fe {
+            FrontEnd::Reference => {
+                let req = *self.next_req;
+                *self.next_req += 1;
+                self.waiters.entry(line).or_default().push((req, is_store));
+                req
+            }
+            FrontEnd::Slab => self.reqs.push_waiter(self.wtab, line, is_store),
+        }
+    }
+
     /// Submit an L1 eviction into the LLC (writeback path).
     fn l1_evict(&mut self, addr: u64, dirty: bool, at: Ps) {
         if !dirty {
@@ -237,15 +271,11 @@ impl<'a> MemoryPort for Port<'a> {
         match self.mshr.request(line) {
             MshrOutcome::Full => IssueResult::Stall { retry_at: now + self.cfg.llc_lat },
             MshrOutcome::Merged => {
-                let req = *self.next_req;
-                *self.next_req += 1;
-                self.waiters.entry(line).or_default().push((req, is_store));
+                let req = self.track_waiter(line, is_store);
                 IssueResult::Pending { req_id: req }
             }
             MshrOutcome::Allocated => {
-                let req = *self.next_req;
-                *self.next_req += 1;
-                self.waiters.entry(line).or_default().push((req, is_store));
+                let req = self.track_waiter(line, is_store);
                 self.outbox.reads.push((line, now + delay + self.cfg.llc_lat));
                 // Stride prefetcher: the stream table matches this miss
                 // against tracked sequential streams; a trained stream
@@ -414,20 +444,22 @@ impl Platform {
         let thread_tlb = (cfg.tlb_entries / smt as u32).max(16);
         let cores: Vec<CoreBundle> = (0..hw_threads)
             .map(|i| {
-                let wl = workloads::build_with_regions(
+                let wl = workloads::build_source(
                     spec.workload,
                     data,
                     spec.ops_per_core,
                     spec.seed.wrapping_add(i as u64 * 0x9E37_79B9),
                 );
                 CoreBundle {
-                    core: Core::new(tp),
+                    core: Core::with_frontend(tp, cfg.frontend),
                     source: Transform::new(wl, cfg.mechanism, layout),
                     l1: SetAssocCache::new(l1),
                     tlb: Tlb::new(thread_tlb, 4, 4 << 10),
                     mshr: MshrFile::new(thread_mshrs),
                     waiters: FastMap::default(),
                     next_req: 1,
+                    reqs: ReqSlab::new(),
+                    wtab: WaiterTable::new(thread_mshrs),
                     next_wake: None,
                     walker_free: 0,
                     streams: [(u64::MAX, 0, 0); 8],
@@ -450,7 +482,9 @@ impl Platform {
             mecs,
             numa,
             pcie,
+            frontend: cfg.frontend,
             pending: FastMap::default(),
+            txns: TagSlab::new(),
             next_txn: 1,
             svc_buf: Vec::new(),
             events,
@@ -486,12 +520,29 @@ impl Platform {
             arrive = self.numa.as_mut().expect("numa link").cross(arrive);
         }
         let (ch, ch_addr) = self.groups[gi].route(line);
-        let id = self.next_txn;
+        // Both front ends draw from the same submit counter: the slab
+        // handle carries it in its high bits, so the controller's
+        // `(arrive, id)` tie-break orders transactions identically.
+        let tag = self.next_txn;
         self.next_txn += 1;
-        if let Some(kind) = read_for {
-            self.pending.insert(id, PendingTxn { core: kind, line });
-            self.mlp.up(self.now);
-        }
+        let id = match self.frontend {
+            FrontEnd::Reference => {
+                if let Some(kind) = read_for {
+                    self.pending.insert(tag, PendingTxn { core: kind, line });
+                    self.mlp.up(self.now);
+                }
+                tag
+            }
+            FrontEnd::Slab => match read_for {
+                Some(kind) => {
+                    self.mlp.up(self.now);
+                    self.txns.insert(tag, PendingTxn { core: kind, line })
+                }
+                // Posted writes are untracked: low bits that never match
+                // a slab slot, submit order still in the high bits.
+                None => (tag << 32) | NIL as u64,
+            },
+        };
         let g = &mut self.groups[gi];
         let addr = g.map.decode(ch_addr);
         g.channels[ch].enqueue(Transaction {
@@ -526,11 +577,14 @@ impl Platform {
             }
             let mut port = Port {
                 cfg: &self.cfg,
+                fe: self.frontend,
                 l1: &mut b.l1,
                 tlb: &mut b.tlb,
                 mshr: &mut b.mshr,
                 waiters: &mut b.waiters,
                 next_req: &mut b.next_req,
+                reqs: &mut b.reqs,
+                wtab: &mut b.wtab,
                 walker_free: &mut b.walker_free,
                 streams: &mut b.streams,
                 stream_clock: &mut b.stream_clock,
@@ -595,7 +649,11 @@ impl Platform {
                         // lines hold real values, shadow lines fake —
                         // the MEC machinery above still sets the timing
                         // and statistics.
-                        if let Some(p) = self.pending.get(&r.id) {
+                        let p = match self.frontend {
+                            FrontEnd::Reference => self.pending.get(&r.id),
+                            FrontEnd::Slab => self.txns.get(r.id),
+                        };
+                        if let Some(p) = p {
                             data = if self.cfg.layout.is_shadow(p.line) {
                                 DataKind::Fake
                             } else {
@@ -607,7 +665,11 @@ impl Platform {
                 if r.is_write {
                     continue;
                 }
-                let Some(p) = self.pending.remove(&r.id) else {
+                let p = match self.frontend {
+                    FrontEnd::Reference => self.pending.remove(&r.id),
+                    FrontEnd::Slab => self.txns.remove(r.id),
+                };
+                let Some(p) = p else {
                     continue;
                 };
                 let mut done = r.data_end + self.cfg.llc_lat; // fill path back up
@@ -645,8 +707,26 @@ impl Platform {
                 self.submit(ev.addr, at, None);
             }
         }
-        let waiters = self.cores[ci].waiters.remove(&line).unwrap_or_default();
-        let any_store = waiters.iter().any(|&(_, s)| s);
+        // Detach this line's waiters (reference: the Vec; slab: the
+        // intrusive chain head) and note whether any of them stores.
+        let (waiters, chain, any_store) = match self.frontend {
+            FrontEnd::Reference => {
+                let w = self.cores[ci].waiters.remove(&line).unwrap_or_default();
+                let any = w.iter().any(|&(_, s)| s);
+                (w, NIL, any)
+            }
+            FrontEnd::Slab => {
+                let b = &mut self.cores[ci];
+                let head = b.wtab.remove(line);
+                let mut any = false;
+                let mut c = head;
+                while c != NIL {
+                    any |= b.reqs.is_store(c);
+                    c = b.reqs.next_of(c);
+                }
+                (Vec::new(), head, any)
+            }
+        };
         if let Some(ev) = self.cores[ci].l1.fill(line, any_store, data) {
             if ev.dirty {
                 // L1 dirty eviction merges into LLC if present.
@@ -659,8 +739,23 @@ impl Platform {
             }
         }
         self.cores[ci].mshr.complete(line);
-        for (req, _) in waiters {
-            self.cores[ci].core.complete(req, at, data);
+        match self.frontend {
+            FrontEnd::Reference => {
+                for (req, _) in waiters {
+                    self.cores[ci].core.complete(req, at, data);
+                }
+            }
+            FrontEnd::Slab => {
+                // Walk the chain in insertion (FIFO) order, freeing each
+                // slot before waking its micro-op.
+                let mut c = chain;
+                while c != NIL {
+                    let b = &mut self.cores[ci];
+                    let (req, next) = b.reqs.release(c);
+                    b.core.complete(req, at, data);
+                    c = next;
+                }
+            }
         }
         self.advance_core(ci, at);
     }
@@ -684,7 +779,7 @@ impl Platform {
                     self.events.len(),
                     self.finished_cores,
                     self.cores.len(),
-                    self.pending.len()
+                    self.pending_len()
                 );
             }
             if steps > 2_000_000_000 {
@@ -695,18 +790,29 @@ impl Platform {
         if self.finished_cores != self.cores.len() {
             self.deadlocked = true;
             if std::env::var_os("TWINLOAD_TRACE").is_some() {
-                eprintln!("[deadlock] now={} pending_txns={}", self.now, self.pending.len());
+                eprintln!("[deadlock] now={} pending_txns={}", self.now, self.pending_len());
                 for (i, b) in self.cores.iter().enumerate() {
                     if !b.core.finished() {
+                        let waiters = match self.frontend {
+                            FrontEnd::Reference => b.waiters.len(),
+                            FrontEnd::Slab => b.wtab.len(),
+                        };
                         eprintln!(
-                            "[deadlock] core {i}: {} mshr={} waiters={}",
+                            "[deadlock] core {i}: {} mshr={} waiters={waiters}",
                             b.core.debug_state(),
                             b.mshr.outstanding(),
-                            b.waiters.len()
                         );
                     }
                 }
             }
+        }
+    }
+
+    /// In-flight read transactions (diagnostics only).
+    fn pending_len(&self) -> usize {
+        match self.frontend {
+            FrontEnd::Reference => self.pending.len(),
+            FrontEnd::Slab => self.txns.len(),
         }
     }
 

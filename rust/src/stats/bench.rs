@@ -16,10 +16,11 @@
 //!   [`PROVISIONAL_FACTOR`]×) slowdowns and downgrades the rest to
 //!   warnings.
 //! * **Pair rule** — machine-independent: an optimized engine/policy row
-//!   (`… [calendar]`, `… [bank-indexed]`) must not run slower than its
-//!   retained reference row (`… [ref-heap]`, `… [ref-scan]`) measured in
-//!   the same process, beyond a small [`PAIR_TOLERANCE`] noise band.
-//!   This holds even while the baseline is provisional.
+//!   (`… [calendar]`, `… [bank-indexed]`, `… [frontend]`) must not run
+//!   slower than its retained reference row (`… [ref-heap]`,
+//!   `… [ref-scan]`, `… [frontend-ref]`) measured in the same process,
+//!   beyond a small [`PAIR_TOLERANCE`] noise band. This holds even while
+//!   the baseline is provisional.
 
 /// Hard-fail threshold for the baseline rule: >25 % median regression.
 pub const MAX_REGRESSION: f64 = 0.25;
@@ -40,6 +41,7 @@ const ENGINE_PAIRS: &[(&str, &str)] = &[
     (" [ref-heap]", " [adaptive]"),
     (" [ref-scan]", " [bank-indexed]"),
     (" [ref-scan]", " [rank-inval]"),
+    (" [frontend-ref]", " [frontend]"),
 ];
 
 // ---------------------------------------------------------------------
@@ -545,6 +547,29 @@ mod tests {
             let g = perf_gate(&rows, &rows);
             assert!(g.passed(), "{:?}", g.failures);
         }
+    }
+
+    #[test]
+    fn pair_rule_covers_the_frontend_pair() {
+        let lagging = report(
+            &[
+                ("sim tl-ooo/gups [frontend]", 50.0),
+                ("sim tl-ooo/gups [frontend-ref]", 100.0),
+            ],
+            false,
+        );
+        let g = perf_gate(&lagging, &lagging);
+        assert!(!g.passed(), "slab front end lagging its reference must fail");
+        assert!(g.failures[0].contains("[frontend]"), "{}", g.failures[0]);
+
+        let healthy = report(
+            &[
+                ("sim tl-ooo/gups [frontend]", 120.0),
+                ("sim tl-ooo/gups [frontend-ref]", 100.0),
+            ],
+            false,
+        );
+        assert!(perf_gate(&healthy, &healthy).passed());
     }
 
     #[test]

@@ -89,13 +89,22 @@ impl TransformStats {
 }
 
 /// Lowers a [`LogicalSource`] into the core's micro-op stream.
+///
+/// The simulator instantiates this with the concrete
+/// [`crate::workloads::WorkloadSource`] enum, so `next_op` is a direct
+/// (devirtualized, inlinable) call chain; `Box<dyn LogicalSource>`
+/// instantiations remain available for trait-object consumers.
 pub struct Transform<S: LogicalSource> {
     source: S,
     mech: Mechanism,
     layout: MemLayout,
-    /// Ready-to-emit micro-ops.
+    /// Ready-to-emit micro-ops. One persistent ring per transform: the
+    /// deque is created once and recycled across expansions, so the
+    /// steady-state lowering path performs zero heap allocations (it
+    /// grows only the first time an expansion exceeds the capacity).
     out: VecDeque<MicroOp>,
-    /// TL-LF-batched: demand halves waiting for the fence.
+    /// TL-LF-batched: demand halves waiting for the fence. Cleared (not
+    /// dropped) on flush, so capacity persists.
     batch: Vec<LogicalMem>,
     batch_logicals: Vec<u64>,
     next_logical: u64,
@@ -217,37 +226,37 @@ impl<S: LogicalSource> Transform<S> {
     }
 
     /// Flush the TL-LF batch: k prefetches, one fence, k demands.
+    /// Allocation-free: iterates the persistent batch buffers in place
+    /// and derives the k sequential pair ids arithmetically (identical
+    /// ids to one `fresh_pair` call per item).
     fn flush_batch(&mut self) {
         if self.batch.is_empty() {
             return;
         }
-        let items: Vec<(LogicalMem, u64)> = self
-            .batch
-            .drain(..)
-            .zip(self.batch_logicals.drain(..))
-            .collect();
-        let mut pairs = Vec::with_capacity(items.len());
-        for (m, logical) in &items {
-            let pair = self.fresh_pair();
-            pairs.push(pair);
+        let n = self.batch.len();
+        let base_pair = self.next_pair;
+        self.next_pair += n as u64;
+        for i in 0..n {
+            let (m, logical) = (self.batch[i], self.batch_logicals[i]);
             let shadow = self.layout.shadow_of(m.vaddr);
             self.push(MicroOp::Mem(MemAccess {
                 vaddr: shadow,
                 kind: AccessKind::Load,
-                logical: *logical,
+                logical,
                 dep_on: m.dep_on,
-                pair: Some(pair),
+                pair: Some(base_pair + i as u64),
                 retry: false,
             }));
         }
         self.push(MicroOp::Fence);
-        for ((m, logical), pair) in items.iter().zip(&pairs) {
+        for i in 0..n {
+            let (m, logical) = (self.batch[i], self.batch_logicals[i]);
             self.push(MicroOp::Mem(MemAccess {
                 vaddr: m.vaddr,
                 kind: AccessKind::Load,
-                logical: *logical,
+                logical,
                 dep_on: m.dep_on,
-                pair: Some(*pair),
+                pair: Some(base_pair + i as u64),
                 retry: false,
             }));
             self.push(MicroOp::Compute(LF_LOAD_CHECK));
@@ -256,13 +265,15 @@ impl<S: LogicalSource> Transform<S> {
                 self.push(MicroOp::Mem(MemAccess {
                     vaddr: m.vaddr,
                     kind: AccessKind::Store,
-                    logical: *logical,
-                    dep_on: Some(*logical),
+                    logical,
+                    dep_on: Some(logical),
                     pair: None,
                     retry: false,
                 }));
             }
         }
+        self.batch.clear();
+        self.batch_logicals.clear();
     }
 
     /// Does `m` depend on a logical access still waiting in the batch?
@@ -465,6 +476,28 @@ mod tests {
             vec!["L", "L", "L", "L", "f", "L", "c", "L", "c", "L", "c", "L", "c"]
         );
         assert_eq!(t.stats.fences, 1);
+    }
+
+    #[test]
+    fn ring_growth_preserves_order_for_large_batches() {
+        // A 32-wide batch expands to 97 micro-ops in one flush, forcing
+        // the persistent output ring through multiple growth steps; order
+        // and pairing (arithmetic pair ids) must survive.
+        let ops: Vec<LogicalOp> = (0..32).map(|i| LogicalOp::load(ext(i * 64))).collect();
+        let mut t = Transform::new(ops.into_iter(), Mechanism::TlLfBatched(32), layout());
+        let out = drain(&mut t);
+        assert_eq!(out.len(), 32 + 1 + 64);
+        assert_eq!(t.stats.fences, 1);
+        assert!(matches!(out[32], MicroOp::Fence));
+        for i in 0..32usize {
+            let (pre, dem) = match (&out[i], &out[33 + 2 * i]) {
+                (MicroOp::Mem(a), MicroOp::Mem(b)) => (*a, *b),
+                other => panic!("unexpected ops {other:?}"),
+            };
+            assert_eq!(pre.pair, dem.pair, "prefetch {i} mispaired");
+            assert!(layout().is_shadow(pre.vaddr));
+            assert_eq!(pre.vaddr, layout().shadow_of(dem.vaddr));
+        }
     }
 
     #[test]

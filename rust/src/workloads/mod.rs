@@ -23,7 +23,40 @@ pub mod stream;
 pub use params::{SignatureParams, WorkloadKind, ALL_WORKLOADS, FIG13_WORKLOADS};
 
 use crate::memmgr::{Allocator, Space};
-use crate::twinload::LogicalSource;
+use crate::twinload::{LogicalOp, LogicalSource};
+
+/// A concrete workload generator, enum-dispatched.
+///
+/// The simulator's per-micro-op pull path used to go through a
+/// `Box<dyn LogicalSource>` virtual call; this enum devirtualizes it —
+/// `next_logical` is a direct match over the concrete generators, which
+/// the compiler can inline into the transform's lowering loop.
+pub enum WorkloadSource {
+    Gups(gups::Gups),
+    Radix(radix::Radix),
+    Cg(scientific::Cg),
+    Fmm(scientific::Fmm),
+    Graph(graph::GraphWalk),
+    ScalParC(stream::ScalParC),
+    StreamCluster(stream::StreamCluster),
+    Memcached(memcached::Memcached),
+}
+
+impl LogicalSource for WorkloadSource {
+    #[inline]
+    fn next_logical(&mut self) -> Option<LogicalOp> {
+        match self {
+            WorkloadSource::Gups(s) => s.next_logical(),
+            WorkloadSource::Radix(s) => s.next_logical(),
+            WorkloadSource::Cg(s) => s.next_logical(),
+            WorkloadSource::Fmm(s) => s.next_logical(),
+            WorkloadSource::Graph(s) => s.next_logical(),
+            WorkloadSource::ScalParC(s) => s.next_logical(),
+            WorkloadSource::StreamCluster(s) => s.next_logical(),
+            WorkloadSource::Memcached(s) => s.next_logical(),
+        }
+    }
+}
 
 /// Build a generator for one core's share of the workload.
 ///
@@ -42,25 +75,38 @@ pub fn build(
     build_with_regions(kind, data, ops, seed)
 }
 
-/// Build with pre-placed regions (multi-core setups share one placement).
+/// Build a devirtualized source with pre-placed regions (multi-core
+/// setups share one placement). This is the simulator's entry point.
+pub fn build_source(kind: WorkloadKind, data: DataRegions, ops: u64, seed: u64) -> WorkloadSource {
+    match kind {
+        WorkloadKind::Gups => WorkloadSource::Gups(gups::Gups::new(data, ops, seed)),
+        WorkloadKind::Radix => WorkloadSource::Radix(radix::Radix::new(data, ops, seed)),
+        WorkloadKind::Cg => WorkloadSource::Cg(scientific::Cg::new(data, ops, seed)),
+        WorkloadKind::Fmm => WorkloadSource::Fmm(scientific::Fmm::new(data, ops, seed)),
+        WorkloadKind::Bfs => WorkloadSource::Graph(graph::GraphWalk::bfs(data, ops, seed)),
+        WorkloadKind::Bc => WorkloadSource::Graph(graph::GraphWalk::bc(data, ops, seed)),
+        WorkloadKind::PageRank => {
+            WorkloadSource::Graph(graph::GraphWalk::pagerank(data, ops, seed))
+        }
+        WorkloadKind::ScalParC => WorkloadSource::ScalParC(stream::ScalParC::new(data, ops, seed)),
+        WorkloadKind::StreamCluster => {
+            WorkloadSource::StreamCluster(stream::StreamCluster::new(data, ops, seed))
+        }
+        WorkloadKind::Memcached => {
+            WorkloadSource::Memcached(memcached::Memcached::new(data, ops, seed))
+        }
+    }
+}
+
+/// Boxed convenience wrapper for trait-object consumers (the PJRT fast
+/// path, tests); identical streams to [`build_source`].
 pub fn build_with_regions(
     kind: WorkloadKind,
     data: DataRegions,
     ops: u64,
     seed: u64,
 ) -> Box<dyn LogicalSource + Send> {
-    match kind {
-        WorkloadKind::Gups => Box::new(gups::Gups::new(data, ops, seed)),
-        WorkloadKind::Radix => Box::new(radix::Radix::new(data, ops, seed)),
-        WorkloadKind::Cg => Box::new(scientific::Cg::new(data, ops, seed)),
-        WorkloadKind::Fmm => Box::new(scientific::Fmm::new(data, ops, seed)),
-        WorkloadKind::Bfs => Box::new(graph::GraphWalk::bfs(data, ops, seed)),
-        WorkloadKind::Bc => Box::new(graph::GraphWalk::bc(data, ops, seed)),
-        WorkloadKind::PageRank => Box::new(graph::GraphWalk::pagerank(data, ops, seed)),
-        WorkloadKind::ScalParC => Box::new(stream::ScalParC::new(data, ops, seed)),
-        WorkloadKind::StreamCluster => Box::new(stream::StreamCluster::new(data, ops, seed)),
-        WorkloadKind::Memcached => Box::new(memcached::Memcached::new(data, ops, seed)),
-    }
+    Box::new(build_source(kind, data, ops, seed))
 }
 
 /// The shared data placement: one extended-space object (the big data)
@@ -180,6 +226,36 @@ mod tests {
                 (frac - want).abs() < 0.15,
                 "{kind:?}: access ext fraction {frac:.2} vs table {want:.2}"
             );
+        }
+    }
+
+    #[test]
+    fn enum_source_matches_boxed_source() {
+        // Devirtualization must be a pure representation change: the
+        // enum-dispatched source and the boxed trait object emit the
+        // exact same logical stream for every workload.
+        use crate::twinload::LogicalOp;
+        for &kind in ALL_WORKLOADS {
+            let data = testutil::small_regions(&kind.signature());
+            let mut a = build_source(kind, data, 600, 13);
+            let mut b = build_with_regions(kind, data, 600, 13);
+            loop {
+                let (x, y) = (a.next_logical(), b.next_logical());
+                match (x, y) {
+                    (None, None) => break,
+                    (Some(LogicalOp::Compute(m)), Some(LogicalOp::Compute(n))) => {
+                        assert_eq!(m, n, "{kind:?}: compute diverged")
+                    }
+                    (Some(LogicalOp::Mem(m)), Some(LogicalOp::Mem(n))) => {
+                        assert_eq!(
+                            (m.vaddr, m.is_store, m.dep_on),
+                            (n.vaddr, n.is_store, n.dep_on),
+                            "{kind:?}: mem op diverged"
+                        )
+                    }
+                    (x, y) => panic!("{kind:?}: stream shape diverged: {x:?} vs {y:?}"),
+                }
+            }
         }
     }
 

@@ -101,6 +101,21 @@ fn corpus() -> String {
             out.push_str(&render(&r));
         }
     }
+    // One reference-front-end row: freezes the fact that the absolute
+    // numbers are independent of the request-tracking implementation (a
+    // slab bug that shifted behavior identically in both front ends
+    // would still trip the mechanism rows above; this row pins the
+    // reference path itself).
+    {
+        let mut cfg = SystemConfig::tl_ooo();
+        cfg.cores = 2;
+        cfg.frontend = twinload::cpu::FrontEnd::Reference;
+        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+        spec.ops_per_core = 4_000;
+        let r = run_spec(&cfg, &spec);
+        assert!(!r.deadlocked, "frontend=reference corpus run deadlocked");
+        out.push_str(&render(&r));
+    }
     out
 }
 
@@ -141,6 +156,28 @@ fn golden_reports_match_snapshot() {
          If this end-to-end change is intentional, regenerate with `make golden-update` \
          and commit the snapshot."
     );
+}
+
+/// The snapshot must be front-end-independent: the slab and reference
+/// request-tracking paths reproduce the same report line bit-for-bit
+/// (the corpus' final row is itself a frontend=reference run, so the
+/// snapshot freezes both paths' absolute numbers).
+#[test]
+fn golden_corpus_is_frontend_independent() {
+    use twinload::cpu::FrontEnd;
+    let mut base = SystemConfig::tl_ooo();
+    base.cores = 2;
+    let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+    spec.ops_per_core = 4_000;
+    let mut lines = Vec::new();
+    for fe in [FrontEnd::Slab, FrontEnd::Reference] {
+        let mut cfg = base.clone();
+        cfg.frontend = fe;
+        let r = run_spec(&cfg, &spec);
+        assert!(!r.deadlocked);
+        lines.push(render(&r));
+    }
+    assert_eq!(lines[0], lines[1], "slab front end diverged from reference");
 }
 
 /// The snapshot must be engine-independent: the adaptive calendar and

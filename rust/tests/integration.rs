@@ -265,6 +265,85 @@ fn sched_policies_equivalent_end_to_end() {
     }
 }
 
+/// The slab front end is observationally identical to the retained
+/// map-based reference on the full platform: every mechanism must
+/// produce an identical SimReport under both front ends — core stats,
+/// memory hierarchy, DRAM service (the slab's tagged transaction ids
+/// preserve the controller's (arrive, id) tie-break order), mechanism
+/// extras, and even event-engine pushes.
+#[test]
+fn frontends_equivalent_across_all_mechanisms() {
+    use twinload::cpu::FrontEnd;
+    let systems = [
+        SystemConfig::ideal(),
+        SystemConfig::tl_ooo(),
+        SystemConfig::tl_lf(),
+        SystemConfig::tl_lf_batched(8),
+        SystemConfig::numa(),
+        SystemConfig::pcie(0.5),
+        SystemConfig::increased_trl(35 * NS),
+    ];
+    for base in systems {
+        let mut reference = base.clone();
+        reference.frontend = FrontEnd::Reference;
+        let b = run(&reference, WorkloadKind::Gups, 4_000);
+        let mut slab = base.clone();
+        slab.frontend = FrontEnd::Slab;
+        let a = run(&slab, WorkloadKind::Gups, 4_000);
+        let core = |r: &SimReport| {
+            (
+                r.finish,
+                r.retired_insts,
+                r.retired_ops,
+                r.loads,
+                r.stores,
+                r.fences,
+                r.twin_retries,
+                r.safe_paths,
+                r.cas_fails,
+            )
+        };
+        let memory = |r: &SimReport| {
+            (
+                r.llc_hits,
+                r.llc_misses,
+                r.tlb_misses,
+                r.dram_reads,
+                r.dram_writes,
+                r.dram_read_bytes,
+                r.dram_write_bytes,
+                r.mlp_peak,
+            )
+        };
+        let mech = |r: &SimReport| {
+            (
+                r.mec_first_loads,
+                r.mec_second_real,
+                r.mec_second_late,
+                r.pcie_faults,
+                r.lvc_evictions,
+            )
+        };
+        assert_eq!(core(&a), core(&b), "{}: core stats diverged", a.mechanism);
+        assert_eq!(memory(&a), memory(&b), "{}: memory stats diverged", a.mechanism);
+        assert_eq!(mech(&a), mech(&b), "{}: mechanism stats diverged", a.mechanism);
+        assert_eq!(
+            a.row_hit_rate.to_bits(),
+            b.row_hit_rate.to_bits(),
+            "{}: row-hit rate diverged",
+            a.mechanism
+        );
+        assert_eq!(
+            a.mlp_mean.to_bits(),
+            b.mlp_mean.to_bits(),
+            "{}: MLP diverged",
+            a.mechanism
+        );
+        assert_eq!(a.engine_events, b.engine_events, "{}: event count diverged", a.mechanism);
+        assert_eq!(a.engine_peak, b.engine_peak, "{}: occupancy diverged", a.mechanism);
+    }
+}
+
 /// Determinism across the parallel runner with mixed job kinds.
 #[test]
 fn parallel_repro_is_deterministic() {

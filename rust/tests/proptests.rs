@@ -651,6 +651,219 @@ fn prop_invalidation_granularities_three_way_equivalent() {
 }
 
 #[test]
+fn prop_frontends_bit_identical_under_random_completion_orders() {
+    // Differential oracle for the front end: the slab path (generational
+    // request slab + intrusive waiter chains + ring-indexed pair/board
+    // state) must drive the core to bit-identical statistics as the
+    // retained map-based reference, under randomized twin-load micro-op
+    // streams and randomized out-of-order completion: per-request latency
+    // jitter reorders deliveries, shadow/extended lines return fake data
+    // often enough to force twin retries and CAS-store failures, and
+    // appended safe-path / invalidate ops cover the remaining access
+    // kinds. MSHR pressure is randomized to exercise the stall path.
+    use twinload::cache::DataKind;
+    use twinload::cpu::{
+        Core, CoreParams, FrontEnd, IssueResult, MemoryPort,
+        trace::{AccessKind as AK, MemAccess, MicroOp},
+    };
+    use twinload::memmgr::MemLayout;
+    use twinload::util::rng::mix64;
+    use twinload::util::time::NS;
+
+    /// Deterministic jittery memory: latency and content are pure
+    /// functions of (line, per-line issue count), so two runs that issue
+    /// identically observe identical timing and data — and any behavioral
+    /// divergence between the cores desynchronizes the comparison.
+    struct JitterMem {
+        mshrs: usize,
+        salt: u64,
+        fake_bias: u64,
+        layout: MemLayout,
+        inflight: Vec<(u64, u64, u64)>, // (req_id, done_at, line)
+        next_id: u64,
+        seen: std::collections::HashMap<u64, u64>,
+    }
+
+    impl JitterMem {
+        fn latency(&self, line: u64, nth: u64) -> u64 {
+            20 * NS + mix64(line ^ nth.wrapping_mul(0x9E37) ^ self.salt) % (180 * NS)
+        }
+
+        fn content(&self, line: u64, nth: u64) -> DataKind {
+            // Shadow lines are usually fake, extended lines occasionally
+            // (interrupt-eviction emulation) — both-fake pairs and CAS
+            // failures occur with realistic frequency.
+            let h = mix64(line ^ nth.wrapping_mul(0xC2B2) ^ self.salt ^ 1);
+            let fake = if self.layout.is_shadow(line) {
+                h % 100 < 85
+            } else {
+                h % 100 < self.fake_bias
+            };
+            if fake { DataKind::Fake } else { DataKind::Real }
+        }
+
+        fn next_event(&self) -> Option<u64> {
+            self.inflight.iter().map(|&(_, t, _)| t).min()
+        }
+
+        fn deliver(&mut self, now: u64, core: &mut Core) {
+            let mut due: Vec<(u64, u64, u64)> = self
+                .inflight
+                .iter()
+                .copied()
+                .filter(|&(_, t, _)| t <= now)
+                .collect();
+            // Completion order randomized by the latency jitter; the
+            // (t, id) sort only makes simultaneous completions stable.
+            due.sort_by_key(|&(id, t, _)| (t, id));
+            self.inflight.retain(|&(_, t, _)| t > now);
+            for (id, t, line) in due {
+                let nth = self.seen.get(&line).copied().unwrap_or(0);
+                let data = self.content(line, nth);
+                core.complete(id, t, data);
+            }
+        }
+    }
+
+    impl MemoryPort for JitterMem {
+        fn issue(&mut self, now: u64, acc: &MemAccess) -> IssueResult {
+            let line = acc.vaddr & !63;
+            match acc.kind {
+                AK::Invalidate => {
+                    return IssueResult::Done { at: now + 1_000, data: DataKind::Real }
+                }
+                AK::SafePath => {
+                    return IssueResult::Done { at: now + 500 * NS, data: DataKind::Real }
+                }
+                AK::Load | AK::Store => {}
+            }
+            if self.inflight.len() >= self.mshrs {
+                return IssueResult::Stall { retry_at: now + 30 * NS };
+            }
+            let nth = {
+                let e = self.seen.entry(line).or_insert(0);
+                let n = *e;
+                *e += 1;
+                n
+            };
+            let id = self.next_id;
+            self.next_id += 1;
+            self.inflight.push((id, now + self.latency(line, nth), line));
+            IssueResult::Pending { req_id: id }
+        }
+    }
+
+    check("frontend-equivalence", cfg(), |rng| {
+        let layout = MemLayout::new(1 << 22, 1 << 22);
+        // Random logical stream lowered by a real twin-load transform so
+        // pair/dep invariants hold by construction.
+        let mech = [
+            Mechanism::TlOoO,
+            Mechanism::TlLf,
+            Mechanism::TlLfBatched(2 + rng.below(7) as u32),
+        ][rng.below(3) as usize];
+        let n = 40 + rng.below(160);
+        let mut logicals = Vec::new();
+        let mut mem_count = 0u64;
+        for _ in 0..n {
+            if rng.chance(0.25) {
+                logicals.push(LogicalOp::Compute(1 + rng.below(20) as u32));
+                continue;
+            }
+            let ext = rng.chance(0.7);
+            let base = if ext { layout.ext_base() } else { 0 };
+            let addr = base + rng.below(1 << 10) * 64;
+            let op = if rng.chance(0.25) {
+                LogicalOp::store(addr)
+            } else if mem_count > 0 && rng.chance(0.3) {
+                LogicalOp::load_dep(addr, mem_count - 1)
+            } else {
+                LogicalOp::load(addr)
+            };
+            mem_count += 1;
+            logicals.push(op);
+        }
+        let mut t = Transform::new(logicals.into_iter(), mech, layout);
+        let mut ops: Vec<MicroOp> = Vec::new();
+        while let Some(op) = t.next_op() {
+            ops.push(op);
+        }
+        // Tail of safe-path and invalidate ops. Their logical indices
+        // continue the transform's sequential numbering (real lowering
+        // never jumps the index space, and the board ring relies on
+        // that).
+        for k in 0..rng.below(4) {
+            let kind = if rng.chance(0.5) { AK::SafePath } else { AK::Invalidate };
+            ops.push(MicroOp::Mem(MemAccess {
+                vaddr: layout.ext_base() + k * 64,
+                kind,
+                logical: mem_count + k,
+                dep_on: None,
+                pair: None,
+                retry: false,
+            }));
+        }
+
+        let salt = rng.next_u64();
+        let fake_bias = rng.below(30);
+        let mshrs = 2 + rng.below(8) as usize;
+        let mut outcomes = Vec::new();
+        for fe in [FrontEnd::Reference, FrontEnd::Slab] {
+            let mut core = Core::with_frontend(CoreParams::xeon(), fe);
+            let mut src = ops.clone().into_iter();
+            let mut mem = JitterMem {
+                mshrs,
+                salt,
+                fake_bias,
+                layout,
+                inflight: Vec::new(),
+                next_id: 1,
+                seen: Default::default(),
+            };
+            let mut now = 0u64;
+            let mut steps = 0u64;
+            loop {
+                let wake = core.advance(now, &mut src, &mut mem);
+                if core.finished() {
+                    break;
+                }
+                let next = match (wake, mem.next_event()) {
+                    (Some(a), Some(b)) => a.min(b),
+                    (Some(a), None) => a,
+                    (None, Some(b)) => b,
+                    (None, None) => return Err(format!("{fe:?}: deadlocked")),
+                };
+                now = next;
+                mem.deliver(now, &mut core);
+                steps += 1;
+                if steps > 2_000_000 {
+                    return Err(format!("{fe:?}: did not converge"));
+                }
+            }
+            let s = core.stats;
+            outcomes.push((
+                s.finish,
+                s.retired_insts,
+                s.retired_ops,
+                s.loads,
+                s.stores,
+                s.fences,
+                s.twin_retries,
+                s.safe_paths,
+                s.cas_fails,
+            ));
+        }
+        if outcomes[0] != outcomes[1] {
+            return Err(format!(
+                "front ends diverged ({mech:?}): {:?} vs {:?}",
+                outcomes[0], outcomes[1]
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_config_ini_round_trips_and_rejects() {
     // The INI parser and `apply` had no property coverage: generate
     // random-but-valid [system]/[run] files (random key order, spacing,
@@ -659,6 +872,7 @@ fn prop_config_ini_round_trips_and_rejects() {
     // enum value, malformed line) and assert rejection.
     use twinload::config::parser::{apply, Ini};
     use twinload::config::{RunSpec, SystemConfig};
+    use twinload::cpu::FrontEnd;
     use twinload::dram::SchedPolicy;
     use twinload::sim::engine::EngineKind;
     use twinload::workloads::ALL_WORKLOADS;
@@ -667,6 +881,7 @@ fn prop_config_ini_round_trips_and_rejects() {
             [rng.below(7) as usize];
         let engine = ["calendar", "adaptive-calendar", "reference-heap"][rng.below(3) as usize];
         let sched = ["bank-indexed", "rank-inval", "reference-scan"][rng.below(3) as usize];
+        let frontend = ["slab", "reference"][rng.below(2) as usize];
         let cores = 1 + rng.below(8);
         let mshrs = 1 + rng.below(16);
         let wl = ALL_WORKLOADS[rng.below(ALL_WORKLOADS.len() as u64) as usize];
@@ -684,6 +899,7 @@ fn prop_config_ini_round_trips_and_rejects() {
             kv("mechanism", mech.to_string(), rng),
             kv("engine", engine.to_string(), rng),
             kv("sched", sched.to_string(), rng),
+            kv("frontend", frontend.to_string(), rng),
             kv("cores", cores.to_string(), rng),
             kv("mshrs", mshrs.to_string(), rng),
         ];
@@ -721,6 +937,9 @@ fn prop_config_ini_round_trips_and_rejects() {
         if SchedPolicy::by_name(sched) != Some(cfg.sched) {
             return Err(format!("sched lost: {:?} vs {sched}", cfg.sched));
         }
+        if FrontEnd::by_name(frontend) != Some(cfg.frontend) {
+            return Err(format!("frontend lost: {:?} vs {frontend}", cfg.frontend));
+        }
         if cfg.cores as u64 != cores || cfg.mshrs_per_core as u64 != mshrs {
             return Err("numeric [system] key lost".into());
         }
@@ -738,7 +957,8 @@ fn prop_config_ini_round_trips_and_rejects() {
         if apply(&bad_ini, &mut cfg, &mut spec).is_ok() {
             return Err("unknown [run] key accepted".into());
         }
-        let bad_enum = ["engine", "sched", "mechanism", "workload"][rng.below(4) as usize];
+        let bad_enum =
+            ["engine", "sched", "frontend", "mechanism", "workload"][rng.below(5) as usize];
         let section = if bad_enum == "workload" { "[run]" } else { "[system]" };
         let bad_val = format!("{section}\n{bad_enum} = definitely-not-a-{bad_enum}\n");
         let bad_ini = Ini::parse(&bad_val).map_err(|e| format!("bad-enum parse: {e}"))?;
