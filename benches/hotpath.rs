@@ -236,6 +236,7 @@ fn main() {
             ("sim ideal/gups", WorkloadKind::Gups, SystemConfig::ideal()),
             ("sim tl-ooo/gups", WorkloadKind::Gups, SystemConfig::tl_ooo()),
             ("sim tl-ooo/memcached", WorkloadKind::Memcached, SystemConfig::tl_ooo()),
+            ("sim amu/gups", WorkloadKind::Gups, SystemConfig::amu()),
         ] {
             let mut cfg = cfg;
             cfg.cores = 4;
@@ -259,6 +260,7 @@ fn main() {
             ("sim ideal/gups", WorkloadKind::Gups, SystemConfig::ideal()),
             ("sim tl-ooo/gups", WorkloadKind::Gups, SystemConfig::tl_ooo()),
             ("sim tl-ooo/memcached", WorkloadKind::Memcached, SystemConfig::tl_ooo()),
+            ("sim amu/gups", WorkloadKind::Gups, SystemConfig::amu()),
         ] {
             let mut cfg = cfg;
             cfg.cores = 4;

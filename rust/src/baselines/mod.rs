@@ -9,6 +9,14 @@
 //!
 //! `Ideal` needs no module: it is the untransformed stream on local
 //! timing.
+//!
+//! Each baseline's state plugs into the platform through the
+//! extension-memory backend layer ([`crate::sim::backend`]): the
+//! [`NumaLink`] rides the `Numa` backend variant (ingress crossing +
+//! egress hop), the [`PcieSwap`] pool rides the `Pcie` variant (faulted
+//! from the memory port), and [`increased_trl`] derives the `IncreasedTrl`
+//! variant's channel timing — no baseline is special-cased inside the
+//! platform itself.
 
 pub mod numa;
 pub mod pcie;

@@ -9,6 +9,7 @@ use crate::dram::timing::{Geometry, TimingParams, QPI_EXTRA_NS};
 use crate::dram::SchedPolicy;
 use crate::mec::MecConfig;
 use crate::memmgr::MemLayout;
+use crate::sim::backend::Routing;
 use crate::sim::engine::EngineKind;
 use crate::twinload::Mechanism;
 use crate::util::time::{Ps, NS};
@@ -44,6 +45,18 @@ pub struct SystemConfig {
     pub pcie_local_frac: f64,
     /// Increased-tRL system: extra read latency.
     pub trl_extra: Ps,
+    /// AMU system: bounded request-queue depth.
+    pub amu_depth: usize,
+    /// AMU system: one-way request latency to the extended controllers.
+    pub amu_issue: Ps,
+    /// AMU system: completion-notify latency back to the core.
+    pub amu_notify: Ps,
+    /// AMU system: serial dispatch interval (one request per `amu_svc`).
+    pub amu_svc: Ps,
+    /// Extension-memory routing implementation (the typed backend by
+    /// default; the pre-refactor legacy layout is retained for
+    /// differential testing).
+    pub routing: Routing,
     /// Event-queue engine for the platform simulator (calendar queue by
     /// default; the adaptive calendar resamples its bucket width from
     /// observed event spacing; the reference binary heap is retained for
@@ -96,6 +109,11 @@ impl SystemConfig {
             numa_gbps: 25.6, // dual QPI links on E5-2600
             pcie_local_frac: 0.75,
             trl_extra: 0,
+            amu_depth: 32,
+            amu_issue: 10 * NS,
+            amu_notify: 10 * NS,
+            amu_svc: 1_250,
+            routing: Routing::Backend,
             engine: EngineKind::Calendar,
             sched: SchedPolicy::BankIndexed,
             frontend: FrontEnd::Slab,
@@ -147,6 +165,11 @@ impl SystemConfig {
         c
     }
 
+    /// AMU-style asynchronous access unit (explicit request/notify).
+    pub fn amu() -> SystemConfig {
+        Self::base(Mechanism::Amu)
+    }
+
     pub fn by_name(name: &str) -> Option<SystemConfig> {
         match name {
             "ideal" => Some(Self::ideal()),
@@ -156,6 +179,7 @@ impl SystemConfig {
             "numa" => Some(Self::numa()),
             "pcie" => Some(Self::pcie(0.75)),
             "inc-trl" => Some(Self::increased_trl(35 * NS)),
+            "amu" => Some(Self::amu()),
             _ => None,
         }
     }
@@ -183,6 +207,9 @@ impl SystemConfig {
         }
         if !self.layout.ext_size.is_power_of_two() {
             return Err("ext size must be a power of two".into());
+        }
+        if self.mechanism == Mechanism::Amu && self.amu_depth == 0 {
+            return Err("amu_depth must be at least 1".into());
         }
         Ok(())
     }
@@ -233,11 +260,26 @@ mod tests {
 
     #[test]
     fn presets_validate() {
-        for name in ["ideal", "tl-ooo", "tl-lf", "tl-lf-batched", "numa", "pcie", "inc-trl"] {
+        for name in
+            ["ideal", "tl-ooo", "tl-lf", "tl-lf-batched", "numa", "pcie", "inc-trl", "amu"]
+        {
             let c = SystemConfig::by_name(name).unwrap();
             c.validate().unwrap();
         }
         assert!(SystemConfig::by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn amu_knobs_validated() {
+        let mut c = SystemConfig::amu();
+        c.validate().unwrap();
+        c.amu_depth = 0;
+        let err = c.validate().unwrap_err();
+        assert!(err.contains("amu_depth"), "{err}");
+        // The knob is AMU-specific: other mechanisms ignore it.
+        let mut ideal = SystemConfig::ideal();
+        ideal.amu_depth = 0;
+        ideal.validate().unwrap();
     }
 
     #[test]

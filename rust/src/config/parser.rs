@@ -109,6 +109,22 @@ pub fn apply(
                     cfg.trl_extra =
                         v.parse::<u64>().map_err(|_| "bad trl_extra_ns")? * 1_000
                 }
+                "amu_depth" => cfg.amu_depth = v.parse().map_err(|_| "bad amu_depth")?,
+                "amu_issue_ns" => {
+                    cfg.amu_issue =
+                        v.parse::<u64>().map_err(|_| "bad amu_issue_ns")? * 1_000
+                }
+                "amu_notify_ns" => {
+                    cfg.amu_notify =
+                        v.parse::<u64>().map_err(|_| "bad amu_notify_ns")? * 1_000
+                }
+                "amu_svc_ps" => {
+                    cfg.amu_svc = v.parse::<u64>().map_err(|_| "bad amu_svc_ps")?
+                }
+                "routing" => {
+                    cfg.routing = crate::sim::backend::Routing::by_name(v)
+                        .ok_or_else(|| format!("unknown routing '{v}'"))?
+                }
                 "engine" => {
                     cfg.engine = crate::sim::engine::EngineKind::by_name(v)
                         .ok_or_else(|| format!("unknown engine '{v}'"))?
@@ -219,6 +235,40 @@ mod tests {
         apply(&back, &mut cfg, &mut spec).unwrap();
         assert_eq!(cfg.frontend, FrontEnd::Slab);
         let bad = Ini::parse("[system]\nfrontend = bogus\n").unwrap();
+        assert!(apply(&bad, &mut cfg, &mut spec).is_err());
+    }
+
+    #[test]
+    fn amu_keys_configure_the_async_unit() {
+        let ini = Ini::parse(
+            "[system]\nmechanism = amu\namu_depth = 8\namu_issue_ns = 20\n\
+             amu_notify_ns = 5\namu_svc_ps = 2500\n",
+        )
+        .unwrap();
+        let mut cfg = SystemConfig::ideal();
+        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+        apply(&ini, &mut cfg, &mut spec).unwrap();
+        assert_eq!(cfg.mechanism.name(), "amu");
+        assert_eq!(cfg.amu_depth, 8);
+        assert_eq!(cfg.amu_issue, 20_000);
+        assert_eq!(cfg.amu_notify, 5_000);
+        assert_eq!(cfg.amu_svc, 2_500);
+        let bad = Ini::parse("[system]\namu_depth = lots\n").unwrap();
+        assert!(apply(&bad, &mut cfg, &mut spec).is_err());
+    }
+
+    #[test]
+    fn routing_key_selects_backend_implementation() {
+        use crate::sim::backend::Routing;
+        let ini = Ini::parse("[system]\nrouting = legacy\n").unwrap();
+        let mut cfg = SystemConfig::ideal();
+        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+        apply(&ini, &mut cfg, &mut spec).unwrap();
+        assert_eq!(cfg.routing, Routing::Legacy);
+        let back = Ini::parse("[system]\nrouting = backend\n").unwrap();
+        apply(&back, &mut cfg, &mut spec).unwrap();
+        assert_eq!(cfg.routing, Routing::Backend);
+        let bad = Ini::parse("[system]\nrouting = bogus\n").unwrap();
         assert!(apply(&bad, &mut cfg, &mut spec).is_err());
     }
 

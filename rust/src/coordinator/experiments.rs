@@ -400,11 +400,14 @@ pub fn fig11(d: &CharData) -> Table {
     t
 }
 
-/// Figure 12: average DRAM read bandwidth.
+/// Figure 12: average DRAM read bandwidth, plus the data-bus
+/// utilization the channels sustained (the `Channel` estimate
+/// `SimReport` now surfaces — how close each system runs to the pin
+/// bandwidth the non-scalable interface actually offers).
 pub fn fig12(d: &CharData) -> Table {
     let mut t = Table::new(
-        "Figure 12: Average read bandwidth (GB/s)",
-        &["Workload", "Ideal", "TL-OoO", "TL-LF"],
+        "Figure 12: Average read bandwidth (GB/s) and data-bus utilization",
+        &["Workload", "Ideal", "TL-OoO", "TL-LF", "Bus util (TL-OoO)"],
     );
     for (i, wl) in d.workloads.iter().enumerate() {
         t.row(&[
@@ -412,6 +415,7 @@ pub fn fig12(d: &CharData) -> Table {
             f2(d.ideal[i].read_bandwidth_gbps()),
             f2(d.ooo[i].read_bandwidth_gbps()),
             f2(d.lf[i].read_bandwidth_gbps()),
+            pct(d.ooo[i].data_bus_util),
         ]);
     }
     t
@@ -668,6 +672,51 @@ pub fn ablate_scm(scale: &Scale) -> Table {
             pct(real),
             r.twin_retries.to_string(),
         ]);
+    }
+    t
+}
+
+/// AMU ablation: the asynchronous-access unit's bounded request-queue
+/// depth × workloads (alongside the existing LVC/layer/batch sweeps).
+/// MIMS-style message interfaces stand or fall on how many requests the
+/// unit accepts before software has to back off: a shallow queue
+/// serializes misses like TL-LF's fence does, a deep one recovers the
+/// workload's intrinsic MLP at the cost of unit buffering.
+pub fn ablate_amu(scale: &Scale) -> Table {
+    let depths: &[usize] = if scale.quick { &[4, 32] } else { &[2, 8, 32, 128] };
+    let workloads: &[WorkloadKind] =
+        &[WorkloadKind::Gups, WorkloadKind::Cg, WorkloadKind::Memcached];
+    let mut jobs = Vec::new();
+    // Ideal anchors (one per workload) for normalized performance.
+    for &wl in workloads {
+        jobs.push((scale.cfg(SystemConfig::ideal()), scale.spec(wl, scale.medium)));
+    }
+    for &d in depths {
+        for &wl in workloads {
+            let mut c = SystemConfig::amu();
+            c.amu_depth = d;
+            jobs.push((scale.cfg(c), scale.spec(wl, scale.medium)));
+        }
+    }
+    let reports = run_parallel(&jobs, scale.threads);
+    let mut t = Table::new(
+        "Ablation: AMU request-queue depth (normalized to Ideal)",
+        &["Depth", "Workload", "Perf vs Ideal", "MLP", "Queue stalls", "Occ mean", "Occ peak"],
+    );
+    for (di, &d) in depths.iter().enumerate() {
+        for (wi, &wl) in workloads.iter().enumerate() {
+            let base = &reports[wi];
+            let r = &reports[workloads.len() + di * workloads.len() + wi];
+            t.row(&[
+                d.to_string(),
+                wl.name().into(),
+                f3(r.perf_vs(base)),
+                f2(r.mlp_mean),
+                r.amu_queue_stalls.to_string(),
+                f2(r.amu_occ_mean),
+                r.amu_occ_peak.to_string(),
+            ]);
+        }
     }
     t
 }

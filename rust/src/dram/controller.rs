@@ -11,7 +11,7 @@
 //! ## Scheduling structure
 //!
 //! The queues are kept **per (rank, bank)**, sorted by `(arrive, id)`, with
-//! a cached per-bank candidate summary ([`BankCand`]). The FR-FCFS pick
+//! a cached per-bank candidate summary (`BankCand`). The FR-FCFS pick
 //! only has to compare two representatives per bank — the oldest row hit
 //! and the oldest row miss — because within one bank every hit shares the
 //! same column-ready time and every miss shares the same PRE/ACT-ready
@@ -193,6 +193,17 @@ impl MemController {
         self.rq_len + self.wq_len
     }
 
+    /// Channel-bus counters: (commands issued, data bursts transferred).
+    pub fn bus_counts(&self) -> (u64, u64) {
+        (self.channel.cmd_count, self.channel.data_bursts)
+    }
+
+    /// Data-bus utilization over `[0, now]` (fraction of the interval the
+    /// bus spent transferring bursts).
+    pub fn data_bus_util(&self, now: Ps) -> f64 {
+        self.channel.data_utilization(now, &self.p)
+    }
+
     pub fn has_room(&self) -> bool {
         self.rq_len < RQ_CAP
     }
@@ -280,7 +291,7 @@ impl MemController {
     /// Earliest time the *first* command of `t` could issue, plus whether
     /// it would be a row hit, given current bank state. (Used by the
     /// reference scan; the indexed path computes the same quantities once
-    /// per bank in [`MemController::cand`].)
+    /// per bank in the cached `BankCand` summaries.)
     fn first_cmd_time(&self, t: &Transaction) -> (Ps, bool) {
         let rank = &self.channel.ranks[t.addr.rank as usize];
         let bank = &rank.banks[t.addr.bank as usize];

@@ -10,7 +10,7 @@
 use twinload::cli::Args;
 use twinload::config::{parser as cfgparser, RunSpec, SystemConfig};
 use twinload::coordinator::{experiments as exp, fastpath};
-use twinload::sim::run_spec;
+use twinload::sim::{run_spec, try_run_spec};
 use twinload::twinload::Mechanism;
 use twinload::workloads::{WorkloadKind, ALL_WORKLOADS};
 
@@ -25,9 +25,14 @@ const VALUE_FLAGS: &[&str] = &[
     "csv-dir",
     "trl-extra-ns",
     "pcie-local-frac",
+    "amu-depth",
+    "amu-issue-ns",
+    "amu-notify-ns",
+    "amu-svc-ps",
     "engine",
     "sched",
     "frontend",
+    "routing",
 ];
 
 fn main() {
@@ -61,10 +66,12 @@ fn print_usage() {
          \x20            [--footprint-mb M] [--seed S] [--config file.ini]\n\
          \x20            [--engine calendar|adaptive-calendar|reference-heap]\n\
          \x20            [--sched bank-indexed|rank-inval|reference-scan]\n\
-         \x20            [--frontend slab|reference]\n\
+         \x20            [--frontend slab|reference] [--routing backend|legacy]\n\
+         \x20            [--amu-depth N] [--amu-issue-ns N] [--amu-notify-ns N]\n\
+         \x20            [--amu-svc-ps N]\n\
          twinload repro <table1|table2|table3|table4|table5|fig7|fig8|fig9|\n\
          \x20            fig10|fig11|fig12|fig13|fig14|fig15|all> [--quick] [--csv-dir DIR]\n\
-         twinload ablate <lvc|layers|batch> [--quick]\n\
+         twinload ablate <lvc|layers|batch|scm|smt|amu> [--quick]\n\
          twinload validate\n\
          twinload list"
     );
@@ -128,6 +135,10 @@ fn cmd_run(args: &Args) -> i32 {
     flag!("footprint-mb", |v: u64| spec.footprint = v << 20);
     flag!("seed", |v| spec.seed = v);
     flag!("trl-extra-ns", |v: u64| cfg.trl_extra = v * 1000);
+    flag!("amu-depth", |v| cfg.amu_depth = v as usize);
+    flag!("amu-issue-ns", |v: u64| cfg.amu_issue = v * 1000);
+    flag!("amu-notify-ns", |v: u64| cfg.amu_notify = v * 1000);
+    flag!("amu-svc-ps", |v| cfg.amu_svc = v);
     if let Ok(Some(f)) = args.get_f64("pcie-local-frac") {
         cfg.pcie_local_frac = f;
     }
@@ -152,8 +163,21 @@ fn cmd_run(args: &Args) -> i32 {
         };
         cfg.frontend = fe;
     }
+    if let Some(name) = args.get("routing") {
+        let Some(routing) = twinload::sim::Routing::by_name(name) else {
+            eprintln!("unknown routing '{name}' (backend | legacy)");
+            return 2;
+        };
+        cfg.routing = routing;
+    }
 
-    let report = run_spec(&cfg, &spec);
+    let report = match try_run_spec(&cfg, &spec) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 2;
+        }
+    };
     println!("{}", report.summary());
     println!(
         "  runtime       {:>12.3} us\n  retired insts {:>12}\n  IPC           {:>12.3}\n  \
@@ -175,6 +199,20 @@ fn cmd_run(args: &Args) -> i32 {
         report.twin_retries,
         report.cas_fails,
     );
+    println!(
+        "  bus util      {:>11.1}%  ({} commands)",
+        report.data_bus_util * 100.0,
+        report.dram_cmds,
+    );
+    if report.amu_requests > 0 {
+        println!(
+            "  amu queue     {:>12} requests ({} stalls, occ mean {:.1}, peak {})",
+            report.amu_requests,
+            report.amu_queue_stalls,
+            report.amu_occ_mean,
+            report.amu_occ_peak,
+        );
+    }
     println!(
         "  engine        {:>12} ({} events, peak {}, {} buckets x {} ps, {} resizes, \
          {} resamples, {} overflowed)",
@@ -270,8 +308,9 @@ fn cmd_ablate(args: &Args) -> i32 {
         Some("batch") => emit(exp::ablate_batch(&scale), csv, "ablate_batch"),
         Some("scm") => emit(exp::ablate_scm(&scale), csv, "ablate_scm"),
         Some("smt") => emit(exp::ablate_smt(&scale), csv, "ablate_smt"),
+        Some("amu") => emit(exp::ablate_amu(&scale), csv, "ablate_amu"),
         _ => {
-            eprintln!("usage: twinload ablate <lvc|layers|batch|scm|smt>");
+            eprintln!("usage: twinload ablate <lvc|layers|batch|scm|smt|amu>");
             return 2;
         }
     }
@@ -326,7 +365,7 @@ fn cmd_validate(_args: &Args) -> i32 {
 
 fn cmd_list() -> i32 {
     println!("mechanisms:");
-    for m in ["ideal", "tl-ooo", "tl-lf", "tl-lf-batched", "numa", "pcie", "inc-trl"] {
+    for m in ["ideal", "tl-ooo", "tl-lf", "tl-lf-batched", "numa", "pcie", "inc-trl", "amu"] {
         println!("  {m}");
     }
     println!("workloads:");

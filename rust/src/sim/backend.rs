@@ -1,0 +1,741 @@
+//! Pluggable extension-memory backends.
+//!
+//! Every system the paper compares realizes "more memory than the
+//! interface scales to" differently: plain local DIMMs (Ideal), a remote
+//! socket behind QPI (NUMA), OS page swapping over PCIe, a longer read
+//! latency (increased tRL), the MEC tree driven by twin loads, and — the
+//! asynchronous future the paper gestures at (§8) — an AMU-style unit
+//! with an explicit request/notify interface. This module is the seam
+//! that keeps [`crate::sim::platform::Platform`] mechanism-agnostic: all
+//! per-mechanism state and routing decisions live behind [`ExtBackend`],
+//! a typed enum constructed up front (no `Option` fields, no `.expect`
+//! panics at routing time).
+//!
+//! Two interchangeable routing implementations sit behind the
+//! crate-internal `Router` dispatch:
+//!
+//! * [`ExtBackend`] (default) — one enum variant per mechanism, each
+//!   owning exactly the state its mechanism needs.
+//! * [`LegacyRouter`] — the pre-refactor structure (a bag of `Option`
+//!   fields consulted per hook), retained as the differential reference
+//!   in the same spirit as `EngineKind::ReferenceHeap` and
+//!   `FrontEnd::Reference`: the `backend-routing` equivalence tests and
+//!   the golden backend-independence row prove both routings produce
+//!   bit-identical `SimReport`s for every mechanism.
+//!
+//! The hooks are deliberately few: construction (which also builds the
+//! extended `ChannelGroup`), transaction ingress (arrival-time
+//! adjustment on the way to the controllers), service observation (the
+//! MEC watches the command bus), completion egress (extra latency on the
+//! way back), and a handful of read-only accessors for `SimReport`.
+
+use crate::baselines::{increased_trl, NumaLink, PcieSwap};
+use crate::cache::DataKind;
+use crate::config::SystemConfig;
+use crate::dram::address::AddressMapping;
+use crate::dram::{MemController, ServiceResult};
+use crate::mec::Mec1;
+use crate::twinload::Mechanism;
+use crate::util::time::Ps;
+use crate::workloads::DataRegions;
+use anyhow::{bail, Result};
+
+/// How a channel group realizes its accesses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum GroupKind {
+    /// Plain local DRAM.
+    Local,
+    /// The MEC'd extended channel (TL systems): spans ext + shadow.
+    ExtMec,
+    /// Remote DRAM behind the QPI link (NUMA).
+    ExtRemote,
+    /// Extended channel with increased tRL (§7.2).
+    ExtTrl,
+    /// Extended channel behind the asynchronous memory-access unit.
+    ExtAmu,
+}
+
+/// A set of interleaved channels covering one address range.
+pub(crate) struct ChannelGroup {
+    pub(crate) kind: GroupKind,
+    pub(crate) base: u64,
+    pub(crate) span: u64,
+    pub(crate) map: AddressMapping,
+    pub(crate) channels: Vec<MemController>,
+    /// Earliest scheduled Pump event (spam guard; stale events are
+    /// harmless because pumping is idempotent).
+    pub(crate) next_pump: Option<Ps>,
+}
+
+impl ChannelGroup {
+    /// Route a line address within this group: (channel, channel-local).
+    pub(crate) fn route(&self, vaddr: u64) -> (usize, u64) {
+        let rel = (vaddr - self.base) % self.span;
+        let line = rel / 64;
+        let n = self.channels.len() as u64;
+        let ch = (line % n) as usize;
+        let ch_addr = (line / n) * 64;
+        (ch, ch_addr)
+    }
+}
+
+/// Which routing implementation carries the extension-memory state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Routing {
+    /// Typed per-mechanism backend (default).
+    Backend,
+    /// Pre-refactor `Option`-field routing, retained for differential
+    /// testing (proves the backend refactor is behavior-preserving).
+    Legacy,
+}
+
+impl Routing {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Routing::Backend => "backend",
+            Routing::Legacy => "legacy",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Routing> {
+        match name {
+            "backend" => Some(Routing::Backend),
+            "legacy" | "reference" => Some(Routing::Legacy),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// AMU: asynchronous memory-access unit.
+// ---------------------------------------------------------------------
+
+/// Occupancy/housekeeping counters of the AMU request queue, surfaced
+/// through `SimReport`.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct AmuStats {
+    /// Requests accepted by the unit (reads, writes, and prefetches).
+    pub requests: u64,
+    /// Requests that found the bounded queue full and had to wait for a
+    /// slot before the unit would accept them.
+    pub queue_stalls: u64,
+    /// Sum over requests of the queue occupancy observed at arrival
+    /// (divide by `requests` for the mean).
+    pub occ_sum: u64,
+    /// Peak queue occupancy observed at any arrival.
+    pub occ_peak: u64,
+}
+
+impl AmuStats {
+    /// Mean queue occupancy observed at request arrival.
+    pub fn occ_mean(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.occ_sum as f64 / self.requests as f64
+        }
+    }
+}
+
+/// An AMU-style asynchronous access unit (after MIMS and the
+/// "Asynchronous Memory Access Unit" line of work in PAPERS.md): the
+/// core posts an explicit request message into a *bounded* queue, the
+/// unit dispatches requests toward the extended controllers at its
+/// service rate, and completions travel back as notify messages (the
+/// platform schedules them through the event engine as ordinary
+/// `Deliver` events). Cached extended lines are synchronous hits — the
+/// notify fills the cache exactly like a DDR data burst would.
+///
+/// The bounded queue is modeled exactly and allocation-free with a ring
+/// of the last `depth` dispatch times: a request arriving at `t` must
+/// wait for the slot of the request `depth` positions back to dispatch
+/// (queue-full backpressure), then for the unit's serial dispatch cursor
+/// (one request per `svc`), then pays the one-way `issue_lat` to reach
+/// the remote controllers. Completions add `notify_lat` on the way back.
+#[derive(Debug, Clone)]
+pub struct AmuUnit {
+    issue_lat: Ps,
+    notify_lat: Ps,
+    svc: Ps,
+    /// Dispatch times of the last `depth` accepted requests (ring).
+    ring: Vec<Ps>,
+    head: usize,
+    /// Earliest time the serial dispatch stage is free again.
+    next_free: Ps,
+    pub stats: AmuStats,
+}
+
+impl AmuUnit {
+    /// Build a unit; `depth` is the bounded request-queue depth.
+    pub fn new(depth: usize, issue_lat: Ps, notify_lat: Ps, svc: Ps) -> Result<AmuUnit> {
+        if depth == 0 {
+            bail!("amu_depth must be at least 1");
+        }
+        Ok(AmuUnit {
+            issue_lat,
+            notify_lat,
+            svc,
+            ring: vec![0; depth],
+            head: 0,
+            next_free: 0,
+            stats: AmuStats::default(),
+        })
+    }
+
+    fn from_cfg(cfg: &SystemConfig) -> Result<AmuUnit> {
+        AmuUnit::new(cfg.amu_depth, cfg.amu_issue, cfg.amu_notify, cfg.amu_svc)
+    }
+
+    /// A request reaches the unit at `arrive`; returns its arrival time
+    /// at the remote controller (after queueing, serial dispatch, and
+    /// the one-way transfer).
+    pub fn ingress(&mut self, arrive: Ps) -> Ps {
+        // Occupancy at arrival: previously accepted requests that have
+        // not yet dispatched. The ring holds exactly the last `depth`
+        // dispatch times, so occupancy is bounded by the queue depth.
+        let occ = self.occupancy_at(arrive);
+        self.stats.requests += 1;
+        self.stats.occ_sum += occ;
+        self.stats.occ_peak = self.stats.occ_peak.max(occ);
+        // Bounded queue: a full queue delays acceptance until the
+        // request `depth` positions back has dispatched.
+        let slot_free = self.ring[self.head];
+        let eff = arrive.max(slot_free);
+        if eff > arrive {
+            self.stats.queue_stalls += 1;
+        }
+        let dispatch = eff.max(self.next_free);
+        self.next_free = dispatch + self.svc;
+        self.ring[self.head] = dispatch;
+        self.head = (self.head + 1) % self.ring.len();
+        dispatch + self.issue_lat
+    }
+
+    /// Queue occupancy at time `t`: how many of the last `depth`
+    /// accepted requests dispatch strictly after `t`. Dispatch times are
+    /// non-decreasing in insertion order (`dispatch >= next_free >=
+    /// previous dispatch`), and reading the ring circularly from `head`
+    /// (oldest first) is exactly insertion order — the never-written
+    /// zero slots of a cold ring sort before every real dispatch — so
+    /// the `> t` entries form a suffix and a binary search finds its
+    /// start in O(log depth) instead of scanning the ring per request.
+    fn occupancy_at(&self, t: Ps) -> u64 {
+        let depth = self.ring.len();
+        let (mut lo, mut hi) = (0usize, depth);
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.ring[(self.head + mid) % depth] > t {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        (depth - lo) as u64
+    }
+
+    /// Completion-notify latency added on the way back to the core.
+    pub fn notify_lat(&self) -> Ps {
+        self.notify_lat
+    }
+
+    /// Configured queue depth.
+    pub fn depth(&self) -> usize {
+        self.ring.len()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared construction helpers (both routings build identical hardware).
+// ---------------------------------------------------------------------
+
+/// The MEC'd extended channel plan, shared by the group builder and the
+/// MEC-tree builder so the trees always observe the command stream with
+/// the exact mapping the controllers decode: (channel count, per-channel
+/// geometry, per-channel address mapping).
+fn mec_channel_plan(cfg: &SystemConfig) -> (u64, crate::dram::timing::Geometry, AddressMapping) {
+    // Extended + shadow space line-interleaved over the same number of
+    // channels as the Ideal system's extra DIMMs (paper Table 3:
+    // extended memory lives on the host's own channels).
+    let nch = 4u64;
+    let geo = crate::config::geometry_for(2 * cfg.layout.ext_size / nch);
+    let map = AddressMapping::new(&geo, 1);
+    (nch, geo, map)
+}
+
+/// Build the extended channel group for `cfg`, if the mechanism has one
+/// (PCIe swaps into local DRAM and has none).
+fn ext_group(cfg: &SystemConfig) -> Option<ChannelGroup> {
+    let layout = cfg.layout;
+    match cfg.mechanism {
+        Mechanism::TlLf | Mechanism::TlOoO | Mechanism::TlLfBatched(_) => {
+            // Each channel carries its own MEC tree (built by
+            // `build_mecs` from the same plan).
+            let (nch, geo, map) = mec_channel_plan(cfg);
+            Some(ChannelGroup {
+                kind: GroupKind::ExtMec,
+                base: layout.ext_base(),
+                span: 2 * layout.ext_size,
+                map,
+                channels: (0..nch)
+                    .map(|_| MemController::with_policy(cfg.host_timing, geo, cfg.sched))
+                    .collect(),
+                next_pump: None,
+            })
+        }
+        Mechanism::Ideal => {
+            // Extended data on equally-local channels (the paper's
+            // emulation spreads it over the host's four channels).
+            let geo = cfg.ext_channel_geometry();
+            Some(ChannelGroup {
+                kind: GroupKind::Local,
+                base: layout.ext_base(),
+                span: layout.ext_size,
+                map: AddressMapping::new(&geo, 1),
+                channels: (0..4)
+                    .map(|_| MemController::with_policy(cfg.host_timing, geo, cfg.sched))
+                    .collect(),
+                next_pump: None,
+            })
+        }
+        Mechanism::Numa => {
+            let geo = cfg.ext_channel_geometry();
+            Some(ChannelGroup {
+                kind: GroupKind::ExtRemote,
+                base: layout.ext_base(),
+                span: layout.ext_size,
+                map: AddressMapping::new(&geo, 1),
+                channels: (0..4)
+                    .map(|_| MemController::with_policy(cfg.host_timing, geo, cfg.sched))
+                    .collect(),
+                next_pump: None,
+            })
+        }
+        Mechanism::IncreasedTrl => {
+            // Same four-channel layout as every other system — only
+            // the timing differs (tRL + extra, bank held longer).
+            let geo = cfg.ext_channel_geometry();
+            let timing = increased_trl(&cfg.host_timing, cfg.trl_extra);
+            Some(ChannelGroup {
+                kind: GroupKind::ExtTrl,
+                base: layout.ext_base(),
+                span: layout.ext_size,
+                map: AddressMapping::new(&geo, 1),
+                channels: (0..4)
+                    .map(|_| MemController::with_policy(timing, geo, cfg.sched))
+                    .collect(),
+                next_pump: None,
+            })
+        }
+        Mechanism::Amu => {
+            // Extended memory behind the asynchronous unit, spread over
+            // the same four channels as Ideal/NUMA: the unit changes how
+            // requests *reach* the controllers, not the DRAM behind them.
+            let geo = cfg.ext_channel_geometry();
+            Some(ChannelGroup {
+                kind: GroupKind::ExtAmu,
+                base: layout.ext_base(),
+                span: layout.ext_size,
+                map: AddressMapping::new(&geo, 1),
+                channels: (0..4)
+                    .map(|_| MemController::with_policy(cfg.host_timing, geo, cfg.sched))
+                    .collect(),
+                next_pump: None,
+            })
+        }
+        Mechanism::Pcie => {
+            // Extended data swaps into local DRAM; DRAM-level routing
+            // aliases ext addresses onto the local channels (cache and
+            // TLB still see distinct virtual lines).
+            None
+        }
+    }
+}
+
+/// One MEC tree per extended channel (a real deployment extends each DDR
+/// channel with its own MEC1 — Figure 3 shows one channel's tree). Uses
+/// the same [`mec_channel_plan`] as the group builder, so tree mapping
+/// and controller decoding can never drift apart.
+fn build_mecs(cfg: &SystemConfig) -> Vec<Mec1> {
+    let (nch, _geo, map) = mec_channel_plan(cfg);
+    (0..nch)
+        .map(|_| Mec1::new(cfg.mec, cfg.layout.ext_size / nch, map, &cfg.host_timing))
+        .collect()
+}
+
+/// PCIe residency pool sized from the workload's extended footprint.
+fn build_pcie(cfg: &SystemConfig, data: &DataRegions) -> PcieSwap {
+    let ext_pages = (data.ext_len / 4096) as usize;
+    let resident = ((ext_pages as f64) * cfg.pcie_local_frac).max(1.0) as usize;
+    PcieSwap::paper(resident)
+}
+
+// ---------------------------------------------------------------------
+// The typed backend (default routing).
+// ---------------------------------------------------------------------
+
+/// Per-mechanism extension-memory state, one variant per mechanism.
+/// Constructed once by [`ExtBackend::build`]; no hook ever has to
+/// unwrap an `Option` to reach its mechanism's state.
+pub enum ExtBackend {
+    /// Ideal: extended data on equally-local channels; stateless.
+    Direct,
+    /// NUMA: extended accesses cross a QPI-like link both ways.
+    Numa(NumaLink),
+    /// PCIe page swapping: a residency pool faulted at access time.
+    Pcie(PcieSwap),
+    /// Increased tRL: the timing difference lives in the channel group;
+    /// stateless at routing time.
+    IncreasedTrl,
+    /// Twin-load: one MEC tree per extended channel observes the
+    /// command stream.
+    Mec(Vec<Mec1>),
+    /// AMU-style asynchronous unit with a bounded request queue.
+    Amu(AmuUnit),
+}
+
+impl ExtBackend {
+    /// Typed construction from the system config (plus the workload
+    /// placement, which sizes the PCIe residency pool).
+    pub fn build(cfg: &SystemConfig, data: &DataRegions) -> Result<ExtBackend> {
+        Ok(match cfg.mechanism {
+            Mechanism::TlLf | Mechanism::TlOoO | Mechanism::TlLfBatched(_) => {
+                ExtBackend::Mec(build_mecs(cfg))
+            }
+            Mechanism::Ideal => ExtBackend::Direct,
+            Mechanism::Numa => ExtBackend::Numa(NumaLink::new(cfg.numa_one_way, cfg.numa_gbps)),
+            Mechanism::Pcie => ExtBackend::Pcie(build_pcie(cfg, data)),
+            Mechanism::IncreasedTrl => ExtBackend::IncreasedTrl,
+            Mechanism::Amu => ExtBackend::Amu(AmuUnit::from_cfg(cfg)?),
+        })
+    }
+
+    fn ingress(&mut self, kind: GroupKind, arrive: Ps) -> Ps {
+        match self {
+            ExtBackend::Numa(link) if kind == GroupKind::ExtRemote => link.cross(arrive),
+            ExtBackend::Amu(unit) if kind == GroupKind::ExtAmu => unit.ingress(arrive),
+            _ => arrive,
+        }
+    }
+
+    fn egress_delay(&self, kind: GroupKind) -> Ps {
+        match self {
+            ExtBackend::Numa(link) if kind == GroupKind::ExtRemote => link.one_way,
+            ExtBackend::Amu(unit) if kind == GroupKind::ExtAmu => unit.notify_lat(),
+            _ => 0,
+        }
+    }
+
+    fn observe_commands(&mut self, kind: GroupKind, ch: usize, r: &ServiceResult) -> DataKind {
+        match self {
+            ExtBackend::Mec(mecs) if kind == GroupKind::ExtMec => {
+                let mut data = DataKind::Real;
+                let mec = &mut mecs[ch];
+                for cmd in &r.commands {
+                    if let Some(outcome) = mec.on_command(cmd) {
+                        data = outcome.data();
+                    }
+                }
+                data
+            }
+            _ => DataKind::Real,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The retained pre-refactor routing (differential reference).
+// ---------------------------------------------------------------------
+
+/// The pre-refactor extension-memory state layout: a bag of `Option`
+/// fields, each hook consulting whichever happens to be populated.
+/// Retained purely as the differential reference proving the typed
+/// backend is behavior-preserving (see the module docs); the unwrap
+/// panics of the original are gone — an unpopulated field simply routes
+/// as a no-op, which is unreachable for validated configs.
+pub struct LegacyRouter {
+    numa: Option<NumaLink>,
+    pcie: Option<PcieSwap>,
+    mecs: Vec<Mec1>,
+    amu: Option<AmuUnit>,
+}
+
+impl LegacyRouter {
+    pub fn build(cfg: &SystemConfig, data: &DataRegions) -> Result<LegacyRouter> {
+        let mut numa = None;
+        let mut pcie = None;
+        let mut mecs = Vec::new();
+        let mut amu = None;
+        match cfg.mechanism {
+            Mechanism::TlLf | Mechanism::TlOoO | Mechanism::TlLfBatched(_) => {
+                mecs = build_mecs(cfg);
+            }
+            Mechanism::Numa => numa = Some(NumaLink::new(cfg.numa_one_way, cfg.numa_gbps)),
+            Mechanism::Pcie => pcie = Some(build_pcie(cfg, data)),
+            Mechanism::Amu => amu = Some(AmuUnit::from_cfg(cfg)?),
+            Mechanism::Ideal | Mechanism::IncreasedTrl => {}
+        }
+        Ok(LegacyRouter { numa, pcie, mecs, amu })
+    }
+
+    fn ingress(&mut self, kind: GroupKind, arrive: Ps) -> Ps {
+        match kind {
+            GroupKind::ExtRemote => match &mut self.numa {
+                Some(link) => link.cross(arrive),
+                None => arrive,
+            },
+            GroupKind::ExtAmu => match &mut self.amu {
+                Some(unit) => unit.ingress(arrive),
+                None => arrive,
+            },
+            _ => arrive,
+        }
+    }
+
+    fn egress_delay(&self, kind: GroupKind) -> Ps {
+        match kind {
+            GroupKind::ExtRemote => self.numa.as_ref().map_or(0, |l| l.one_way),
+            GroupKind::ExtAmu => self.amu.as_ref().map_or(0, |u| u.notify_lat()),
+            _ => 0,
+        }
+    }
+
+    fn observe_commands(&mut self, kind: GroupKind, ch: usize, r: &ServiceResult) -> DataKind {
+        let mut data = DataKind::Real;
+        if kind == GroupKind::ExtMec {
+            let mec = &mut self.mecs[ch];
+            for cmd in &r.commands {
+                if let Some(outcome) = mec.on_command(cmd) {
+                    data = outcome.data();
+                }
+            }
+        }
+        data
+    }
+}
+
+// ---------------------------------------------------------------------
+// The router the platform holds.
+// ---------------------------------------------------------------------
+
+/// Routing dispatch: the typed backend or the retained legacy layout,
+/// selected by `SystemConfig::routing` (INI `routing =`, CLI
+/// `--routing`).
+pub(crate) enum Router {
+    Backend(ExtBackend),
+    Legacy(LegacyRouter),
+}
+
+impl Router {
+    /// Build the routing state plus the extended channel group.
+    pub(crate) fn build(
+        cfg: &SystemConfig,
+        data: &DataRegions,
+    ) -> Result<(Router, Option<ChannelGroup>)> {
+        let group = ext_group(cfg);
+        let router = match cfg.routing {
+            Routing::Backend => Router::Backend(ExtBackend::build(cfg, data)?),
+            Routing::Legacy => Router::Legacy(LegacyRouter::build(cfg, data)?),
+        };
+        Ok((router, group))
+    }
+
+    /// Adjust a transaction's controller arrival time on the way in.
+    pub(crate) fn ingress(&mut self, kind: GroupKind, arrive: Ps) -> Ps {
+        match self {
+            Router::Backend(b) => b.ingress(kind, arrive),
+            Router::Legacy(l) => l.ingress(kind, arrive),
+        }
+    }
+
+    /// Extra completion latency on the way back to the core.
+    pub(crate) fn egress_delay(&self, kind: GroupKind) -> Ps {
+        match self {
+            Router::Backend(b) => b.egress_delay(kind),
+            Router::Legacy(l) => l.egress_delay(kind),
+        }
+    }
+
+    /// Let the backend observe one serviced transaction's command
+    /// stream; returns the content the host-facing interface produced.
+    pub(crate) fn observe_commands(
+        &mut self,
+        kind: GroupKind,
+        ch: usize,
+        r: &ServiceResult,
+    ) -> DataKind {
+        match self {
+            Router::Backend(b) => b.observe_commands(kind, ch, r),
+            Router::Legacy(l) => l.observe_commands(kind, ch, r),
+        }
+    }
+
+    /// Extended addresses alias onto the local channels (PCIe swapping).
+    pub(crate) fn aliases_local(&self) -> bool {
+        match self {
+            Router::Backend(b) => matches!(b, ExtBackend::Pcie(_)),
+            Router::Legacy(l) => l.pcie.is_some(),
+        }
+    }
+
+    /// Extended pages' leaf PTEs live on the remote node (NUMA): page
+    /// walks to them pay remote latency and walker occupancy.
+    pub(crate) fn remote_page_walks(&self) -> bool {
+        match self {
+            Router::Backend(b) => matches!(b, ExtBackend::Numa(_)),
+            Router::Legacy(l) => l.numa.is_some(),
+        }
+    }
+
+    pub(crate) fn pcie_mut(&mut self) -> Option<&mut PcieSwap> {
+        match self {
+            Router::Backend(ExtBackend::Pcie(p)) => Some(p),
+            Router::Backend(_) => None,
+            Router::Legacy(l) => l.pcie.as_mut(),
+        }
+    }
+
+    pub(crate) fn pcie(&self) -> Option<&PcieSwap> {
+        match self {
+            Router::Backend(ExtBackend::Pcie(p)) => Some(p),
+            Router::Backend(_) => None,
+            Router::Legacy(l) => l.pcie.as_ref(),
+        }
+    }
+
+    pub(crate) fn mecs(&self) -> &[Mec1] {
+        match self {
+            Router::Backend(ExtBackend::Mec(m)) => m,
+            Router::Backend(_) => &[],
+            Router::Legacy(l) => &l.mecs,
+        }
+    }
+
+    pub(crate) fn amu(&self) -> Option<&AmuUnit> {
+        match self {
+            Router::Backend(ExtBackend::Amu(u)) => Some(u),
+            Router::Backend(_) => None,
+            Router::Legacy(l) => l.amu.as_ref(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn data_stub() -> DataRegions {
+        DataRegions { ext_base: 128 << 20, ext_len: 8 << 20, local_base: 0, local_len: 8 << 20 }
+    }
+
+    #[test]
+    fn amu_serializes_at_the_service_rate() {
+        let mut u = AmuUnit::new(8, 10_000, 10_000, 1_250).unwrap();
+        let a = u.ingress(0);
+        let b = u.ingress(0);
+        assert_eq!(a, 10_000, "first request dispatches immediately");
+        assert_eq!(b - a, 1_250, "second request waits one service slot");
+        assert_eq!(u.stats.requests, 2);
+        assert_eq!(u.stats.queue_stalls, 0, "queue not full yet");
+    }
+
+    #[test]
+    fn amu_bounded_queue_backpressure() {
+        // Depth 1: the slot frees when the previous request dispatches.
+        let mut u = AmuUnit::new(1, 0, 0, 1_000).unwrap();
+        u.ingress(0); // dispatch at 0
+        u.ingress(0); // slot free at 0, dispatch serialized to 1_000
+        let c = u.ingress(0); // slot free at 1_000: queue-full stall
+        assert_eq!(c, 2_000);
+        assert_eq!(u.stats.queue_stalls, 1);
+        assert!(u.stats.occ_peak <= u.depth() as u64, "occupancy bounded by depth");
+    }
+
+    #[test]
+    fn amu_idle_unit_accepts_immediately() {
+        let mut u = AmuUnit::new(4, 5_000, 7_000, 1_000).unwrap();
+        let a = u.ingress(1_000_000);
+        assert_eq!(a, 1_005_000);
+        assert_eq!(u.notify_lat(), 7_000);
+        assert_eq!(u.stats.queue_stalls, 0);
+        assert_eq!(u.stats.occ_sum, 0);
+    }
+
+    #[test]
+    fn amu_rejects_zero_depth() {
+        assert!(AmuUnit::new(0, 1, 1, 1).is_err());
+    }
+
+    #[test]
+    fn amu_occupancy_binary_search_matches_naive_scan() {
+        // Drive rings of several depths (cold, partially filled, and
+        // wrapped) through a bursty arrival pattern and check the
+        // O(log depth) suffix search against the O(depth) definition at
+        // every step.
+        for depth in [1usize, 2, 3, 7, 32] {
+            let mut u = AmuUnit::new(depth, 500, 500, 300).unwrap();
+            let mut t: Ps = 0;
+            for i in 0..(4 * depth as u64 + 8) {
+                // Bursts of same-instant arrivals with occasional gaps.
+                if i % 5 == 0 {
+                    t += 1 + (i % 3) * 1_000;
+                }
+                let naive = u.ring.iter().filter(|&&d| d > t).count() as u64;
+                assert_eq!(
+                    u.occupancy_at(t),
+                    naive,
+                    "depth {depth}, step {i}: occupancy diverged from the scan"
+                );
+                u.ingress(t);
+            }
+        }
+    }
+
+    #[test]
+    fn backend_variants_match_mechanisms() {
+        let data = data_stub();
+        let build = |name: &str| {
+            ExtBackend::build(&SystemConfig::by_name(name).unwrap(), &data).unwrap()
+        };
+        assert!(matches!(build("ideal"), ExtBackend::Direct));
+        assert!(matches!(build("tl-ooo"), ExtBackend::Mec(_)));
+        assert!(matches!(build("tl-lf"), ExtBackend::Mec(_)));
+        assert!(matches!(build("numa"), ExtBackend::Numa(_)));
+        assert!(matches!(build("pcie"), ExtBackend::Pcie(_)));
+        assert!(matches!(build("inc-trl"), ExtBackend::IncreasedTrl));
+        assert!(matches!(build("amu"), ExtBackend::Amu(_)));
+    }
+
+    #[test]
+    fn backend_build_rejects_invalid_amu_knob() {
+        let mut cfg = SystemConfig::amu();
+        cfg.amu_depth = 0;
+        let err = ExtBackend::build(&cfg, &data_stub());
+        assert!(err.is_err(), "amu_depth = 0 must be a typed error");
+        assert!(format!("{:#}", err.err().unwrap()).contains("amu_depth"));
+    }
+
+    #[test]
+    fn both_routings_build_the_same_group_shape() {
+        let data = data_stub();
+        for name in ["ideal", "tl-ooo", "numa", "pcie", "inc-trl", "amu"] {
+            let mut cfg = SystemConfig::by_name(name).unwrap();
+            for routing in [Routing::Backend, Routing::Legacy] {
+                cfg.routing = routing;
+                let (_, group) = Router::build(&cfg, &data).unwrap();
+                match name {
+                    "pcie" => assert!(group.is_none(), "pcie has no extended group"),
+                    _ => assert!(group.is_some(), "{name} missing its extended group"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn routing_names_round_trip() {
+        assert_eq!(Routing::by_name("backend"), Some(Routing::Backend));
+        assert_eq!(Routing::by_name("legacy"), Some(Routing::Legacy));
+        assert_eq!(Routing::by_name(Routing::Backend.name()), Some(Routing::Backend));
+        assert!(Routing::by_name("bogus").is_none());
+    }
+}

@@ -5,10 +5,12 @@
 //! Table 3 running one workload; [`run_workload`] is the one-call entry
 //! point that builds, runs, and reports.
 
+pub mod backend;
 pub mod engine;
 pub mod platform;
 pub mod report;
 
+pub use backend::Routing;
 pub use engine::EngineKind;
 pub use platform::Platform;
 pub use report::SimReport;
@@ -32,11 +34,22 @@ pub fn run_workload(
     run_spec(cfg, &spec)
 }
 
-/// Build and run with a full [`RunSpec`].
-pub fn run_spec(cfg: &SystemConfig, spec: &RunSpec) -> SimReport {
-    let mut p = Platform::build(cfg, spec);
+/// Build and run with a full [`RunSpec`], surfacing invalid
+/// configurations as typed errors (the CLI entry point).
+pub fn try_run_spec(cfg: &SystemConfig, spec: &RunSpec) -> anyhow::Result<SimReport> {
+    let mut p = Platform::build(cfg, spec)?;
     p.run();
-    p.report()
+    Ok(p.report())
+}
+
+/// Build and run with a full [`RunSpec`].
+///
+/// Infallible convenience wrapper for callers that construct their
+/// configs programmatically (sweeps, benches, tests); a rejected config
+/// panics here with the typed error's message. Callers handling user
+/// input should prefer [`try_run_spec`].
+pub fn run_spec(cfg: &SystemConfig, spec: &RunSpec) -> SimReport {
+    try_run_spec(cfg, spec).unwrap_or_else(|e| panic!("{e:#}"))
 }
 
 #[cfg(test)]
@@ -65,10 +78,54 @@ mod tests {
             SystemConfig::numa(),
             SystemConfig::pcie(0.9),
             SystemConfig::increased_trl(35_000),
+            SystemConfig::amu(),
         ] {
             let r = smoke(&cfg, WorkloadKind::Gups);
             assert!(r.ipc() > 0.0, "{}: zero IPC", r.mechanism);
         }
+    }
+
+    #[test]
+    fn amu_runs_end_to_end_with_queue_stats() {
+        let r = smoke(&SystemConfig::amu(), WorkloadKind::Gups);
+        assert!(r.amu_requests > 100, "AMU saw no traffic: {}", r.amu_requests);
+        assert!(
+            r.amu_occ_peak <= SystemConfig::amu().amu_depth as u64,
+            "occupancy exceeded the bounded queue: {} > {}",
+            r.amu_occ_peak,
+            SystemConfig::amu().amu_depth
+        );
+        // The async unit adds round-trip latency: slower than ideal.
+        let ideal = smoke(&SystemConfig::ideal(), WorkloadKind::Gups);
+        assert!(r.finish > ideal.finish, "AMU should not beat ideal");
+        // Extended accesses carry the issue/poll instruction overhead.
+        assert!(r.retired_insts > ideal.retired_insts);
+    }
+
+    #[test]
+    fn amu_shallow_queue_backpressures() {
+        let mut shallow = SystemConfig::amu();
+        shallow.amu_depth = 1;
+        let r = smoke(&shallow, WorkloadKind::Gups);
+        assert!(r.amu_queue_stalls > 0, "depth-1 queue never stalled");
+        assert!(r.amu_occ_peak <= 1);
+    }
+
+    #[test]
+    fn invalid_config_is_a_typed_error_not_a_panic() {
+        let mut cfg = SystemConfig::amu();
+        cfg.amu_depth = 0;
+        let spec = RunSpec::smoke(WorkloadKind::Gups);
+        let err = Platform::build(&cfg, &spec);
+        assert!(err.is_err());
+        let msg = format!("{:#}", err.err().unwrap());
+        assert!(msg.contains("amu_depth"), "unhelpful error: {msg}");
+
+        let mut cfg = SystemConfig::ideal();
+        cfg.cores = 0;
+        let err = Platform::build(&cfg, &RunSpec::smoke(WorkloadKind::Gups));
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.err().unwrap()).contains("cores"));
     }
 
     #[test]

@@ -1,9 +1,16 @@
-//! The platform: wiring of cores, caches, controllers, MEC, and baselines
-//! into one event-driven simulation.
+//! The platform: wiring of cores, caches, controllers, and the
+//! extension-memory backend layer into one event-driven simulation.
+//!
+//! The platform itself is mechanism-agnostic: everything specific to how
+//! extended memory is reached (MEC trees, the QPI link, PCIe swapping,
+//! the AMU request queue) lives behind [`super::backend`]'s router, and
+//! this file only wires the generic hooks — ingress on submit, command
+//! observation and egress on service, plus read-only stat accessors.
 
+use super::backend::{AmuStats, ChannelGroup, GroupKind, Router};
 use super::engine::{Ev, EventQueue};
 use super::report::SimReport;
-use crate::baselines::{increased_trl, NumaLink, PcieSwap, SwapOutcome};
+use crate::baselines::SwapOutcome;
 use crate::cache::{CacheConfig, DataKind, LookupResult, MshrFile, MshrOutcome, SetAssocCache, Tlb};
 use crate::config::{RunSpec, SystemConfig};
 use crate::cpu::frontend::{ReqSlab, TagSlab, WaiterTable, NIL};
@@ -13,47 +20,11 @@ use crate::dram::{MemController, ServiceResult, Transaction};
 use crate::mec::Mec1;
 use crate::memmgr::Allocator;
 use crate::stats::LevelMeter;
-use crate::twinload::{Mechanism, Transform};
+use crate::twinload::Transform;
 use crate::util::time::Ps;
 use crate::workloads;
 use crate::util::FastMap;
-
-/// How a channel group realizes its accesses.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum GroupKind {
-    /// Plain local DRAM.
-    Local,
-    /// The MEC'd extended channel (TL systems): spans ext + shadow.
-    ExtMec,
-    /// Remote DRAM behind the QPI link (NUMA).
-    ExtRemote,
-    /// Extended channel with increased tRL (§7.2).
-    ExtTrl,
-}
-
-/// A set of interleaved channels covering one address range.
-struct ChannelGroup {
-    kind: GroupKind,
-    base: u64,
-    span: u64,
-    map: AddressMapping,
-    channels: Vec<MemController>,
-    /// Earliest scheduled Pump event (spam guard; stale events are
-    /// harmless because pumping is idempotent).
-    next_pump: Option<Ps>,
-}
-
-impl ChannelGroup {
-    /// Route a line address within this group: (channel, channel-local).
-    fn route(&self, vaddr: u64) -> (usize, u64) {
-        let rel = (vaddr - self.base) % self.span;
-        let line = rel / 64;
-        let n = self.channels.len() as u64;
-        let ch = (line % n) as usize;
-        let ch_addr = (line / n) * 64;
-        (ch, ch_addr)
-    }
-}
+use anyhow::{Context, Result};
 
 /// Per-core private state.
 struct CoreBundle {
@@ -98,11 +69,10 @@ pub struct Platform {
     cores: Vec<CoreBundle>,
     llc: SetAssocCache,
     groups: Vec<ChannelGroup>,
-    /// One MEC tree per extended channel (a real deployment extends each
-    /// DDR channel with its own MEC1 — Figure 3 shows one channel's tree).
-    mecs: Vec<Mec1>,
-    numa: Option<NumaLink>,
-    pcie: Option<PcieSwap>,
+    /// The extension-memory backend layer: all per-mechanism state
+    /// (MEC trees, QPI link, PCIe residency pool, AMU queue) and the
+    /// routing hooks the platform calls, constructed typed up front.
+    router: Router,
     /// Which bookkeeping implementation tracks in-flight transactions and
     /// waiters (`pending` vs `txns`/`reqs`).
     frontend: FrontEnd,
@@ -150,7 +120,7 @@ struct Port<'a> {
     streams: &'a mut [(u64, u32, u64); 8],
     stream_clock: &'a mut u64,
     llc: &'a mut SetAssocCache,
-    pcie: &'a mut Option<PcieSwap>,
+    router: &'a mut Router,
     outbox: &'a mut Outbox,
 }
 
@@ -236,7 +206,7 @@ impl<'a> MemoryPort for Port<'a> {
             0
         } else {
             let remote =
-                self.cfg.mechanism == Mechanism::Numa && !self.cfg.layout.is_local(acc.vaddr);
+                self.router.remote_page_walks() && !self.cfg.layout.is_local(acc.vaddr);
             let (lat_extra, occ_extra) = if remote {
                 (self.cfg.numa_one_way, self.cfg.numa_one_way / 2)
             } else {
@@ -248,8 +218,8 @@ impl<'a> MemoryPort for Port<'a> {
         };
 
         // PCIe residency check (extended data only).
-        if let Some(pcie) = self.pcie.as_mut() {
-            if self.cfg.layout.is_extended(acc.vaddr) {
+        if self.cfg.layout.is_extended(acc.vaddr) {
+            if let Some(pcie) = self.router.pcie_mut() {
                 if let SwapOutcome::Fault { swap_done, .. } = pcie.access(acc.vaddr, now) {
                     delay += swap_done - now;
                 }
@@ -317,9 +287,13 @@ impl<'a> MemoryPort for Port<'a> {
 }
 
 impl Platform {
-    /// Build the platform for one (system, run) pair.
-    pub fn build(cfg: &SystemConfig, spec: &RunSpec) -> Platform {
-        cfg.validate().expect("invalid system config");
+    /// Build the platform for one (system, run) pair. Invalid
+    /// configurations (including backend knobs) surface as typed errors,
+    /// not panics.
+    pub fn build(cfg: &SystemConfig, spec: &RunSpec) -> Result<Platform> {
+        cfg.validate()
+            .map_err(anyhow::Error::msg)
+            .context("invalid system config")?;
         let layout = cfg.layout;
 
         // --- Channel groups ---
@@ -338,98 +312,17 @@ impl Platform {
                 next_pump: None,
             });
         }
-        let mut mecs = Vec::new();
-        let mut numa = None;
-        let mut pcie = None;
-        match cfg.mechanism {
-            Mechanism::TlLf | Mechanism::TlOoO | Mechanism::TlLfBatched(_) => {
-                // Extended + shadow space line-interleaved over the same
-                // number of channels as the Ideal system's extra DIMMs
-                // (paper Table 3: extended memory lives on the host's own
-                // channels); each channel carries its own MEC tree.
-                let nch = 4u64;
-                let geo = crate::config::geometry_for(2 * layout.ext_size / nch);
-                let map = AddressMapping::new(&geo, 1);
-                groups.push(ChannelGroup {
-                    kind: GroupKind::ExtMec,
-                    base: layout.ext_base(),
-                    span: 2 * layout.ext_size,
-                    map,
-                    channels: (0..nch)
-                        .map(|_| MemController::with_policy(cfg.host_timing, geo, cfg.sched))
-                        .collect(),
-                    next_pump: None,
-                });
-                for _ in 0..nch {
-                    mecs.push(Mec1::new(
-                        cfg.mec,
-                        layout.ext_size / nch,
-                        map,
-                        &cfg.host_timing,
-                    ));
-                }
-            }
-            Mechanism::Ideal => {
-                // Extended data on equally-local channels (the paper's
-                // emulation spreads it over the host's four channels).
-                let geo = cfg.ext_channel_geometry();
-                groups.push(ChannelGroup {
-                    kind: GroupKind::Local,
-                    base: layout.ext_base(),
-                    span: layout.ext_size,
-                    map: AddressMapping::new(&geo, 1),
-                    channels: (0..4)
-                        .map(|_| MemController::with_policy(cfg.host_timing, geo, cfg.sched))
-                        .collect(),
-                    next_pump: None,
-                });
-            }
-            Mechanism::Numa => {
-                let geo = cfg.ext_channel_geometry();
-                groups.push(ChannelGroup {
-                    kind: GroupKind::ExtRemote,
-                    base: layout.ext_base(),
-                    span: layout.ext_size,
-                    map: AddressMapping::new(&geo, 1),
-                    channels: (0..4)
-                        .map(|_| MemController::with_policy(cfg.host_timing, geo, cfg.sched))
-                        .collect(),
-                    next_pump: None,
-                });
-                numa = Some(NumaLink::new(cfg.numa_one_way, cfg.numa_gbps));
-            }
-            Mechanism::IncreasedTrl => {
-                // Same four-channel layout as every other system — only
-                // the timing differs (tRL + extra, bank held longer).
-                let geo = cfg.ext_channel_geometry();
-                let timing = increased_trl(&cfg.host_timing, cfg.trl_extra);
-                groups.push(ChannelGroup {
-                    kind: GroupKind::ExtTrl,
-                    base: layout.ext_base(),
-                    span: layout.ext_size,
-                    map: AddressMapping::new(&geo, 1),
-                    channels: (0..4)
-                        .map(|_| MemController::with_policy(timing, geo, cfg.sched))
-                        .collect(),
-                    next_pump: None,
-                });
-            }
-            Mechanism::Pcie => {
-                // Extended data swaps into local DRAM; DRAM-level routing
-                // aliases ext addresses onto the local channels (cache and
-                // TLB still see distinct virtual lines). Residency pool
-                // sized from the workload's extended footprint.
-            }
-        }
 
-        // --- Workload placement + per-core sources ---
+        // --- Workload placement (the PCIe backend sizes its residency
+        // pool from the extended footprint) + the backend layer, which
+        // owns all per-mechanism state and the extended channel group.
         let mut alloc = Allocator::new(layout, 1 << 20);
         let sig = spec.workload.signature();
         let data = workloads::DataRegions::place(&mut alloc, spec.footprint, &sig);
-        if cfg.mechanism == Mechanism::Pcie {
-            let ext_pages = (data.ext_len / 4096) as usize;
-            let resident = ((ext_pages as f64) * cfg.pcie_local_frac).max(1.0) as usize;
-            pcie = Some(PcieSwap::paper(resident));
+        let (router, ext_group) =
+            Router::build(cfg, &data).context("building extension-memory backend")?;
+        if let Some(g) = ext_group {
+            groups.push(g);
         }
 
         // SMT by static partitioning: each hardware thread is a bundle
@@ -473,15 +366,13 @@ impl Platform {
             events.push(0, Ev::CoreWake { core: i });
         }
 
-        Platform {
+        Ok(Platform {
             cfg: cfg.clone(),
             spec: *spec,
             cores,
             llc: SetAssocCache::new(CacheConfig { ..cfg.llc }),
             groups,
-            mecs,
-            numa,
-            pcie,
+            router,
             frontend: cfg.frontend,
             pending: FastMap::default(),
             txns: TagSlab::new(),
@@ -492,12 +383,12 @@ impl Platform {
             now: 0,
             finished_cores: 0,
             deadlocked: false,
-        }
+        })
     }
 
     /// Find the channel group serving `vaddr`.
     fn group_of(&self, vaddr: u64) -> usize {
-        if self.cfg.mechanism == Mechanism::Pcie {
+        if self.router.aliases_local() {
             return 0; // everything lives in local DRAM (resident pages)
         }
         for (i, g) in self.groups.iter().enumerate() {
@@ -515,9 +406,12 @@ impl Platform {
     /// prefetch, `None` posted write.
     fn submit(&mut self, line: u64, arrive: Ps, read_for: Option<Option<usize>>) {
         let gi = self.group_of(line);
+        let kind = self.groups[gi].kind;
         let mut arrive = arrive;
-        if self.groups[gi].kind == GroupKind::ExtRemote {
-            arrive = self.numa.as_mut().expect("numa link").cross(arrive);
+        if kind != GroupKind::Local {
+            // Backend ingress: NUMA crosses the QPI link, the AMU queues
+            // the request; other mechanisms pass through unchanged.
+            arrive = self.router.ingress(kind, arrive);
         }
         let (ch, ch_addr) = self.groups[gi].route(line);
         // Both front ends draw from the same submit counter: the slab
@@ -589,7 +483,7 @@ impl Platform {
                 streams: &mut b.streams,
                 stream_clock: &mut b.stream_clock,
                 llc: &mut self.llc,
-                pcie: &mut self.pcie,
+                router: &mut self.router,
                 outbox: &mut outbox,
             };
             if let Some(wake) = b.core.advance(now, &mut b.source, &mut port) {
@@ -635,31 +529,27 @@ impl Platform {
                 next_wake = Some(next_wake.map_or(w, |x: Ps| x.min(w)));
             }
             for r in &results {
-                // The channel's MEC observes its command stream.
-                let mut data = DataKind::Real;
-                if kind == GroupKind::ExtMec {
-                    let mec = &mut self.mecs[ch];
-                    for cmd in &r.commands {
-                        if let Some(outcome) = mec.on_command(cmd) {
-                            data = outcome.data();
-                        }
-                    }
-                    if self.cfg.emulate_content {
-                        // Paper-emulation content model (§5): extended
-                        // lines hold real values, shadow lines fake —
-                        // the MEC machinery above still sets the timing
-                        // and statistics.
-                        let p = match self.frontend {
-                            FrontEnd::Reference => self.pending.get(&r.id),
-                            FrontEnd::Slab => self.txns.get(r.id),
+                // The backend observes the serviced command stream (the
+                // MEC watches the DDR bus exactly as §4.3 describes).
+                let mut data = match kind {
+                    GroupKind::Local => DataKind::Real,
+                    _ => self.router.observe_commands(kind, ch, r),
+                };
+                if kind == GroupKind::ExtMec && self.cfg.emulate_content {
+                    // Paper-emulation content model (§5): extended
+                    // lines hold real values, shadow lines fake — the
+                    // MEC machinery above still sets the timing and
+                    // statistics.
+                    let p = match self.frontend {
+                        FrontEnd::Reference => self.pending.get(&r.id),
+                        FrontEnd::Slab => self.txns.get(r.id),
+                    };
+                    if let Some(p) = p {
+                        data = if self.cfg.layout.is_shadow(p.line) {
+                            DataKind::Fake
+                        } else {
+                            DataKind::Real
                         };
-                        if let Some(p) = p {
-                            data = if self.cfg.layout.is_shadow(p.line) {
-                                DataKind::Fake
-                            } else {
-                                DataKind::Real
-                            };
-                        }
                     }
                 }
                 if r.is_write {
@@ -673,9 +563,8 @@ impl Platform {
                     continue;
                 };
                 let mut done = r.data_end + self.cfg.llc_lat; // fill path back up
-                if kind == GroupKind::ExtRemote {
-                    done += self.numa.as_ref().expect("numa").one_way;
-                }
+                // Backend egress: the NUMA return hop / AMU notify.
+                done += self.router.egress_delay(kind);
                 match p.core {
                     Some(core) => {
                         self.events.push(done, Ev::Deliver { core, line: p.line, data })
@@ -880,10 +769,30 @@ impl Platform {
     }
 
     pub(crate) fn mec_refs(&self) -> &[Mec1] {
-        &self.mecs
+        self.router.mecs()
     }
 
-    pub(crate) fn pcie_ref(&self) -> Option<&PcieSwap> {
-        self.pcie.as_ref()
+    pub(crate) fn pcie_ref(&self) -> Option<&crate::baselines::PcieSwap> {
+        self.router.pcie()
+    }
+
+    /// AMU queue statistics (zeros for every other backend).
+    pub(crate) fn amu_stats(&self) -> AmuStats {
+        self.router.amu().map(|u| u.stats).unwrap_or_default()
+    }
+
+    /// Channel-bus totals over every controller: (commands issued,
+    /// mean data-bus utilization over `[0, now]`).
+    pub(crate) fn bus_totals(&self) -> (u64, f64) {
+        let (mut cmds, mut util_sum, mut n) = (0u64, 0.0f64, 0u32);
+        for g in &self.groups {
+            for c in &g.channels {
+                let (cc, _) = c.bus_counts();
+                cmds += cc;
+                util_sum += c.data_bus_util(self.now);
+                n += 1;
+            }
+        }
+        (cmds, if n == 0 { 0.0 } else { util_sum / n as f64 })
     }
 }

@@ -33,6 +33,11 @@ pub struct SimReport {
     pub dram_read_bytes: u64,
     pub dram_write_bytes: u64,
     pub row_hit_rate: f64,
+    /// Commands issued on every channel's command bus.
+    pub dram_cmds: u64,
+    /// Mean data-bus utilization across all channels over the run
+    /// (fraction of wall-clock spent transferring bursts).
+    pub data_bus_util: f64,
     // Concurrency.
     pub mlp_mean: f64,
     pub mlp_peak: u64,
@@ -44,6 +49,11 @@ pub struct SimReport {
     pub mec_second_late: u64,
     pub lvc_evictions: u64,
     pub pcie_faults: u64,
+    // AMU backend: bounded request-queue behavior.
+    pub amu_requests: u64,
+    pub amu_queue_stalls: u64,
+    pub amu_occ_peak: u64,
+    pub amu_occ_mean: f64,
     pub deadlocked: bool,
     // Event-engine occupancy/housekeeping (engine-agnostic fields like
     // `engine_events`/`engine_peak` must match across engines; resize,
@@ -71,6 +81,8 @@ impl SimReport {
         let (llc_hits, llc_misses) = p.llc_stats();
         let (dram_reads, dram_writes, dram_read_bytes, dram_write_bytes, row_hit_rate) =
             p.dram_totals();
+        let (dram_cmds, data_bus_util) = p.bus_totals();
+        let amu = p.amu_stats();
         let mut transform = TransformStats::default();
         for t in p.transform_stats() {
             transform.logical_mem += t.logical_mem;
@@ -113,6 +125,8 @@ impl SimReport {
             dram_read_bytes,
             dram_write_bytes,
             row_hit_rate,
+            dram_cmds,
+            data_bus_util,
             mlp_mean: p.mlp_meter().mean(p.now()),
             mlp_peak: p.mlp_meter().peak(),
             transform,
@@ -121,6 +135,10 @@ impl SimReport {
             mec_second_late,
             lvc_evictions,
             pcie_faults: p.pcie_ref().map(|s| s.faults).unwrap_or(0),
+            amu_requests: amu.requests,
+            amu_queue_stalls: amu.queue_stalls,
+            amu_occ_peak: amu.occ_peak,
+            amu_occ_mean: amu.occ_mean(),
             deadlocked: p.deadlocked,
             engine: engine.kind.name(),
             engine_events: engine.pushed,
@@ -181,7 +199,8 @@ impl SimReport {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "{}/{}: {:.3} ms, IPC {:.2}, LLC miss {}k, TLB miss {}k, BW {:.2} GB/s, MLP {:.1}{}",
+            "{}/{}: {:.3} ms, IPC {:.2}, LLC miss {}k, TLB miss {}k, BW {:.2} GB/s \
+             (bus {:.1}%), MLP {:.1}{}",
             self.mechanism,
             self.workload,
             self.runtime_ns() / 1e6,
@@ -189,6 +208,7 @@ impl SimReport {
             self.llc_misses / 1000,
             self.tlb_misses / 1000,
             self.read_bandwidth_gbps(),
+            self.data_bus_util * 100.0,
             self.mlp_mean,
             if self.deadlocked { " [DEADLOCK]" } else { "" },
         )

@@ -591,6 +591,27 @@ mod tests {
     }
 
     #[test]
+    fn pair_rule_covers_the_amu_sim_rows() {
+        // The AMU mechanism rows are tagged with the same engine /
+        // front-end suffixes as every other sim row, so the existing
+        // pair rules cover them with no new configuration: a lagging
+        // optimized row under the amu workload must still fail.
+        let lagging = report(
+            &[
+                ("sim amu/gups [calendar]", 50.0),
+                ("sim amu/gups [ref-heap]", 100.0),
+                ("sim amu/gups [frontend]", 120.0),
+                ("sim amu/gups [frontend-ref]", 100.0),
+            ],
+            false,
+        );
+        let g = perf_gate(&lagging, &lagging);
+        assert!(!g.passed());
+        assert_eq!(g.failures.len(), 1);
+        assert!(g.failures[0].contains("sim amu/gups [calendar]"), "{}", g.failures[0]);
+    }
+
+    #[test]
     fn missing_rows_warn_but_do_not_fail() {
         let base = report(&[("gone", 100.0)], false);
         let cur = report(&[("new", 100.0)], false);

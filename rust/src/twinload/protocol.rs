@@ -26,12 +26,21 @@ pub enum Mechanism {
     /// §7.2 comparison: single loads with tRL increased by the given
     /// extra latency (no transform; ext-channel timing altered).
     IncreasedTrl,
+    /// AMU-style asynchronous access (MIMS / "Asynchronous Memory Access
+    /// Unit" line of work): extended accesses are rewritten into an
+    /// explicit async-issue (request descriptor + enqueue) and a
+    /// completion poll; the bounded request queue and notify latency are
+    /// modeled by the platform's AMU backend.
+    Amu,
 }
 
 impl Mechanism {
     /// Does this mechanism rewrite extended-memory accesses?
     pub fn transforms(&self) -> bool {
-        matches!(self, Mechanism::TlLf | Mechanism::TlOoO | Mechanism::TlLfBatched(_))
+        matches!(
+            self,
+            Mechanism::TlLf | Mechanism::TlOoO | Mechanism::TlLfBatched(_) | Mechanism::Amu
+        )
     }
 
     pub fn name(&self) -> &'static str {
@@ -43,6 +52,7 @@ impl Mechanism {
             Mechanism::TlOoO => "tl-ooo",
             Mechanism::TlLfBatched(_) => "tl-lf-batched",
             Mechanism::IncreasedTrl => "inc-trl",
+            Mechanism::Amu => "amu",
         }
     }
 }
@@ -54,6 +64,11 @@ impl Mechanism {
 pub const OOO_LOAD_CHECK: u32 = 8;
 pub const OOO_STORE_CAS: u32 = 6;
 pub const LF_LOAD_CHECK: u32 = 4;
+/// AMU async-issue overhead: build the request descriptor (address,
+/// size, completion slot) and post it to the unit's doorbell.
+pub const AMU_ISSUE: u32 = 3;
+/// AMU completion poll: test the notify flag before consuming the value.
+pub const AMU_POLL: u32 = 2;
 
 /// Transform statistics (feeds the Table-4 "% in extended" validation and
 /// the Figure-8 instruction accounting).
@@ -225,6 +240,28 @@ impl<S: LogicalSource> Transform<S> {
         }
     }
 
+    /// AMU lowering: explicit async issue → the access → completion
+    /// poll. The access itself stays a single load/store (the AMU
+    /// backend adds queueing, dispatch, and notify latency at the
+    /// platform level); the instruction stream carries the issue/poll
+    /// overhead the async software interface costs.
+    fn lower_amu(&mut self, m: &LogicalMem, logical: u64) {
+        let kind = if m.is_store { AccessKind::Store } else { AccessKind::Load };
+        self.push(MicroOp::Compute(AMU_ISSUE));
+        self.push(MicroOp::Mem(MemAccess {
+            vaddr: m.vaddr,
+            kind,
+            logical,
+            dep_on: m.dep_on,
+            pair: None,
+            retry: false,
+        }));
+        if !m.is_store {
+            // Stores are fire-and-forget; loads poll for the notify.
+            self.push(MicroOp::Compute(AMU_POLL));
+        }
+    }
+
     /// Flush the TL-LF batch: k prefetches, one fence, k demands.
     /// Allocation-free: iterates the persistent batch buffers in place
     /// and derives the k sequential pair ids arithmetically (identical
@@ -319,6 +356,7 @@ impl<S: LogicalSource> Transform<S> {
                 match self.mech {
                     Mechanism::TlOoO => self.lower_ooo(&m, logical),
                     Mechanism::TlLf => self.lower_lf(&m, logical),
+                    Mechanism::Amu => self.lower_amu(&m, logical),
                     Mechanism::TlLfBatched(k) => {
                         if m.is_store || self.depends_on_batch(&m) {
                             self.flush_batch();
@@ -537,7 +575,59 @@ mod tests {
     #[test]
     fn mechanism_names() {
         assert_eq!(Mechanism::TlOoO.name(), "tl-ooo");
+        assert_eq!(Mechanism::Amu.name(), "amu");
         assert!(Mechanism::TlLfBatched(8).transforms());
+        assert!(Mechanism::Amu.transforms());
         assert!(!Mechanism::IncreasedTrl.transforms());
+    }
+
+    #[test]
+    fn amu_load_is_issue_access_poll() {
+        let ops = vec![LogicalOp::load(ext(0x40))];
+        let mut t = Transform::new(ops.into_iter(), Mechanism::Amu, layout());
+        let out = drain(&mut t);
+        assert_eq!(mem_kinds(&out), vec!["c", "L", "c"]);
+        // Single access to the extended address itself — no twin, no
+        // shadow traffic, no pair id.
+        let m = match &out[1] {
+            MicroOp::Mem(m) => *m,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert!(layout().is_extended(m.vaddr));
+        assert_eq!(m.pair, None);
+        // Issue + poll overhead accounted against the logical stream.
+        assert_eq!(t.stats.micro_insts, (AMU_ISSUE + AMU_POLL + 1) as u64);
+        assert_eq!(t.stats.ext_loads, 1);
+    }
+
+    #[test]
+    fn amu_store_skips_the_poll() {
+        let ops = vec![LogicalOp::store(ext(0x80))];
+        let mut t = Transform::new(ops.into_iter(), Mechanism::Amu, layout());
+        let out = drain(&mut t);
+        assert_eq!(mem_kinds(&out), vec!["c", "S"]);
+        assert_eq!(t.stats.ext_stores, 1);
+    }
+
+    #[test]
+    fn amu_local_access_untouched() {
+        let ops = vec![LogicalOp::load(0x40)];
+        let mut t = Transform::new(ops.into_iter(), Mechanism::Amu, layout());
+        let out = drain(&mut t);
+        assert_eq!(mem_kinds(&out), vec!["L"]);
+        assert_eq!(t.stats.local_accesses, 1);
+        assert_eq!(t.stats.ext_loads, 0);
+    }
+
+    #[test]
+    fn amu_preserves_dependencies() {
+        let ops = vec![LogicalOp::load(ext(0)), LogicalOp::load_dep(ext(0x100), 0)];
+        let mut t = Transform::new(ops.into_iter(), Mechanism::Amu, layout());
+        let out = drain(&mut t);
+        let dep = match &out[4] {
+            MicroOp::Mem(m) => m.dep_on,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert_eq!(dep, Some(0), "pointer-chase dependence lost in lowering");
     }
 }

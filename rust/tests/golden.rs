@@ -41,6 +41,7 @@ fn mechanisms() -> Vec<SystemConfig> {
         SystemConfig::numa(),
         SystemConfig::pcie(0.75),
         SystemConfig::increased_trl(35_000),
+        SystemConfig::amu(),
     ]
 }
 
@@ -52,7 +53,8 @@ fn render(r: &SimReport) -> String {
         "{}/{} finish={} insts={} ops={} loads={} stores={} fences={} retries={} safe={} \
          cas={} llc_hits={} llc_miss={} tlb_miss={} tlb_acc={} dram_r={} dram_w={} \
          dram_rb={} dram_wb={} row_hit={:.6} mlp_mean={:.6} mlp_peak={} micro={} ext_ld={} \
-         ext_st={} mec1={} mec2r={} mec2l={} lvc_ev={} pcie_faults={} events={} peak={}\n",
+         ext_st={} mec1={} mec2r={} mec2l={} lvc_ev={} pcie_faults={} events={} peak={} \
+         cmds={} bus={:.6} amu_rq={} amu_stall={} amu_peak={}\n",
         r.mechanism,
         r.workload,
         r.finish,
@@ -85,6 +87,11 @@ fn render(r: &SimReport) -> String {
         r.pcie_faults,
         r.engine_events,
         r.engine_peak,
+        r.dram_cmds,
+        r.data_bus_util,
+        r.amu_requests,
+        r.amu_queue_stalls,
+        r.amu_occ_peak,
     )
 }
 
@@ -178,6 +185,34 @@ fn golden_corpus_is_frontend_independent() {
         lines.push(render(&r));
     }
     assert_eq!(lines[0], lines[1], "slab front end diverged from reference");
+}
+
+/// The snapshot must be backend-independent: the same mechanism run
+/// through the default typed backend and through the retained
+/// pre-refactor (legacy `Option`-field) routing reproduces the same
+/// report line bit-for-bit — the end-to-end proof that the backend
+/// refactor preserved every mechanism's absolute numbers.
+#[test]
+fn golden_corpus_is_backend_independent() {
+    use twinload::sim::Routing;
+    for base in mechanisms() {
+        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+        spec.ops_per_core = 4_000;
+        let mut lines = Vec::new();
+        for routing in [Routing::Backend, Routing::Legacy] {
+            let mut cfg = base.clone();
+            cfg.cores = 2;
+            cfg.routing = routing;
+            let r = run_spec(&cfg, &spec);
+            assert!(!r.deadlocked);
+            lines.push(render(&r));
+        }
+        assert_eq!(
+            lines[0], lines[1],
+            "backend routing diverged from legacy for {}",
+            base.mechanism.name()
+        );
+    }
 }
 
 /// The snapshot must be engine-independent: the adaptive calendar and

@@ -171,6 +171,7 @@ fn event_engines_equivalent_across_all_mechanisms() {
         SystemConfig::numa(),
         SystemConfig::pcie(0.5),
         SystemConfig::increased_trl(35 * NS),
+        SystemConfig::amu(),
     ];
     for base in systems {
         let mut heap = base.clone();
@@ -282,6 +283,7 @@ fn frontends_equivalent_across_all_mechanisms() {
         SystemConfig::numa(),
         SystemConfig::pcie(0.5),
         SystemConfig::increased_trl(35 * NS),
+        SystemConfig::amu(),
     ];
     for base in systems {
         let mut reference = base.clone();
@@ -342,6 +344,118 @@ fn frontends_equivalent_across_all_mechanisms() {
         assert_eq!(a.engine_events, b.engine_events, "{}: event count diverged", a.mechanism);
         assert_eq!(a.engine_peak, b.engine_peak, "{}: occupancy diverged", a.mechanism);
     }
+}
+
+/// Behavior-preservation proof for the backend refactor: for every
+/// mechanism (the seven pre-existing ones plus the new AMU), the typed
+/// backend routing must produce a `SimReport` bit-identical to the
+/// retained pre-refactor (legacy `Option`-field) routing — core stats,
+/// memory hierarchy, DRAM service, bus counters, mechanism extras, and
+/// event-engine pushes. This is the PR 2–4 style full-platform equality
+/// suite applied to the routing seam itself.
+#[test]
+fn backend_routing_equivalent_across_all_mechanisms() {
+    use twinload::sim::Routing;
+    let systems = [
+        SystemConfig::ideal(),
+        SystemConfig::tl_ooo(),
+        SystemConfig::tl_lf(),
+        SystemConfig::tl_lf_batched(8),
+        SystemConfig::numa(),
+        SystemConfig::pcie(0.5),
+        SystemConfig::increased_trl(35 * NS),
+        SystemConfig::amu(),
+    ];
+    for base in systems {
+        let mut legacy = base.clone();
+        legacy.routing = Routing::Legacy;
+        let b = run(&legacy, WorkloadKind::Gups, 4_000);
+        let mut backend = base.clone();
+        backend.routing = Routing::Backend;
+        let a = run(&backend, WorkloadKind::Gups, 4_000);
+        let core = |r: &SimReport| {
+            (
+                r.finish,
+                r.retired_insts,
+                r.retired_ops,
+                r.loads,
+                r.stores,
+                r.fences,
+                r.twin_retries,
+                r.safe_paths,
+                r.cas_fails,
+            )
+        };
+        let memory = |r: &SimReport| {
+            (
+                r.llc_hits,
+                r.llc_misses,
+                r.tlb_misses,
+                r.dram_reads,
+                r.dram_writes,
+                r.dram_read_bytes,
+                r.dram_write_bytes,
+                r.dram_cmds,
+                r.mlp_peak,
+            )
+        };
+        let mech = |r: &SimReport| {
+            (
+                r.mec_first_loads,
+                r.mec_second_real,
+                r.mec_second_late,
+                r.pcie_faults,
+                r.lvc_evictions,
+                r.amu_requests,
+                r.amu_queue_stalls,
+                r.amu_occ_peak,
+            )
+        };
+        assert_eq!(core(&a), core(&b), "{}: core stats diverged", a.mechanism);
+        assert_eq!(memory(&a), memory(&b), "{}: memory stats diverged", a.mechanism);
+        assert_eq!(mech(&a), mech(&b), "{}: mechanism stats diverged", a.mechanism);
+        assert_eq!(
+            a.row_hit_rate.to_bits(),
+            b.row_hit_rate.to_bits(),
+            "{}: row-hit rate diverged",
+            a.mechanism
+        );
+        assert_eq!(
+            a.data_bus_util.to_bits(),
+            b.data_bus_util.to_bits(),
+            "{}: bus utilization diverged",
+            a.mechanism
+        );
+        assert_eq!(
+            a.mlp_mean.to_bits(),
+            b.mlp_mean.to_bits(),
+            "{}: MLP diverged",
+            a.mechanism
+        );
+        assert_eq!(a.engine_events, b.engine_events, "{}: event count diverged", a.mechanism);
+        assert_eq!(a.engine_peak, b.engine_peak, "{}: occupancy diverged", a.mechanism);
+    }
+}
+
+/// The AMU column lands where the mechanism's physics say it should at
+/// smoke scale: slower than Ideal (it pays request/notify latency and
+/// issue/poll instructions) but far faster than PCIe page swapping, and
+/// its bounded queue never exceeds its configured depth.
+#[test]
+fn amu_orders_between_ideal_and_pcie() {
+    let wl = WorkloadKind::Gups;
+    let ideal = run(&SystemConfig::ideal(), wl, 6_000);
+    let amu = run(&SystemConfig::amu(), wl, 6_000);
+    let pcie = run(&SystemConfig::pcie(0.25), wl, 6_000);
+    assert!(amu.finish > ideal.finish, "AMU cannot beat ideal");
+    assert!(
+        pcie.finish > amu.finish * 2,
+        "page swapping should be far slower than the async unit: {} vs {}",
+        pcie.finish,
+        amu.finish
+    );
+    assert!(amu.amu_requests > 0);
+    assert!(amu.amu_occ_peak <= SystemConfig::amu().amu_depth as u64);
 }
 
 /// Determinism across the parallel runner with mixed job kinds.

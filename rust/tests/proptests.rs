@@ -877,13 +877,18 @@ fn prop_config_ini_round_trips_and_rejects() {
     use twinload::sim::engine::EngineKind;
     use twinload::workloads::ALL_WORKLOADS;
     check("config-roundtrip", cfg(), |rng| {
-        let mech = ["ideal", "tl-ooo", "tl-lf", "tl-lf-batched", "numa", "pcie", "inc-trl"]
-            [rng.below(7) as usize];
+        let mech = ["ideal", "tl-ooo", "tl-lf", "tl-lf-batched", "numa", "pcie", "inc-trl", "amu"]
+            [rng.below(8) as usize];
         let engine = ["calendar", "adaptive-calendar", "reference-heap"][rng.below(3) as usize];
         let sched = ["bank-indexed", "rank-inval", "reference-scan"][rng.below(3) as usize];
         let frontend = ["slab", "reference"][rng.below(2) as usize];
+        let routing = ["backend", "legacy"][rng.below(2) as usize];
         let cores = 1 + rng.below(8);
         let mshrs = 1 + rng.below(16);
+        let amu_depth = 1 + rng.below(256);
+        let amu_issue_ns = rng.below(100);
+        let amu_notify_ns = rng.below(100);
+        let amu_svc_ps = rng.below(10_000);
         let wl = ALL_WORKLOADS[rng.below(ALL_WORKLOADS.len() as u64) as usize];
         let ops = 1 + rng.below(1_000_000);
         let seed = rng.below(1 << 40);
@@ -900,8 +905,13 @@ fn prop_config_ini_round_trips_and_rejects() {
             kv("engine", engine.to_string(), rng),
             kv("sched", sched.to_string(), rng),
             kv("frontend", frontend.to_string(), rng),
+            kv("routing", routing.to_string(), rng),
             kv("cores", cores.to_string(), rng),
             kv("mshrs", mshrs.to_string(), rng),
+            kv("amu_depth", amu_depth.to_string(), rng),
+            kv("amu_issue_ns", amu_issue_ns.to_string(), rng),
+            kv("amu_notify_ns", amu_notify_ns.to_string(), rng),
+            kv("amu_svc_ps", amu_svc_ps.to_string(), rng),
         ];
         rng.shuffle(&mut sys_keys);
         let mut run_keys = vec![
@@ -940,8 +950,18 @@ fn prop_config_ini_round_trips_and_rejects() {
         if FrontEnd::by_name(frontend) != Some(cfg.frontend) {
             return Err(format!("frontend lost: {:?} vs {frontend}", cfg.frontend));
         }
+        if twinload::sim::Routing::by_name(routing) != Some(cfg.routing) {
+            return Err(format!("routing lost: {:?} vs {routing}", cfg.routing));
+        }
         if cfg.cores as u64 != cores || cfg.mshrs_per_core as u64 != mshrs {
             return Err("numeric [system] key lost".into());
+        }
+        if cfg.amu_depth as u64 != amu_depth
+            || cfg.amu_issue != amu_issue_ns * 1_000
+            || cfg.amu_notify != amu_notify_ns * 1_000
+            || cfg.amu_svc != amu_svc_ps
+        {
+            return Err("amu [system] key lost".into());
         }
         if spec.workload != wl
             || spec.ops_per_core != ops
