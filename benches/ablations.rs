@@ -14,8 +14,9 @@ fn main() {
     common::emit("ablate_lvc", || exp::ablate_lvc(&scale));
     common::emit("ablate_layers", || exp::ablate_layers(&scale));
     common::emit("ablate_batch", || exp::ablate_batch(&scale));
-    common::emit("ablate_scm", || exp::ablate_scm(&scale));
+    common::emit("ablate_scm", || exp::ablate_scm(&scale).expect("ablate_scm presets"));
     common::emit("ablate_smt", || exp::ablate_smt(&scale));
+    common::emit("ablate_faults", || exp::ablate_faults(&scale).expect("ablate_faults presets"));
     common::emit("emulation_fidelity", emulation_fidelity);
 }
 

@@ -9,7 +9,7 @@ fn main() {
     let scale = common::scale();
     common::emit("table1", exp::table1);
     common::emit("table2", exp::table2);
-    common::emit("table3", exp::table3);
+    common::emit("table3", || exp::table3().expect("table3 presets"));
     common::emit("table4", || exp::table4(&scale));
     common::emit("table5", exp::table5);
 }

@@ -80,6 +80,33 @@ pub struct SystemConfig {
     /// storms the paper's emulation cannot see (DESIGN.md §6
     /// emulation-fidelity experiment).
     pub emulate_content: bool,
+    /// Extension-path fault probability per injection opportunity
+    /// (not-ready responses, MEC fill drops, lost AMU notifies, PCIe
+    /// transfer failures). `0.0` (default) disables injection entirely —
+    /// the fault layer is structurally inert and behaviour is
+    /// bit-identical to a build without it (`sim/fault.rs`).
+    pub fault_rate: f64,
+    /// Transient-bit-error probability per delivered demand line
+    /// (detect/correct ECC model; applies to every mechanism).
+    pub fault_ecc_rate: f64,
+    /// Seed decorrelating the deterministic fault schedule from the
+    /// workload seed.
+    pub fault_seed: u64,
+    /// Graceful degradation: after this many *consecutive* §4.4 twin
+    /// retries on one line, demote the access to the §4.5 safe path.
+    /// `0` (default) disables demotion — required for bit-identical
+    /// fault-free behaviour, since content-collision retries can recur
+    /// naturally on a hot line.
+    pub demote_after: u32,
+    /// Lost-notify recovery: software poll timeout before the first AMU
+    /// reissue.
+    pub fault_poll_timeout: Ps,
+    /// Lost-notify recovery: bound on reissue attempts (the last attempt
+    /// always delivers, guaranteeing termination).
+    pub fault_reissue_max: u32,
+    /// Lost-notify recovery: poll-timeout multiplier per reissue
+    /// (exponential backoff).
+    pub fault_backoff_mult: u32,
     // Fixed-hierarchy latencies.
     pub l1_lat: Ps,
     pub llc_lat: Ps,
@@ -118,6 +145,13 @@ impl SystemConfig {
             sched: SchedPolicy::BankIndexed,
             frontend: FrontEnd::Slab,
             emulate_content: true,
+            fault_rate: 0.0,
+            fault_ecc_rate: 0.0,
+            fault_seed: 0xF417_ED,
+            demote_after: 0,
+            fault_poll_timeout: 200 * NS,
+            fault_reissue_max: 4,
+            fault_backoff_mult: 2,
             l1_lat: 1_600,      // 4 cycles @ 2.5 GHz
             llc_lat: 14 * NS,   // ~35 cycles
             walk_lat: 40 * NS,  // page walk on TLB miss
@@ -211,7 +245,34 @@ impl SystemConfig {
         if self.mechanism == Mechanism::Amu && self.amu_depth == 0 {
             return Err("amu_depth must be at least 1".into());
         }
+        if !(0.0..=1.0).contains(&self.fault_rate) {
+            return Err("fault_rate must be within [0, 1]".into());
+        }
+        if !(0.0..=1.0).contains(&self.fault_ecc_rate) {
+            return Err("fault_ecc_rate must be within [0, 1]".into());
+        }
+        if self.fault_rate > 0.0 {
+            if self.fault_reissue_max == 0 {
+                return Err("fault_reissue_max must be at least 1".into());
+            }
+            if self.fault_backoff_mult == 0 {
+                return Err("fault_backoff_mult must be at least 1".into());
+            }
+            if self.fault_poll_timeout == 0 {
+                return Err("fault_poll_timeout must be positive".into());
+            }
+        }
         Ok(())
+    }
+
+    /// Robustness-study variant of a preset: nonzero fault schedule plus
+    /// the graceful-degradation policy armed (used by the faulted golden
+    /// rows, the chaos tests, and `ablate faults`).
+    pub fn faulted(mut self, rate: f64) -> SystemConfig {
+        self.fault_rate = rate.clamp(0.0, 1.0);
+        self.fault_ecc_rate = (rate / 8.0).clamp(0.0, 1.0);
+        self.demote_after = 3;
+        self
     }
 }
 
@@ -280,6 +341,44 @@ mod tests {
         let mut ideal = SystemConfig::ideal();
         ideal.amu_depth = 0;
         ideal.validate().unwrap();
+    }
+
+    #[test]
+    fn fault_knobs_validated() {
+        let mut c = SystemConfig::tl_ooo();
+        c.validate().unwrap();
+        c.fault_rate = 1.5;
+        assert!(c.validate().unwrap_err().contains("fault_rate"));
+        c.fault_rate = 0.1;
+        c.validate().unwrap();
+        c.fault_ecc_rate = -0.2;
+        assert!(c.validate().unwrap_err().contains("fault_ecc_rate"));
+        c.fault_ecc_rate = 0.0;
+        c.fault_reissue_max = 0;
+        assert!(c.validate().unwrap_err().contains("fault_reissue_max"));
+        c.fault_reissue_max = 4;
+        c.fault_backoff_mult = 0;
+        assert!(c.validate().unwrap_err().contains("fault_backoff_mult"));
+        c.fault_backoff_mult = 2;
+        c.fault_poll_timeout = 0;
+        assert!(c.validate().unwrap_err().contains("fault_poll_timeout"));
+        // Recovery knobs only matter when injection is armed.
+        c.fault_rate = 0.0;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn faulted_variant_arms_injection_and_demotion() {
+        let c = SystemConfig::tl_ooo().faulted(0.25);
+        assert_eq!(c.fault_rate, 0.25);
+        assert!(c.fault_ecc_rate > 0.0);
+        assert_eq!(c.demote_after, 3);
+        c.validate().unwrap();
+        // Defaults stay inert.
+        let base = SystemConfig::tl_ooo();
+        assert_eq!(base.fault_rate, 0.0);
+        assert_eq!(base.fault_ecc_rate, 0.0);
+        assert_eq!(base.demote_after, 0);
     }
 
     #[test]

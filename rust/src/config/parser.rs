@@ -121,6 +121,30 @@ pub fn apply(
                 "amu_svc_ps" => {
                     cfg.amu_svc = v.parse::<u64>().map_err(|_| "bad amu_svc_ps")?
                 }
+                "fault_rate" => {
+                    cfg.fault_rate = v.parse().map_err(|_| "bad fault_rate")?
+                }
+                "fault_ecc_rate" => {
+                    cfg.fault_ecc_rate = v.parse().map_err(|_| "bad fault_ecc_rate")?
+                }
+                "fault_seed" => {
+                    cfg.fault_seed = v.parse().map_err(|_| "bad fault_seed")?
+                }
+                "demote_after" => {
+                    cfg.demote_after = v.parse().map_err(|_| "bad demote_after")?
+                }
+                "fault_poll_timeout_ns" => {
+                    cfg.fault_poll_timeout =
+                        v.parse::<u64>().map_err(|_| "bad fault_poll_timeout_ns")? * 1_000
+                }
+                "fault_reissue_max" => {
+                    cfg.fault_reissue_max =
+                        v.parse().map_err(|_| "bad fault_reissue_max")?
+                }
+                "fault_backoff_mult" => {
+                    cfg.fault_backoff_mult =
+                        v.parse().map_err(|_| "bad fault_backoff_mult")?
+                }
                 "routing" => {
                     cfg.routing = crate::sim::backend::Routing::by_name(v)
                         .ok_or_else(|| format!("unknown routing '{v}'"))?
@@ -255,6 +279,38 @@ mod tests {
         assert_eq!(cfg.amu_svc, 2_500);
         let bad = Ini::parse("[system]\namu_depth = lots\n").unwrap();
         assert!(apply(&bad, &mut cfg, &mut spec).is_err());
+    }
+
+    #[test]
+    fn fault_keys_configure_the_injection_layer() {
+        let ini = Ini::parse(
+            "[system]\nmechanism = tl-ooo\nfault_rate = 0.05\nfault_ecc_rate = 0.01\n\
+             fault_seed = 99\ndemote_after = 3\nfault_poll_timeout_ns = 150\n\
+             fault_reissue_max = 6\nfault_backoff_mult = 3\n",
+        )
+        .unwrap();
+        let mut cfg = SystemConfig::ideal();
+        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+        apply(&ini, &mut cfg, &mut spec).unwrap();
+        assert_eq!(cfg.fault_rate, 0.05);
+        assert_eq!(cfg.fault_ecc_rate, 0.01);
+        assert_eq!(cfg.fault_seed, 99);
+        assert_eq!(cfg.demote_after, 3);
+        assert_eq!(cfg.fault_poll_timeout, 150_000);
+        assert_eq!(cfg.fault_reissue_max, 6);
+        assert_eq!(cfg.fault_backoff_mult, 3);
+        for bad in [
+            "[system]\nfault_rate = lots\n",
+            "[system]\nfault_ecc_rate = x\n",
+            "[system]\nfault_seed = -1\n",
+            "[system]\ndemote_after = soon\n",
+            "[system]\nfault_poll_timeout_ns = never\n",
+            "[system]\nfault_reissue_max = 1.5\n",
+            "[system]\nfault_backoff_mult = two\n",
+        ] {
+            let ini = Ini::parse(bad).unwrap();
+            assert!(apply(&ini, &mut cfg, &mut spec).is_err(), "accepted {bad}");
+        }
     }
 
     #[test]

@@ -19,8 +19,15 @@ use crate::stats::{Summary, Table};
 use crate::twinload::Mechanism;
 use crate::util::time::{Ps, NS};
 use crate::workloads::{WorkloadKind, ALL_WORKLOADS, FIG13_WORKLOADS};
+use anyhow::{anyhow, Result};
 
-use super::runner::{default_threads, run_parallel};
+use super::runner::{default_threads, run_parallel, try_run_parallel};
+
+/// Typed lookup of a named system preset: unknown names surface as
+/// errors the caller reports, instead of `.unwrap()` panics mid-sweep.
+fn preset(name: &str) -> Result<SystemConfig> {
+    SystemConfig::by_name(name).ok_or_else(|| anyhow!("unknown system preset '{name}'"))
+}
 
 /// Experiment sizing.
 #[derive(Debug, Clone, Copy)]
@@ -179,14 +186,14 @@ fn drive_state(v_cached: bool, shadow_cached: bool) -> StateObs {
 // ---------------------------------------------------------------- Table 3
 
 /// Table 3: the emulated systems.
-pub fn table3() -> Table {
+pub fn table3() -> Result<Table> {
     let mut t = Table::new(
         "Table 3: Emulated systems (scaled 64x; see DESIGN.md)",
         &["System", "Local", "Extended", "Shadow", "Ext interface", "Mechanism"],
     );
     let mb = |b: u64| format!("{} MiB", b >> 20);
     for name in ["tl-ooo", "tl-lf", "numa", "pcie", "ideal"] {
-        let c = SystemConfig::by_name(name).unwrap();
+        let c = preset(name)?;
         let l = c.layout;
         let (iface, shadow) = match c.mechanism {
             Mechanism::TlOoO | Mechanism::TlLf | Mechanism::TlLfBatched(_) => {
@@ -205,7 +212,7 @@ pub fn table3() -> Table {
             c.mechanism.name().into(),
         ]);
     }
-    t
+    Ok(t)
 }
 
 // ---------------------------------------------------------------- Table 4
@@ -645,7 +652,7 @@ pub fn ablate_batch(scale: &Scale) -> Table {
 /// §8 outlook: heterogeneous leaves — DRAM vs SCM (PCM-like) behind the
 /// same MEC tree. SCM's slower reads eat the TL-OoO row-miss window;
 /// TL-LF tolerates them (the paper's argument for TL-LF's adaptability).
-pub fn ablate_scm(scale: &Scale) -> Table {
+pub fn ablate_scm(scale: &Scale) -> Result<Table> {
     let mut t = Table::new(
         "Extension: DRAM vs SCM (PCM-like) leaf memory behind MECs",
         &["Mechanism", "Leaf", "Runtime (us)", "2nd-load real %", "Twin retries"],
@@ -653,7 +660,7 @@ pub fn ablate_scm(scale: &Scale) -> Table {
     let mut jobs = Vec::new();
     for mech in ["tl-ooo", "tl-lf"] {
         for scm in [false, true] {
-            let mut c = SystemConfig::by_name(mech).unwrap();
+            let mut c = preset(mech)?;
             c.emulate_content = false; // the effect is in MEC content timing
             if scm {
                 c.mec.leaf_timing = TimingParams::scm_leaf();
@@ -673,7 +680,7 @@ pub fn ablate_scm(scale: &Scale) -> Table {
             r.twin_retries.to_string(),
         ]);
     }
-    t
+    Ok(t)
 }
 
 /// AMU ablation: the asynchronous-access unit's bounded request-queue
@@ -719,6 +726,77 @@ pub fn ablate_amu(scale: &Scale) -> Table {
         }
     }
     t
+}
+
+/// Robustness ablation: deterministic fault rate × mechanism swept into
+/// degradation curves. Each mechanism exercises its own fault class
+/// (not-ready responses + MEC fill faults for the twin systems, lost
+/// completion notifies for the AMU, DMA transfer failures for PCIe; ECC
+/// bit errors everywhere on the extension path) and its own recovery
+/// machinery — §4.4 retries, `demote_after` safe-path demotion, the
+/// poll-timeout/reissue loop. Rows are normalized to the mechanism's own
+/// fault-free run. Failed jobs surface as FAILED rows instead of killing
+/// the sweep (continue-on-error).
+pub fn ablate_faults(scale: &Scale) -> Result<Table> {
+    let rates: &[f64] = if scale.quick { &[0.0, 0.05] } else { &[0.0, 0.01, 0.05, 0.2] };
+    let mechs = ["tl-ooo", "tl-lf", "amu", "pcie"];
+    let mut jobs = Vec::new();
+    for mech in mechs {
+        for &rate in rates {
+            let base = preset(mech)?;
+            // The fault-free anchor is the untouched preset (the
+            // `faulted` builder also arms demotion, which must not
+            // perturb the baseline).
+            let c = if rate > 0.0 { base.faulted(rate) } else { base };
+            jobs.push((scale.cfg(c), scale.spec(WorkloadKind::Gups, scale.medium)));
+        }
+    }
+    let outcomes = try_run_parallel(&jobs, scale.threads);
+    let mut t = Table::new(
+        "Ablation: fault injection — degradation curves (GUPS)",
+        &[
+            "Mechanism",
+            "Fault rate",
+            "Perf vs fault-free",
+            "Faults",
+            "Retries",
+            "Demoted",
+            "ECC corr",
+            "Rec p99 (ns)",
+        ],
+    );
+    for (mi, mech) in mechs.iter().enumerate() {
+        let base = outcomes[mi * rates.len()].as_ref().ok();
+        for (ri, &rate) in rates.iter().enumerate() {
+            match &outcomes[mi * rates.len() + ri] {
+                Ok(r) => {
+                    let perf =
+                        base.map(|b| f3(r.perf_vs(b))).unwrap_or_else(|| "-".into());
+                    t.row(&[
+                        (*mech).into(),
+                        format!("{rate:.2}"),
+                        perf,
+                        r.faults_injected.to_string(),
+                        r.twin_retries.to_string(),
+                        r.demotions.to_string(),
+                        r.ecc_corrected.to_string(),
+                        format!("{:.0}", r.recovery_p99 as f64 / 1000.0),
+                    ]);
+                }
+                Err(e) => t.row(&[
+                    (*mech).into(),
+                    format!("{rate:.2}"),
+                    format!("FAILED: {}", e.message),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]),
+            }
+        }
+    }
+    Ok(t)
 }
 
 /// Deviation-#1 ablation: the paper's host runs two SMT threads per
@@ -792,7 +870,42 @@ mod tests {
 
     #[test]
     fn table3_lists_five_systems() {
-        assert_eq!(table3().num_rows(), 5);
+        assert_eq!(table3().unwrap().num_rows(), 5);
+    }
+
+    #[test]
+    fn unknown_preset_is_a_typed_error() {
+        let err = preset("bogus");
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.err().unwrap()).contains("bogus"));
+    }
+
+    #[test]
+    fn ablate_faults_reports_degradation_without_failures() {
+        // A tiny custom scale keeps this unit-test cheap: 4 mechanisms ×
+        // 2 rates at 1.5k ops.
+        let scale = Scale {
+            ops: 1_500,
+            cores: 2,
+            medium: 16 << 20,
+            large: 16 << 20,
+            seed: 7,
+            threads: 2,
+            quick: true,
+        };
+        let t = ablate_faults(&scale).unwrap();
+        assert_eq!(t.num_rows(), 4 * 2);
+        let csv = t.to_csv();
+        assert!(!csv.contains("FAILED"), "sweep had failed jobs:\n{csv}");
+        // Every faulted twin-load row injects something.
+        for mech in ["tl-ooo", "tl-lf"] {
+            let row = csv
+                .lines()
+                .find(|l| l.starts_with(mech) && l.contains("0.05"))
+                .unwrap_or_else(|| panic!("no faulted row for {mech}:\n{csv}"));
+            let faults: u64 = row.split(',').nth(3).unwrap().parse().unwrap();
+            assert!(faults > 0, "{mech} at rate 0.05 injected nothing: {row}");
+        }
     }
 
     #[test]

@@ -16,4 +16,4 @@ pub mod fastpath;
 pub mod runner;
 
 pub use experiments::Scale;
-pub use runner::run_parallel;
+pub use runner::{run_parallel, try_run_parallel, JobError};

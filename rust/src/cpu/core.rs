@@ -35,6 +35,12 @@ pub struct CoreParams {
     pub retry_penalty: Ps,
     /// Latency of the §4.5 uncacheable safe path (3 serialized MMIO ops).
     pub safe_penalty: Ps,
+    /// Graceful degradation (§4.5): after this many *consecutive*
+    /// both-fake retries on one line, demote the access to the safe path
+    /// instead of retrying blind. `0` disables demotion — the default,
+    /// because content-collision retries can recur naturally on a hot
+    /// line and the fault-free baseline must stay bit-identical.
+    pub demote_after: u32,
 }
 
 impl CoreParams {
@@ -47,6 +53,7 @@ impl CoreParams {
             period: 400,
             retry_penalty: 400_000, // ≈ 2 serialized misses + fence + flushes
             safe_penalty: 500_000,
+            demote_after: 0,
         }
     }
 }
@@ -111,6 +118,11 @@ pub struct CoreStats {
     pub safe_paths: u64,
     /// CAS store failures retried (§3.2).
     pub cas_fails: u64,
+    /// Lines that entered a retry storm (≥ 2 consecutive both-fake
+    /// retries; tracked only when `demote_after` is armed).
+    pub retry_storms: u64,
+    /// Safe-path demotions taken by the graceful-degradation policy.
+    pub demotions: u64,
     /// Completion time of the last retired op.
     pub finish: Ps,
 }
@@ -172,6 +184,15 @@ pub struct Core {
     pair_ring: PairRing,
     req_map: FastMap<u64, u64>,
     req_seqs: ReqSeqTable,
+    /// Consecutive both-fake retry streak per line (graceful-degradation
+    /// policy; only touched when `demote_after > 0`).
+    retry_streak: FastMap<u64, u32>,
+    /// Declared MSHR-stall window: set when the port answers `Stall`,
+    /// cleared by the next completion (which may free an MSHR sooner).
+    /// Purely informational today — re-issues inside the window are
+    /// side-effect free — but a stale window racing a same-tick
+    /// completion wake is exactly the hazard
+    /// `stall_retry_racing_completion_advances_once` pins down.
     stall_until: Ps,
     source_done: bool,
     /// Sequence numbers of Waiting memory slots, in fetch order — the
@@ -208,6 +229,7 @@ impl Core {
             pair_ring: if slab { PairRing::new(p.rob_size) } else { PairRing::default() },
             req_map: FastMap::default(),
             req_seqs: ReqSeqTable::default(),
+            retry_streak: FastMap::default(),
             stall_until: 0,
             source_done: false,
             waiting: VecDeque::with_capacity(64),
@@ -320,6 +342,10 @@ impl Core {
         let mut wake: Option<Ps> = None;
         let mut done_events: Vec<(u64, Ps, DataKind)> = Vec::new();
         let mut stalled = false;
+        // Deferred like `issue_full`'s `stall_wake`: applied after the
+        // loop so the domination over finer-grained wakes is explicit
+        // rather than an accident of iteration order.
+        let mut stall_wake: Option<Ps> = None;
         self.waiting_scratch.clear();
         while let Some(seq) = self.waiting.pop_front() {
             if stalled {
@@ -371,11 +397,17 @@ impl Core {
                 }
                 IssueResult::Stall { retry_at } => {
                     self.stall_until = retry_at;
-                    wake = Some(retry_at);
+                    stall_wake = Some(retry_at);
                     stalled = true;
                     self.waiting_scratch.push_back(seq);
                 }
             }
+        }
+        if let Some(t) = stall_wake {
+            // The stall dominates any finer-grained wake collected above:
+            // nothing can issue until a completion (which re-advances us
+            // and clears the window) or the retry time.
+            wake = Some(t);
         }
         std::mem::swap(&mut self.waiting, &mut self.waiting_scratch);
         for (seq, at, data) in done_events {
@@ -603,19 +635,45 @@ impl Core {
         };
         let resolved_at = t0.max(at);
         let got_real = first_real || data.is_real();
+        let line = acc.vaddr & !0x3F;
         if got_real {
+            if self.p.demote_after > 0 {
+                self.retry_streak.remove(&line);
+            }
             self.board_resolve(logical, resolved_at);
             None
         } else {
             // Table 2 state 4 (or a too-late second load): the
             // inlined handler invalidates both lines, fences, and
-            // twin-loads again — charged as a lump penalty. A
-            // repeat failure (possible only if the true value
-            // equals the fake pattern) would take the §4.5 safe
-            // path, which the penalty's upper bound also covers.
-            self.stats.twin_retries += 1;
+            // twin-loads again — charged as a lump penalty. Past
+            // `demote_after` consecutive failures on the line
+            // (a not-ready storm, or the true value equalling the
+            // fake pattern) the handler gives up on cacheable
+            // retries and re-reads through the §4.5 safe path.
+            let demote = if self.p.demote_after > 0 {
+                let streak = self.retry_streak.entry(line).or_insert(0);
+                *streak += 1;
+                let storm = *streak == 2;
+                let hit = *streak >= self.p.demote_after;
+                if hit {
+                    *streak = 0;
+                }
+                if storm {
+                    self.stats.retry_storms += 1;
+                }
+                hit
+            } else {
+                false
+            };
             self.charge_retry();
-            let done = resolved_at + self.p.retry_penalty;
+            let done = if demote {
+                self.stats.demotions += 1;
+                self.stats.safe_paths += 1;
+                resolved_at + self.p.safe_penalty
+            } else {
+                self.stats.twin_retries += 1;
+                resolved_at + self.p.retry_penalty
+            };
             self.board_resolve(logical, done);
             Some(done)
         }
@@ -659,6 +717,11 @@ impl Core {
     /// Platform callback: the memory request `req_id` completed at `at`
     /// with content `data`. Returns true if the core should be re-advanced.
     pub fn complete(&mut self, req_id: u64, at: Ps, data: DataKind) -> bool {
+        // The completion may have freed an MSHR: the declared stall
+        // window is stale from here on. Clearing it closes the
+        // double-wake hazard where a stall-retry wake racing a same-tick
+        // completion would otherwise find (and act on) an expired window.
+        self.stall_until = 0;
         let seq = match self.fe {
             FrontEnd::Reference => match self.req_map.remove(&req_id) {
                 Some(seq) => seq,
@@ -946,6 +1009,144 @@ mod tests {
         let (stats, _) = run(ops, &mut mem);
         assert_eq!(stats.twin_retries, 0);
         assert!(stats.finish < 300 * NS, "finish={}", stats.finish);
+    }
+
+    /// Run `ops` to completion on a specific core (demotion tests need
+    /// non-default [`CoreParams`] and per-frontend cores).
+    fn run_on(mut core: Core, ops: Vec<MicroOp>, mem: &mut MockMem) -> CoreStats {
+        let mut src = ops.into_iter();
+        let mut now = 0;
+        for _ in 0..1_000_000 {
+            let wake = core.advance(now, &mut src, mem);
+            if core.finished() {
+                break;
+            }
+            let next = match (wake, mem.next_event()) {
+                (Some(a), Some(b)) => a.min(b),
+                (Some(a), None) => a,
+                (None, Some(b)) => b,
+                (None, None) => panic!("deadlock: no wake and no memory event"),
+            };
+            now = next;
+            mem.deliver(now, &mut core);
+        }
+        assert!(core.finished(), "core did not finish");
+        core.stats
+    }
+
+    /// Five twin-loads of one line, every response fake (a pinned
+    /// not-ready storm), demotion threshold K = 3: the third consecutive
+    /// failure demotes to the safe path and resets the streak.
+    fn storm_ops() -> Vec<MicroOp> {
+        let mut ops = Vec::new();
+        for k in 0..5u64 {
+            ops.push(MicroOp::Mem(MemAccess::load(64, k).with_pair(k)));
+            ops.push(MicroOp::Mem(MemAccess::load(1 << 20, k).with_pair(k)));
+        }
+        // Dependent on the demoted pair's value: correct data must still
+        // arrive, delayed by the safe path.
+        ops.push(MicroOp::Mem(MemAccess::load(8 << 20, 5).with_dep(Some(2))));
+        ops
+    }
+
+    #[test]
+    fn not_ready_storm_demotes_to_safe_path() {
+        let mut p = CoreParams::xeon();
+        p.demote_after = 3;
+        for fe in [FrontEnd::Reference, FrontEnd::Slab] {
+            let mut mem = MockMem::new(100 * NS, 10);
+            mem.fake_addrs = vec![64, 1 << 20];
+            let stats = run_on(Core::with_frontend(p, fe), storm_ops(), &mut mem);
+            // Streak over 5 pairs: 1, 2 (storm), 3 → demote+reset, 1,
+            // 2 (storm again).
+            assert_eq!(stats.twin_retries, 4, "{fe:?}");
+            assert_eq!(stats.demotions, 1, "{fe:?}");
+            assert_eq!(stats.safe_paths, 1, "{fe:?}");
+            assert_eq!(stats.retry_storms, 2, "{fe:?}");
+            assert_eq!(stats.loads, 11, "{fe:?}");
+            // The demoted pair resolved through the safe path, and its
+            // dependent still got (correct) data afterwards.
+            assert!(
+                stats.finish >= 100 * NS + p.safe_penalty + 100 * NS,
+                "{fe:?}: finish={}",
+                stats.finish
+            );
+        }
+    }
+
+    #[test]
+    fn demotion_disabled_by_default_keeps_retry_behavior() {
+        // Same storm with demote_after = 0 (the default): every failure
+        // is a plain §4.4 retry — no demotions, no safe paths, no streak
+        // state (the fault-free bit-identity guarantee).
+        let mut mem = MockMem::new(100 * NS, 10);
+        mem.fake_addrs = vec![64, 1 << 20];
+        let stats = run_on(Core::new(CoreParams::xeon()), storm_ops(), &mut mem);
+        assert_eq!(stats.twin_retries, 5);
+        assert_eq!(stats.demotions, 0);
+        assert_eq!(stats.safe_paths, 0);
+        assert_eq!(stats.retry_storms, 0);
+    }
+
+    #[test]
+    fn demotion_frontends_bit_identical() {
+        let mut p = CoreParams::xeon();
+        p.demote_after = 2;
+        let mut results = Vec::new();
+        for fe in [FrontEnd::Reference, FrontEnd::Slab] {
+            let mut mem = MockMem::new(100 * NS, 10);
+            mem.fake_addrs = vec![64, 1 << 20];
+            let s = run_on(Core::with_frontend(p, fe), storm_ops(), &mut mem);
+            results.push((
+                s.finish,
+                s.retired_insts,
+                s.retired_ops,
+                s.twin_retries,
+                s.safe_paths,
+                s.demotions,
+                s.retry_storms,
+            ));
+        }
+        assert_eq!(results[0], results[1], "front ends diverged under demotion");
+    }
+
+    /// Satellite regression (PR 4's deferred-wake pattern, now under
+    /// direct coverage): a stall-retry wake racing a same-tick completion
+    /// advances the window exactly once — the stale stall wake alone must
+    /// not issue, and a duplicate advance after the completion must not
+    /// move anything again.
+    #[test]
+    fn stall_retry_racing_completion_advances_once() {
+        let mut core = Core::new(CoreParams::xeon());
+        let ops = vec![
+            MicroOp::Mem(MemAccess::load(0, 0)),
+            MicroOp::Mem(MemAccess::load(64, 1)),
+        ];
+        let mut src = ops.into_iter();
+        let mut mem = MockMem::new(100 * NS, 1);
+        // One MSHR: A issues, B stalls with retry_at = completion time.
+        let wake = core.advance(0, &mut src, &mut mem);
+        assert_eq!(mem.issued, 1);
+        let t = wake.expect("stall retry wake");
+        assert_eq!(t, 100 * NS, "stall wake should be the retry time");
+        // The stale stall wake pops first (lower event seq than the
+        // same-tick delivery): B must re-stall, not issue or retire.
+        core.advance(t, &mut src, &mut mem);
+        assert_eq!((core.stats.retired_ops, mem.issued), (0, 1));
+        // The completion lands on the same tick and re-advances the core:
+        // A retires once, B issues exactly once.
+        mem.deliver(t, &mut core);
+        core.advance(t, &mut src, &mut mem);
+        assert_eq!((core.stats.retired_ops, mem.issued), (1, 2));
+        // A second racing advance on the same tick is a no-op.
+        core.advance(t, &mut src, &mut mem);
+        assert_eq!((core.stats.retired_ops, mem.issued), (1, 2));
+        // Drain: B completes and retires exactly once.
+        mem.deliver(2 * t, &mut core);
+        core.advance(2 * t, &mut src, &mut mem);
+        assert!(core.finished());
+        assert_eq!(core.stats.retired_ops, 2);
+        assert_eq!(core.stats.loads, 2);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   run       simulate one (mechanism, workload) pair
 //!   repro     regenerate a paper table/figure (table1..5, fig7..fig15, all)
-//!   ablate    design-choice sweeps (lvc | layers | batch | scm)
+//!   ablate    design-choice sweeps (lvc | layers | batch | scm | smt | amu | faults)
 //!   validate  cross-check the PJRT analytic fast path vs the cycle sim
 //!   list      show mechanisms and workloads
 
@@ -33,6 +33,13 @@ const VALUE_FLAGS: &[&str] = &[
     "sched",
     "frontend",
     "routing",
+    "fault-rate",
+    "fault-ecc-rate",
+    "fault-seed",
+    "demote-after",
+    "fault-poll-timeout-ns",
+    "fault-reissue-max",
+    "fault-backoff-mult",
 ];
 
 fn main() {
@@ -69,9 +76,12 @@ fn print_usage() {
          \x20            [--frontend slab|reference] [--routing backend|legacy]\n\
          \x20            [--amu-depth N] [--amu-issue-ns N] [--amu-notify-ns N]\n\
          \x20            [--amu-svc-ps N]\n\
+         \x20            [--fault-rate F] [--fault-ecc-rate F] [--fault-seed S]\n\
+         \x20            [--demote-after K] [--fault-poll-timeout-ns N]\n\
+         \x20            [--fault-reissue-max N] [--fault-backoff-mult N]\n\
          twinload repro <table1|table2|table3|table4|table5|fig7|fig8|fig9|\n\
          \x20            fig10|fig11|fig12|fig13|fig14|fig15|all> [--quick] [--csv-dir DIR]\n\
-         twinload ablate <lvc|layers|batch|scm|smt|amu> [--quick]\n\
+         twinload ablate <lvc|layers|batch|scm|smt|amu|faults> [--quick]\n\
          twinload validate\n\
          twinload list"
     );
@@ -139,8 +149,19 @@ fn cmd_run(args: &Args) -> i32 {
     flag!("amu-issue-ns", |v: u64| cfg.amu_issue = v * 1000);
     flag!("amu-notify-ns", |v: u64| cfg.amu_notify = v * 1000);
     flag!("amu-svc-ps", |v| cfg.amu_svc = v);
+    flag!("fault-seed", |v| cfg.fault_seed = v);
+    flag!("demote-after", |v| cfg.demote_after = v as u32);
+    flag!("fault-poll-timeout-ns", |v: u64| cfg.fault_poll_timeout = v * 1000);
+    flag!("fault-reissue-max", |v| cfg.fault_reissue_max = v as u32);
+    flag!("fault-backoff-mult", |v| cfg.fault_backoff_mult = v as u32);
     if let Ok(Some(f)) = args.get_f64("pcie-local-frac") {
         cfg.pcie_local_frac = f;
+    }
+    if let Ok(Some(f)) = args.get_f64("fault-rate") {
+        cfg.fault_rate = f;
+    }
+    if let Ok(Some(f)) = args.get_f64("fault-ecc-rate") {
+        cfg.fault_ecc_rate = f;
     }
     if let Some(name) = args.get("engine") {
         let Some(kind) = twinload::sim::engine::EngineKind::by_name(name) else {
@@ -213,6 +234,19 @@ fn cmd_run(args: &Args) -> i32 {
             report.amu_occ_peak,
         );
     }
+    if report.faults_injected > 0 || report.ecc_corrected > 0 {
+        println!(
+            "  faults        {:>12} injected ({} retry storms, {} demotions, {} ecc corrected)\n  \
+             recovery      {:>9.1} ns mean (p99 {:.0} ns, max {:.0} ns)",
+            report.faults_injected,
+            report.retry_storms,
+            report.demotions,
+            report.ecc_corrected,
+            report.recovery_mean / 1000.0,
+            report.recovery_p99 as f64 / 1000.0,
+            report.recovery_max as f64 / 1000.0,
+        );
+    }
     println!(
         "  engine        {:>12} ({} events, peak {}, {} buckets x {} ps, {} resizes, \
          {} resamples, {} overflowed)",
@@ -255,10 +289,22 @@ fn cmd_repro(args: &Args) -> i32 {
         emit(table, csv, name);
         did = true;
     };
+    // Result-returning experiments report their typed error and bail.
+    macro_rules! runr {
+        ($name:expr, $t:expr) => {
+            match $t {
+                Ok(t) => run($name, t),
+                Err(e) => {
+                    eprintln!("error: {e:#}");
+                    return 2;
+                }
+            }
+        };
+    }
     match what {
         "table1" => run("table1", exp::table1()),
         "table2" => run("table2", exp::table2()),
-        "table3" => run("table3", exp::table3()),
+        "table3" => runr!("table3", exp::table3()),
         "table4" => run("table4", exp::table4(&scale)),
         "table5" => run("table5", exp::table5()),
         "fig7" => run("fig7", exp::fig7(&scale)),
@@ -273,7 +319,7 @@ fn cmd_repro(args: &Args) -> i32 {
         "all" => {
             run("table1", exp::table1());
             run("table2", exp::table2());
-            run("table3", exp::table3());
+            runr!("table3", exp::table3());
             run("table4", exp::table4(&scale));
             run("fig7", exp::fig7(&scale));
             let d = data.as_ref().unwrap();
@@ -302,15 +348,27 @@ fn cmd_repro(args: &Args) -> i32 {
 fn cmd_ablate(args: &Args) -> i32 {
     let scale = scale_from(args);
     let csv = args.get("csv-dir");
+    macro_rules! emitr {
+        ($t:expr, $name:expr) => {
+            match $t {
+                Ok(t) => emit(t, csv, $name),
+                Err(e) => {
+                    eprintln!("error: {e:#}");
+                    return 2;
+                }
+            }
+        };
+    }
     match args.positional.first().map(|s| s.as_str()) {
         Some("lvc") => emit(exp::ablate_lvc(&scale), csv, "ablate_lvc"),
         Some("layers") => emit(exp::ablate_layers(&scale), csv, "ablate_layers"),
         Some("batch") => emit(exp::ablate_batch(&scale), csv, "ablate_batch"),
-        Some("scm") => emit(exp::ablate_scm(&scale), csv, "ablate_scm"),
+        Some("scm") => emitr!(exp::ablate_scm(&scale), "ablate_scm"),
         Some("smt") => emit(exp::ablate_smt(&scale), csv, "ablate_smt"),
         Some("amu") => emit(exp::ablate_amu(&scale), csv, "ablate_amu"),
+        Some("faults") => emitr!(exp::ablate_faults(&scale), "ablate_faults"),
         _ => {
-            eprintln!("usage: twinload ablate <lvc|layers|batch|scm|smt|amu>");
+            eprintln!("usage: twinload ablate <lvc|layers|batch|scm|smt|amu|faults>");
             return 2;
         }
     }

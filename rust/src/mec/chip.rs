@@ -21,6 +21,7 @@ use crate::cache::DataKind;
 use crate::dram::address::{AddressMapping, DecodedAddr};
 use crate::dram::command::{Command, CommandKind};
 use crate::dram::timing::TimingParams;
+use crate::sim::fault::{FaultCounters, FaultPlan, FillFault};
 use crate::util::time::Ps;
 
 /// MEC1 configuration.
@@ -72,6 +73,12 @@ pub struct MecStats {
     pub second_late: u64,
     pub writes: u64,
     pub reads_without_act: u64,
+    /// Injected prefetch-buffer fill faults: fills dropped outright (the
+    /// LVC never sees the value; the next twin re-prefetches).
+    pub fill_drops: u64,
+    /// Injected fill faults: fills landing late (the second twin observes
+    /// not-ready data and the host retries).
+    pub fill_lates: u64,
 }
 
 pub struct Mec1 {
@@ -82,6 +89,9 @@ pub struct Mec1 {
     /// Host-side extended-channel address mapping (single channel).
     host_map: AddressMapping,
     host_t_rl: Ps,
+    /// Deterministic fill-fault schedule (`None` = inert, the default).
+    fault: Option<FaultPlan>,
+    fault_seq: FaultCounters,
     pub stats: MecStats,
 }
 
@@ -101,9 +111,16 @@ impl Mec1 {
             tree: MecTree::new(ext_bytes, cfg.topology, cfg.leaf_timing),
             host_map,
             host_t_rl: host.t_rl,
+            fault: None,
+            fault_seq: FaultCounters::default(),
             cfg,
             stats: MecStats::default(),
         }
+    }
+
+    /// Arm deterministic prefetch-fill fault injection (`sim/fault.rs`).
+    pub fn set_fault_plan(&mut self, plan: Option<FaultPlan>) {
+        self.fault = plan;
     }
 
     pub fn config(&self) -> &MecConfig {
@@ -187,8 +204,28 @@ impl Mec1 {
         match self.lvc.lookup(tag) {
             LvcLookup::Miss => {
                 // First load: allocate + forward prefetch downstream.
-                let data_back = self.tree.prefetch(offset, t);
-                self.lvc.allocate(tag, data_back);
+                let mut data_back = self.tree.prefetch(offset, t);
+                let mut dropped = false;
+                if let Some(plan) = &self.fault {
+                    // Late fills miss the twin-spacing window by a wide
+                    // margin, so the second twin observes not-ready data;
+                    // the host's retry finds the (by then arrived) value.
+                    let late_by = 8 * self.host_t_rl;
+                    match plan.mec_fill(tag, self.fault_seq.next(tag), late_by) {
+                        FillFault::None => {}
+                        FillFault::Dropped => {
+                            self.stats.fill_drops += 1;
+                            dropped = true;
+                        }
+                        FillFault::Late(d) => {
+                            self.stats.fill_lates += 1;
+                            data_back += d;
+                        }
+                    }
+                }
+                if !dropped {
+                    self.lvc.allocate(tag, data_back);
+                }
                 self.stats.first_loads += 1;
                 ReadOutcome::FirstLoad
             }
@@ -300,6 +337,66 @@ mod tests {
         m.on_command(&Command::wr(d.rank, d.bank, d.col, 10 * NS));
         assert_eq!(m.stats.writes, 1);
         assert_eq!(m.tree().writes, 1);
+    }
+
+    fn fault_plan(rate: f64) -> FaultPlan {
+        let mut cfg = crate::config::SystemConfig::tl_ooo();
+        cfg.fault_rate = rate;
+        FaultPlan::from_cfg(&cfg).unwrap()
+    }
+
+    #[test]
+    fn full_rate_fills_drop_or_arrive_late_and_late_recovers() {
+        let mut m = mec(Topology::two_layer());
+        m.set_fault_plan(Some(fault_plan(1.0)));
+        let (mut drops, mut lates) = (0u32, 0u32);
+        for i in 0..16u64 {
+            // Distinct rows so each pair is an independent first load.
+            let phys = 0x40 + i * (128 * 64) * 16;
+            let t = (20 + 1_000 * i) * NS;
+            assert_eq!(read_at(&mut m, phys, t), ReadOutcome::FirstLoad);
+            match read_at(&mut m, host_map().twin(phys), t + 35 * NS) {
+                // Dropped fill: the LVC never filled, so the twin re-misses.
+                ReadOutcome::FirstLoad => drops += 1,
+                // Late fill: not-ready data → §4.4 retry finds it arrived.
+                ReadOutcome::SecondLoadLate => {
+                    lates += 1;
+                    let o = read_at(&mut m, phys, t + 900 * NS);
+                    assert_eq!(o, ReadOutcome::SecondLoadReal);
+                }
+                ReadOutcome::SecondLoadReal => panic!("rate-1.0 fault missing"),
+            }
+        }
+        assert!(drops > 0 && lates > 0, "drops={drops} lates={lates}");
+        assert!(m.stats.fill_drops > 0 && m.stats.fill_lates > 0);
+    }
+
+    #[test]
+    fn fill_faults_are_deterministic_and_partial_at_low_rate() {
+        let run = || {
+            let mut m = mec(Topology::two_layer());
+            m.set_fault_plan(Some(fault_plan(0.3)));
+            for i in 0..32u64 {
+                read_at(&mut m, 0x40 + i * (128 * 64) * 16, (20 + 100 * i) * NS);
+            }
+            (m.stats.fill_drops, m.stats.fill_lates)
+        };
+        let (d, l) = run();
+        assert_eq!((d, l), run(), "fill faults must be schedule-deterministic");
+        assert!(d + l > 0 && d + l < 32, "rate 0.3 over 32 loads: {d}+{l}");
+    }
+
+    #[test]
+    fn unarmed_mec_injects_nothing() {
+        let mut m = mec(Topology::two_layer());
+        for i in 0..8u64 {
+            let phys = 0x40 + i * (128 * 64) * 16;
+            let t = (20 + 1_000 * i) * NS;
+            read_at(&mut m, phys, t);
+            let o = read_at(&mut m, host_map().twin(phys), t + 35 * NS);
+            assert_eq!(o, ReadOutcome::SecondLoadReal);
+        }
+        assert_eq!(m.stats.fill_drops + m.stats.fill_lates, 0);
     }
 
     #[test]

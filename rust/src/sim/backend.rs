@@ -357,8 +357,16 @@ fn ext_group(cfg: &SystemConfig) -> Option<ChannelGroup> {
 /// and controller decoding can never drift apart.
 fn build_mecs(cfg: &SystemConfig) -> Vec<Mec1> {
     let (nch, _geo, map) = mec_channel_plan(cfg);
+    // Arming here (not per routing) keeps Backend and Legacy fault
+    // schedules bit-identical: the plan is pure state-free hashing, so
+    // identical command streams see identical fill faults.
+    let plan = crate::sim::fault::FaultPlan::from_cfg(cfg);
     (0..nch)
-        .map(|_| Mec1::new(cfg.mec, cfg.layout.ext_size / nch, map, &cfg.host_timing))
+        .map(|_| {
+            let mut m = Mec1::new(cfg.mec, cfg.layout.ext_size / nch, map, &cfg.host_timing);
+            m.set_fault_plan(plan);
+            m
+        })
         .collect()
 }
 

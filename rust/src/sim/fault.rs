@@ -1,0 +1,352 @@
+//! Deterministic extension-path fault injection (§4.4 robustness).
+//!
+//! The paper's liveness argument is that twin-load survives a misbehaving
+//! extension path — not-ready data, reordered prefetches, lost state — via
+//! content checking, software retry, and the §4.5 safe fallback path. This
+//! module makes the backend misbehave *on purpose*, deterministically, so
+//! those recovery paths run under test and measurement instead of staying
+//! dead code.
+//!
+//! Design constraints:
+//!
+//! * **Structurally inert when disabled.** [`FaultPlan::from_cfg`] returns
+//!   `None` when every fault rate is zero; all injection sites are gated on
+//!   that `Option`, so a `fault_rate = 0` run takes exactly the pre-fault
+//!   code path — no hash draws, no counter state, no timing deltas. The
+//!   golden corpus and the chaos differential proptest enforce this.
+//! * **Independent of engine / front end / scheduler / routing.** Every
+//!   fault decision is a pure function of (fault seed, site salt, line
+//!   identity, per-line occurrence number) via [`mix64`] — the same
+//!   stateless-hash idiom the differential mocks use — so equivalent
+//!   implementations observe identical fault schedules. Occurrence numbers
+//!   are tracked *per line* ([`FaultCounters`]), which makes the schedule
+//!   insensitive to cross-line service reordering.
+//! * **Bounded recovery.** Every injected fault has a recovery path that
+//!   terminates: not-ready responses fall to §4.4 retry and, past the
+//!   `demote_after` streak, the §4.5 safe path; lost AMU notifies fall to a
+//!   poll-timeout + bounded-reissue loop whose final attempt always
+//!   delivers. The chaos proptest asserts exactly-once completion of every
+//!   logical op under arbitrary fault schedules.
+
+use crate::config::SystemConfig;
+use crate::stats::Histogram;
+use crate::util::rng::mix64;
+use crate::util::time::{Ps, NS};
+use crate::util::FastMap;
+
+/// In-line single-bit ECC correction: a couple of nanoseconds of extra
+/// controller occupancy on the faulted beat.
+pub const ECC_CORRECT_PS: Ps = 2 * NS;
+/// Detected (uncorrectable) multi-bit error: the controller re-reads the
+/// line, a full row-cycle-class penalty.
+pub const ECC_REREAD_PS: Ps = 60 * NS;
+
+// Site salts: decorrelate the fault classes drawn from one seed.
+const SALT_NOT_READY: u64 = 0x4E52_0001;
+const SALT_MEC_FILL: u64 = 0x4D45_0002;
+const SALT_MEC_KIND: u64 = 0x4D45_0003;
+const SALT_NOTIFY: u64 = 0x414D_0004;
+const SALT_PCIE: u64 = 0x5043_0005;
+const SALT_ECC: u64 = 0x4543_0006;
+const SALT_ECC_KIND: u64 = 0x4543_0007;
+
+/// Outcome of a MEC prefetch-buffer fill under fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FillFault {
+    /// Fill lands normally.
+    None,
+    /// Fill is dropped: the LVC never sees the value, the second twin
+    /// misses again and the host retries.
+    Dropped,
+    /// Fill lands late by the given delta: the second twin observes
+    /// not-ready data (`SecondLoadLate`).
+    Late(Ps),
+}
+
+/// Outcome of the transient-bit-error model on one data beat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EccFault {
+    None,
+    /// Single-bit flip: ECC corrects in-line for a small latency adder.
+    Corrected,
+    /// Multi-bit flip: ECC detects but cannot correct; the controller
+    /// re-reads the line (a full row-turnaround class penalty).
+    Detected,
+}
+
+/// Seeded, deterministic fault schedule. Cheap to copy into every
+/// component that injects (platform, MEC chips).
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPlan {
+    /// Extension-path fault probability, parts per million.
+    rate_ppm: u64,
+    /// Transient-bit-error probability, parts per million.
+    ecc_ppm: u64,
+    seed: u64,
+}
+
+impl FaultPlan {
+    /// Build the plan from config knobs; `None` when fault injection is
+    /// fully disabled (the inertness guarantee hangs on this).
+    pub fn from_cfg(cfg: &SystemConfig) -> Option<FaultPlan> {
+        let rate_ppm = ppm(cfg.fault_rate);
+        let ecc_ppm = ppm(cfg.fault_ecc_rate);
+        if rate_ppm == 0 && ecc_ppm == 0 {
+            return None;
+        }
+        Some(FaultPlan { rate_ppm, ecc_ppm, seed: mix64(cfg.fault_seed) })
+    }
+
+    /// One Bernoulli draw: pure in (seed, salt, line, nth).
+    #[inline]
+    fn roll(&self, ppm: u64, salt: u64, line: u64, nth: u64) -> bool {
+        if ppm == 0 {
+            return false;
+        }
+        let h = mix64(line ^ nth.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ self.seed ^ salt);
+        h % 1_000_000 < ppm
+    }
+
+    /// Not-ready first response on an extension-path demand read: the
+    /// returned data fails the §4.4 content check and forces a software
+    /// retry (or, on a non-twin mechanism, a modeled re-read delay).
+    #[inline]
+    pub fn not_ready(&self, line: u64, nth: u64) -> bool {
+        self.roll(self.rate_ppm, SALT_NOT_READY, line, nth)
+    }
+
+    /// MEC prefetch-buffer fill fault for the `nth` tree fetch of `tag`.
+    /// Late fills land `late_by` after the nominal fill time.
+    #[inline]
+    pub fn mec_fill(&self, tag: u64, nth: u64, late_by: Ps) -> FillFault {
+        if !self.roll(self.rate_ppm, SALT_MEC_FILL, tag, nth) {
+            return FillFault::None;
+        }
+        if mix64(tag ^ nth ^ self.seed ^ SALT_MEC_KIND) & 1 == 0 {
+            FillFault::Dropped
+        } else {
+            FillFault::Late(late_by)
+        }
+    }
+
+    /// Lost AMU completion notify for the given (line, attempt) pair.
+    /// Attempt 0 is the original notify; attempts ≥ 1 are reissues.
+    #[inline]
+    pub fn notify_lost(&self, line: u64, nth: u64, attempt: u32) -> bool {
+        self.roll(
+            self.rate_ppm,
+            SALT_NOTIFY,
+            line,
+            nth.wrapping_mul(64).wrapping_add(attempt as u64),
+        )
+    }
+
+    /// PCIe transfer failure on the `nth` swap of `page`.
+    #[inline]
+    pub fn pcie_fail(&self, page: u64, nth: u64) -> bool {
+        self.roll(self.rate_ppm, SALT_PCIE, page, nth)
+    }
+
+    /// Transient bit error on a delivered beat; 1-in-8 faulted beats are
+    /// multi-bit (detected, re-read), the rest correct in-line.
+    #[inline]
+    pub fn ecc(&self, line: u64, nth: u64) -> EccFault {
+        if !self.roll(self.ecc_ppm, SALT_ECC, line, nth) {
+            return EccFault::None;
+        }
+        if mix64(line ^ nth ^ self.seed ^ SALT_ECC_KIND) & 7 == 0 {
+            EccFault::Detected
+        } else {
+            EccFault::Corrected
+        }
+    }
+
+    /// Software recovery of a lost AMU notify: poll until `timeout`
+    /// expires, reissue, and back off exponentially; the `reissue_max`-th
+    /// attempt always delivers (the bound that guarantees exactly-once
+    /// completion). Returns the added recovery latency and the number of
+    /// reissues taken.
+    pub fn amu_recovery(
+        &self,
+        line: u64,
+        nth: u64,
+        timeout: Ps,
+        reissue_max: u32,
+        backoff_mult: u32,
+    ) -> (Ps, u32) {
+        let max = reissue_max.max(1);
+        let mult = backoff_mult.max(1) as u64;
+        let mut window = timeout.max(1);
+        let mut delay: Ps = 0;
+        let mut attempt = 1u32;
+        loop {
+            // One poll window expires before the reissue goes out.
+            delay = delay.saturating_add(window);
+            if attempt >= max || !self.notify_lost(line, nth, attempt) {
+                return (delay, attempt);
+            }
+            attempt += 1;
+            window = window.saturating_mul(mult);
+        }
+    }
+}
+
+fn ppm(rate: f64) -> u64 {
+    (rate.clamp(0.0, 1.0) * 1_000_000.0).round() as u64
+}
+
+/// Per-line occurrence counters backing the `nth` argument of every
+/// [`FaultPlan`] draw. Only touched when a plan is active.
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    map: FastMap<u64, u64>,
+}
+
+impl FaultCounters {
+    /// Return the occurrence number for `line` and advance it.
+    #[inline]
+    pub fn next(&mut self, line: u64) -> u64 {
+        let n = self.map.entry(line).or_insert(0);
+        let v = *n;
+        *n += 1;
+        v
+    }
+}
+
+/// Aggregated fault/recovery accounting for one platform run.
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    /// Faults injected across every class (platform-side sites; MEC fill
+    /// faults are counted by the chips and summed at report time).
+    pub injected: u64,
+    /// Bit errors corrected in-line by the ECC model.
+    pub ecc_corrected: u64,
+    /// Added latency of each fault recovery (retry redelivery, ECC
+    /// re-read, AMU reissue loop, PCIe retransfer), in ps.
+    pub recovery: Histogram,
+}
+
+impl FaultStats {
+    #[inline]
+    pub fn record(&mut self, recovery_delay: Ps) {
+        self.injected += 1;
+        self.recovery.record(recovery_delay);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::time::NS;
+
+    fn plan(rate: f64, ecc: f64, seed: u64) -> FaultPlan {
+        let mut cfg = SystemConfig::tl_ooo();
+        cfg.fault_rate = rate;
+        cfg.fault_ecc_rate = ecc;
+        cfg.fault_seed = seed;
+        FaultPlan::from_cfg(&cfg).expect("nonzero rates build a plan")
+    }
+
+    #[test]
+    fn zero_rates_build_no_plan() {
+        let cfg = SystemConfig::tl_ooo();
+        assert!(FaultPlan::from_cfg(&cfg).is_none());
+    }
+
+    #[test]
+    fn draws_are_deterministic_and_seed_sensitive() {
+        let a = plan(0.2, 0.1, 7);
+        let b = plan(0.2, 0.1, 7);
+        let c = plan(0.2, 0.1, 8);
+        let mut diff = 0;
+        for line in 0..512u64 {
+            assert_eq!(a.not_ready(line, 0), b.not_ready(line, 0));
+            assert_eq!(a.ecc(line, 3), b.ecc(line, 3));
+            if a.not_ready(line, 0) != c.not_ready(line, 0) {
+                diff += 1;
+            }
+        }
+        assert!(diff > 0, "seed change did not move the schedule");
+    }
+
+    #[test]
+    fn rates_are_roughly_respected() {
+        let p = plan(0.25, 0.0, 42);
+        let hits = (0..10_000u64).filter(|&l| p.not_ready(l * 64, 0)).count();
+        assert!((1_800..3_200).contains(&hits), "25% rate gave {hits}/10000");
+        // Occurrence number decorrelates retries of the same line.
+        let line = 0x1234_5678u64;
+        let again = (0..1_000u64).filter(|&n| p.not_ready(line, n)).count();
+        assert!((100..450).contains(&again), "per-line resample gave {again}/1000");
+    }
+
+    #[test]
+    fn ecc_mixes_corrected_and_detected() {
+        let p = plan(0.0, 0.5, 11);
+        let (mut corr, mut det) = (0, 0);
+        for l in 0..4_000u64 {
+            match p.ecc(l * 64, 0) {
+                EccFault::Corrected => corr += 1,
+                EccFault::Detected => det += 1,
+                EccFault::None => {}
+            }
+        }
+        assert!(corr > det, "corrected ({corr}) should dominate detected ({det})");
+        assert!(det > 0, "multi-bit errors never drawn");
+    }
+
+    #[test]
+    fn mec_fill_faults_split_dropped_and_late() {
+        let p = plan(0.5, 0.0, 3);
+        let (mut drop, mut late) = (0, 0);
+        for t in 0..4_000u64 {
+            match p.mec_fill(t * 64, 0, 100 * NS) {
+                FillFault::Dropped => drop += 1,
+                FillFault::Late(d) => {
+                    assert_eq!(d, 100 * NS);
+                    late += 1;
+                }
+                FillFault::None => {}
+            }
+        }
+        assert!(drop > 500 && late > 500, "drop={drop} late={late}");
+    }
+
+    #[test]
+    fn amu_recovery_terminates_and_backs_off() {
+        let p = plan(1.0, 0.0, 5);
+        // rate 1.0: every reissue notify is lost too — the bound must
+        // still terminate, with exponentially grown windows summed.
+        let (delay, attempts) = p.amu_recovery(0x40, 0, 100 * NS, 4, 2);
+        assert_eq!(attempts, 4);
+        assert_eq!(delay, (100 + 200 + 400 + 800) * NS);
+        // Benign plan: a single poll window when the reissue succeeds.
+        let q = plan(1e-9, 0.0, 5);
+        let (delay, attempts) = q.amu_recovery(0x40, 0, 100 * NS, 4, 2);
+        assert_eq!(attempts, 1);
+        assert_eq!(delay, 100 * NS);
+        // Degenerate knobs clamp instead of hanging or dividing by zero.
+        let (_, attempts) = p.amu_recovery(0x40, 0, 0, 0, 0);
+        assert_eq!(attempts, 1);
+    }
+
+    #[test]
+    fn counters_advance_per_line() {
+        let mut c = FaultCounters::default();
+        assert_eq!(c.next(0x40), 0);
+        assert_eq!(c.next(0x40), 1);
+        assert_eq!(c.next(0x80), 0);
+        assert_eq!(c.next(0x40), 2);
+    }
+
+    #[test]
+    fn stats_record_and_histogram() {
+        let mut s = FaultStats::default();
+        s.record(10 * NS);
+        s.record(500 * NS);
+        s.ecc_corrected += 1;
+        assert_eq!(s.injected, 2);
+        assert_eq!(s.recovery.count(), 2);
+        assert!(s.recovery.max() >= 500 * NS);
+    }
+}

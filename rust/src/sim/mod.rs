@@ -7,10 +7,12 @@
 
 pub mod backend;
 pub mod engine;
+pub mod fault;
 pub mod platform;
 pub mod report;
 
 pub use backend::Routing;
+pub use fault::FaultPlan;
 pub use engine::EngineKind;
 pub use platform::Platform;
 pub use report::SimReport;

@@ -9,6 +9,7 @@
 
 use super::backend::{AmuStats, ChannelGroup, GroupKind, Router};
 use super::engine::{Ev, EventQueue};
+use super::fault::{EccFault, FaultCounters, FaultPlan, FaultStats, ECC_CORRECT_PS, ECC_REREAD_PS};
 use super::report::SimReport;
 use crate::baselines::SwapOutcome;
 use crate::cache::{CacheConfig, DataKind, LookupResult, MshrFile, MshrOutcome, SetAssocCache, Tlb};
@@ -87,6 +88,13 @@ pub struct Platform {
     /// Reusable service-result buffer for controller pumps (the pump hot
     /// loop appends into it instead of allocating a Vec per call).
     svc_buf: Vec<ServiceResult>,
+    /// Deterministic fault schedule (`None` = injection fully disabled;
+    /// every injection site below is gated on it, so a zero-rate run is
+    /// bit-identical to a build without this subsystem).
+    fault: Option<FaultPlan>,
+    /// Per-line occurrence counters for the fault draws.
+    fault_seq: FaultCounters,
+    fault_stats: FaultStats,
     events: EventQueue,
     mlp: LevelMeter,
     now: Ps,
@@ -122,6 +130,9 @@ struct Port<'a> {
     llc: &'a mut SetAssocCache,
     router: &'a mut Router,
     outbox: &'a mut Outbox,
+    fault: Option<FaultPlan>,
+    fault_seq: &'a mut FaultCounters,
+    fault_stats: &'a mut FaultStats,
 }
 
 /// Stride prefetch degree (lines fetched ahead once a stream is seen).
@@ -221,7 +232,17 @@ impl<'a> MemoryPort for Port<'a> {
         if self.cfg.layout.is_extended(acc.vaddr) {
             if let Some(pcie) = self.router.pcie_mut() {
                 if let SwapOutcome::Fault { swap_done, .. } = pcie.access(acc.vaddr, now) {
-                    delay += swap_done - now;
+                    let mut xfer = swap_done - now;
+                    if let Some(plan) = self.fault {
+                        // Injected DMA transfer failure: the completion
+                        // timeout fires and the whole swap retransmits.
+                        let page = acc.vaddr & !0xFFF;
+                        if plan.pcie_fail(page, self.fault_seq.next(page)) {
+                            self.fault_stats.record(xfer);
+                            xfer += xfer;
+                        }
+                    }
+                    delay += xfer;
                 }
             }
         }
@@ -331,6 +352,7 @@ impl Platform {
         let hw_threads = cfg.cores * smt;
         let mut tp = cfg.core;
         tp.rob_size = (tp.rob_size / smt).max(16);
+        tp.demote_after = cfg.demote_after;
         let mut l1 = cfg.l1;
         l1.size_bytes = (l1.size_bytes / smt as u64).max(l1.ways as u64 * 64);
         let thread_mshrs = (cfg.mshrs_per_core / smt).max(1);
@@ -378,6 +400,9 @@ impl Platform {
             txns: TagSlab::new(),
             next_txn: 1,
             svc_buf: Vec::new(),
+            fault: FaultPlan::from_cfg(cfg),
+            fault_seq: FaultCounters::default(),
+            fault_stats: FaultStats::default(),
             events,
             mlp: LevelMeter::new(),
             now: 0,
@@ -485,6 +510,9 @@ impl Platform {
                 llc: &mut self.llc,
                 router: &mut self.router,
                 outbox: &mut outbox,
+                fault: self.fault,
+                fault_seq: &mut self.fault_seq,
+                fault_stats: &mut self.fault_stats,
             };
             if let Some(wake) = b.core.advance(now, &mut b.source, &mut port) {
                 // Dedup: keep only the earliest outstanding wake per core.
@@ -567,6 +595,71 @@ impl Platform {
                 done += self.router.egress_delay(kind);
                 match p.core {
                     Some(core) => {
+                        if kind != GroupKind::Local {
+                            if let Some(plan) = self.fault {
+                                let nth = self.fault_seq.next(p.line);
+                                match kind {
+                                    // Not-ready first response: the line
+                                    // fails the §4.4 content check and the
+                                    // core pays a software retry (or, past
+                                    // the streak threshold, demotes to the
+                                    // §4.5 safe path).
+                                    GroupKind::ExtMec => {
+                                        // First loads and shadow lines are
+                                        // already fake; flipping them would
+                                        // be a no-op fault.
+                                        if data == DataKind::Real
+                                            && plan.not_ready(p.line, nth)
+                                        {
+                                            data = DataKind::Fake;
+                                            self.fault_stats.record(self.cfg.core.retry_penalty);
+                                        }
+                                    }
+                                    // Non-twin links have no content check:
+                                    // a lost transfer is detected by the
+                                    // poll-timeout window and redelivered.
+                                    GroupKind::ExtRemote | GroupKind::ExtTrl => {
+                                        if plan.not_ready(p.line, nth) {
+                                            done += self.cfg.fault_poll_timeout;
+                                            self.fault_stats.record(self.cfg.fault_poll_timeout);
+                                        }
+                                    }
+                                    // Lost completion notify: software
+                                    // polls out the timeout and reissues
+                                    // with exponential backoff; the bounded
+                                    // final attempt always delivers.
+                                    GroupKind::ExtAmu => {
+                                        if plan.notify_lost(p.line, nth, 0) {
+                                            let (rec, _) = plan.amu_recovery(
+                                                p.line,
+                                                nth,
+                                                self.cfg.fault_poll_timeout,
+                                                self.cfg.fault_reissue_max,
+                                                self.cfg.fault_backoff_mult,
+                                            );
+                                            done += rec;
+                                            self.fault_stats.record(rec);
+                                        }
+                                    }
+                                    GroupKind::Local => {}
+                                }
+                                // Transient bit errors on the returning
+                                // beat: ECC corrects single-bit flips
+                                // in-line; multi-bit detections force a
+                                // controller re-read.
+                                match plan.ecc(p.line, nth) {
+                                    EccFault::None => {}
+                                    EccFault::Corrected => {
+                                        self.fault_stats.ecc_corrected += 1;
+                                        done += ECC_CORRECT_PS;
+                                    }
+                                    EccFault::Detected => {
+                                        done += ECC_REREAD_PS;
+                                        self.fault_stats.record(ECC_REREAD_PS);
+                                    }
+                                }
+                            }
+                        }
                         self.events.push(done, Ev::Deliver { core, line: p.line, data })
                     }
                     None => {
@@ -779,6 +872,12 @@ impl Platform {
     /// AMU queue statistics (zeros for every other backend).
     pub(crate) fn amu_stats(&self) -> AmuStats {
         self.router.amu().map(|u| u.stats).unwrap_or_default()
+    }
+
+    /// Platform-side fault/recovery accounting (MEC fill faults are
+    /// counted by the chips; report.rs sums both).
+    pub(crate) fn fault_stats(&self) -> &FaultStats {
+        &self.fault_stats
     }
 
     /// Channel-bus totals over every controller: (commands issued,

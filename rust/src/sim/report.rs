@@ -54,6 +54,24 @@ pub struct SimReport {
     pub amu_queue_stalls: u64,
     pub amu_occ_peak: u64,
     pub amu_occ_mean: f64,
+    // Fault injection + recovery (all zero when `fault_rate = 0`).
+    /// Faults injected across every class: platform sites (not-ready
+    /// responses, lost notifies, link redeliveries, PCIe retransfers,
+    /// ECC detections) plus MEC prefetch-fill faults.
+    pub faults_injected: u64,
+    /// Lines that entered a ≥2-retry consecutive both-fake streak.
+    pub retry_storms: u64,
+    /// Safe-path demotions after `demote_after` consecutive retries.
+    pub demotions: u64,
+    /// Single-bit errors corrected in-line by the ECC model.
+    pub ecc_corrected: u64,
+    /// MEC prefetch-buffer fills dropped / landed late by injection.
+    pub mec_fill_drops: u64,
+    pub mec_fill_lates: u64,
+    /// Fault-recovery added latency distribution (ps).
+    pub recovery_mean: f64,
+    pub recovery_p99: Ps,
+    pub recovery_max: Ps,
     pub deadlocked: bool,
     // Event-engine occupancy/housekeeping (engine-agnostic fields like
     // `engine_events`/`engine_peak` must match across engines; resize,
@@ -96,12 +114,16 @@ impl SimReport {
         let engine = p.engine_stats();
         let (mut mec_first_loads, mut mec_second_real, mut mec_second_late, mut lvc_evictions) =
             (0, 0, 0, 0);
+        let (mut mec_fill_drops, mut mec_fill_lates) = (0, 0);
         for m in p.mec_refs() {
             mec_first_loads += m.stats.first_loads;
             mec_second_real += m.stats.second_real;
             mec_second_late += m.stats.second_late;
             lvc_evictions += m.lvc().evictions;
+            mec_fill_drops += m.stats.fill_drops;
+            mec_fill_lates += m.stats.fill_lates;
         }
+        let fault = p.fault_stats();
         SimReport {
             mechanism: cfg.mechanism.name(),
             workload: spec.workload.name(),
@@ -139,6 +161,15 @@ impl SimReport {
             amu_queue_stalls: amu.queue_stalls,
             amu_occ_peak: amu.occ_peak,
             amu_occ_mean: amu.occ_mean(),
+            faults_injected: fault.injected + mec_fill_drops + mec_fill_lates,
+            retry_storms: core_stats.iter().map(|s| s.retry_storms).sum(),
+            demotions: core_stats.iter().map(|s| s.demotions).sum(),
+            ecc_corrected: fault.ecc_corrected,
+            mec_fill_drops,
+            mec_fill_lates,
+            recovery_mean: fault.recovery.mean(),
+            recovery_p99: fault.recovery.quantile(0.99),
+            recovery_max: fault.recovery.max(),
             deadlocked: p.deadlocked,
             engine: engine.kind.name(),
             engine_events: engine.pushed,
@@ -198,9 +229,21 @@ impl SimReport {
 
     /// One-line human summary.
     pub fn summary(&self) -> String {
+        let fault = if self.faults_injected > 0 || self.ecc_corrected > 0 {
+            format!(
+                ", faults {} (storms {}, demoted {}, ecc {}, rec p99 {:.0} ns)",
+                self.faults_injected,
+                self.retry_storms,
+                self.demotions,
+                self.ecc_corrected,
+                ps_to_ns(self.recovery_p99),
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{}/{}: {:.3} ms, IPC {:.2}, LLC miss {}k, TLB miss {}k, BW {:.2} GB/s \
-             (bus {:.1}%), MLP {:.1}{}",
+             (bus {:.1}%), MLP {:.1}{}{}",
             self.mechanism,
             self.workload,
             self.runtime_ns() / 1e6,
@@ -210,6 +253,7 @@ impl SimReport {
             self.read_bandwidth_gbps(),
             self.data_bus_util * 100.0,
             self.mlp_mean,
+            fault,
             if self.deadlocked { " [DEADLOCK]" } else { "" },
         )
     }

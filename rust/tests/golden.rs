@@ -54,7 +54,8 @@ fn render(r: &SimReport) -> String {
          cas={} llc_hits={} llc_miss={} tlb_miss={} tlb_acc={} dram_r={} dram_w={} \
          dram_rb={} dram_wb={} row_hit={:.6} mlp_mean={:.6} mlp_peak={} micro={} ext_ld={} \
          ext_st={} mec1={} mec2r={} mec2l={} lvc_ev={} pcie_faults={} events={} peak={} \
-         cmds={} bus={:.6} amu_rq={} amu_stall={} amu_peak={}\n",
+         cmds={} bus={:.6} amu_rq={} amu_stall={} amu_peak={} faults={} storms={} \
+         demoted={} ecc={} fdrops={} flates={} rec_p99={}\n",
         r.mechanism,
         r.workload,
         r.finish,
@@ -92,6 +93,13 @@ fn render(r: &SimReport) -> String {
         r.amu_requests,
         r.amu_queue_stalls,
         r.amu_occ_peak,
+        r.faults_injected,
+        r.retry_storms,
+        r.demotions,
+        r.ecc_corrected,
+        r.mec_fill_drops,
+        r.mec_fill_lates,
+        r.recovery_p99,
     )
 }
 
@@ -121,6 +129,24 @@ fn corpus() -> String {
         spec.ops_per_core = 4_000;
         let r = run_spec(&cfg, &spec);
         assert!(!r.deadlocked, "frontend=reference corpus run deadlocked");
+        out.push_str(&render(&r));
+    }
+    // Faulted rows: every extension-path mechanism under the fixed
+    // default fault seed at a 5% rate. These freeze the injection
+    // schedule itself (fault counts, demotions, ECC corrections,
+    // recovery tail) — a change to the site salts, the per-line
+    // occurrence counters, or the recovery arithmetic moves these rows
+    // even if the fault-free rows above are untouched.
+    for cfg in mechanisms() {
+        if cfg.mechanism.name() == "ideal" {
+            continue; // no extension path, nothing to inject into
+        }
+        let mut cfg = cfg.faulted(0.05);
+        cfg.cores = 2;
+        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+        spec.ops_per_core = 4_000;
+        let r = run_spec(&cfg, &spec);
+        assert!(!r.deadlocked, "{} deadlocked under faults", r.mechanism);
         out.push_str(&render(&r));
     }
     out
@@ -172,19 +198,30 @@ fn golden_reports_match_snapshot() {
 #[test]
 fn golden_corpus_is_frontend_independent() {
     use twinload::cpu::FrontEnd;
-    let mut base = SystemConfig::tl_ooo();
-    base.cores = 2;
-    let mut spec = RunSpec::smoke(WorkloadKind::Gups);
-    spec.ops_per_core = 4_000;
-    let mut lines = Vec::new();
-    for fe in [FrontEnd::Slab, FrontEnd::Reference] {
-        let mut cfg = base.clone();
-        cfg.frontend = fe;
-        let r = run_spec(&cfg, &spec);
-        assert!(!r.deadlocked);
-        lines.push(render(&r));
+    // Fault-free and faulted: the injection schedule is keyed on
+    // (seed, line, occurrence), never on the request-tracking
+    // implementation, so the faulted rows are frontend-independent too.
+    for rate in [0.0, 0.05] {
+        let mut base = SystemConfig::tl_ooo();
+        if rate > 0.0 {
+            base = base.faulted(rate);
+        }
+        base.cores = 2;
+        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+        spec.ops_per_core = 4_000;
+        let mut lines = Vec::new();
+        for fe in [FrontEnd::Slab, FrontEnd::Reference] {
+            let mut cfg = base.clone();
+            cfg.frontend = fe;
+            let r = run_spec(&cfg, &spec);
+            assert!(!r.deadlocked);
+            lines.push(render(&r));
+        }
+        assert_eq!(
+            lines[0], lines[1],
+            "slab front end diverged from reference (rate {rate})"
+        );
     }
-    assert_eq!(lines[0], lines[1], "slab front end diverged from reference");
 }
 
 /// The snapshot must be backend-independent: the same mechanism run
@@ -195,23 +232,30 @@ fn golden_corpus_is_frontend_independent() {
 #[test]
 fn golden_corpus_is_backend_independent() {
     use twinload::sim::Routing;
-    for base in mechanisms() {
-        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
-        spec.ops_per_core = 4_000;
-        let mut lines = Vec::new();
-        for routing in [Routing::Backend, Routing::Legacy] {
-            let mut cfg = base.clone();
-            cfg.cores = 2;
-            cfg.routing = routing;
-            let r = run_spec(&cfg, &spec);
-            assert!(!r.deadlocked);
-            lines.push(render(&r));
+    // Faulted as well: MEC fill faults are armed in `build_mecs`, which
+    // both routings share, and the platform sites key on the line — so
+    // the injection schedule cannot depend on the routing seam.
+    for rate in [0.0, 0.05] {
+        for base in mechanisms() {
+            let base =
+                if rate > 0.0 { base.faulted(rate) } else { base };
+            let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+            spec.ops_per_core = 4_000;
+            let mut lines = Vec::new();
+            for routing in [Routing::Backend, Routing::Legacy] {
+                let mut cfg = base.clone();
+                cfg.cores = 2;
+                cfg.routing = routing;
+                let r = run_spec(&cfg, &spec);
+                assert!(!r.deadlocked);
+                lines.push(render(&r));
+            }
+            assert_eq!(
+                lines[0], lines[1],
+                "backend routing diverged from legacy for {} (rate {rate})",
+                base.mechanism.name()
+            );
         }
-        assert_eq!(
-            lines[0], lines[1],
-            "backend routing diverged from legacy for {}",
-            base.mechanism.name()
-        );
     }
 }
 
@@ -221,18 +265,33 @@ fn golden_corpus_is_backend_independent() {
 #[test]
 fn golden_corpus_is_engine_independent() {
     use twinload::sim::EngineKind;
-    let mut base = SystemConfig::tl_ooo();
-    base.cores = 2;
-    let mut spec = RunSpec::smoke(WorkloadKind::Gups);
-    spec.ops_per_core = 4_000;
-    let mut lines = Vec::new();
-    for kind in [EngineKind::Calendar, EngineKind::AdaptiveCalendar, EngineKind::ReferenceHeap] {
-        let mut cfg = base.clone();
-        cfg.engine = kind;
-        let r = run_spec(&cfg, &spec);
-        assert!(!r.deadlocked);
-        lines.push(render(&r));
+    // Faulted as well: per-line delivery order is engine-independent,
+    // so the per-line occurrence counters (and with them the entire
+    // fault schedule) must reproduce under every event engine.
+    for rate in [0.0, 0.05] {
+        let mut base = SystemConfig::tl_ooo();
+        if rate > 0.0 {
+            base = base.faulted(rate);
+        }
+        base.cores = 2;
+        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+        spec.ops_per_core = 4_000;
+        let mut lines = Vec::new();
+        for kind in [EngineKind::Calendar, EngineKind::AdaptiveCalendar, EngineKind::ReferenceHeap]
+        {
+            let mut cfg = base.clone();
+            cfg.engine = kind;
+            let r = run_spec(&cfg, &spec);
+            assert!(!r.deadlocked);
+            lines.push(render(&r));
+        }
+        assert_eq!(
+            lines[0], lines[1],
+            "adaptive calendar diverged from calendar (rate {rate})"
+        );
+        assert_eq!(
+            lines[0], lines[2],
+            "reference heap diverged from calendar (rate {rate})"
+        );
     }
-    assert_eq!(lines[0], lines[1], "adaptive calendar diverged from calendar");
-    assert_eq!(lines[0], lines[2], "reference heap diverged from calendar");
 }

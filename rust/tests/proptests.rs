@@ -807,9 +807,15 @@ fn prop_frontends_bit_identical_under_random_completion_orders() {
         let salt = rng.next_u64();
         let fake_bias = rng.below(30);
         let mshrs = 2 + rng.below(8) as usize;
+        // Randomly arm the §4.5 demotion policy: the shadow-fake bias
+        // makes consecutive both-fake streaks common, so low thresholds
+        // exercise storm tracking and safe-path demotion on both front
+        // ends (0 = disabled, the fault-free default).
+        let mut params = CoreParams::xeon();
+        params.demote_after = if rng.chance(0.5) { 1 + rng.below(4) as u32 } else { 0 };
         let mut outcomes = Vec::new();
         for fe in [FrontEnd::Reference, FrontEnd::Slab] {
-            let mut core = Core::with_frontend(CoreParams::xeon(), fe);
+            let mut core = Core::with_frontend(params, fe);
             let mut src = ops.clone().into_iter();
             let mut mem = JitterMem {
                 mshrs,
@@ -851,6 +857,8 @@ fn prop_frontends_bit_identical_under_random_completion_orders() {
                 s.twin_retries,
                 s.safe_paths,
                 s.cas_fails,
+                s.retry_storms,
+                s.demotions,
             ));
         }
         if outcomes[0] != outcomes[1] {
@@ -861,6 +869,164 @@ fn prop_frontends_bit_identical_under_random_completion_orders() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_chaos_faults_complete_exactly_once_and_zero_rate_is_inert() {
+    // Chaos differential for the fault-injection + recovery subsystem
+    // (§4.4 retries, §4.5 safe-path demotion): under arbitrary fault
+    // schedules — random mechanism × engine × front end × scheduler ×
+    // routing × fault rate × demotion threshold — three invariants must
+    // hold on the full platform:
+    //
+    //  1. Termination: the run never deadlocks, at any fault rate.
+    //  2. Exactly-once: every logical op completes exactly once — the
+    //     faulted run's retired ops / loads / stores / fences equal the
+    //     fault-free run's. Faults cost *time* (retry/safe-path/ECC
+    //     penalties, redeliveries), never *work* (no lost or duplicated
+    //     completions).
+    //  3. Schedule independence: the fault schedule is a pure function
+    //     of (seed, line, occurrence), so every engine × front end
+    //     combination produces a bit-identical faulted report — the
+    //     faulted extension of the fault-free equivalence suites.
+    //
+    // Plus the inertness half of the bit-identity guarantee: zeroing
+    // the rates while leaving every other fault knob armed (seed,
+    // poll timeout, reissue bound, backoff) must reproduce the
+    // untouched config's report bit-for-bit.
+    use std::cell::Cell;
+    use twinload::config::{RunSpec, SystemConfig};
+    use twinload::cpu::FrontEnd;
+    use twinload::dram::SchedPolicy;
+    use twinload::sim::engine::EngineKind;
+    use twinload::sim::{run_spec, Routing, SimReport};
+    use twinload::workloads::WorkloadKind;
+
+    let injected_total = Cell::new(0u64);
+    check("chaos-faults", cfg(), |rng| {
+        // Every extension-path mechanism (ideal has no fault surface).
+        let mech = ["tl-ooo", "tl-lf", "tl-lf-batched", "numa", "pcie", "inc-trl", "amu"]
+            [rng.below(7) as usize];
+        let mut base = SystemConfig::by_name(mech).expect("preset");
+        base.cores = 2;
+        base.sched = [SchedPolicy::BankIndexed, SchedPolicy::RankInval, SchedPolicy::ReferenceScan]
+            [rng.below(3) as usize];
+        base.routing = [Routing::Backend, Routing::Legacy][rng.below(2) as usize];
+        base.engine = [EngineKind::Calendar, EngineKind::AdaptiveCalendar, EngineKind::ReferenceHeap]
+            [rng.below(3) as usize];
+        base.frontend = [FrontEnd::Slab, FrontEnd::Reference][rng.below(2) as usize];
+
+        let wl = if rng.chance(0.25) { WorkloadKind::Cg } else { WorkloadKind::Gups };
+        let mut spec = RunSpec::smoke(wl);
+        spec.ops_per_core = 400 + rng.below(800);
+        spec.seed = rng.next_u64();
+
+        // Arbitrary fault schedule: rate in [0.01, 0.50], fresh seed,
+        // aggressive demotion thresholds.
+        let rate = (1 + rng.below(50)) as f64 / 100.0;
+        let mut faulted = base.clone().faulted(rate);
+        faulted.fault_seed = rng.next_u64();
+        faulted.demote_after = 1 + rng.below(5) as u32;
+
+        let baseline = run_spec(&base, &spec);
+        if baseline.deadlocked {
+            return Err(format!("{mech}: fault-free baseline deadlocked"));
+        }
+        // Full-report fingerprint (u64-encoded so one Vec covers the
+        // f64 fields bit-exactly).
+        let fp = |r: &SimReport| {
+            vec![
+                r.finish,
+                r.retired_insts,
+                r.retired_ops,
+                r.loads,
+                r.stores,
+                r.fences,
+                r.twin_retries,
+                r.safe_paths,
+                r.cas_fails,
+                r.retry_storms,
+                r.demotions,
+                r.faults_injected,
+                r.ecc_corrected,
+                r.mec_fill_drops,
+                r.mec_fill_lates,
+                r.recovery_p99,
+                r.recovery_max,
+                r.recovery_mean.to_bits(),
+                r.llc_hits,
+                r.llc_misses,
+                r.dram_reads,
+                r.dram_writes,
+                r.pcie_faults,
+                r.amu_requests,
+                r.engine_events,
+                r.engine_peak,
+            ]
+        };
+
+        let mut first: Option<Vec<u64>> = None;
+        for engine in [EngineKind::Calendar, EngineKind::AdaptiveCalendar, EngineKind::ReferenceHeap]
+        {
+            for fe in [FrontEnd::Slab, FrontEnd::Reference] {
+                let mut c = faulted.clone();
+                c.engine = engine;
+                c.frontend = fe;
+                let r = run_spec(&c, &spec);
+                if r.deadlocked {
+                    return Err(format!(
+                        "{mech} rate {rate}: deadlocked under faults ({engine:?}/{fe:?})"
+                    ));
+                }
+                let work = |r: &SimReport| (r.retired_ops, r.loads, r.stores, r.fences);
+                if work(&r) != work(&baseline) {
+                    return Err(format!(
+                        "{mech} rate {rate}: exactly-once violated ({engine:?}/{fe:?}): \
+                         {:?} vs fault-free {:?}",
+                        work(&r),
+                        work(&baseline)
+                    ));
+                }
+                injected_total.set(injected_total.get() + r.faults_injected + r.ecc_corrected);
+                let f = fp(&r);
+                match &first {
+                    None => first = Some(f),
+                    Some(f0) => {
+                        if &f != f0 {
+                            return Err(format!(
+                                "{mech} rate {rate}: faulted report diverged across \
+                                 implementations at {engine:?}/{fe:?}"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+
+        // Inertness: rates back to zero (demotion disarmed with them)
+        // with every other fault knob still set must be bit-identical
+        // to the untouched config.
+        let mut zeroed = faulted.clone();
+        zeroed.fault_rate = 0.0;
+        zeroed.fault_ecc_rate = 0.0;
+        zeroed.demote_after = 0;
+        let z = run_spec(&zeroed, &spec);
+        if z.faults_injected != 0 || z.ecc_corrected != 0 || z.demotions != 0 {
+            return Err(format!("{mech}: zero-rate run still injected faults"));
+        }
+        if fp(&z) != fp(&baseline) {
+            return Err(format!(
+                "{mech}: zero-rate run not bit-identical to the untouched config"
+            ));
+        }
+        Ok(())
+    });
+    // The generator must actually inject faults (rates ≥ 1% on
+    // extension-heavy workloads make this certain across cases), or the
+    // exactly-once/equivalence proof above is vacuous.
+    if cfg().cases >= 16 {
+        assert!(injected_total.get() > 0, "no case injected a fault");
+    }
 }
 
 #[test]
@@ -893,6 +1059,15 @@ fn prop_config_ini_round_trips_and_rejects() {
         let ops = 1 + rng.below(1_000_000);
         let seed = rng.below(1 << 40);
         let footprint_mb = 1 + rng.below(256);
+        // Fault-injection knobs (reissue/backoff/poll kept valid for a
+        // nonzero rate; validation rejects zeros there).
+        let fault_rate = rng.below(100) as f64 / 100.0;
+        let fault_ecc_rate = rng.below(100) as f64 / 800.0;
+        let fault_seed = rng.below(1 << 40);
+        let demote_after = rng.below(10);
+        let fault_poll_ns = 1 + rng.below(1_000);
+        let fault_reissue = 1 + rng.below(8);
+        let fault_backoff = 1 + rng.below(4);
 
         // Random decoration: spacing around '=', optional comments.
         let kv = |k: &str, v: String, rng: &mut twinload::util::Rng| {
@@ -912,6 +1087,13 @@ fn prop_config_ini_round_trips_and_rejects() {
             kv("amu_issue_ns", amu_issue_ns.to_string(), rng),
             kv("amu_notify_ns", amu_notify_ns.to_string(), rng),
             kv("amu_svc_ps", amu_svc_ps.to_string(), rng),
+            kv("fault_rate", fault_rate.to_string(), rng),
+            kv("fault_ecc_rate", fault_ecc_rate.to_string(), rng),
+            kv("fault_seed", fault_seed.to_string(), rng),
+            kv("demote_after", demote_after.to_string(), rng),
+            kv("fault_poll_timeout_ns", fault_poll_ns.to_string(), rng),
+            kv("fault_reissue_max", fault_reissue.to_string(), rng),
+            kv("fault_backoff_mult", fault_backoff.to_string(), rng),
         ];
         rng.shuffle(&mut sys_keys);
         let mut run_keys = vec![
@@ -962,6 +1144,17 @@ fn prop_config_ini_round_trips_and_rejects() {
             || cfg.amu_svc != amu_svc_ps
         {
             return Err("amu [system] key lost".into());
+        }
+        if cfg.fault_rate != fault_rate || cfg.fault_ecc_rate != fault_ecc_rate {
+            return Err("fault rate [system] key lost".into());
+        }
+        if cfg.fault_seed != fault_seed
+            || cfg.demote_after as u64 != demote_after
+            || cfg.fault_poll_timeout != fault_poll_ns * 1_000
+            || cfg.fault_reissue_max as u64 != fault_reissue
+            || cfg.fault_backoff_mult as u64 != fault_backoff
+        {
+            return Err("fault knob [system] key lost".into());
         }
         if spec.workload != wl
             || spec.ops_per_core != ops
