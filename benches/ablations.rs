@@ -29,7 +29,13 @@ fn emulation_fidelity() -> Table {
         &["Workload", "Emulated (us)", "Real (us)", "Emu/Real", "Real retries"],
     );
     for wl in [WorkloadKind::Gups, WorkloadKind::Cg, WorkloadKind::ScalParC] {
-        let spec = RunSpec { workload: wl, footprint: 32 << 20, ops_per_core: 20_000, seed: 3 };
+        let spec = RunSpec {
+            workload: wl,
+            footprint: 32 << 20,
+            ops_per_core: 20_000,
+            seed: 3,
+            ..RunSpec::smoke(wl)
+        };
         let emu = run_spec(&SystemConfig::tl_ooo(), &spec);
         let mut real_cfg = SystemConfig::tl_ooo();
         real_cfg.emulate_content = false;

@@ -180,7 +180,13 @@ fn bench_cache(n: u64) {
 }
 
 fn bench_sim(kind: WorkloadKind, cfg: &SystemConfig, ops: u64) -> u64 {
-    let spec = RunSpec { workload: kind, footprint: 32 << 20, ops_per_core: ops, seed: 5 };
+    let spec = RunSpec {
+        workload: kind,
+        footprint: 32 << 20,
+        ops_per_core: ops,
+        seed: 5,
+        ..RunSpec::smoke(kind)
+    };
     let r = run_spec(cfg, &spec);
     assert!(!r.deadlocked);
     r.retired_insts

@@ -25,6 +25,7 @@ fn main() {
         footprint: 32 << 20,
         ops_per_core: 16_000,
         seed: 7,
+        ..RunSpec::smoke(WorkloadKind::Cg)
     };
 
     let mut table = Table::new(

@@ -26,6 +26,7 @@ fn main() {
         footprint: 64 << 20,
         ops_per_core: 40_000,
         seed: 11,
+        ..RunSpec::smoke(WorkloadKind::Memcached)
     };
     let systems = [
         ("ideal", SystemConfig::ideal()),

@@ -113,6 +113,7 @@ fn main() -> anyhow::Result<()> {
         footprint: 64 << 20,
         ops_per_core: 30_000,
         seed: 2026,
+        ..RunSpec::smoke(WorkloadKind::PageRank)
     };
     let ideal = run_spec(&SystemConfig::ideal(), &spec);
     let tl = run_spec(&SystemConfig::tl_ooo(), &spec);

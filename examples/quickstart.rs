@@ -16,6 +16,7 @@ fn main() {
         footprint: 64 << 20, // "medium" (paper's ~4 GB, scaled 64x)
         ops_per_core: 40_000,
         seed: 42,
+        ..RunSpec::smoke(workload)
     };
 
     println!("== twin-load quickstart: {} ==", workload.name());

@@ -13,6 +13,7 @@ use crate::sim::backend::Routing;
 use crate::sim::engine::EngineKind;
 use crate::twinload::Mechanism;
 use crate::util::time::{Ps, NS};
+use crate::workloads::arrival::ArrivalKind;
 
 /// Full description of one emulated system (a Table-3 column).
 #[derive(Debug, Clone)]
@@ -297,20 +298,66 @@ pub struct RunSpec {
     /// Logical ops per core.
     pub ops_per_core: u64,
     pub seed: u64,
+    /// Arrival discipline: `Closed` (default, self-pacing cores —
+    /// bit-identical to pre-serving behaviour) or an open-loop process
+    /// (`Poisson` / `Mmpp`) pacing requests at [`RunSpec::offered_rps`].
+    pub arrival: ArrivalKind,
+    /// Open-loop offered load, *system-wide* requests per second (split
+    /// evenly across hardware threads). Ignored when `arrival = closed`;
+    /// must be positive otherwise.
+    pub offered_rps: u64,
+    /// Zipf skew θ of key popularity in the memcached workload
+    /// (0 = uniform, → 1 = heavily skewed; default 0.9, the memslap
+    /// calibration). Other workloads ignore it.
+    pub zipf_theta: f64,
+    /// Seed of the arrival process (decorrelated from the workload
+    /// seed; per-thread streams are forked from it).
+    pub arrival_seed: u64,
+    /// Bounded request-queue depth per hardware thread; arrivals beyond
+    /// it are dropped (the overload signal). Must be positive for
+    /// open-loop runs.
+    pub queue_depth: u32,
 }
 
 impl RunSpec {
+    /// Closed-loop serving defaults shared by every constructor.
+    const CLOSED: (ArrivalKind, u64, f64, u64, u32) =
+        (ArrivalKind::Closed, 0, 0.9, 0xA221_7A1, 64);
+
+    fn with_defaults(workload: crate::workloads::WorkloadKind, footprint: u64, ops: u64, seed: u64) -> RunSpec {
+        let (arrival, offered_rps, zipf_theta, arrival_seed, queue_depth) = Self::CLOSED;
+        RunSpec {
+            workload,
+            footprint,
+            ops_per_core: ops,
+            seed,
+            arrival,
+            offered_rps,
+            zipf_theta,
+            arrival_seed,
+            queue_depth,
+        }
+    }
+
     pub fn medium(workload: crate::workloads::WorkloadKind) -> RunSpec {
-        RunSpec { workload, footprint: 64 << 20, ops_per_core: 150_000, seed: 42 }
+        Self::with_defaults(workload, 64 << 20, 150_000, 42)
     }
 
     pub fn large(workload: crate::workloads::WorkloadKind) -> RunSpec {
-        RunSpec { workload, footprint: 192 << 20, ops_per_core: 150_000, seed: 42 }
+        Self::with_defaults(workload, 192 << 20, 150_000, 42)
     }
 
     /// Small spec for unit/integration tests.
     pub fn smoke(workload: crate::workloads::WorkloadKind) -> RunSpec {
-        RunSpec { workload, footprint: 16 << 20, ops_per_core: 8_000, seed: 42 }
+        Self::with_defaults(workload, 16 << 20, 8_000, 42)
+    }
+
+    /// Open-loop variant: the given arrival process at `offered_rps`
+    /// system-wide requests/s (keeps every other field).
+    pub fn open_loop(mut self, arrival: ArrivalKind, offered_rps: u64) -> RunSpec {
+        self.arrival = arrival;
+        self.offered_rps = offered_rps;
+        self
     }
 }
 
@@ -410,6 +457,19 @@ mod tests {
         let m = RunSpec::medium(WorkloadKind::Gups);
         let l = RunSpec::large(WorkloadKind::Gups);
         assert!(l.footprint > m.footprint);
+    }
+
+    #[test]
+    fn run_specs_default_closed_loop() {
+        let s = RunSpec::smoke(WorkloadKind::Memcached);
+        assert_eq!(s.arrival, ArrivalKind::Closed);
+        assert_eq!(s.offered_rps, 0);
+        assert_eq!(s.zipf_theta, 0.9);
+        assert_eq!(s.queue_depth, 64);
+        let o = s.open_loop(ArrivalKind::Poisson, 1_000_000);
+        assert_eq!(o.arrival, ArrivalKind::Poisson);
+        assert_eq!(o.offered_rps, 1_000_000);
+        assert_eq!(o.seed, s.seed, "open_loop must keep the other fields");
     }
 
     #[test]

@@ -178,6 +178,22 @@ pub fn apply(
                 }
                 "ops" => spec.ops_per_core = v.parse().map_err(|_| "bad ops")?,
                 "seed" => spec.seed = v.parse().map_err(|_| "bad seed")?,
+                "arrival" => {
+                    spec.arrival = crate::workloads::arrival::ArrivalKind::by_name(v)
+                        .ok_or_else(|| format!("unknown arrival process '{v}'"))?
+                }
+                "offered_rps" => {
+                    spec.offered_rps = v.parse().map_err(|_| "bad offered_rps")?
+                }
+                "zipf_theta" => {
+                    spec.zipf_theta = v.parse().map_err(|_| "bad zipf_theta")?
+                }
+                "arrival_seed" => {
+                    spec.arrival_seed = v.parse().map_err(|_| "bad arrival_seed")?
+                }
+                "queue_depth" => {
+                    spec.queue_depth = v.parse().map_err(|_| "bad queue_depth")?
+                }
                 other => return Err(format!("unknown [run] key '{other}'")),
             }
         }
@@ -307,6 +323,38 @@ mod tests {
             "[system]\nfault_poll_timeout_ns = never\n",
             "[system]\nfault_reissue_max = 1.5\n",
             "[system]\nfault_backoff_mult = two\n",
+        ] {
+            let ini = Ini::parse(bad).unwrap();
+            assert!(apply(&ini, &mut cfg, &mut spec).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn serving_keys_configure_the_open_loop_front_end() {
+        use crate::workloads::arrival::ArrivalKind;
+        let ini = Ini::parse(
+            "[run]\nworkload = memcached\narrival = poisson\noffered_rps = 4000000\n\
+             zipf_theta = 0.75\narrival_seed = 123\nqueue_depth = 32\n",
+        )
+        .unwrap();
+        let mut cfg = SystemConfig::ideal();
+        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+        apply(&ini, &mut cfg, &mut spec).unwrap();
+        assert_eq!(spec.workload, WorkloadKind::Memcached);
+        assert_eq!(spec.arrival, ArrivalKind::Poisson);
+        assert_eq!(spec.offered_rps, 4_000_000);
+        assert_eq!(spec.zipf_theta, 0.75);
+        assert_eq!(spec.arrival_seed, 123);
+        assert_eq!(spec.queue_depth, 32);
+        let back = Ini::parse("[run]\narrival = mmpp\n").unwrap();
+        apply(&back, &mut cfg, &mut spec).unwrap();
+        assert_eq!(spec.arrival, ArrivalKind::Mmpp);
+        for bad in [
+            "[run]\narrival = bogus\n",
+            "[run]\noffered_rps = fast\n",
+            "[run]\nzipf_theta = skewed\n",
+            "[run]\narrival_seed = -1\n",
+            "[run]\nqueue_depth = deep\n",
         ] {
             let ini = Ini::parse(bad).unwrap();
             assert!(apply(&ini, &mut cfg, &mut spec).is_err(), "accepted {bad}");

@@ -18,6 +18,7 @@ use crate::stats::table::{f2, f3, pct};
 use crate::stats::{Summary, Table};
 use crate::twinload::Mechanism;
 use crate::util::time::{Ps, NS};
+use crate::workloads::arrival::ArrivalKind;
 use crate::workloads::{WorkloadKind, ALL_WORKLOADS, FIG13_WORKLOADS};
 use anyhow::{anyhow, Result};
 
@@ -62,7 +63,11 @@ impl Scale {
     }
 
     fn spec(&self, wl: WorkloadKind, footprint: u64) -> RunSpec {
-        RunSpec { workload: wl, footprint, ops_per_core: self.ops, seed: self.seed }
+        let mut s = RunSpec::smoke(wl);
+        s.footprint = footprint;
+        s.ops_per_core = self.ops;
+        s.seed = self.seed;
+        s
     }
 
     fn cfg(&self, mut c: SystemConfig) -> SystemConfig {
@@ -799,6 +804,99 @@ pub fn ablate_faults(scale: &Scale) -> Result<Table> {
     Ok(t)
 }
 
+// ---------------------------------------------------------------- Serving
+
+/// Open-loop latency-throughput sweep: Poisson arrivals at a fixed
+/// system-wide offered load per row, memcached requests with Zipfian
+/// key popularity, one row block per extension mechanism. The "knee"
+/// row reports the highest offered load each mechanism sustained
+/// (achieved ≥ 95 % of offered) — the paper's scalability argument
+/// restated as max-sustainable throughput instead of closed-loop
+/// runtime. Failed jobs surface as FAILED rows (continue-on-error),
+/// mirroring [`ablate_faults`].
+pub fn serve(scale: &Scale) -> Result<Table> {
+    // One memcached request lowers to ~8 logical ops, so a geometric
+    // ladder from 0.5M to 32M req/s spans clearly-under-loaded to
+    // clearly-saturated for every mechanism at these core counts.
+    let offered: &[u64] = if scale.quick {
+        &[500_000, 4_000_000, 32_000_000]
+    } else {
+        &[500_000, 1_000_000, 2_000_000, 4_000_000, 8_000_000, 16_000_000, 32_000_000]
+    };
+    let mechs = ["ideal", "tl-ooo", "tl-lf", "numa", "pcie", "amu"];
+    let mut jobs = Vec::new();
+    for mech in mechs {
+        for &rps in offered {
+            let c = preset(mech)?;
+            jobs.push((
+                scale.cfg(c),
+                scale
+                    .spec(WorkloadKind::Memcached, scale.medium)
+                    .open_loop(ArrivalKind::Poisson, rps),
+            ));
+        }
+    }
+    let outcomes = try_run_parallel(&jobs, scale.threads);
+    let mut t = Table::new(
+        "Serving: open-loop latency-throughput (memcached, Poisson arrivals)",
+        &[
+            "Mechanism",
+            "Offered (kreq/s)",
+            "Achieved (kreq/s)",
+            "p50 (ns)",
+            "p99 (ns)",
+            "p99.9 (ns)",
+            "Drops",
+            "Queue peak",
+        ],
+    );
+    for (mi, mech) in mechs.iter().enumerate() {
+        let mut knee: Option<u64> = None;
+        for (ri, &rps) in offered.iter().enumerate() {
+            match &outcomes[mi * offered.len() + ri] {
+                Ok(r) => {
+                    let achieved =
+                        r.served_requests as f64 * 1e9 / r.runtime_ns().max(1e-9);
+                    if achieved >= 0.95 * rps as f64 {
+                        knee = Some(knee.map_or(rps, |k: u64| k.max(rps)));
+                    }
+                    t.row(&[
+                        (*mech).into(),
+                        (rps / 1000).to_string(),
+                        f2(achieved / 1e3),
+                        r.req_p50_ns.to_string(),
+                        r.req_p99_ns.to_string(),
+                        r.req_p999_ns.to_string(),
+                        r.dropped_requests.to_string(),
+                        r.queue_peak.to_string(),
+                    ]);
+                }
+                Err(e) => t.row(&[
+                    (*mech).into(),
+                    (rps / 1000).to_string(),
+                    format!("FAILED: {}", e.message),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]),
+            }
+        }
+        t.row(&[
+            (*mech).into(),
+            "knee".into(),
+            knee.map(|k| (k / 1000).to_string()).unwrap_or_else(|| "-".into()),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
+    Ok(t)
+}
+
 /// Deviation-#1 ablation: the paper's host runs two SMT threads per
 /// core. Statically-partitioned SMT (see `SystemConfig::smt`) shows the
 /// Figure-7 ratios moving toward the paper as thread-level memory
@@ -906,6 +1004,32 @@ mod tests {
             let faults: u64 = row.split(',').nth(3).unwrap().parse().unwrap();
             assert!(faults > 0, "{mech} at rate 0.05 injected nothing: {row}");
         }
+    }
+
+    #[test]
+    fn serve_sweep_reports_latency_throughput() {
+        let scale = Scale {
+            ops: 1_500,
+            cores: 2,
+            medium: 16 << 20,
+            large: 16 << 20,
+            seed: 7,
+            threads: 2,
+            quick: true,
+        };
+        let t = serve(&scale).unwrap();
+        // 6 mechanisms × (3 offered points + 1 knee row).
+        assert_eq!(t.num_rows(), 6 * 4);
+        let csv = t.to_csv();
+        assert!(!csv.contains("FAILED"), "sweep had failed jobs:\n{csv}");
+        // The lightly-loaded ideal run actually served requests and
+        // measured a non-degenerate end-to-end latency.
+        let row = csv
+            .lines()
+            .find(|l| l.starts_with("ideal,500,"))
+            .unwrap_or_else(|| panic!("no ideal low-load row:\n{csv}"));
+        let p50: u64 = row.split(',').nth(3).unwrap().parse().unwrap();
+        assert!(p50 > 0, "zero p50 latency: {row}");
     }
 
     #[test]

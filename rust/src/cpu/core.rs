@@ -12,7 +12,7 @@
 //!   (§4.4, §4.5) → correctness under all Table-2 cache states.
 
 use super::frontend::{BoardRing, FrontEnd, PairRing, ReqSeqTable, BOARD_WINDOW};
-use super::trace::{AccessKind, MemAccess, MicroOp, OpSource};
+use super::trace::{AccessKind, MemAccess, MicroOp, OpSource, Pull};
 use crate::cache::DataKind;
 use crate::util::time::Ps;
 use crate::util::FastMap;
@@ -195,6 +195,11 @@ pub struct Core {
     /// `stall_retry_racing_completion_advances_once` pins down.
     stall_until: Ps,
     source_done: bool,
+    /// Earliest time the op source will have work again (open-loop
+    /// arrival pacing: the source answered [`Pull::NotBefore`]). `None`
+    /// in closed-loop runs — the field is only ever set by a source
+    /// that paces arrivals, so closed-loop behavior is untouched.
+    arrival_wake: Option<Ps>,
     /// Sequence numbers of Waiting memory slots, in fetch order — the
     /// fence-free issue fast path walks this instead of the full ROB
     /// (EXPERIMENTS.md §Perf: the scan was ~35 % of simulation time).
@@ -232,6 +237,7 @@ impl Core {
             retry_streak: FastMap::default(),
             stall_until: 0,
             source_done: false,
+            arrival_wake: None,
             waiting: VecDeque::with_capacity(64),
             waiting_scratch: VecDeque::with_capacity(64),
             fences_in_rob: 0,
@@ -292,6 +298,10 @@ impl Core {
     }
 
     fn fill<S: OpSource + ?Sized>(&mut self, now: Ps, source: &mut S) {
+        // Any previously declared arrival wake is stale: this fill either
+        // reaches the source again (and gets a fresh NotBefore) or fills
+        // the window, in which case no arrival wake is needed.
+        self.arrival_wake = None;
         if self.was_full && self.rob.len() < self.p.rob_size {
             // Frontend resumed after a full window: it cannot have fetched
             // in the past.
@@ -299,9 +309,15 @@ impl Core {
             self.was_full = false;
         }
         while self.rob.len() < self.p.rob_size {
-            let op = match source.next_op() {
-                Some(op) => op,
-                None => {
+            let op = match source.pull(now) {
+                Pull::Op(op) => op,
+                Pull::NotBefore(t) => {
+                    // Open-loop pacing: more work will arrive at `t`, but
+                    // the stream is NOT done — remember to wake then.
+                    self.arrival_wake = Some(t.max(now + 1));
+                    return;
+                }
+                Pull::Exhausted => {
                     self.source_done = true;
                     return;
                 }
@@ -775,6 +791,11 @@ impl Core {
                     wake = Some(wake.map_or(t, |w| w.min(t)));
                 }
             }
+        }
+        if let Some(t) = self.arrival_wake {
+            // Open-loop: even an otherwise idle core must wake for the
+            // next arrival (t > now by construction in `fill`).
+            wake = Some(wake.map_or(t, |w| w.min(t)));
         }
         wake
     }

@@ -106,9 +106,40 @@ impl MicroOp {
     }
 }
 
+/// Result of a time-aware pull from an [`OpSource`].
+///
+/// Closed-loop sources only ever produce `Op`/`Exhausted` (the default
+/// [`OpSource::pull`] maps `next_op` onto them). Open-loop sources
+/// (`workloads::arrival`) additionally answer `NotBefore(t)`: there is
+/// more work, but the next request has not *arrived* yet — the core must
+/// not treat the stream as finished, and should try again at simulated
+/// time `t` (picoseconds).
+#[derive(Debug, Clone, Copy)]
+pub enum Pull {
+    /// The next micro-op, ready now.
+    Op(MicroOp),
+    /// No op ready before the given simulated time (ps). The source is
+    /// *not* exhausted.
+    NotBefore(u64),
+    /// The stream is finished; no further ops will ever be produced.
+    Exhausted,
+}
+
 /// A pull-based micro-op source (workload ∘ mechanism transform).
 pub trait OpSource {
     fn next_op(&mut self) -> Option<MicroOp>;
+
+    /// Time-aware pull: like [`next_op`](OpSource::next_op), but a source
+    /// that paces work by simulated arrival time may answer
+    /// [`Pull::NotBefore`] instead of ending the stream. The default
+    /// delegates to `next_op`, so every existing (closed-loop) source is
+    /// unaffected.
+    fn pull(&mut self, _now: u64) -> Pull {
+        match self.next_op() {
+            Some(op) => Pull::Op(op),
+            None => Pull::Exhausted,
+        }
+    }
 }
 
 /// Blanket impl so plain iterators (tests, replays) are sources.

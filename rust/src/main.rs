@@ -4,6 +4,7 @@
 //!   run       simulate one (mechanism, workload) pair
 //!   repro     regenerate a paper table/figure (table1..5, fig7..fig15, all)
 //!   ablate    design-choice sweeps (lvc | layers | batch | scm | smt | amu | faults)
+//!   serve     open-loop latency-throughput sweep (offered load x mechanism)
 //!   validate  cross-check the PJRT analytic fast path vs the cycle sim
 //!   list      show mechanisms and workloads
 
@@ -40,6 +41,11 @@ const VALUE_FLAGS: &[&str] = &[
     "fault-poll-timeout-ns",
     "fault-reissue-max",
     "fault-backoff-mult",
+    "arrival",
+    "offered-rps",
+    "zipf-theta",
+    "arrival-seed",
+    "queue-depth",
 ];
 
 fn main() {
@@ -55,6 +61,7 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("repro") => cmd_repro(&args),
         Some("ablate") => cmd_ablate(&args),
+        Some("serve") => cmd_serve(&args),
         Some("validate") => cmd_validate(&args),
         Some("list") => cmd_list(),
         _ => {
@@ -67,7 +74,7 @@ fn main() {
 
 fn print_usage() {
     eprintln!(
-        "usage: twinload <run|repro|ablate|validate|list> [options]\n\
+        "usage: twinload <run|repro|ablate|serve|validate|list> [options]\n\
          \n\
          twinload run --mechanism tl-ooo --workload gups [--ops N] [--cores C]\n\
          \x20            [--footprint-mb M] [--seed S] [--config file.ini]\n\
@@ -79,9 +86,12 @@ fn print_usage() {
          \x20            [--fault-rate F] [--fault-ecc-rate F] [--fault-seed S]\n\
          \x20            [--demote-after K] [--fault-poll-timeout-ns N]\n\
          \x20            [--fault-reissue-max N] [--fault-backoff-mult N]\n\
+         \x20            [--arrival closed|poisson|mmpp] [--offered-rps N]\n\
+         \x20            [--zipf-theta F] [--arrival-seed S] [--queue-depth N]\n\
          twinload repro <table1|table2|table3|table4|table5|fig7|fig8|fig9|\n\
          \x20            fig10|fig11|fig12|fig13|fig14|fig15|all> [--quick] [--csv-dir DIR]\n\
          twinload ablate <lvc|layers|batch|scm|smt|amu|faults> [--quick]\n\
+         twinload serve [--quick] [--csv-dir DIR]\n\
          twinload validate\n\
          twinload list"
     );
@@ -154,6 +164,19 @@ fn cmd_run(args: &Args) -> i32 {
     flag!("fault-poll-timeout-ns", |v: u64| cfg.fault_poll_timeout = v * 1000);
     flag!("fault-reissue-max", |v| cfg.fault_reissue_max = v as u32);
     flag!("fault-backoff-mult", |v| cfg.fault_backoff_mult = v as u32);
+    flag!("offered-rps", |v| spec.offered_rps = v);
+    flag!("arrival-seed", |v| spec.arrival_seed = v);
+    flag!("queue-depth", |v| spec.queue_depth = v as u32);
+    if let Ok(Some(f)) = args.get_f64("zipf-theta") {
+        spec.zipf_theta = f;
+    }
+    if let Some(name) = args.get("arrival") {
+        let Some(kind) = twinload::workloads::arrival::ArrivalKind::by_name(name) else {
+            eprintln!("unknown arrival process '{name}' (closed | poisson | mmpp)");
+            return 2;
+        };
+        spec.arrival = kind;
+    }
     if let Ok(Some(f)) = args.get_f64("pcie-local-frac") {
         cfg.pcie_local_frac = f;
     }
@@ -232,6 +255,22 @@ fn cmd_run(args: &Args) -> i32 {
             report.amu_queue_stalls,
             report.amu_occ_mean,
             report.amu_occ_peak,
+        );
+    }
+    if report.arrived_requests > 0 {
+        println!(
+            "  serving       {:>12} arrived ({} served, {} dropped)\n  \
+             req latency   {:>9.1} ns mean (p50 {} ns, p99 {} ns, p99.9 {} ns)\n  \
+             arrival queue {:>12.1} mean depth (peak {})",
+            report.arrived_requests,
+            report.served_requests,
+            report.dropped_requests,
+            report.req_mean_ns,
+            report.req_p50_ns,
+            report.req_p99_ns,
+            report.req_p999_ns,
+            report.queue_mean,
+            report.queue_peak,
         );
     }
     if report.faults_injected > 0 || report.ecc_corrected > 0 {
@@ -369,6 +408,19 @@ fn cmd_ablate(args: &Args) -> i32 {
         Some("faults") => emitr!(exp::ablate_faults(&scale), "ablate_faults"),
         _ => {
             eprintln!("usage: twinload ablate <lvc|layers|batch|scm|smt|amu|faults>");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let scale = scale_from(args);
+    let csv = args.get("csv-dir");
+    match exp::serve(&scale) {
+        Ok(t) => emit(t, csv, "serve"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
             return 2;
         }
     }

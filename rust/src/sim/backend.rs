@@ -384,6 +384,27 @@ fn build_pcie(cfg: &SystemConfig, data: &DataRegions) -> PcieSwap {
 /// Per-mechanism extension-memory state, one variant per mechanism.
 /// Constructed once by [`ExtBackend::build`]; no hook ever has to
 /// unwrap an `Option` to reach its mechanism's state.
+///
+/// # Hook contract
+///
+/// The platform drives a backend through exactly three hooks, all keyed
+/// on the `GroupKind` of the channel group the transaction targets
+/// (a backend must no-op for kinds it does not own):
+///
+/// * **ingress** — called once per transaction on its way to the
+///   extended controllers, with the arrival time in ps; returns the
+///   (possibly delayed) time the transaction reaches the controller.
+///   May mutate backend state (link occupancy, AMU queue), so it must
+///   be called exactly once per transaction, in controller-arrival
+///   order.
+/// * **egress_delay** — read-only; the extra completion latency in ps
+///   added on the way back to the core. Must be stable for a given
+///   backend state (the platform may query it repeatedly).
+/// * **observe_commands** — called once per serviced transaction with
+///   the DRAM command stream it generated; returns the [`DataKind`]
+///   the host-facing interface produced (the MEC's real-vs-fake
+///   answer; `Real` for every other backend). This is the only hook
+///   that may change the *content* a core observes.
 pub enum ExtBackend {
     /// Ideal: extended data on equally-local channels; stateless.
     Direct,

@@ -27,12 +27,9 @@ pub fn run_workload(
     ops_per_core: u64,
     seed: u64,
 ) -> SimReport {
-    let spec = RunSpec {
-        workload,
-        footprint: RunSpec::smoke(workload).footprint,
-        ops_per_core,
-        seed,
-    };
+    let mut spec = RunSpec::smoke(workload);
+    spec.ops_per_core = ops_per_core;
+    spec.seed = seed;
     run_spec(cfg, &spec)
 }
 

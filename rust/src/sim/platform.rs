@@ -23,16 +23,20 @@ use crate::memmgr::Allocator;
 use crate::stats::LevelMeter;
 use crate::twinload::Transform;
 use crate::util::time::Ps;
+use crate::util::Rng;
 use crate::workloads;
+use crate::workloads::arrival::{ArrivalKind, ServingSource, ServingStats};
 use crate::util::FastMap;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 /// Per-core private state.
 struct CoreBundle {
     core: Core,
-    /// Devirtualized lowering: the transform is instantiated over the
-    /// concrete workload enum, so `next_op` is a direct match.
-    source: Transform<workloads::WorkloadSource>,
+    /// The serving gate over the devirtualized lowering: the transform
+    /// is instantiated over the concrete workload enum (so `next_op` is
+    /// a direct match), wrapped by the open/closed-loop arrival gate
+    /// (a transparent passthrough when `arrival = closed`).
+    source: ServingSource,
     l1: SetAssocCache,
     tlb: Tlb,
     mshr: MshrFile,
@@ -350,6 +354,19 @@ impl Platform {
         // with its share of the core's window and private structures.
         let smt = cfg.smt.max(1);
         let hw_threads = cfg.cores * smt;
+
+        // Serving-knob validation (typed errors, like backend knobs).
+        if spec.arrival != ArrivalKind::Closed {
+            if spec.offered_rps == 0 {
+                bail!("open-loop arrival ({}) requires offered_rps > 0", spec.arrival.name());
+            }
+            if spec.queue_depth == 0 {
+                bail!("open-loop arrival ({}) requires queue_depth > 0", spec.arrival.name());
+            }
+        }
+        if !(0.0..1.0).contains(&spec.zipf_theta) {
+            bail!("zipf_theta must be in [0, 1), got {}", spec.zipf_theta);
+        }
         let mut tp = cfg.core;
         tp.rob_size = (tp.rob_size / smt).max(16);
         tp.demote_after = cfg.demote_after;
@@ -359,15 +376,34 @@ impl Platform {
         let thread_tlb = (cfg.tlb_entries / smt as u32).max(16);
         let cores: Vec<CoreBundle> = (0..hw_threads)
             .map(|i| {
-                let wl = workloads::build_source(
+                let wl = workloads::build_source_with(
                     spec.workload,
                     data,
                     spec.ops_per_core,
                     spec.seed.wrapping_add(i as u64 * 0x9E37_79B9),
+                    spec.zipf_theta,
                 );
+                let transform = Transform::new(wl, cfg.mechanism, layout);
+                let source = match spec.arrival {
+                    ArrivalKind::Closed => ServingSource::closed(transform),
+                    kind => {
+                        // Offered load is system-wide; each hardware
+                        // thread serves an equal share, with a per-thread
+                        // arrival stream forked off the arrival seed.
+                        let per_core = spec.offered_rps as f64 / hw_threads as f64;
+                        let mut master = Rng::new(spec.arrival_seed);
+                        ServingSource::open(
+                            transform,
+                            kind,
+                            per_core,
+                            spec.queue_depth as usize,
+                            master.fork(i as u64),
+                        )
+                    }
+                };
                 CoreBundle {
                     core: Core::with_frontend(tp, cfg.frontend),
-                    source: Transform::new(wl, cfg.mechanism, layout),
+                    source,
                     l1: SetAssocCache::new(l1),
                     tlb: Tlb::new(thread_tlb, 4, 4 << 10),
                     mshr: MshrFile::new(thread_mshrs),
@@ -524,6 +560,12 @@ impl Platform {
                     }
                 }
             }
+            // Open-loop completion hook: the core retires in order, so
+            // the serving gate can match the cumulative retired-op count
+            // against each in-flight request's handed-out boundary.
+            // No-op in closed-loop runs.
+            let retired = b.core.stats.retired_ops;
+            b.source.observe_retired(retired, now);
         }
         for (line, at) in outbox.reads.drain(..) {
             self.submit(line, at, Some(Some(ci)));
@@ -817,7 +859,19 @@ impl Platform {
     }
 
     pub(crate) fn transform_stats(&self) -> Vec<crate::twinload::TransformStats> {
-        self.cores.iter().map(|b| b.source.stats).collect()
+        self.cores.iter().map(|b| *b.source.transform_stats()).collect()
+    }
+
+    /// Merged open-loop serving statistics across all hardware threads
+    /// (all-zero with an empty histogram for closed-loop runs).
+    pub(crate) fn serving_totals(&self) -> ServingStats {
+        let mut total = ServingStats::default();
+        for b in &self.cores {
+            if let Some(s) = b.source.serving_stats() {
+                total.merge(s);
+            }
+        }
+        total
     }
 
     pub(crate) fn llc_stats(&self) -> (u64, u64) {

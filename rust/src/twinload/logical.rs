@@ -45,6 +45,17 @@ impl LogicalOp {
 /// Pull-based logical stream (implemented by every workload generator).
 pub trait LogicalSource {
     fn next_logical(&mut self) -> Option<LogicalOp>;
+
+    /// True when the stream currently sits *between* requests — the last
+    /// op popped completed one application-level request (a memcached
+    /// GET/SET, a graph-traversal step, ...) and the next op would start
+    /// a new one. The open-loop serving gate (`workloads::arrival`) uses
+    /// this to hand out work one whole request at a time. The default
+    /// (`true`) treats every op as its own request, which is correct for
+    /// synthetic/test streams with no request structure.
+    fn at_request_boundary(&self) -> bool {
+        true
+    }
 }
 
 impl<I: Iterator<Item = LogicalOp>> LogicalSource for I {
@@ -56,6 +67,10 @@ impl<I: Iterator<Item = LogicalOp>> LogicalSource for I {
 impl LogicalSource for Box<dyn LogicalSource + Send> {
     fn next_logical(&mut self) -> Option<LogicalOp> {
         (**self).next_logical()
+    }
+
+    fn at_request_boundary(&self) -> bool {
+        (**self).at_request_boundary()
     }
 }
 

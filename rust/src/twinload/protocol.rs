@@ -378,6 +378,35 @@ impl<S: LogicalSource> Transform<S> {
     }
 }
 
+impl<S: LogicalSource> Transform<S> {
+    /// Lower exactly one application-level *request* (as delimited by
+    /// [`LogicalSource::at_request_boundary`]) and append its micro-ops
+    /// to `dst`. Returns the number of micro-ops produced; `0` means the
+    /// underlying source is exhausted. Used by the open-loop serving gate
+    /// (`workloads::arrival`) to hand out work one request at a time so
+    /// per-request latency has a well-defined completion point.
+    pub fn next_request(&mut self, dst: &mut VecDeque<MicroOp>) -> usize {
+        debug_assert!(self.out.is_empty(), "next_request interleaved with next_op");
+        loop {
+            match self.source.next_logical() {
+                Some(op) => {
+                    self.lower(op);
+                    if self.source.at_request_boundary() {
+                        break;
+                    }
+                }
+                None => break,
+            }
+        }
+        // A request must be self-contained: flush any batched prefetches
+        // so its completion point is observable (and deterministic).
+        self.flush_batch();
+        let n = self.out.len();
+        dst.extend(self.out.drain(..));
+        n
+    }
+}
+
 impl<S: LogicalSource> OpSource for Transform<S> {
     fn next_op(&mut self) -> Option<MicroOp> {
         loop {

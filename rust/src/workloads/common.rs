@@ -72,6 +72,12 @@ impl TraceBuf {
         self.pending.pop_front()
     }
 
+    /// True between requests: every op of the last generated request has
+    /// been popped (request-boundary detection for open-loop serving).
+    pub fn pending_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
     pub fn compute(&mut self, n: u32) {
         self.emitted += 1;
         self.pending.push_back(LogicalOp::Compute(n));

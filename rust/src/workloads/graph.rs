@@ -109,6 +109,11 @@ impl LogicalSource for GraphWalk {
             let _ = self.kind;
         }
     }
+
+    /// Between vertex visits: one visit = one serving "request".
+    fn at_request_boundary(&self) -> bool {
+        self.buf.pending_empty()
+    }
 }
 
 #[cfg(test)]

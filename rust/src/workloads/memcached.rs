@@ -11,15 +11,25 @@ pub struct Memcached {
     buf: TraceBuf,
     sig: SignatureParams,
     items: u64,
+    /// Zipf skew of key popularity (θ; 0 = uniform, → 1 = heavily
+    /// skewed). Table-4 default is 0.9; the open-loop serving knob
+    /// `zipf_theta` overrides it.
+    theta: f64,
 }
 
 impl Memcached {
     pub fn new(data: DataRegions, ops: u64, seed: u64) -> Memcached {
+        Memcached::with_theta(data, ops, seed, 0.9)
+    }
+
+    /// Like [`new`](Memcached::new) with an explicit key-popularity skew.
+    pub fn with_theta(data: DataRegions, ops: u64, seed: u64, theta: f64) -> Memcached {
         let items = (data.ext_len / 64 / 2).max(1);
         Memcached {
             buf: TraceBuf::new(data, ops, seed),
             sig: WorkloadKind::Memcached.signature(),
             items,
+            theta,
         }
     }
 
@@ -36,7 +46,7 @@ impl Memcached {
         let h = b.mem(bucket, false, None);
 
         // Zipf-popular item, reached by a dependent chain walk of 1–2.
-        let zipf_line = b.rng.zipf(self.items, 0.9);
+        let zipf_line = b.rng.zipf(self.items, self.theta);
         let item = b.data.ext_base + zipf_line * 64;
         let chain1 = b.mem(item, false, Some(h));
         let item2 = if b.rng.chance(0.3) {
@@ -73,6 +83,12 @@ impl LogicalSource for Memcached {
             }
             self.request();
         }
+    }
+
+    /// Between GET/SET requests: the last generated request's ops have
+    /// all been popped.
+    fn at_request_boundary(&self) -> bool {
+        self.buf.pending_empty()
     }
 }
 

@@ -11,6 +11,7 @@
 //! their image, exactly the methodology of the paper's own §7.2
 //! trace-driven comparison.
 
+pub mod arrival;
 pub mod common;
 pub mod graph;
 pub mod gups;
@@ -56,6 +57,20 @@ impl LogicalSource for WorkloadSource {
             WorkloadSource::Memcached(s) => s.next_logical(),
         }
     }
+
+    #[inline]
+    fn at_request_boundary(&self) -> bool {
+        match self {
+            WorkloadSource::Gups(s) => s.at_request_boundary(),
+            WorkloadSource::Radix(s) => s.at_request_boundary(),
+            WorkloadSource::Cg(s) => s.at_request_boundary(),
+            WorkloadSource::Fmm(s) => s.at_request_boundary(),
+            WorkloadSource::Graph(s) => s.at_request_boundary(),
+            WorkloadSource::ScalParC(s) => s.at_request_boundary(),
+            WorkloadSource::StreamCluster(s) => s.at_request_boundary(),
+            WorkloadSource::Memcached(s) => s.at_request_boundary(),
+        }
+    }
 }
 
 /// Build a generator for one core's share of the workload.
@@ -78,6 +93,20 @@ pub fn build(
 /// Build a devirtualized source with pre-placed regions (multi-core
 /// setups share one placement). This is the simulator's entry point.
 pub fn build_source(kind: WorkloadKind, data: DataRegions, ops: u64, seed: u64) -> WorkloadSource {
+    build_source_with(kind, data, ops, seed, 0.9)
+}
+
+/// [`build_source`] with an explicit Zipf key-popularity skew
+/// (`zipf_theta` serving knob). Only memcached consumes it today; every
+/// other workload's stream is independent of `theta`, and `theta = 0.9`
+/// reproduces [`build_source`] exactly.
+pub fn build_source_with(
+    kind: WorkloadKind,
+    data: DataRegions,
+    ops: u64,
+    seed: u64,
+    zipf_theta: f64,
+) -> WorkloadSource {
     match kind {
         WorkloadKind::Gups => WorkloadSource::Gups(gups::Gups::new(data, ops, seed)),
         WorkloadKind::Radix => WorkloadSource::Radix(radix::Radix::new(data, ops, seed)),
@@ -92,9 +121,9 @@ pub fn build_source(kind: WorkloadKind, data: DataRegions, ops: u64, seed: u64) 
         WorkloadKind::StreamCluster => {
             WorkloadSource::StreamCluster(stream::StreamCluster::new(data, ops, seed))
         }
-        WorkloadKind::Memcached => {
-            WorkloadSource::Memcached(memcached::Memcached::new(data, ops, seed))
-        }
+        WorkloadKind::Memcached => WorkloadSource::Memcached(memcached::Memcached::with_theta(
+            data, ops, seed, zipf_theta,
+        )),
     }
 }
 

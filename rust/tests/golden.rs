@@ -24,6 +24,7 @@
 
 use twinload::config::{RunSpec, SystemConfig};
 use twinload::sim::{run_spec, SimReport};
+use twinload::workloads::arrival::ArrivalKind;
 use twinload::workloads::WorkloadKind;
 
 const SNAP_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden.snap");
@@ -55,7 +56,8 @@ fn render(r: &SimReport) -> String {
          dram_rb={} dram_wb={} row_hit={:.6} mlp_mean={:.6} mlp_peak={} micro={} ext_ld={} \
          ext_st={} mec1={} mec2r={} mec2l={} lvc_ev={} pcie_faults={} events={} peak={} \
          cmds={} bus={:.6} amu_rq={} amu_stall={} amu_peak={} faults={} storms={} \
-         demoted={} ecc={} fdrops={} flates={} rec_p99={}\n",
+         demoted={} ecc={} fdrops={} flates={} rec_p99={} arrived={} served={} \
+         dropped={} qmean={:.6} qpeak={} p50={} p99={} p999={}\n",
         r.mechanism,
         r.workload,
         r.finish,
@@ -100,6 +102,14 @@ fn render(r: &SimReport) -> String {
         r.mec_fill_drops,
         r.mec_fill_lates,
         r.recovery_p99,
+        r.arrived_requests,
+        r.served_requests,
+        r.dropped_requests,
+        r.queue_mean,
+        r.queue_peak,
+        r.req_p50_ns,
+        r.req_p99_ns,
+        r.req_p999_ns,
     )
 }
 
@@ -147,6 +157,32 @@ fn corpus() -> String {
         spec.ops_per_core = 4_000;
         let r = run_spec(&cfg, &spec);
         assert!(!r.deadlocked, "{} deadlocked under faults", r.mechanism);
+        out.push_str(&render(&r));
+    }
+    // Open-loop serving rows: Poisson arrivals at a fixed offered load
+    // on the skewed key-value mix, one row per mechanism. These freeze
+    // the arrival schedule, the bounded-queue drop behavior, and the
+    // end-to-end latency distribution (the serving fields at the end of
+    // each render line), plus one MMPP row pinning the bursty phase
+    // machine itself.
+    for cfg in mechanisms() {
+        let mut cfg = cfg;
+        cfg.cores = 2;
+        let mut spec = RunSpec::smoke(WorkloadKind::Memcached);
+        spec.ops_per_core = 4_000;
+        let spec = spec.open_loop(ArrivalKind::Poisson, 4_000_000);
+        let r = run_spec(&cfg, &spec);
+        assert!(!r.deadlocked, "{} deadlocked open-loop", r.mechanism);
+        out.push_str(&render(&r));
+    }
+    {
+        let mut cfg = SystemConfig::tl_ooo();
+        cfg.cores = 2;
+        let mut spec = RunSpec::smoke(WorkloadKind::Memcached);
+        spec.ops_per_core = 4_000;
+        let spec = spec.open_loop(ArrivalKind::Mmpp, 4_000_000);
+        let r = run_spec(&cfg, &spec);
+        assert!(!r.deadlocked, "mmpp corpus run deadlocked");
         out.push_str(&render(&r));
     }
     out
@@ -256,6 +292,39 @@ fn golden_corpus_is_backend_independent() {
                 base.mechanism.name()
             );
         }
+    }
+}
+
+/// Open-loop serving must be implementation-independent too: the same
+/// arrival seed reproduces the report line bit-for-bit across event
+/// engines × front ends × backend routings — the acceptance bar for the
+/// serving front end riding on the optimized-vs-reference seams.
+#[test]
+fn golden_open_loop_rows_are_implementation_independent() {
+    use twinload::cpu::FrontEnd;
+    use twinload::sim::{EngineKind, Routing};
+    let mut spec = RunSpec::smoke(WorkloadKind::Memcached);
+    spec.ops_per_core = 4_000;
+    let spec = spec.open_loop(ArrivalKind::Poisson, 4_000_000);
+    let mut lines = Vec::new();
+    for engine in
+        [EngineKind::Calendar, EngineKind::AdaptiveCalendar, EngineKind::ReferenceHeap]
+    {
+        for fe in [FrontEnd::Slab, FrontEnd::Reference] {
+            for routing in [Routing::Backend, Routing::Legacy] {
+                let mut cfg = SystemConfig::tl_ooo();
+                cfg.cores = 2;
+                cfg.engine = engine;
+                cfg.frontend = fe;
+                cfg.routing = routing;
+                let r = run_spec(&cfg, &spec);
+                assert!(!r.deadlocked);
+                lines.push(render(&r));
+            }
+        }
+    }
+    for l in &lines[1..] {
+        assert_eq!(&lines[0], l, "open-loop run diverged across implementations");
     }
 }
 

@@ -900,6 +900,7 @@ fn prop_chaos_faults_complete_exactly_once_and_zero_rate_is_inert() {
     use twinload::dram::SchedPolicy;
     use twinload::sim::engine::EngineKind;
     use twinload::sim::{run_spec, Routing, SimReport};
+    use twinload::workloads::arrival::ArrivalKind;
     use twinload::workloads::WorkloadKind;
 
     let injected_total = Cell::new(0u64);
@@ -920,6 +921,15 @@ fn prop_chaos_faults_complete_exactly_once_and_zero_rate_is_inert() {
         let mut spec = RunSpec::smoke(wl);
         spec.ops_per_core = 400 + rng.below(800);
         spec.seed = rng.next_u64();
+        // Open-loop arm: faults × arrival pacing. Termination and
+        // exactly-once must survive bounded-queue drops (drops never
+        // consume the op budget, so retired work stays invariant).
+        if rng.chance(0.3) {
+            let kind = [ArrivalKind::Poisson, ArrivalKind::Mmpp][rng.below(2) as usize];
+            spec = spec.open_loop(kind, (1 + rng.below(32)) * 1_000_000);
+            spec.queue_depth = 2 + rng.below(62) as u32;
+            spec.arrival_seed = rng.next_u64();
+        }
 
         // Arbitrary fault schedule: rate in [0.01, 0.50], fresh seed,
         // aggressive demotion thresholds.
@@ -962,6 +972,15 @@ fn prop_chaos_faults_complete_exactly_once_and_zero_rate_is_inert() {
                 r.amu_requests,
                 r.engine_events,
                 r.engine_peak,
+                r.arrived_requests,
+                r.served_requests,
+                r.dropped_requests,
+                r.queue_peak,
+                r.req_p50_ns,
+                r.req_p99_ns,
+                r.req_p999_ns,
+                r.req_mean_ns.to_bits(),
+                r.queue_mean.to_bits(),
             ]
         };
 
@@ -1059,6 +1078,12 @@ fn prop_config_ini_round_trips_and_rejects() {
         let ops = 1 + rng.below(1_000_000);
         let seed = rng.below(1 << 40);
         let footprint_mb = 1 + rng.below(256);
+        // Open-loop serving knobs.
+        let arrival = ["closed", "poisson", "mmpp"][rng.below(3) as usize];
+        let offered_rps = rng.below(100_000_000);
+        let zipf_theta = rng.below(100) as f64 / 100.0;
+        let arrival_seed = rng.below(1 << 40);
+        let queue_depth = 1 + rng.below(4096);
         // Fault-injection knobs (reissue/backoff/poll kept valid for a
         // nonzero rate; validation rejects zeros there).
         let fault_rate = rng.below(100) as f64 / 100.0;
@@ -1101,6 +1126,11 @@ fn prop_config_ini_round_trips_and_rejects() {
             kv("ops", ops.to_string(), rng),
             kv("seed", seed.to_string(), rng),
             kv("footprint_mb", footprint_mb.to_string(), rng),
+            kv("arrival", arrival.to_string(), rng),
+            kv("offered_rps", offered_rps.to_string(), rng),
+            kv("zipf_theta", zipf_theta.to_string(), rng),
+            kv("arrival_seed", arrival_seed.to_string(), rng),
+            kv("queue_depth", queue_depth.to_string(), rng),
         ];
         rng.shuffle(&mut run_keys);
         let mut text = String::from("# generated\n[system]\n");
@@ -1163,6 +1193,14 @@ fn prop_config_ini_round_trips_and_rejects() {
         {
             return Err("numeric [run] key lost".into());
         }
+        if spec.arrival.name() != arrival
+            || spec.offered_rps != offered_rps
+            || spec.zipf_theta.to_bits() != zipf_theta.to_bits()
+            || spec.arrival_seed != arrival_seed
+            || spec.queue_depth as u64 != queue_depth
+        {
+            return Err("serving [run] key lost".into());
+        }
 
         // Corruptions must be rejected, not silently absorbed.
         let bad_key = format!("{text}unheard_of_key = 1\n");
@@ -1170,9 +1208,10 @@ fn prop_config_ini_round_trips_and_rejects() {
         if apply(&bad_ini, &mut cfg, &mut spec).is_ok() {
             return Err("unknown [run] key accepted".into());
         }
-        let bad_enum =
-            ["engine", "sched", "frontend", "mechanism", "workload"][rng.below(5) as usize];
-        let section = if bad_enum == "workload" { "[run]" } else { "[system]" };
+        let bad_enum = ["engine", "sched", "frontend", "mechanism", "workload", "arrival"]
+            [rng.below(6) as usize];
+        let section =
+            if matches!(bad_enum, "workload" | "arrival") { "[run]" } else { "[system]" };
         let bad_val = format!("{section}\n{bad_enum} = definitely-not-a-{bad_enum}\n");
         let bad_ini = Ini::parse(&bad_val).map_err(|e| format!("bad-enum parse: {e}"))?;
         if apply(&bad_ini, &mut cfg, &mut spec).is_ok() {
