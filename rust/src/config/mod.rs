@@ -54,6 +54,15 @@ pub struct SystemConfig {
     pub amu_notify: Ps,
     /// AMU system: serial dispatch interval (one request per `amu_svc`).
     pub amu_svc: Ps,
+    /// MIMS system: message packing factor (twin-load pairs per packed
+    /// message; 1 degenerates to the unpacked MEC path).
+    pub mims_pack: u32,
+    /// MIMS system: per-message framing cost, amortized over the pack.
+    pub mims_frame: Ps,
+    /// MIMS system: fine-granularity transfer size in bytes (1..=64;
+    /// 64 = full bursts). Sub-64 B settings model the message
+    /// interface's dense transfers for pointer-chasing workloads.
+    pub mims_granule: u32,
     /// Extension-memory routing implementation (the typed backend by
     /// default; the pre-refactor legacy layout is retained for
     /// differential testing).
@@ -141,6 +150,9 @@ impl SystemConfig {
             amu_issue: 10 * NS,
             amu_notify: 10 * NS,
             amu_svc: 1_250,
+            mims_pack: 4,
+            mims_frame: 10 * NS,
+            mims_granule: 64,
             routing: Routing::Backend,
             engine: EngineKind::Calendar,
             sched: SchedPolicy::BankIndexed,
@@ -205,6 +217,19 @@ impl SystemConfig {
         Self::base(Mechanism::Amu)
     }
 
+    /// MIMS-style message interface with the given packing factor.
+    pub fn mims_packed(pack: u32) -> SystemConfig {
+        let mut c = Self::base(Mechanism::Mims(pack));
+        c.mims_pack = pack;
+        c
+    }
+
+    /// MIMS-style message interface at the default packing factor.
+    pub fn mims() -> SystemConfig {
+        let pack = Self::base(Mechanism::Ideal).mims_pack;
+        Self::mims_packed(pack)
+    }
+
     pub fn by_name(name: &str) -> Option<SystemConfig> {
         match name {
             "ideal" => Some(Self::ideal()),
@@ -215,6 +240,7 @@ impl SystemConfig {
             "pcie" => Some(Self::pcie(0.75)),
             "inc-trl" => Some(Self::increased_trl(35 * NS)),
             "amu" => Some(Self::amu()),
+            "mims" => Some(Self::mims()),
             _ => None,
         }
     }
@@ -245,6 +271,17 @@ impl SystemConfig {
         }
         if self.mechanism == Mechanism::Amu && self.amu_depth == 0 {
             return Err("amu_depth must be at least 1".into());
+        }
+        if let Mechanism::Mims(k) = self.mechanism {
+            if k == 0 || self.mims_pack == 0 {
+                return Err("mims_pack must be at least 1".into());
+            }
+            if k != self.mims_pack {
+                return Err("mechanism packing factor disagrees with mims_pack".into());
+            }
+            if self.mims_granule == 0 || self.mims_granule > 64 {
+                return Err("mims_granule must be in 1..=64 bytes".into());
+            }
         }
         if !(0.0..=1.0).contains(&self.fault_rate) {
             return Err("fault_rate must be within [0, 1]".into());
@@ -368,9 +405,17 @@ mod tests {
 
     #[test]
     fn presets_validate() {
-        for name in
-            ["ideal", "tl-ooo", "tl-lf", "tl-lf-batched", "numa", "pcie", "inc-trl", "amu"]
-        {
+        for name in [
+            "ideal",
+            "tl-ooo",
+            "tl-lf",
+            "tl-lf-batched",
+            "numa",
+            "pcie",
+            "inc-trl",
+            "amu",
+            "mims",
+        ] {
             let c = SystemConfig::by_name(name).unwrap();
             c.validate().unwrap();
         }
@@ -387,6 +432,28 @@ mod tests {
         // The knob is AMU-specific: other mechanisms ignore it.
         let mut ideal = SystemConfig::ideal();
         ideal.amu_depth = 0;
+        ideal.validate().unwrap();
+    }
+
+    #[test]
+    fn mims_knobs_validated() {
+        let mut c = SystemConfig::mims();
+        c.validate().unwrap();
+        c.mims_granule = 0;
+        assert!(c.validate().unwrap_err().contains("mims_granule"));
+        c.mims_granule = 65;
+        assert!(c.validate().unwrap_err().contains("mims_granule"));
+        c.mims_granule = 8;
+        c.validate().unwrap();
+        // The mechanism payload and the knob must agree (the parser
+        // keeps them in lockstep).
+        c.mims_pack += 1;
+        assert!(c.validate().unwrap_err().contains("mims_pack"));
+        let zero = SystemConfig::mims_packed(0);
+        assert!(zero.validate().unwrap_err().contains("mims_pack"));
+        // The knobs are MIMS-specific: other mechanisms ignore them.
+        let mut ideal = SystemConfig::ideal();
+        ideal.mims_granule = 0;
         ideal.validate().unwrap();
     }
 

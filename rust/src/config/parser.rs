@@ -121,6 +121,22 @@ pub fn apply(
                 "amu_svc_ps" => {
                     cfg.amu_svc = v.parse::<u64>().map_err(|_| "bad amu_svc_ps")?
                 }
+                "mims_pack" => {
+                    let pack = v.parse().map_err(|_| "bad mims_pack")?;
+                    cfg.mims_pack = pack;
+                    // The mechanism payload carries the pack into the
+                    // lowering layer; keep them in lockstep.
+                    if let crate::twinload::Mechanism::Mims(_) = cfg.mechanism {
+                        cfg.mechanism = crate::twinload::Mechanism::Mims(pack);
+                    }
+                }
+                "mims_frame_ns" => {
+                    cfg.mims_frame =
+                        v.parse::<u64>().map_err(|_| "bad mims_frame_ns")? * 1_000
+                }
+                "mims_granule" => {
+                    cfg.mims_granule = v.parse().map_err(|_| "bad mims_granule")?
+                }
                 "fault_rate" => {
                     cfg.fault_rate = v.parse().map_err(|_| "bad fault_rate")?
                 }
@@ -382,6 +398,28 @@ mod tests {
         let mut cfg = SystemConfig::ideal();
         let mut spec = RunSpec::smoke(WorkloadKind::Gups);
         assert!(apply(&ini, &mut cfg, &mut spec).is_err());
+    }
+
+    #[test]
+    fn mims_keys_configure_the_message_interface() {
+        let ini = Ini::parse(
+            "[system]\nmechanism = mims\nmims_pack = 8\nmims_frame_ns = 25\n\
+             mims_granule = 16\n",
+        )
+        .unwrap();
+        let mut cfg = SystemConfig::ideal();
+        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+        apply(&ini, &mut cfg, &mut spec).unwrap();
+        assert_eq!(cfg.mechanism.name(), "mims");
+        assert_eq!(cfg.mims_pack, 8);
+        // The mechanism payload follows the knob (validate() enforces
+        // the lockstep this parser maintains).
+        assert_eq!(cfg.mechanism, crate::twinload::Mechanism::Mims(8));
+        assert_eq!(cfg.mims_frame, 25_000);
+        assert_eq!(cfg.mims_granule, 16);
+        cfg.validate().unwrap();
+        let bad = Ini::parse("[system]\nmims_pack = lots\n").unwrap();
+        assert!(apply(&bad, &mut cfg, &mut spec).is_err());
     }
 
     #[test]

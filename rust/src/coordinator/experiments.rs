@@ -733,6 +733,72 @@ pub fn ablate_amu(scale: &Scale) -> Table {
     t
 }
 
+/// MIMS ablation: message packing factor × pointer-chasing workload,
+/// against the unpacked twin-load baseline (`tl-lf` — the exact stream
+/// `mims` degenerates to at pack 1). The interesting column is
+/// `data_bus_util`: packing amortizes the prefetch/fence round trip, so
+/// the same bytes move across a less idle bus. Failed jobs surface as
+/// FAILED rows (continue-on-error), mirroring [`ablate_faults`].
+pub fn ablate_mims(scale: &Scale) -> Result<Table> {
+    let packs: &[u32] = if scale.quick { &[1, 4] } else { &[1, 2, 4, 8, 16] };
+    // The workloads whose effective bus utilization the paper's
+    // synchronous interface serves worst: pure pointer-chasing RMW
+    // (gups) and dependency-chained graph walks (bfs).
+    let workloads: &[WorkloadKind] = &[WorkloadKind::Gups, WorkloadKind::Bfs];
+    let mut jobs = Vec::new();
+    // Unpacked twin-load anchors (one per workload).
+    for &wl in workloads {
+        jobs.push((scale.cfg(SystemConfig::tl_lf()), scale.spec(wl, scale.medium)));
+    }
+    for &k in packs {
+        for &wl in workloads {
+            jobs.push((scale.cfg(SystemConfig::mims_packed(k)), scale.spec(wl, scale.medium)));
+        }
+    }
+    let outcomes = try_run_parallel(&jobs, scale.threads);
+    let mut t = Table::new(
+        "Ablation: MIMS message packing factor (vs unpacked TL-LF)",
+        &[
+            "Pack",
+            "Workload",
+            "Perf vs TL-LF",
+            "Bus util (%)",
+            "TL-LF bus (%)",
+            "Fences",
+            "Messages",
+            "Pack mean",
+        ],
+    );
+    for (ki, &k) in packs.iter().enumerate() {
+        for (wi, &wl) in workloads.iter().enumerate() {
+            let base = outcomes[wi].as_ref().ok();
+            match &outcomes[workloads.len() + ki * workloads.len() + wi] {
+                Ok(r) => t.row(&[
+                    k.to_string(),
+                    wl.name().into(),
+                    base.map(|b| f3(r.perf_vs(b))).unwrap_or_else(|| "-".into()),
+                    f2(r.data_bus_util * 100.0),
+                    base.map(|b| f2(b.data_bus_util * 100.0)).unwrap_or_else(|| "-".into()),
+                    r.transform.fences.to_string(),
+                    r.mims_messages.to_string(),
+                    f2(r.mims_pack_mean),
+                ]),
+                Err(e) => t.row(&[
+                    k.to_string(),
+                    wl.name().into(),
+                    format!("FAILED: {}", e.message),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]),
+            }
+        }
+    }
+    Ok(t)
+}
+
 /// Robustness ablation: deterministic fault rate × mechanism swept into
 /// degradation curves. Each mechanism exercises its own fault class
 /// (not-ready responses + MEC fill faults for the twin systems, lost
@@ -851,18 +917,16 @@ pub fn serve(scale: &Scale) -> Result<Table> {
         ],
     );
     for (mi, mech) in mechs.iter().enumerate() {
-        let mut knee: Option<u64> = None;
+        let mut achieved_col: Vec<Option<f64>> = Vec::with_capacity(offered.len());
         for (ri, &rps) in offered.iter().enumerate() {
             match &outcomes[mi * offered.len() + ri] {
                 Ok(r) => {
                     let achieved =
                         r.served_requests as f64 * 1e9 / r.runtime_ns().max(1e-9);
-                    if achieved >= 0.95 * rps as f64 {
-                        knee = Some(knee.map_or(rps, |k: u64| k.max(rps)));
-                    }
+                    achieved_col.push(Some(achieved));
                     t.row(&[
                         (*mech).into(),
-                        (rps / 1000).to_string(),
+                        krps(rps),
                         f2(achieved / 1e3),
                         r.req_p50_ns.to_string(),
                         r.req_p99_ns.to_string(),
@@ -871,22 +935,25 @@ pub fn serve(scale: &Scale) -> Result<Table> {
                         r.queue_peak.to_string(),
                     ]);
                 }
-                Err(e) => t.row(&[
-                    (*mech).into(),
-                    (rps / 1000).to_string(),
-                    format!("FAILED: {}", e.message),
-                    "-".into(),
-                    "-".into(),
-                    "-".into(),
-                    "-".into(),
-                    "-".into(),
-                ]),
+                Err(e) => {
+                    achieved_col.push(None);
+                    t.row(&[
+                        (*mech).into(),
+                        krps(rps),
+                        format!("FAILED: {}", e.message),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]);
+                }
             }
         }
         t.row(&[
             (*mech).into(),
             "knee".into(),
-            knee.map(|k| (k / 1000).to_string()).unwrap_or_else(|| "-".into()),
+            sustained_knee(offered, &achieved_col).map(krps).unwrap_or_else(|| "-".into()),
             "-".into(),
             "-".into(),
             "-".into(),
@@ -895,6 +962,30 @@ pub fn serve(scale: &Scale) -> Result<Table> {
         ]);
     }
     Ok(t)
+}
+
+/// The knee of a latency-throughput sweep: the highest offered load in
+/// the *contiguous sustained prefix* of the ladder, where a point
+/// sustains its load when it achieved ≥ 95 % of offered (`None` for a
+/// failed job). The scan stops at the first unsustained point — a
+/// post-collapse point that transiently clears 95 % again (achieved
+/// throughput is not monotone in offered load once queues overflow)
+/// must not overstate the knee.
+fn sustained_knee(offered: &[u64], achieved: &[Option<f64>]) -> Option<u64> {
+    let mut knee = None;
+    for (&rps, a) in offered.iter().zip(achieved) {
+        match a {
+            Some(v) if *v >= 0.95 * rps as f64 => knee = Some(rps),
+            _ => break,
+        }
+    }
+    knee
+}
+
+/// Render a req/s load in kreq/s, rounded to nearest (truncating
+/// division printed a 1 999 600 req/s knee as "1999").
+fn krps(rps: u64) -> String {
+    ((rps + 500) / 1000).to_string()
 }
 
 /// Deviation-#1 ablation: the paper's host runs two SMT threads per
@@ -1030,6 +1121,71 @@ mod tests {
             .unwrap_or_else(|| panic!("no ideal low-load row:\n{csv}"));
         let p50: u64 = row.split(',').nth(3).unwrap().parse().unwrap();
         assert!(p50 > 0, "zero p50 latency: {row}");
+    }
+
+    #[test]
+    fn ablate_mims_packs_beat_the_unpacked_baseline() {
+        let scale = Scale {
+            ops: 1_500,
+            cores: 2,
+            medium: 16 << 20,
+            large: 16 << 20,
+            seed: 7,
+            threads: 2,
+            quick: true,
+        };
+        let t = ablate_mims(&scale).unwrap();
+        // 2 packing factors × 2 workloads in quick mode.
+        assert_eq!(t.num_rows(), 2 * 2);
+        let csv = t.to_csv();
+        assert!(!csv.contains("FAILED"), "sweep had failed jobs:\n{csv}");
+        for wl in ["gups", "bfs"] {
+            let row = csv
+                .lines()
+                .find(|l| l.starts_with(&format!("4,{wl},")))
+                .unwrap_or_else(|| panic!("no pack-4 row for {wl}:\n{csv}"));
+            let cols: Vec<&str> = row.split(',').collect();
+            let packed: f64 = cols[3].parse().unwrap();
+            let baseline: f64 = cols[4].parse().unwrap();
+            assert!(
+                packed > baseline,
+                "{wl}: pack-4 bus util {packed}% not above the TL-LF baseline {baseline}%\n{csv}"
+            );
+            // Packing actually happened (messages carry > 1 txn on
+            // average once stores stop flushing the batch).
+            let pack_mean: f64 = cols[7].parse().unwrap();
+            assert!(pack_mean > 1.0, "{wl}: pack mean {pack_mean} <= 1\n{csv}");
+        }
+    }
+
+    #[test]
+    fn knee_stops_at_first_unsustained_point() {
+        let offered = [500_000u64, 1_000_000, 2_000_000, 4_000_000];
+        // Non-monotone achieved throughput: the 1M point collapses, the
+        // 2M and 4M points transiently clear 95 % again. The old
+        // max-over-all-sustained definition reported 4M; the knee is the
+        // end of the contiguous sustained prefix: 500k.
+        let achieved =
+            [Some(499_000.0), Some(700_000.0), Some(1_990_000.0), Some(3_990_000.0)];
+        assert_eq!(sustained_knee(&offered, &achieved), Some(500_000));
+        // Fully sustained ladder: knee is the last point.
+        let all = [Some(500_000.0), Some(990_000.0), Some(2_000_000.0), Some(4_000_000.0)];
+        assert_eq!(sustained_knee(&offered, &all), Some(4_000_000));
+        // First point already unsustained: no knee.
+        let none = [Some(100_000.0), Some(990_000.0), None, None];
+        assert_eq!(sustained_knee(&offered, &none), None);
+        // A failed job ends the prefix even if later points sustain.
+        let failed = [Some(500_000.0), None, Some(2_000_000.0), Some(4_000_000.0)];
+        assert_eq!(sustained_knee(&offered, &failed), Some(500_000));
+    }
+
+    #[test]
+    fn knee_render_rounds_to_nearest_krps() {
+        // Truncating division printed 1_999_600 req/s as "1999".
+        assert_eq!(krps(1_999_600), "2000");
+        assert_eq!(krps(1_999_000), "1999");
+        assert_eq!(krps(500), "1");
+        assert_eq!(krps(4_000_000), "4000");
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   run       simulate one (mechanism, workload) pair
 //!   repro     regenerate a paper table/figure (table1..5, fig7..fig15, all)
-//!   ablate    design-choice sweeps (lvc | layers | batch | scm | smt | amu | faults)
+//!   ablate    design-choice sweeps (lvc | layers | batch | scm | smt | amu | mims | faults)
 //!   serve     open-loop latency-throughput sweep (offered load x mechanism)
 //!   validate  cross-check the PJRT analytic fast path vs the cycle sim
 //!   list      show mechanisms and workloads
@@ -30,6 +30,9 @@ const VALUE_FLAGS: &[&str] = &[
     "amu-issue-ns",
     "amu-notify-ns",
     "amu-svc-ps",
+    "mims-pack",
+    "mims-frame-ns",
+    "mims-granule",
     "engine",
     "sched",
     "frontend",
@@ -82,7 +85,8 @@ fn print_usage() {
          \x20            [--sched bank-indexed|rank-inval|reference-scan]\n\
          \x20            [--frontend slab|reference] [--routing backend|legacy]\n\
          \x20            [--amu-depth N] [--amu-issue-ns N] [--amu-notify-ns N]\n\
-         \x20            [--amu-svc-ps N]\n\
+         \x20            [--amu-svc-ps N] [--mims-pack N] [--mims-frame-ns N]\n\
+         \x20            [--mims-granule N]\n\
          \x20            [--fault-rate F] [--fault-ecc-rate F] [--fault-seed S]\n\
          \x20            [--demote-after K] [--fault-poll-timeout-ns N]\n\
          \x20            [--fault-reissue-max N] [--fault-backoff-mult N]\n\
@@ -90,7 +94,7 @@ fn print_usage() {
          \x20            [--zipf-theta F] [--arrival-seed S] [--queue-depth N]\n\
          twinload repro <table1|table2|table3|table4|table5|fig7|fig8|fig9|\n\
          \x20            fig10|fig11|fig12|fig13|fig14|fig15|all> [--quick] [--csv-dir DIR]\n\
-         twinload ablate <lvc|layers|batch|scm|smt|amu|faults> [--quick]\n\
+         twinload ablate <lvc|layers|batch|scm|smt|amu|mims|faults> [--quick]\n\
          twinload serve [--quick] [--csv-dir DIR]\n\
          twinload validate\n\
          twinload list"
@@ -159,6 +163,14 @@ fn cmd_run(args: &Args) -> i32 {
     flag!("amu-issue-ns", |v: u64| cfg.amu_issue = v * 1000);
     flag!("amu-notify-ns", |v: u64| cfg.amu_notify = v * 1000);
     flag!("amu-svc-ps", |v| cfg.amu_svc = v);
+    flag!("mims-pack", |v| {
+        cfg.mims_pack = v as u32;
+        if let Mechanism::Mims(_) = cfg.mechanism {
+            cfg.mechanism = Mechanism::Mims(v as u32);
+        }
+    });
+    flag!("mims-frame-ns", |v: u64| cfg.mims_frame = v * 1000);
+    flag!("mims-granule", |v| cfg.mims_granule = v as u32);
     flag!("fault-seed", |v| cfg.fault_seed = v);
     flag!("demote-after", |v| cfg.demote_after = v as u32);
     flag!("fault-poll-timeout-ns", |v: u64| cfg.fault_poll_timeout = v * 1000);
@@ -255,6 +267,16 @@ fn cmd_run(args: &Args) -> i32 {
             report.amu_queue_stalls,
             report.amu_occ_mean,
             report.amu_occ_peak,
+        );
+    }
+    if report.mims_messages > 0 {
+        println!(
+            "  mims packing  {:>12} messages ({} txns, pack mean {:.1}, {}/{} B)",
+            report.mims_messages,
+            report.mims_requests,
+            report.mims_pack_mean,
+            report.mims_delivered_bytes,
+            report.mims_requested_bytes,
         );
     }
     if report.arrived_requests > 0 {
@@ -405,9 +427,10 @@ fn cmd_ablate(args: &Args) -> i32 {
         Some("scm") => emitr!(exp::ablate_scm(&scale), "ablate_scm"),
         Some("smt") => emit(exp::ablate_smt(&scale), csv, "ablate_smt"),
         Some("amu") => emit(exp::ablate_amu(&scale), csv, "ablate_amu"),
+        Some("mims") => emitr!(exp::ablate_mims(&scale), "ablate_mims"),
         Some("faults") => emitr!(exp::ablate_faults(&scale), "ablate_faults"),
         _ => {
-            eprintln!("usage: twinload ablate <lvc|layers|batch|scm|smt|amu|faults>");
+            eprintln!("usage: twinload ablate <lvc|layers|batch|scm|smt|amu|mims|faults>");
             return 2;
         }
     }
@@ -475,7 +498,9 @@ fn cmd_validate(_args: &Args) -> i32 {
 
 fn cmd_list() -> i32 {
     println!("mechanisms:");
-    for m in ["ideal", "tl-ooo", "tl-lf", "tl-lf-batched", "numa", "pcie", "inc-trl", "amu"] {
+    for m in
+        ["ideal", "tl-ooo", "tl-lf", "tl-lf-batched", "numa", "pcie", "inc-trl", "amu", "mims"]
+    {
         println!("  {m}");
     }
     println!("workloads:");

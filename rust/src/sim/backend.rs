@@ -53,6 +53,10 @@ pub(crate) enum GroupKind {
     ExtTrl,
     /// Extended channel behind the asynchronous memory-access unit.
     ExtAmu,
+    /// The MEC'd extended channel carrying packed MIMS messages: same
+    /// trees and span as [`GroupKind::ExtMec`], plus per-message framing
+    /// modeled by the MIMS unit at ingress.
+    ExtMims,
 }
 
 /// A set of interleaved channels covering one address range.
@@ -245,6 +249,102 @@ impl AmuUnit {
 }
 
 // ---------------------------------------------------------------------
+// MIMS: message-interface packing unit.
+// ---------------------------------------------------------------------
+
+/// Packing/framing counters of the MIMS message interface, surfaced
+/// through `SimReport`.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct MimsStats {
+    /// Extended transactions carried inside messages.
+    pub requests: u64,
+    /// Messages framed (one per `pack` transactions, last one partial).
+    pub messages: u64,
+    /// Bytes the fine-granularity interface actually moved
+    /// (`granule` per transaction).
+    pub delivered_bytes: u64,
+    /// Bytes a fixed 64 B-burst interface would have moved.
+    pub requested_bytes: u64,
+}
+
+impl MimsStats {
+    /// Mean transactions per framed message.
+    pub fn pack_mean(&self) -> f64 {
+        if self.messages == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.messages as f64
+        }
+    }
+}
+
+/// The MIMS message-interface unit (after "MIMS: Towards a Message
+/// Interface based Memory System", PAPERS.md): the extension channel
+/// carries variable-size packed request/response *messages* instead of
+/// fixed synchronous 64 B bursts. The lowering side
+/// ([`Mechanism::Mims`]) packs up to `pack` twin-load pairs behind one
+/// fence; this unit models the channel side — a per-message framing
+/// cost amortized over the `pack` transactions sharing the message, and
+/// the sub-64 B fine-granularity accounting (`granule` bytes delivered
+/// per transaction instead of a full burst).
+///
+/// At `pack == 1` the unit is inert (no framing delay), so the `mims`
+/// mechanism degenerates to exactly the unpacked MEC path — the
+/// differential tests pin that identity.
+#[derive(Debug, Clone)]
+pub struct MimsUnit {
+    pack: u32,
+    frame: Ps,
+    granule: u32,
+    pub stats: MimsStats,
+}
+
+impl MimsUnit {
+    /// Build a unit; `pack` is the message packing factor and `granule`
+    /// the fine-granularity transfer size in bytes (64 = full bursts).
+    pub fn new(pack: u32, frame: Ps, granule: u32) -> Result<MimsUnit> {
+        if pack == 0 {
+            bail!("mims_pack must be at least 1");
+        }
+        if granule == 0 || granule > 64 {
+            bail!("mims_granule must be in 1..=64 bytes");
+        }
+        Ok(MimsUnit { pack, frame, granule, stats: MimsStats::default() })
+    }
+
+    fn from_cfg(cfg: &SystemConfig) -> Result<MimsUnit> {
+        MimsUnit::new(cfg.mims_pack, cfg.mims_frame, cfg.mims_granule)
+    }
+
+    /// A transaction reaches the channel at `arrive`; returns its
+    /// arrival at the controller after its amortized share of the
+    /// message-framing cost. Inert (identity) at `pack == 1`.
+    pub fn ingress(&mut self, arrive: Ps) -> Ps {
+        if self.stats.requests % self.pack as u64 == 0 {
+            self.stats.messages += 1;
+        }
+        self.stats.requests += 1;
+        self.stats.delivered_bytes += self.granule as u64;
+        self.stats.requested_bytes += 64;
+        if self.pack <= 1 {
+            arrive
+        } else {
+            arrive + self.frame / self.pack as u64
+        }
+    }
+
+    /// Configured packing factor.
+    pub fn pack(&self) -> u32 {
+        self.pack
+    }
+
+    /// Configured fine-granularity transfer size (bytes).
+    pub fn granule(&self) -> u32 {
+        self.granule
+    }
+}
+
+// ---------------------------------------------------------------------
 // Shared construction helpers (both routings build identical hardware).
 // ---------------------------------------------------------------------
 
@@ -342,6 +442,23 @@ fn ext_group(cfg: &SystemConfig) -> Option<ChannelGroup> {
                 next_pump: None,
             })
         }
+        Mechanism::Mims(_) => {
+            // Same MEC'd hardware as the twin-load systems (the message
+            // interface rides the extension channel; the trees still
+            // answer from their prefetch buffers) — only the GroupKind
+            // differs, so the MIMS unit can frame messages at ingress.
+            let (nch, geo, map) = mec_channel_plan(cfg);
+            Some(ChannelGroup {
+                kind: GroupKind::ExtMims,
+                base: layout.ext_base(),
+                span: 2 * layout.ext_size,
+                map,
+                channels: (0..nch)
+                    .map(|_| MemController::with_policy(cfg.host_timing, geo, cfg.sched))
+                    .collect(),
+                next_pump: None,
+            })
+        }
         Mechanism::Pcie => {
             // Extended data swaps into local DRAM; DRAM-level routing
             // aliases ext addresses onto the local channels (cache and
@@ -420,6 +537,9 @@ pub enum ExtBackend {
     Mec(Vec<Mec1>),
     /// AMU-style asynchronous unit with a bounded request queue.
     Amu(AmuUnit),
+    /// MIMS message interface: the same per-channel MEC trees as
+    /// [`ExtBackend::Mec`] behind a packing/framing unit.
+    Mims { mecs: Vec<Mec1>, unit: MimsUnit },
 }
 
 impl ExtBackend {
@@ -435,6 +555,9 @@ impl ExtBackend {
             Mechanism::Pcie => ExtBackend::Pcie(build_pcie(cfg, data)),
             Mechanism::IncreasedTrl => ExtBackend::IncreasedTrl,
             Mechanism::Amu => ExtBackend::Amu(AmuUnit::from_cfg(cfg)?),
+            Mechanism::Mims(_) => {
+                ExtBackend::Mims { mecs: build_mecs(cfg), unit: MimsUnit::from_cfg(cfg)? }
+            }
         })
     }
 
@@ -442,6 +565,7 @@ impl ExtBackend {
         match self {
             ExtBackend::Numa(link) if kind == GroupKind::ExtRemote => link.cross(arrive),
             ExtBackend::Amu(unit) if kind == GroupKind::ExtAmu => unit.ingress(arrive),
+            ExtBackend::Mims { unit, .. } if kind == GroupKind::ExtMims => unit.ingress(arrive),
             _ => arrive,
         }
     }
@@ -457,6 +581,16 @@ impl ExtBackend {
     fn observe_commands(&mut self, kind: GroupKind, ch: usize, r: &ServiceResult) -> DataKind {
         match self {
             ExtBackend::Mec(mecs) if kind == GroupKind::ExtMec => {
+                let mut data = DataKind::Real;
+                let mec = &mut mecs[ch];
+                for cmd in &r.commands {
+                    if let Some(outcome) = mec.on_command(cmd) {
+                        data = outcome.data();
+                    }
+                }
+                data
+            }
+            ExtBackend::Mims { mecs, .. } if kind == GroupKind::ExtMims => {
                 let mut data = DataKind::Real;
                 let mec = &mut mecs[ch];
                 for cmd in &r.commands {
@@ -486,6 +620,7 @@ pub struct LegacyRouter {
     pcie: Option<PcieSwap>,
     mecs: Vec<Mec1>,
     amu: Option<AmuUnit>,
+    mims: Option<MimsUnit>,
 }
 
 impl LegacyRouter {
@@ -494,6 +629,7 @@ impl LegacyRouter {
         let mut pcie = None;
         let mut mecs = Vec::new();
         let mut amu = None;
+        let mut mims = None;
         match cfg.mechanism {
             Mechanism::TlLf | Mechanism::TlOoO | Mechanism::TlLfBatched(_) => {
                 mecs = build_mecs(cfg);
@@ -501,9 +637,13 @@ impl LegacyRouter {
             Mechanism::Numa => numa = Some(NumaLink::new(cfg.numa_one_way, cfg.numa_gbps)),
             Mechanism::Pcie => pcie = Some(build_pcie(cfg, data)),
             Mechanism::Amu => amu = Some(AmuUnit::from_cfg(cfg)?),
+            Mechanism::Mims(_) => {
+                mecs = build_mecs(cfg);
+                mims = Some(MimsUnit::from_cfg(cfg)?);
+            }
             Mechanism::Ideal | Mechanism::IncreasedTrl => {}
         }
-        Ok(LegacyRouter { numa, pcie, mecs, amu })
+        Ok(LegacyRouter { numa, pcie, mecs, amu, mims })
     }
 
     fn ingress(&mut self, kind: GroupKind, arrive: Ps) -> Ps {
@@ -513,6 +653,10 @@ impl LegacyRouter {
                 None => arrive,
             },
             GroupKind::ExtAmu => match &mut self.amu {
+                Some(unit) => unit.ingress(arrive),
+                None => arrive,
+            },
+            GroupKind::ExtMims => match &mut self.mims {
                 Some(unit) => unit.ingress(arrive),
                 None => arrive,
             },
@@ -530,7 +674,7 @@ impl LegacyRouter {
 
     fn observe_commands(&mut self, kind: GroupKind, ch: usize, r: &ServiceResult) -> DataKind {
         let mut data = DataKind::Real;
-        if kind == GroupKind::ExtMec {
+        if matches!(kind, GroupKind::ExtMec | GroupKind::ExtMims) {
             let mec = &mut self.mecs[ch];
             for cmd in &r.commands {
                 if let Some(outcome) = mec.on_command(cmd) {
@@ -634,8 +778,17 @@ impl Router {
     pub(crate) fn mecs(&self) -> &[Mec1] {
         match self {
             Router::Backend(ExtBackend::Mec(m)) => m,
+            Router::Backend(ExtBackend::Mims { mecs, .. }) => mecs,
             Router::Backend(_) => &[],
             Router::Legacy(l) => &l.mecs,
+        }
+    }
+
+    pub(crate) fn mims(&self) -> Option<&MimsUnit> {
+        match self {
+            Router::Backend(ExtBackend::Mims { unit, .. }) => Some(unit),
+            Router::Backend(_) => None,
+            Router::Legacy(l) => l.mims.as_ref(),
         }
     }
 
@@ -733,6 +886,74 @@ mod tests {
         assert!(matches!(build("pcie"), ExtBackend::Pcie(_)));
         assert!(matches!(build("inc-trl"), ExtBackend::IncreasedTrl));
         assert!(matches!(build("amu"), ExtBackend::Amu(_)));
+        assert!(matches!(build("mims"), ExtBackend::Mims { .. }));
+    }
+
+    #[test]
+    fn mims_unit_is_inert_at_pack_one() {
+        let mut u = MimsUnit::new(1, 20_000, 64).unwrap();
+        for t in [0u64, 1_000, 5_000] {
+            assert_eq!(u.ingress(t), t, "pack=1 must add no framing delay");
+        }
+        assert_eq!(u.stats.requests, 3);
+        assert_eq!(u.stats.messages, 3, "pack=1: one message per transaction");
+    }
+
+    #[test]
+    fn mims_unit_amortizes_framing_over_the_pack() {
+        let mut u = MimsUnit::new(4, 20_000, 64).unwrap();
+        assert_eq!(u.ingress(1_000), 1_000 + 20_000 / 4);
+        for _ in 0..7 {
+            u.ingress(2_000);
+        }
+        assert_eq!(u.stats.requests, 8);
+        assert_eq!(u.stats.messages, 2, "8 transactions at pack 4 = 2 messages");
+        assert!((u.stats.pack_mean() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mims_partial_final_message_counts_as_a_message() {
+        let mut u = MimsUnit::new(4, 8_000, 64).unwrap();
+        for _ in 0..5 {
+            u.ingress(0);
+        }
+        // 4 full + 1 in a partial second message.
+        assert_eq!(u.stats.messages, 2);
+        assert!((u.stats.pack_mean() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mims_fine_granularity_never_delivers_more_than_requested() {
+        for granule in [1u32, 8, 32, 64] {
+            let mut u = MimsUnit::new(4, 8_000, granule).unwrap();
+            for _ in 0..13 {
+                u.ingress(0);
+            }
+            assert!(
+                u.stats.delivered_bytes <= u.stats.requested_bytes,
+                "granule {granule}: delivered {} > requested {}",
+                u.stats.delivered_bytes,
+                u.stats.requested_bytes
+            );
+            assert_eq!(u.stats.delivered_bytes, 13 * granule as u64);
+            assert_eq!(u.stats.requested_bytes, 13 * 64);
+        }
+    }
+
+    #[test]
+    fn mims_rejects_invalid_knobs() {
+        assert!(MimsUnit::new(0, 1_000, 64).is_err(), "pack 0");
+        assert!(MimsUnit::new(4, 1_000, 0).is_err(), "granule 0");
+        assert!(MimsUnit::new(4, 1_000, 65).is_err(), "granule > 64");
+    }
+
+    #[test]
+    fn backend_build_rejects_invalid_mims_knobs() {
+        let mut cfg = SystemConfig::mims();
+        cfg.mims_granule = 0;
+        let err = ExtBackend::build(&cfg, &data_stub());
+        assert!(err.is_err(), "mims_granule = 0 must be a typed error");
+        assert!(format!("{:#}", err.err().unwrap()).contains("mims_granule"));
     }
 
     #[test]
@@ -747,7 +968,7 @@ mod tests {
     #[test]
     fn both_routings_build_the_same_group_shape() {
         let data = data_stub();
-        for name in ["ideal", "tl-ooo", "numa", "pcie", "inc-trl", "amu"] {
+        for name in ["ideal", "tl-ooo", "numa", "pcie", "inc-trl", "amu", "mims"] {
             let mut cfg = SystemConfig::by_name(name).unwrap();
             for routing in [Routing::Backend, Routing::Legacy] {
                 cfg.routing = routing;

@@ -7,7 +7,7 @@
 //! this file only wires the generic hooks — ingress on submit, command
 //! observation and egress on service, plus read-only stat accessors.
 
-use super::backend::{AmuStats, ChannelGroup, GroupKind, Router};
+use super::backend::{AmuStats, ChannelGroup, GroupKind, MimsStats, Router};
 use super::engine::{Ev, EventQueue};
 use super::fault::{EccFault, FaultCounters, FaultPlan, FaultStats, ECC_CORRECT_PS, ECC_REREAD_PS};
 use super::report::SimReport;
@@ -605,7 +605,9 @@ impl Platform {
                     GroupKind::Local => DataKind::Real,
                     _ => self.router.observe_commands(kind, ch, r),
                 };
-                if kind == GroupKind::ExtMec && self.cfg.emulate_content {
+                if matches!(kind, GroupKind::ExtMec | GroupKind::ExtMims)
+                    && self.cfg.emulate_content
+                {
                     // Paper-emulation content model (§5): extended
                     // lines hold real values, shadow lines fake — the
                     // MEC machinery above still sets the timing and
@@ -646,7 +648,11 @@ impl Platform {
                                     // core pays a software retry (or, past
                                     // the streak threshold, demotes to the
                                     // §4.5 safe path).
-                                    GroupKind::ExtMec => {
+                                    // MIMS messages ride the same MEC'd
+                                    // channel and content check, so a
+                                    // not-ready response faults exactly
+                                    // like the synchronous twin-load path.
+                                    GroupKind::ExtMec | GroupKind::ExtMims => {
                                         // First loads and shadow lines are
                                         // already fake; flipping them would
                                         // be a no-op fault.
@@ -926,6 +932,11 @@ impl Platform {
     /// AMU queue statistics (zeros for every other backend).
     pub(crate) fn amu_stats(&self) -> AmuStats {
         self.router.amu().map(|u| u.stats).unwrap_or_default()
+    }
+
+    /// MIMS packing/framing statistics (zeros for every other backend).
+    pub(crate) fn mims_stats(&self) -> MimsStats {
+        self.router.mims().map(|u| u.stats).unwrap_or_default()
     }
 
     /// Platform-side fault/recovery accounting (MEC fill faults are

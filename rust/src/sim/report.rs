@@ -90,6 +90,17 @@ pub struct SimReport {
     pub amu_occ_peak: u64,
     /// AMU: time-weighted mean request-queue occupancy (entries).
     pub amu_occ_mean: f64,
+    // MIMS backend: message packing/framing.
+    /// MIMS: extended transactions carried inside messages (count).
+    pub mims_requests: u64,
+    /// MIMS: messages framed on the extension channel (count).
+    pub mims_messages: u64,
+    /// MIMS: mean transactions per framed message.
+    pub mims_pack_mean: f64,
+    /// MIMS: bytes moved by the fine-granularity interface (count).
+    pub mims_delivered_bytes: u64,
+    /// MIMS: bytes a fixed 64 B-burst interface would have moved.
+    pub mims_requested_bytes: u64,
     // Fault injection + recovery (all zero when `fault_rate = 0`).
     /// Faults injected across every class: platform sites (not-ready
     /// responses, lost notifies, link redeliveries, PCIe retransfers,
@@ -106,8 +117,8 @@ pub struct SimReport {
     pub mec_fill_lates: u64,
     /// Mean fault-recovery added latency (ps).
     pub recovery_mean: f64,
-    /// 99th-percentile fault-recovery added latency (ps, log2-bucket
-    /// upper bound).
+    /// 99th-percentile fault-recovery added latency (ps, geometric
+    /// log2-bucket midpoint clamped to the observed range).
     pub recovery_p99: Ps,
     /// Maximum fault-recovery added latency (ps).
     pub recovery_max: Ps,
@@ -124,13 +135,14 @@ pub struct SimReport {
     pub dropped_requests: u64,
     /// Mean end-to-end request latency, arrival to retirement (ns).
     pub req_mean_ns: f64,
-    /// Median end-to-end request latency (ns, log2-bucket upper bound).
+    /// Median end-to-end request latency (ns, geometric log2-bucket
+    /// midpoint clamped to the observed range).
     pub req_p50_ns: u64,
-    /// 99th-percentile end-to-end request latency (ns, log2-bucket
-    /// upper bound).
+    /// 99th-percentile end-to-end request latency (ns, same midpoint
+    /// estimate).
     pub req_p99_ns: u64,
-    /// 99.9th-percentile end-to-end request latency (ns, log2-bucket
-    /// upper bound).
+    /// 99.9th-percentile end-to-end request latency (ns, same midpoint
+    /// estimate).
     pub req_p999_ns: u64,
     /// Mean arrival-queue depth sampled at each enqueue (requests).
     pub queue_mean: f64,
@@ -172,6 +184,7 @@ impl SimReport {
             p.dram_totals();
         let (dram_cmds, data_bus_util) = p.bus_totals();
         let amu = p.amu_stats();
+        let mims = p.mims_stats();
         let mut transform = TransformStats::default();
         for t in p.transform_stats() {
             transform.logical_mem += t.logical_mem;
@@ -233,6 +246,11 @@ impl SimReport {
             amu_queue_stalls: amu.queue_stalls,
             amu_occ_peak: amu.occ_peak,
             amu_occ_mean: amu.occ_mean(),
+            mims_requests: mims.requests,
+            mims_messages: mims.messages,
+            mims_pack_mean: mims.pack_mean(),
+            mims_delivered_bytes: mims.delivered_bytes,
+            mims_requested_bytes: mims.requested_bytes,
             faults_injected: fault.injected + mec_fill_drops + mec_fill_lates,
             retry_storms: core_stats.iter().map(|s| s.retry_storms).sum(),
             demotions: core_stats.iter().map(|s| s.demotions).sum(),
@@ -322,6 +340,17 @@ impl SimReport {
         } else {
             String::new()
         };
+        let mims = if self.mims_messages > 0 {
+            format!(
+                ", mims {} msgs (pack {:.1}, {}/{} B)",
+                self.mims_messages,
+                self.mims_pack_mean,
+                self.mims_delivered_bytes,
+                self.mims_requested_bytes,
+            )
+        } else {
+            String::new()
+        };
         let serving = if self.arrived_requests > 0 {
             format!(
                 ", served {}/{} (drops {}, p50 {} ns, p99 {} ns, p99.9 {} ns, \
@@ -339,7 +368,7 @@ impl SimReport {
         };
         format!(
             "{}/{}: {:.3} ms, IPC {:.2}, LLC miss {}k, TLB miss {}k, BW {:.2} GB/s \
-             (bus {:.1}%), MLP {:.1}{}{}{}",
+             (bus {:.1}%), MLP {:.1}{}{}{}{}",
             self.mechanism,
             self.workload,
             self.runtime_ns() / 1e6,
@@ -350,6 +379,7 @@ impl SimReport {
             self.data_bus_util * 100.0,
             self.mlp_mean,
             fault,
+            mims,
             serving,
             if self.deadlocked { " [DEADLOCK]" } else { "" },
         )

@@ -51,8 +51,15 @@ impl Histogram {
         self.max
     }
 
-    /// Approximate quantile from bucket boundaries (upper bound of the
-    /// bucket containing the q-th sample).
+    /// Approximate quantile: the geometric midpoint of the bucket
+    /// containing the q-th sample, clamped to the observed `[min, max]`.
+    ///
+    /// Reporting the bucket's *upper* bound (the previous behavior) put a
+    /// systematic up-to-2x upward bias on every quantile — a sample of
+    /// identical values `v` reported `2^(i+1)-1` instead of `v`. The
+    /// geometric midpoint `2^i * sqrt(2)` is the log-space center of
+    /// `[2^i, 2^(i+1))`, and the clamp makes single-bucket distributions
+    /// exact at the edges (`min == max` reports the value itself).
     pub fn quantile(&self, q: f64) -> u64 {
         if self.count == 0 {
             return 0;
@@ -62,7 +69,13 @@ impl Histogram {
         for (i, &c) in self.buckets.iter().enumerate() {
             seen += c;
             if seen >= target.max(1) {
-                return if i >= 63 { u64::MAX } else { (1u64 << (i + 1)) - 1 };
+                let mid = if i >= 63 {
+                    u64::MAX
+                } else {
+                    // Geometric midpoint of [2^i, 2^(i+1)), rounded.
+                    ((1u64 << i) as f64 * std::f64::consts::SQRT_2).round() as u64
+                };
+                return mid.clamp(self.min, self.max);
             }
         }
         self.max
@@ -129,6 +142,45 @@ mod tests {
         let p99 = h.quantile(0.99);
         assert!(p50 <= p99);
         assert!(p50 >= 256 && p50 <= 1023, "p50={p50}");
+        // Quantiles are monotone in q across the whole range.
+        let mut prev = 0;
+        for q in [0.0, 0.1, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let v = h.quantile(q);
+            assert!(v >= prev, "quantile({q}) = {v} < {prev}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn quantile_exact_on_single_bucket_samples() {
+        // A distribution of identical values must report the value
+        // itself, not the bucket's upper bound (which overstated by up
+        // to 2x: 100 sits in [64, 128) and used to report 127).
+        for v in [1u64, 7, 100, 1_000, 1 << 40] {
+            let mut h = Histogram::new();
+            for _ in 0..10 {
+                h.record(v);
+            }
+            for q in [0.5, 0.99, 0.999] {
+                assert_eq!(h.quantile(q), v, "quantile({q}) of constant {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantile_midpoint_stays_within_observed_range() {
+        // Mixed sample: every quantile stays inside [min, max], and a
+        // bucket's estimate is its geometric midpoint (not its edge).
+        let mut h = Histogram::new();
+        h.record(1);
+        for _ in 0..100 {
+            h.record(800); // bucket [512, 1024)
+        }
+        let p50 = h.quantile(0.5);
+        assert!(p50 >= h.min() && p50 <= h.max());
+        // Geometric midpoint of [512, 1024) is round(512 * sqrt(2)) = 724.
+        assert_eq!(p50, 724);
+        assert_eq!(h.quantile(0.0), 1, "q=0 clamps down to the observed min");
     }
 
     #[test]

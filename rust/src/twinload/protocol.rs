@@ -32,6 +32,18 @@ pub enum Mechanism {
     /// completion poll; the bounded request queue and notify latency are
     /// modeled by the platform's AMU backend.
     Amu,
+    /// MIMS-style message interface (arxiv 1301.0051, same ICT group):
+    /// up to `k` logically-adjacent twin-load pairs — loads *and*
+    /// stores — pack into one request/response message sharing a single
+    /// fence, so the prefetch/fence round trip is amortized across the
+    /// message. Unlike [`Mechanism::TlLfBatched`], a store does not
+    /// flush the batch (the message carries writes), which is what lets
+    /// read-modify-write workloads (gups) pack at all; only a value
+    /// dependency on an access still waiting in the batch forces a
+    /// flush. Message framing overhead and the sub-64 B fine-granularity
+    /// mode are modeled by the platform's MIMS backend. `Mims(1)` lowers
+    /// every access exactly like [`Mechanism::TlLf`].
+    Mims(u32),
 }
 
 impl Mechanism {
@@ -39,7 +51,11 @@ impl Mechanism {
     pub fn transforms(&self) -> bool {
         matches!(
             self,
-            Mechanism::TlLf | Mechanism::TlOoO | Mechanism::TlLfBatched(_) | Mechanism::Amu
+            Mechanism::TlLf
+                | Mechanism::TlOoO
+                | Mechanism::TlLfBatched(_)
+                | Mechanism::Amu
+                | Mechanism::Mims(_)
         )
     }
 
@@ -53,6 +69,7 @@ impl Mechanism {
             Mechanism::TlLfBatched(_) => "tl-lf-batched",
             Mechanism::IncreasedTrl => "inc-trl",
             Mechanism::Amu => "amu",
+            Mechanism::Mims(_) => "mims",
         }
     }
 }
@@ -371,6 +388,20 @@ impl<S: LogicalSource> Transform<S> {
                             }
                         }
                     }
+                    Mechanism::Mims(k) => {
+                        // The message carries writes, so stores join the
+                        // batch; only a value dependency on an access
+                        // still waiting behind the shared fence forces a
+                        // flush (its demand half must retire first).
+                        if self.depends_on_batch(&m) {
+                            self.flush_batch();
+                        }
+                        self.batch.push(m);
+                        self.batch_logicals.push(logical);
+                        if self.batch.len() >= k.max(1) as usize {
+                            self.flush_batch();
+                        }
+                    }
                     _ => unreachable!(),
                 }
             }
@@ -543,6 +574,89 @@ mod tests {
             vec!["L", "L", "L", "L", "f", "L", "c", "L", "c", "L", "c", "L", "c"]
         );
         assert_eq!(t.stats.fences, 1);
+    }
+
+    #[test]
+    fn mims_pack1_lowers_exactly_like_tl_lf() {
+        // The unpacked message interface degenerates to the synchronous
+        // twin-load stream op-for-op (pairs, deps, fences, computes) —
+        // the foundation of the pack-1 ≡ MEC differential.
+        let ops = vec![
+            LogicalOp::load(ext(0)),
+            LogicalOp::store(ext(0x40)),
+            LogicalOp::Compute(3),
+            LogicalOp::load_dep(ext(0x100), 0),
+            LogicalOp::load(0x80), // local: passthrough
+            LogicalOp::Mem(LogicalMem { vaddr: ext(0x40), is_store: true, dep_on: Some(3) }),
+        ];
+        let mut lf = Transform::new(ops.clone().into_iter(), Mechanism::TlLf, layout());
+        let mut mims = Transform::new(ops.into_iter(), Mechanism::Mims(1), layout());
+        let a = drain(&mut lf);
+        let b = drain(&mut mims);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        assert_eq!(lf.stats.fences, mims.stats.fences);
+        assert_eq!(lf.stats.micro_insts, mims.stats.micro_insts);
+    }
+
+    #[test]
+    fn mims_stores_join_the_batch() {
+        // Three loads and a store, no dependencies: unlike
+        // TlLfBatched(4) (where the store flushes and pays its own
+        // fence), the whole message shares one fence.
+        let ops = vec![
+            LogicalOp::load(ext(0)),
+            LogicalOp::load(ext(0x40)),
+            LogicalOp::load(ext(0x80)),
+            LogicalOp::store(ext(0xc0)),
+        ];
+        let mut t = Transform::new(ops.clone().into_iter(), Mechanism::Mims(4), layout());
+        let out = drain(&mut t);
+        // 4 prefetches, one fence, 3 × (demand + check), demand + check
+        // + store-update for the store entry.
+        assert_eq!(
+            mem_kinds(&out),
+            vec!["L", "L", "L", "L", "f", "L", "c", "L", "c", "L", "c", "L", "c", "c", "S"]
+        );
+        assert_eq!(t.stats.fences, 1);
+        let mut batched =
+            Transform::new(ops.into_iter(), Mechanism::TlLfBatched(4), layout());
+        drain(&mut batched);
+        assert!(batched.stats.fences > 1, "the batched-LF store pays its own fence");
+    }
+
+    #[test]
+    fn mims_flushes_only_on_in_batch_dependency() {
+        // GUPS rhythm: load, dependent store to the same line, repeat.
+        // The store's value dependency on the in-batch load forces a
+        // flush (its demand half must retire before the store can
+        // issue), but the store then *joins* the next batch, so steady
+        // state packs (store, next load) pairs: half the fences of
+        // TL-LF's one per access.
+        let ops = vec![
+            LogicalOp::load(ext(0)),
+            LogicalOp::Mem(LogicalMem { vaddr: ext(0), is_store: true, dep_on: Some(0) }),
+            LogicalOp::load(ext(0x40)),
+            LogicalOp::Mem(LogicalMem { vaddr: ext(0x40), is_store: true, dep_on: Some(2) }),
+        ];
+        let mut t = Transform::new(ops.clone().into_iter(), Mechanism::Mims(4), layout());
+        drain(&mut t);
+        assert_eq!(t.stats.fences, 3, "[L], [S L], [S]: three messages");
+        let mut lf = Transform::new(ops.into_iter(), Mechanism::TlLf, layout());
+        drain(&mut lf);
+        assert_eq!(lf.stats.fences, 4, "TL-LF fences every access");
+    }
+
+    #[test]
+    fn mims_partial_final_batch_flushes_on_exhaustion() {
+        // 5 independent loads at pack 4: one full message and a partial
+        // single-entry one — nothing is lost at stream end.
+        let ops: Vec<LogicalOp> = (0..5).map(|i| LogicalOp::load(ext(i * 64))).collect();
+        let mut t = Transform::new(ops.into_iter(), Mechanism::Mims(4), layout());
+        let out = drain(&mut t);
+        let kinds = mem_kinds(&out);
+        let loads = kinds.iter().filter(|k| **k == "L").count();
+        assert_eq!(loads, 10, "5 prefetches + 5 demands");
+        assert_eq!(t.stats.fences, 2, "one full message, one partial");
     }
 
     #[test]

@@ -43,6 +43,7 @@ fn mechanisms() -> Vec<SystemConfig> {
         SystemConfig::pcie(0.75),
         SystemConfig::increased_trl(35_000),
         SystemConfig::amu(),
+        SystemConfig::mims(),
     ]
 }
 
@@ -55,7 +56,8 @@ fn render(r: &SimReport) -> String {
          cas={} llc_hits={} llc_miss={} tlb_miss={} tlb_acc={} dram_r={} dram_w={} \
          dram_rb={} dram_wb={} row_hit={:.6} mlp_mean={:.6} mlp_peak={} micro={} ext_ld={} \
          ext_st={} mec1={} mec2r={} mec2l={} lvc_ev={} pcie_faults={} events={} peak={} \
-         cmds={} bus={:.6} amu_rq={} amu_stall={} amu_peak={} faults={} storms={} \
+         cmds={} bus={:.6} amu_rq={} amu_stall={} amu_peak={} mims_msgs={} \
+         mims_rq={} mims_db={} mims_qb={} faults={} storms={} \
          demoted={} ecc={} fdrops={} flates={} rec_p99={} arrived={} served={} \
          dropped={} qmean={:.6} qpeak={} p50={} p99={} p999={}\n",
         r.mechanism,
@@ -95,6 +97,10 @@ fn render(r: &SimReport) -> String {
         r.amu_requests,
         r.amu_queue_stalls,
         r.amu_occ_peak,
+        r.mims_messages,
+        r.mims_requests,
+        r.mims_delivered_bytes,
+        r.mims_requested_bytes,
         r.faults_injected,
         r.retry_storms,
         r.demotions,

@@ -172,6 +172,7 @@ fn event_engines_equivalent_across_all_mechanisms() {
         SystemConfig::pcie(0.5),
         SystemConfig::increased_trl(35 * NS),
         SystemConfig::amu(),
+        SystemConfig::mims(),
     ];
     for base in systems {
         let mut heap = base.clone();
@@ -284,6 +285,7 @@ fn frontends_equivalent_across_all_mechanisms() {
         SystemConfig::pcie(0.5),
         SystemConfig::increased_trl(35 * NS),
         SystemConfig::amu(),
+        SystemConfig::mims(),
     ];
     for base in systems {
         let mut reference = base.clone();
@@ -365,6 +367,7 @@ fn backend_routing_equivalent_across_all_mechanisms() {
         SystemConfig::pcie(0.5),
         SystemConfig::increased_trl(35 * NS),
         SystemConfig::amu(),
+        SystemConfig::mims(),
     ];
     for base in systems {
         let mut legacy = base.clone();
@@ -409,6 +412,10 @@ fn backend_routing_equivalent_across_all_mechanisms() {
                 r.amu_requests,
                 r.amu_queue_stalls,
                 r.amu_occ_peak,
+                r.mims_requests,
+                r.mims_messages,
+                r.mims_delivered_bytes,
+                r.mims_requested_bytes,
             )
         };
         assert_eq!(core(&a), core(&b), "{}: core stats diverged", a.mechanism);
@@ -456,6 +463,35 @@ fn amu_orders_between_ideal_and_pcie() {
     );
     assert!(amu.amu_requests > 0);
     assert!(amu.amu_occ_peak <= SystemConfig::amu().amu_depth as u64);
+}
+
+/// The MIMS column lands where the mechanism's physics say it should at
+/// smoke scale: packing amortizes the fence, so the packed message
+/// interface finishes GUPS no slower than fence-per-access TL-LF while
+/// moving the same bytes — which is exactly a bus-utilization win — and
+/// its message accounting is self-consistent.
+#[test]
+fn mims_packs_messages_and_does_not_lose_to_tl_lf() {
+    let wl = WorkloadKind::Gups;
+    let lf = run(&SystemConfig::tl_lf(), wl, 6_000);
+    let mims = run(&SystemConfig::mims(), wl, 6_000);
+    assert!(
+        mims.finish <= lf.finish,
+        "packed messages cannot lose to fence-per-access TL-LF: {} vs {}",
+        mims.finish,
+        lf.finish
+    );
+    assert!(mims.mims_requests > 0);
+    assert!(mims.mims_messages > 0);
+    assert!(mims.mims_messages <= mims.mims_requests);
+    assert!(
+        mims.mims_pack_mean > 1.0,
+        "stores must not flush the batch on GUPS (pack mean {})",
+        mims.mims_pack_mean
+    );
+    assert!(mims.mims_delivered_bytes <= mims.mims_requested_bytes);
+    // Fence amortization is the mechanism of the win.
+    assert!(mims.transform.fences < lf.transform.fences);
 }
 
 /// Determinism across the parallel runner with mixed job kinds.

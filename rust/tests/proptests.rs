@@ -761,7 +761,8 @@ fn prop_frontends_bit_identical_under_random_completion_orders() {
             Mechanism::TlOoO,
             Mechanism::TlLf,
             Mechanism::TlLfBatched(2 + rng.below(7) as u32),
-        ][rng.below(3) as usize];
+            Mechanism::Mims(1 + rng.below(8) as u32),
+        ][rng.below(4) as usize];
         let n = 40 + rng.below(160);
         let mut logicals = Vec::new();
         let mut mem_count = 0u64;
@@ -906,8 +907,8 @@ fn prop_chaos_faults_complete_exactly_once_and_zero_rate_is_inert() {
     let injected_total = Cell::new(0u64);
     check("chaos-faults", cfg(), |rng| {
         // Every extension-path mechanism (ideal has no fault surface).
-        let mech = ["tl-ooo", "tl-lf", "tl-lf-batched", "numa", "pcie", "inc-trl", "amu"]
-            [rng.below(7) as usize];
+        let mech = ["tl-ooo", "tl-lf", "tl-lf-batched", "numa", "pcie", "inc-trl", "amu", "mims"]
+            [rng.below(8) as usize];
         let mut base = SystemConfig::by_name(mech).expect("preset");
         base.cores = 2;
         base.sched = [SchedPolicy::BankIndexed, SchedPolicy::RankInval, SchedPolicy::ReferenceScan]
@@ -970,6 +971,10 @@ fn prop_chaos_faults_complete_exactly_once_and_zero_rate_is_inert() {
                 r.dram_writes,
                 r.pcie_faults,
                 r.amu_requests,
+                r.mims_requests,
+                r.mims_messages,
+                r.mims_delivered_bytes,
+                r.mims_requested_bytes,
                 r.engine_events,
                 r.engine_peak,
                 r.arrived_requests,
@@ -1062,8 +1067,9 @@ fn prop_config_ini_round_trips_and_rejects() {
     use twinload::sim::engine::EngineKind;
     use twinload::workloads::ALL_WORKLOADS;
     check("config-roundtrip", cfg(), |rng| {
-        let mech = ["ideal", "tl-ooo", "tl-lf", "tl-lf-batched", "numa", "pcie", "inc-trl", "amu"]
-            [rng.below(8) as usize];
+        let mech = [
+            "ideal", "tl-ooo", "tl-lf", "tl-lf-batched", "numa", "pcie", "inc-trl", "amu", "mims",
+        ][rng.below(9) as usize];
         let engine = ["calendar", "adaptive-calendar", "reference-heap"][rng.below(3) as usize];
         let sched = ["bank-indexed", "rank-inval", "reference-scan"][rng.below(3) as usize];
         let frontend = ["slab", "reference"][rng.below(2) as usize];
@@ -1074,6 +1080,9 @@ fn prop_config_ini_round_trips_and_rejects() {
         let amu_issue_ns = rng.below(100);
         let amu_notify_ns = rng.below(100);
         let amu_svc_ps = rng.below(10_000);
+        let mims_pack = 1 + rng.below(32);
+        let mims_frame_ns = rng.below(100);
+        let mims_granule = 1 + rng.below(64);
         let wl = ALL_WORKLOADS[rng.below(ALL_WORKLOADS.len() as u64) as usize];
         let ops = 1 + rng.below(1_000_000);
         let seed = rng.below(1 << 40);
@@ -1112,6 +1121,9 @@ fn prop_config_ini_round_trips_and_rejects() {
             kv("amu_issue_ns", amu_issue_ns.to_string(), rng),
             kv("amu_notify_ns", amu_notify_ns.to_string(), rng),
             kv("amu_svc_ps", amu_svc_ps.to_string(), rng),
+            kv("mims_pack", mims_pack.to_string(), rng),
+            kv("mims_frame_ns", mims_frame_ns.to_string(), rng),
+            kv("mims_granule", mims_granule.to_string(), rng),
             kv("fault_rate", fault_rate.to_string(), rng),
             kv("fault_ecc_rate", fault_ecc_rate.to_string(), rng),
             kv("fault_seed", fault_seed.to_string(), rng),
@@ -1175,6 +1187,19 @@ fn prop_config_ini_round_trips_and_rejects() {
         {
             return Err("amu [system] key lost".into());
         }
+        if cfg.mims_pack as u64 != mims_pack
+            || cfg.mims_frame != mims_frame_ns * 1_000
+            || cfg.mims_granule as u64 != mims_granule
+        {
+            return Err("mims [system] key lost".into());
+        }
+        let want_mims = twinload::twinload::Mechanism::Mims(mims_pack as u32);
+        if mech == "mims" && cfg.mechanism != want_mims {
+            return Err(format!(
+                "mims_pack did not re-pack the mechanism payload: {:?}",
+                cfg.mechanism
+            ));
+        }
         if cfg.fault_rate != fault_rate || cfg.fault_ecc_rate != fault_ecc_rate {
             return Err("fault rate [system] key lost".into());
         }
@@ -1229,6 +1254,97 @@ fn prop_config_ini_round_trips_and_rejects() {
                     return Err(format!("malformed line accepted: {malformed:?}"));
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mims_pack_one_is_bit_identical_to_tl_lf() {
+    // At packing factor 1 every "message" carries a single twin-load
+    // pair: the lowering degenerates to `lower_lf` (same micro-ops,
+    // same pair-id arithmetic) and the framing model is defined to be
+    // inert. The whole platform must therefore be indistinguishable
+    // from the unpacked Mec path — bit-identical timing, memory-system
+    // counters, and serving distributions across engines, front ends,
+    // routings, and arrival modes. Only the mims_* bookkeeping counters
+    // (which exist to *prove* packing elsewhere) may differ.
+    use twinload::config::{RunSpec, SystemConfig};
+    use twinload::cpu::FrontEnd;
+    use twinload::sim::engine::EngineKind;
+    use twinload::sim::{run_spec, Routing, SimReport};
+    use twinload::workloads::arrival::ArrivalKind;
+    use twinload::workloads::WorkloadKind;
+
+    check("mims-pack1-differential", cfg(), |rng| {
+        let wl = [WorkloadKind::Gups, WorkloadKind::Bfs, WorkloadKind::Memcached]
+            [rng.below(3) as usize];
+        let mut spec = RunSpec::smoke(wl);
+        spec.ops_per_core = 400 + rng.below(800);
+        spec.seed = rng.next_u64();
+        if rng.chance(0.3) {
+            let kind = [ArrivalKind::Poisson, ArrivalKind::Mmpp][rng.below(2) as usize];
+            spec = spec.open_loop(kind, (1 + rng.below(32)) * 1_000_000);
+            spec.arrival_seed = rng.next_u64();
+        }
+
+        let decorate = |mut c: SystemConfig, rng: &mut twinload::util::Rng| {
+            c.cores = 1 + rng.below(3) as usize;
+            let engines =
+                [EngineKind::Calendar, EngineKind::AdaptiveCalendar, EngineKind::ReferenceHeap];
+            c.engine = engines[rng.below(3) as usize];
+            c.frontend = [FrontEnd::Slab, FrontEnd::Reference][rng.below(2) as usize];
+            c.routing = [Routing::Backend, Routing::Legacy][rng.below(2) as usize];
+            // An aggressive frame penalty must stay inert at pack 1.
+            c.mims_frame = 1_000_000;
+            c
+        };
+        let mut salt = rng.clone();
+        let lf = decorate(SystemConfig::tl_lf(), rng);
+        let mims = decorate(SystemConfig::mims_packed(1), &mut salt);
+
+        let fp = |r: &SimReport| {
+            vec![
+                r.finish,
+                r.retired_insts,
+                r.retired_ops,
+                r.loads,
+                r.stores,
+                r.fences,
+                r.twin_retries,
+                r.safe_paths,
+                r.cas_fails,
+                r.llc_hits,
+                r.llc_misses,
+                r.dram_reads,
+                r.dram_writes,
+                r.dram_cmds,
+                r.data_bus_util.to_bits(),
+                r.engine_events,
+                r.engine_peak,
+                r.arrived_requests,
+                r.served_requests,
+                r.dropped_requests,
+                r.req_p50_ns,
+                r.req_p99_ns,
+                r.req_p999_ns,
+                r.req_mean_ns.to_bits(),
+            ]
+        };
+        let a = run_spec(&lf, &spec);
+        let b = run_spec(&mims, &spec);
+        if a.deadlocked || b.deadlocked {
+            return Err("pack-1 differential run deadlocked".into());
+        }
+        if fp(&a) != fp(&b) {
+            return Err(format!(
+                "mims pack=1 diverged from tl-lf ({:?}/{:?}/{:?}): {:?} vs {:?}",
+                lf.engine,
+                lf.frontend,
+                lf.routing,
+                fp(&b),
+                fp(&a)
+            ));
         }
         Ok(())
     });
