@@ -117,6 +117,30 @@ pub struct SystemConfig {
     /// Lost-notify recovery: poll-timeout multiplier per reissue
     /// (exponential backoff).
     pub fault_backoff_mult: u32,
+    /// Correlated-fault layer: probability a burst episode *starts* in
+    /// any virtual-time window of a fault domain (Gilbert-Elliott bad
+    /// state; see `sim/fault.rs::BurstPlan`). `0.0` (default) builds no
+    /// burst state at all — structural inertness mirrors `fault_rate`.
+    pub burst_rate: f64,
+    /// Correlated-fault layer: virtual-time window length (INI
+    /// `burst_len_ns`). Burst episodes run 1–4 windows.
+    pub burst_len: Ps,
+    /// Fail-slow episodes multiply service latency through the domain
+    /// (backend ingress/egress seam) by this factor.
+    pub burst_slow_mult: u64,
+    /// Host-side health detection: quarantine a fault domain when its
+    /// EWMA unhealthy-access score reaches this threshold, demoting all
+    /// its traffic to the §4.5 safe path. `0.0` (default) disables the
+    /// tracker; it only arms when the burst layer is armed, so
+    /// `burst_rate = 0` runs stay bit-identical regardless.
+    pub quarantine_threshold: f64,
+    /// Half-open probation: re-admit a quarantined domain after this many
+    /// consecutive clean probe observations.
+    pub probe_ok: u32,
+    /// Serving SLO for the second `serve`-sweep knee: highest
+    /// contiguously-sustained offered load whose p99 request latency
+    /// stays at or below this bound, in µs. `0` hides the SLO knee row.
+    pub slo_p99_us: u64,
     // Fixed-hierarchy latencies.
     pub l1_lat: Ps,
     pub llc_lat: Ps,
@@ -165,6 +189,12 @@ impl SystemConfig {
             fault_poll_timeout: 200 * NS,
             fault_reissue_max: 4,
             fault_backoff_mult: 2,
+            burst_rate: 0.0,
+            burst_len: 5_000 * NS,
+            burst_slow_mult: 8,
+            quarantine_threshold: 0.0,
+            probe_ok: 8,
+            slo_p99_us: 500,
             l1_lat: 1_600,      // 4 cycles @ 2.5 GHz
             llc_lat: 14 * NS,   // ~35 cycles
             walk_lat: 40 * NS,  // page walk on TLB miss
@@ -289,7 +319,7 @@ impl SystemConfig {
         if !(0.0..=1.0).contains(&self.fault_ecc_rate) {
             return Err("fault_ecc_rate must be within [0, 1]".into());
         }
-        if self.fault_rate > 0.0 {
+        if self.fault_rate > 0.0 || self.burst_rate > 0.0 {
             if self.fault_reissue_max == 0 {
                 return Err("fault_reissue_max must be at least 1".into());
             }
@@ -299,6 +329,23 @@ impl SystemConfig {
             if self.fault_poll_timeout == 0 {
                 return Err("fault_poll_timeout must be positive".into());
             }
+        }
+        if !(0.0..=1.0).contains(&self.burst_rate) {
+            return Err("burst_rate must be within [0, 1]".into());
+        }
+        if !(0.0..=1.0).contains(&self.quarantine_threshold) {
+            return Err("quarantine_threshold must be within [0, 1]".into());
+        }
+        if self.burst_rate > 0.0 {
+            if self.burst_len == 0 {
+                return Err("burst_len_ns must be positive when burst_rate > 0".into());
+            }
+            if self.burst_slow_mult == 0 {
+                return Err("burst_slow_mult must be at least 1".into());
+            }
+        }
+        if self.quarantine_threshold > 0.0 && self.probe_ok == 0 {
+            return Err("probe_ok must be at least 1 when quarantine is armed".into());
         }
         Ok(())
     }
@@ -310,6 +357,18 @@ impl SystemConfig {
         self.fault_rate = rate.clamp(0.0, 1.0);
         self.fault_ecc_rate = (rate / 8.0).clamp(0.0, 1.0);
         self.demote_after = 3;
+        self
+    }
+
+    /// Correlated-fault variant of a preset: the burst layer armed at the
+    /// given per-window episode start rate, per-line demotion enabled
+    /// (storms need a streak policy to be visible). Quarantine knobs are
+    /// left to the caller — `ablate degrade` sweeps them explicitly.
+    pub fn bursty(mut self, rate: f64) -> SystemConfig {
+        self.burst_rate = rate.clamp(0.0, 1.0);
+        if self.demote_after == 0 {
+            self.demote_after = 3;
+        }
         self
     }
 }
@@ -493,6 +552,51 @@ mod tests {
         assert_eq!(base.fault_rate, 0.0);
         assert_eq!(base.fault_ecc_rate, 0.0);
         assert_eq!(base.demote_after, 0);
+    }
+
+    #[test]
+    fn burst_and_quarantine_knobs_validated() {
+        let mut c = SystemConfig::tl_ooo();
+        c.burst_rate = 1.5;
+        assert!(c.validate().unwrap_err().contains("burst_rate"));
+        c.burst_rate = 0.2;
+        c.validate().unwrap();
+        c.burst_len = 0;
+        assert!(c.validate().unwrap_err().contains("burst_len_ns"));
+        c.burst_len = 5_000 * NS;
+        c.burst_slow_mult = 0;
+        assert!(c.validate().unwrap_err().contains("burst_slow_mult"));
+        c.burst_slow_mult = 8;
+        c.quarantine_threshold = -0.1;
+        assert!(c.validate().unwrap_err().contains("quarantine_threshold"));
+        c.quarantine_threshold = 0.5;
+        c.probe_ok = 0;
+        assert!(c.validate().unwrap_err().contains("probe_ok"));
+        c.probe_ok = 4;
+        c.validate().unwrap();
+        // Burst arming requires the recovery knobs even with fault_rate 0.
+        c.fault_poll_timeout = 0;
+        assert!(c.validate().unwrap_err().contains("fault_poll_timeout"));
+        // With the burst layer off the degenerate values are ignored.
+        c.burst_rate = 0.0;
+        c.burst_len = 0;
+        c.quarantine_threshold = 0.0;
+        c.probe_ok = 0;
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn bursty_variant_arms_burst_layer_only() {
+        let c = SystemConfig::tl_ooo().bursty(0.3);
+        assert_eq!(c.burst_rate, 0.3);
+        assert_eq!(c.fault_rate, 0.0, "bursty must not arm per-draw faults");
+        assert_eq!(c.demote_after, 3);
+        assert_eq!(c.quarantine_threshold, 0.0, "quarantine is the caller's call");
+        c.validate().unwrap();
+        let base = SystemConfig::tl_ooo();
+        assert_eq!(base.burst_rate, 0.0);
+        assert_eq!(base.quarantine_threshold, 0.0);
+        assert_eq!(base.slo_p99_us, 500);
     }
 
     #[test]

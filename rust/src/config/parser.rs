@@ -161,6 +161,27 @@ pub fn apply(
                     cfg.fault_backoff_mult =
                         v.parse().map_err(|_| "bad fault_backoff_mult")?
                 }
+                "burst_rate" => {
+                    cfg.burst_rate = v.parse().map_err(|_| "bad burst_rate")?
+                }
+                "burst_len_ns" => {
+                    cfg.burst_len =
+                        v.parse::<u64>().map_err(|_| "bad burst_len_ns")? * 1_000
+                }
+                "burst_slow_mult" => {
+                    cfg.burst_slow_mult =
+                        v.parse().map_err(|_| "bad burst_slow_mult")?
+                }
+                "quarantine_threshold" => {
+                    cfg.quarantine_threshold =
+                        v.parse().map_err(|_| "bad quarantine_threshold")?
+                }
+                "probe_ok" => {
+                    cfg.probe_ok = v.parse().map_err(|_| "bad probe_ok")?
+                }
+                "slo_p99_us" => {
+                    cfg.slo_p99_us = v.parse().map_err(|_| "bad slo_p99_us")?
+                }
                 "routing" => {
                     cfg.routing = crate::sim::backend::Routing::by_name(v)
                         .ok_or_else(|| format!("unknown routing '{v}'"))?
@@ -339,6 +360,37 @@ mod tests {
             "[system]\nfault_poll_timeout_ns = never\n",
             "[system]\nfault_reissue_max = 1.5\n",
             "[system]\nfault_backoff_mult = two\n",
+        ] {
+            let ini = Ini::parse(bad).unwrap();
+            assert!(apply(&ini, &mut cfg, &mut spec).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn burst_keys_configure_the_correlated_layer() {
+        let ini = Ini::parse(
+            "[system]\nmechanism = tl-ooo\nburst_rate = 0.2\nburst_len_ns = 2500\n\
+             burst_slow_mult = 6\nquarantine_threshold = 0.5\nprobe_ok = 4\n\
+             slo_p99_us = 250\n",
+        )
+        .unwrap();
+        let mut cfg = SystemConfig::ideal();
+        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+        apply(&ini, &mut cfg, &mut spec).unwrap();
+        assert_eq!(cfg.burst_rate, 0.2);
+        assert_eq!(cfg.burst_len, 2_500_000, "burst_len_ns must scale to ps");
+        assert_eq!(cfg.burst_slow_mult, 6);
+        assert_eq!(cfg.quarantine_threshold, 0.5);
+        assert_eq!(cfg.probe_ok, 4);
+        assert_eq!(cfg.slo_p99_us, 250);
+        for bad in [
+            "[system]\nburst_rate = sometimes\n",
+            "[system]\nburst_len_ns = -3\n",
+            "[system]\nburst_len_ns = 2.5\n",
+            "[system]\nburst_slow_mult = fast\n",
+            "[system]\nquarantine_threshold = maybe\n",
+            "[system]\nprobe_ok = 1.5\n",
+            "[system]\nslo_p99_us = tight\n",
         ] {
             let ini = Ini::parse(bad).unwrap();
             assert!(apply(&ini, &mut cfg, &mut spec).is_err(), "accepted {bad}");

@@ -870,6 +870,96 @@ pub fn ablate_faults(scale: &Scale) -> Result<Table> {
     Ok(t)
 }
 
+/// Robustness ablation: correlated-fault bursts × quarantine-driven
+/// degraded mode. Each mechanism is swept over a burst-intensity ladder,
+/// once with the online health detector off (`quarantine_threshold = 0`)
+/// and once with it armed; rows report availability (the fraction of
+/// extended accesses not degraded by a bad window, a fault, or demoted
+/// service), performance retained vs the mechanism's burst-free anchor,
+/// retry storms, and the detector's MTTD/MTTR/time-in-degraded numbers.
+/// Availability is expected monotone non-increasing in burst intensity
+/// for every mechanism; the quarantine-on column shows fewer retry
+/// storms (whole-domain §4.5 demotion breaks the per-line streaks).
+/// Failed jobs surface as FAILED rows (continue-on-error).
+pub fn ablate_degrade(scale: &Scale) -> Result<Table> {
+    let rates: &[f64] = if scale.quick { &[0.0, 0.4] } else { &[0.0, 0.1, 0.4] };
+    let mechs = ["tl-ooo", "tl-lf", "amu", "pcie"];
+    let quars = [false, true];
+    let mut jobs = Vec::new();
+    for mech in mechs {
+        for &rate in rates {
+            for &quar in &quars {
+                let base = preset(mech)?;
+                // The burst-free anchor stays the untouched preset (the
+                // `bursty` builder also arms demotion, which must not
+                // perturb the baseline); quarantine knobs on a burst-free
+                // config are structurally inert, which the paired rate-0
+                // rows demonstrate by matching exactly.
+                let mut c = if rate > 0.0 { base.bursty(rate) } else { base };
+                if quar {
+                    c.quarantine_threshold = 0.5;
+                    c.probe_ok = 4;
+                }
+                jobs.push((scale.cfg(c), scale.spec(WorkloadKind::Gups, scale.medium)));
+            }
+        }
+    }
+    let outcomes = try_run_parallel(&jobs, scale.threads);
+    let mut t = Table::new(
+        "Ablation: correlated fault bursts — availability & degraded mode (GUPS)",
+        &[
+            "Mechanism",
+            "Burst rate",
+            "Quarantine",
+            "Availability",
+            "Perf vs clean",
+            "Storms",
+            "Quar/Readm",
+            "MTTD/MTTR (ns)",
+            "Degraded (ns)",
+        ],
+    );
+    let per_mech = rates.len() * quars.len();
+    for (mi, mech) in mechs.iter().enumerate() {
+        // Anchor: rate 0, quarantine off — the first job of the block.
+        let base = outcomes[mi * per_mech].as_ref().ok();
+        for (ri, &rate) in rates.iter().enumerate() {
+            for (qi, &quar) in quars.iter().enumerate() {
+                let quar_label = if quar { "on" } else { "off" };
+                match &outcomes[mi * per_mech + ri * quars.len() + qi] {
+                    Ok(r) => {
+                        let perf =
+                            base.map(|b| f3(r.perf_vs(b))).unwrap_or_else(|| "-".into());
+                        t.row(&[
+                            (*mech).into(),
+                            format!("{rate:.2}"),
+                            quar_label.into(),
+                            format!("{:.4}", r.availability),
+                            perf,
+                            r.retry_storms.to_string(),
+                            format!("{}/{}", r.quarantines, r.readmits),
+                            format!("{:.0}/{:.0}", r.mttd_ns, r.mttr_ns),
+                            format!("{:.0}", r.degraded_ns),
+                        ]);
+                    }
+                    Err(e) => t.row(&[
+                        (*mech).into(),
+                        format!("{rate:.2}"),
+                        quar_label.into(),
+                        format!("FAILED: {}", e.message),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]),
+                }
+            }
+        }
+    }
+    Ok(t)
+}
+
 // ---------------------------------------------------------------- Serving
 
 /// Open-loop latency-throughput sweep: Poisson arrivals at a fixed
@@ -878,9 +968,13 @@ pub fn ablate_faults(scale: &Scale) -> Result<Table> {
 /// row reports the highest offered load each mechanism sustained
 /// (achieved ≥ 95 % of offered) — the paper's scalability argument
 /// restated as max-sustainable throughput instead of closed-loop
-/// runtime. Failed jobs surface as FAILED rows (continue-on-error),
-/// mirroring [`ablate_faults`].
-pub fn serve(scale: &Scale) -> Result<Table> {
+/// runtime. The "slo-knee" row tightens that to the highest load in the
+/// contiguous prefix that also kept p99 end-to-end latency within
+/// `slo_p99_us` (CLI `--slo-p99-us`, INI `slo_p99_us`) — sustained
+/// throughput alone hides latency collapse near saturation. Failed jobs
+/// surface as FAILED rows (continue-on-error), mirroring
+/// [`ablate_faults`].
+pub fn serve(scale: &Scale, slo_p99_us: u64) -> Result<Table> {
     // One memcached request lowers to ~8 logical ops, so a geometric
     // ladder from 0.5M to 32M req/s spans clearly-under-loaded to
     // clearly-saturated for every mechanism at these core counts.
@@ -918,12 +1012,14 @@ pub fn serve(scale: &Scale) -> Result<Table> {
     );
     for (mi, mech) in mechs.iter().enumerate() {
         let mut achieved_col: Vec<Option<f64>> = Vec::with_capacity(offered.len());
+        let mut p99_col: Vec<Option<u64>> = Vec::with_capacity(offered.len());
         for (ri, &rps) in offered.iter().enumerate() {
             match &outcomes[mi * offered.len() + ri] {
                 Ok(r) => {
                     let achieved =
                         r.served_requests as f64 * 1e9 / r.runtime_ns().max(1e-9);
                     achieved_col.push(Some(achieved));
+                    p99_col.push(Some(r.req_p99_ns));
                     t.row(&[
                         (*mech).into(),
                         krps(rps),
@@ -937,6 +1033,7 @@ pub fn serve(scale: &Scale) -> Result<Table> {
                 }
                 Err(e) => {
                     achieved_col.push(None);
+                    p99_col.push(None);
                     t.row(&[
                         (*mech).into(),
                         krps(rps),
@@ -960,6 +1057,18 @@ pub fn serve(scale: &Scale) -> Result<Table> {
             "-".into(),
             "-".into(),
         ]);
+        t.row(&[
+            (*mech).into(),
+            "slo-knee".into(),
+            slo_knee(offered, &achieved_col, &p99_col, slo_p99_us * 1000)
+                .map(krps)
+                .unwrap_or_else(|| "-".into()),
+            "-".into(),
+            format!("p99<={slo_p99_us}us"),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+        ]);
     }
     Ok(t)
 }
@@ -976,6 +1085,30 @@ fn sustained_knee(offered: &[u64], achieved: &[Option<f64>]) -> Option<u64> {
     for (&rps, a) in offered.iter().zip(achieved) {
         match a {
             Some(v) if *v >= 0.95 * rps as f64 => knee = Some(rps),
+            _ => break,
+        }
+    }
+    knee
+}
+
+/// The SLO knee: the highest offered load in the contiguous prefix that
+/// both sustained its load (≥ 95 % of offered, as [`sustained_knee`])
+/// *and* kept p99 end-to-end latency within `slo_ns`. Same
+/// stop-at-first-violation semantics — a post-collapse point whose p99
+/// transiently recovers (drops shed the queue) must not overstate the
+/// SLO-respecting capacity.
+fn slo_knee(
+    offered: &[u64],
+    achieved: &[Option<f64>],
+    p99_ns: &[Option<u64>],
+    slo_ns: u64,
+) -> Option<u64> {
+    let mut knee = None;
+    for ((&rps, a), p) in offered.iter().zip(achieved).zip(p99_ns) {
+        match (a, p) {
+            (Some(v), Some(q)) if *v >= 0.95 * rps as f64 && *q <= slo_ns => {
+                knee = Some(rps)
+            }
             _ => break,
         }
     }
@@ -1108,9 +1241,9 @@ mod tests {
             threads: 2,
             quick: true,
         };
-        let t = serve(&scale).unwrap();
-        // 6 mechanisms × (3 offered points + 1 knee row).
-        assert_eq!(t.num_rows(), 6 * 4);
+        let t = serve(&scale, 500).unwrap();
+        // 6 mechanisms × (3 offered points + knee + slo-knee rows).
+        assert_eq!(t.num_rows(), 6 * 5);
         let csv = t.to_csv();
         assert!(!csv.contains("FAILED"), "sweep had failed jobs:\n{csv}");
         // The lightly-loaded ideal run actually served requests and
@@ -1156,6 +1289,105 @@ mod tests {
             let pack_mean: f64 = cols[7].parse().unwrap();
             assert!(pack_mean > 1.0, "{wl}: pack mean {pack_mean} <= 1\n{csv}");
         }
+    }
+
+    #[test]
+    fn slo_knee_stops_at_first_latency_violation() {
+        let offered = [500_000u64, 1_000_000, 2_000_000, 4_000_000];
+        let achieved =
+            [Some(500_000.0), Some(990_000.0), Some(2_000_000.0), Some(4_000_000.0)];
+        // Throughput sustains everywhere, but p99 blows past the SLO at
+        // 2M: the plain knee says 4M, the SLO knee stops at 1M.
+        let p99 = [Some(80_000u64), Some(120_000), Some(900_000), Some(150_000)];
+        assert_eq!(sustained_knee(&offered, &achieved), Some(4_000_000));
+        assert_eq!(slo_knee(&offered, &achieved, &p99, 500_000), Some(1_000_000));
+        // A tight SLO no point meets: no knee.
+        assert_eq!(slo_knee(&offered, &achieved, &p99, 10_000), None);
+        // A loose SLO degenerates to the throughput knee.
+        assert_eq!(slo_knee(&offered, &achieved, &p99, u64::MAX), Some(4_000_000));
+        // Unsustained throughput still gates even when latency is fine.
+        let sagging =
+            [Some(500_000.0), Some(700_000.0), Some(2_000_000.0), Some(4_000_000.0)];
+        assert_eq!(slo_knee(&offered, &sagging, &p99, 500_000), Some(500_000));
+        // A failed job ends the prefix.
+        let failed = [Some(80_000u64), None, Some(90_000), Some(90_000)];
+        assert_eq!(slo_knee(&offered, &achieved, &failed, 500_000), Some(500_000));
+    }
+
+    #[test]
+    fn degrade_sweep_quarantine_tames_burst_storms() {
+        let scale = Scale {
+            ops: 1_500,
+            cores: 2,
+            medium: 16 << 20,
+            large: 16 << 20,
+            seed: 7,
+            threads: 2,
+            quick: true,
+        };
+        let t = ablate_degrade(&scale).unwrap();
+        // 4 mechanisms × 2 burst rates × quarantine {off, on}.
+        assert_eq!(t.num_rows(), 4 * 2 * 2);
+        let csv = t.to_csv();
+        assert!(!csv.contains("FAILED"), "sweep had failed jobs:\n{csv}");
+        let col = |row: &str, i: usize| row.split(',').nth(i).unwrap().to_string();
+        for mech in ["tl-ooo", "tl-lf", "amu", "pcie"] {
+            let find = |rate: &str, quar: &str| {
+                csv.lines()
+                    .find(|l| l.starts_with(&format!("{mech},{rate},{quar},")))
+                    .unwrap_or_else(|| panic!("no {mech}/{rate}/{quar} row:\n{csv}"))
+                    .to_string()
+            };
+            // Quarantine knobs without bursts are structurally inert:
+            // the paired rate-0 rows match column-for-column.
+            assert_eq!(
+                find("0.00", "off").replace(",off,", ",_,"),
+                find("0.00", "on").replace(",on,", ",_,"),
+                "quarantine knobs perturbed a burst-free run"
+            );
+            // Availability is monotone non-increasing in burst intensity
+            // (both with and without the detector).
+            for quar in ["off", "on"] {
+                let clean: f64 = col(&find("0.00", quar), 3).parse().unwrap();
+                let bursty: f64 = col(&find("0.40", quar), 3).parse().unwrap();
+                assert_eq!(clean, 1.0, "{mech} burst-free availability");
+                assert!(
+                    bursty <= clean,
+                    "{mech}/{quar}: availability rose under bursts ({bursty} > {clean})"
+                );
+                assert!(
+                    bursty < 1.0,
+                    "{mech}/{quar}: bursts at rate 0.4 degraded nothing"
+                );
+            }
+        }
+        // The flagship claim on the twin mechanism: whole-domain demotion
+        // measurably shortens retry storms, and the detector actually
+        // fired.
+        let row_off = csv
+            .lines()
+            .find(|l| l.starts_with("tl-ooo,0.40,off,"))
+            .unwrap()
+            .to_string();
+        let row_on = csv
+            .lines()
+            .find(|l| l.starts_with("tl-ooo,0.40,on,"))
+            .unwrap()
+            .to_string();
+        let storms_off: u64 = col(&row_off, 5).parse().unwrap();
+        let storms_on: u64 = col(&row_on, 5).parse().unwrap();
+        let quars: String = col(&row_on, 6);
+        let fired: u64 = quars.split('/').next().unwrap().parse().unwrap();
+        assert!(fired >= 1, "detector never quarantined under 0.4 bursts: {row_on}");
+        assert!(
+            storms_on <= storms_off,
+            "quarantine did not tame retry storms: on={storms_on} off={storms_off}"
+        );
+        assert_eq!(
+            col(&row_off, 6),
+            "0/0",
+            "threshold 0 must keep the detector disarmed: {row_off}"
+        );
     }
 
     #[test]

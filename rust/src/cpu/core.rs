@@ -123,6 +123,10 @@ pub struct CoreStats {
     pub retry_storms: u64,
     /// Safe-path demotions taken by the graceful-degradation policy.
     pub demotions: u64,
+    /// Loads this core had served through the §4.5 safe path because
+    /// their whole fault *domain* was quarantined by the host health
+    /// tracker (domain-level demotion, not a per-line streak).
+    pub quarantine_served: u64,
     /// Completion time of the last retired op.
     pub finish: Ps,
 }
@@ -701,6 +705,17 @@ impl Core {
         self.stats.retired_insts += 20;
     }
 
+    /// The host health tracker quarantined this load's whole fault
+    /// domain: the platform served it through the §4.5 safe path (real
+    /// data, no twin content check) and charged `safe_penalty` at
+    /// delivery. Only the robustness accounting lands here, so per-core
+    /// safe-path totals cover both per-line streak demotions and
+    /// domain-level quarantine.
+    pub(crate) fn note_quarantined_safe(&mut self) {
+        self.stats.safe_paths += 1;
+        self.stats.quarantine_served += 1;
+    }
+
     /// Retire completed ops from the window head. Returns progress.
     fn retire(&mut self, now: Ps) -> bool {
         let mut progressed = false;
@@ -1107,6 +1122,18 @@ mod tests {
         assert_eq!(stats.demotions, 0);
         assert_eq!(stats.safe_paths, 0);
         assert_eq!(stats.retry_storms, 0);
+    }
+
+    #[test]
+    fn quarantine_note_counts_domain_demotions() {
+        let mut core = Core::new(CoreParams::xeon());
+        core.note_quarantined_safe();
+        core.note_quarantined_safe();
+        assert_eq!(core.stats.quarantine_served, 2);
+        assert_eq!(core.stats.safe_paths, 2);
+        // Pure accounting: no timing or window state is touched.
+        assert_eq!(core.stats.retired_insts, 0);
+        assert_eq!(core.stats.retired_ops, 0);
     }
 
     #[test]

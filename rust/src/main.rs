@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   run       simulate one (mechanism, workload) pair
 //!   repro     regenerate a paper table/figure (table1..5, fig7..fig15, all)
-//!   ablate    design-choice sweeps (lvc | layers | batch | scm | smt | amu | mims | faults)
+//!   ablate    design-choice sweeps (lvc | layers | batch | scm | smt | amu | mims | faults | degrade)
 //!   serve     open-loop latency-throughput sweep (offered load x mechanism)
 //!   validate  cross-check the PJRT analytic fast path vs the cycle sim
 //!   list      show mechanisms and workloads
@@ -44,6 +44,12 @@ const VALUE_FLAGS: &[&str] = &[
     "fault-poll-timeout-ns",
     "fault-reissue-max",
     "fault-backoff-mult",
+    "burst-rate",
+    "burst-len-ns",
+    "burst-slow-mult",
+    "quarantine-threshold",
+    "probe-ok",
+    "slo-p99-us",
     "arrival",
     "offered-rps",
     "zipf-theta",
@@ -90,12 +96,14 @@ fn print_usage() {
          \x20            [--fault-rate F] [--fault-ecc-rate F] [--fault-seed S]\n\
          \x20            [--demote-after K] [--fault-poll-timeout-ns N]\n\
          \x20            [--fault-reissue-max N] [--fault-backoff-mult N]\n\
+         \x20            [--burst-rate F] [--burst-len-ns N] [--burst-slow-mult N]\n\
+         \x20            [--quarantine-threshold F] [--probe-ok N] [--slo-p99-us N]\n\
          \x20            [--arrival closed|poisson|mmpp] [--offered-rps N]\n\
          \x20            [--zipf-theta F] [--arrival-seed S] [--queue-depth N]\n\
          twinload repro <table1|table2|table3|table4|table5|fig7|fig8|fig9|\n\
          \x20            fig10|fig11|fig12|fig13|fig14|fig15|all> [--quick] [--csv-dir DIR]\n\
-         twinload ablate <lvc|layers|batch|scm|smt|amu|mims|faults> [--quick]\n\
-         twinload serve [--quick] [--csv-dir DIR]\n\
+         twinload ablate <lvc|layers|batch|scm|smt|amu|mims|faults|degrade> [--quick]\n\
+         twinload serve [--quick] [--slo-p99-us N] [--csv-dir DIR]\n\
          twinload validate\n\
          twinload list"
     );
@@ -176,6 +184,10 @@ fn cmd_run(args: &Args) -> i32 {
     flag!("fault-poll-timeout-ns", |v: u64| cfg.fault_poll_timeout = v * 1000);
     flag!("fault-reissue-max", |v| cfg.fault_reissue_max = v as u32);
     flag!("fault-backoff-mult", |v| cfg.fault_backoff_mult = v as u32);
+    flag!("burst-len-ns", |v: u64| cfg.burst_len = v * 1000);
+    flag!("burst-slow-mult", |v| cfg.burst_slow_mult = v);
+    flag!("probe-ok", |v| cfg.probe_ok = v as u32);
+    flag!("slo-p99-us", |v| cfg.slo_p99_us = v);
     flag!("offered-rps", |v| spec.offered_rps = v);
     flag!("arrival-seed", |v| spec.arrival_seed = v);
     flag!("queue-depth", |v| spec.queue_depth = v as u32);
@@ -197,6 +209,12 @@ fn cmd_run(args: &Args) -> i32 {
     }
     if let Ok(Some(f)) = args.get_f64("fault-ecc-rate") {
         cfg.fault_ecc_rate = f;
+    }
+    if let Ok(Some(f)) = args.get_f64("burst-rate") {
+        cfg.burst_rate = f;
+    }
+    if let Ok(Some(f)) = args.get_f64("quarantine-threshold") {
+        cfg.quarantine_threshold = f;
     }
     if let Some(name) = args.get("engine") {
         let Some(kind) = twinload::sim::engine::EngineKind::by_name(name) else {
@@ -306,6 +324,22 @@ fn cmd_run(args: &Args) -> i32 {
             report.recovery_mean / 1000.0,
             report.recovery_p99 as f64 / 1000.0,
             report.recovery_max as f64 / 1000.0,
+        );
+    }
+    if report.degraded_accesses > 0 || report.quarantines > 0 {
+        println!(
+            "  availability  {:>12.4} ({}/{} ext accesses degraded)\n  \
+             quarantine    {:>12} events ({} readmits, {} safe-served, \
+             mttd {:.0} ns, mttr {:.0} ns, degraded {:.0} ns)",
+            report.availability,
+            report.degraded_accesses,
+            report.ext_accesses,
+            report.quarantines,
+            report.readmits,
+            report.quarantined_served,
+            report.mttd_ns,
+            report.mttr_ns,
+            report.degraded_ns,
         );
     }
     println!(
@@ -429,8 +463,9 @@ fn cmd_ablate(args: &Args) -> i32 {
         Some("amu") => emit(exp::ablate_amu(&scale), csv, "ablate_amu"),
         Some("mims") => emitr!(exp::ablate_mims(&scale), "ablate_mims"),
         Some("faults") => emitr!(exp::ablate_faults(&scale), "ablate_faults"),
+        Some("degrade") => emitr!(exp::ablate_degrade(&scale), "ablate_degrade"),
         _ => {
-            eprintln!("usage: twinload ablate <lvc|layers|batch|scm|smt|amu|mims|faults>");
+            eprintln!("usage: twinload ablate <lvc|layers|batch|scm|smt|amu|mims|faults|degrade>");
             return 2;
         }
     }
@@ -440,7 +475,16 @@ fn cmd_ablate(args: &Args) -> i32 {
 fn cmd_serve(args: &Args) -> i32 {
     let scale = scale_from(args);
     let csv = args.get("csv-dir");
-    match exp::serve(&scale) {
+    // Default SLO comes from the preset default (INI `slo_p99_us`
+    // overrides per-config; the sweep applies one budget to every row).
+    let slo = match args.get_u64("slo-p99-us") {
+        Ok(v) => v.unwrap_or_else(|| SystemConfig::ideal().slo_p99_us),
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    match exp::serve(&scale, slo) {
         Ok(t) => emit(t, csv, "serve"),
         Err(e) => {
             eprintln!("error: {e:#}");

@@ -720,11 +720,49 @@ impl Router {
         }
     }
 
+    /// Ingress with the correlated-fault layer applied on top: a domain
+    /// in a fail-slow window stretches whatever latency the hook itself
+    /// added by `burst_slow_mult`. Pure in (plan, kind, `arrive`), so
+    /// both routings and all engines see the same degraded schedule; a
+    /// `None` plan (or a plan without a burst layer) is exactly
+    /// [`Router::ingress`].
+    pub(crate) fn ingress_degraded(
+        &mut self,
+        kind: GroupKind,
+        arrive: Ps,
+        plan: Option<&crate::sim::fault::FaultPlan>,
+    ) -> Ps {
+        let t = self.ingress(kind, arrive);
+        match plan.and_then(|p| p.burst_slow(kind, arrive)) {
+            Some(mult) => t + (t - arrive) * (mult - 1),
+            None => t,
+        }
+    }
+
     /// Extra completion latency on the way back to the core.
     pub(crate) fn egress_delay(&self, kind: GroupKind) -> Ps {
         match self {
             Router::Backend(b) => b.egress_delay(kind),
             Router::Legacy(l) => l.egress_delay(kind),
+        }
+    }
+
+    /// Egress with the correlated-fault layer applied on top: a fail-slow
+    /// window multiplies the whole return path (egress hop plus the
+    /// `fill_lat` cache-fill leg, the component every mechanism shares)
+    /// by `burst_slow_mult`. `at` is the service-completion instant the
+    /// window is evaluated at — identical across implementations.
+    pub(crate) fn egress_degraded(
+        &self,
+        kind: GroupKind,
+        at: Ps,
+        fill_lat: Ps,
+        plan: Option<&crate::sim::fault::FaultPlan>,
+    ) -> Ps {
+        let eg = self.egress_delay(kind);
+        match plan.and_then(|p| p.burst_slow(kind, at)) {
+            Some(mult) => eg + (fill_lat + eg) * (mult - 1),
+            None => eg,
         }
     }
 
@@ -987,5 +1025,73 @@ mod tests {
         assert_eq!(Routing::by_name("legacy"), Some(Routing::Legacy));
         assert_eq!(Routing::by_name(Routing::Backend.name()), Some(Routing::Backend));
         assert!(Routing::by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn degraded_wrappers_stretch_only_fail_slow_windows() {
+        use crate::sim::fault::{BurstState, FaultPlan};
+        use crate::util::time::NS;
+
+        let mut cfg = SystemConfig::numa();
+        cfg.burst_rate = 1.0; // every window opens an episode
+        cfg.burst_len = 1_000 * NS;
+        cfg.burst_slow_mult = 4;
+        let plan = FaultPlan::from_cfg(&cfg).unwrap();
+        let data = data_stub();
+        let kind = GroupKind::ExtRemote;
+        let fill = 10 * NS;
+
+        // Locate one fail-slow and one fail-stop window (the per-episode
+        // kind hash splits them ~evenly; 64 windows is overwhelming).
+        let mut slow_at = None;
+        let mut stop_at = None;
+        for w in 0..64u64 {
+            let at = w * cfg.burst_len + 1;
+            match plan.burst_state(kind, at) {
+                BurstState::Slow(m) => {
+                    assert_eq!(m, 4);
+                    slow_at.get_or_insert(at);
+                }
+                BurstState::Stop => {
+                    stop_at.get_or_insert(at);
+                }
+                BurstState::Good => panic!("rate 1.0 left window {w} Good"),
+            }
+        }
+        let (slow_at, stop_at) = (slow_at.unwrap(), stop_at.unwrap());
+
+        // Egress is stateless: Slow multiplies the return path, Stop and
+        // no-plan leave it untouched (fail-stop is handled at the
+        // injection sites, not by stretching).
+        let (r, _) = Router::build(&cfg, &data).unwrap();
+        let eg = r.egress_delay(kind);
+        assert!(eg > 0, "numa egress hop expected nonzero");
+        assert_eq!(r.egress_degraded(kind, slow_at, fill, None), eg);
+        assert_eq!(r.egress_degraded(kind, stop_at, fill, Some(&plan)), eg);
+        assert_eq!(
+            r.egress_degraded(kind, slow_at, fill, Some(&plan)),
+            eg + (fill + eg) * 3,
+        );
+
+        // Ingress is stateful (the QPI link serializes): compare fresh
+        // routers at the same arrive instant.
+        let (mut plain, _) = Router::build(&cfg, &data).unwrap();
+        let (mut degraded, _) = Router::build(&cfg, &data).unwrap();
+        let base = plain.ingress(kind, slow_at);
+        let slow = degraded.ingress_degraded(kind, slow_at, Some(&plan));
+        assert!(base > slow_at, "numa ingress adds latency");
+        assert_eq!(slow - slow_at, (base - slow_at) * 4);
+
+        // A plan without a burst layer degrades nothing.
+        let mut quiet = SystemConfig::numa();
+        quiet.fault_rate = 0.1;
+        let inert = FaultPlan::from_cfg(&quiet).unwrap();
+        let (mut a, _) = Router::build(&cfg, &data).unwrap();
+        let (mut b, _) = Router::build(&cfg, &data).unwrap();
+        assert_eq!(
+            a.ingress_degraded(kind, stop_at, Some(&inert)),
+            b.ingress(kind, stop_at),
+        );
+        assert_eq!(r.egress_degraded(kind, slow_at, fill, Some(&inert)), eg);
     }
 }

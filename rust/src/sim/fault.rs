@@ -27,8 +27,24 @@
 //!   poll-timeout + bounded-reissue loop whose final attempt always
 //!   delivers. The chaos proptest asserts exactly-once completion of every
 //!   logical op under arbitrary fault schedules.
+//!
+//! On top of the memoryless per-draw model sits the **correlated-fault
+//! layer** ([`BurstPlan`]): a seeded two-state Gilbert-Elliott burst
+//! process evaluated per *fault domain* (the MEC chips, the plain
+//! extension channel group, the AMU/MIMS unit, the PCIe link) as a pure
+//! function of (seed, domain id, virtual-time window index). A window is
+//! bad when a burst *started* in one of the last few windows and its drawn
+//! run length still covers it — bounded lookback keeps the query O(1) and
+//! stateless, so burst schedules inherit the same engine/front-end/sched/
+//! routing independence as the Bernoulli draws. Each burst episode is
+//! classified (by a hash of its start window) as **fail-slow** — service
+//! latency through the domain is multiplied by `burst_slow_mult` at the
+//! backend ingress/egress seam — or **fail-stop** — every draw in the
+//! window faults, forcing retry storms. `burst_rate = 0` builds no
+//! [`BurstPlan`] at all, preserving the structural-inertness guarantee.
 
 use crate::config::SystemConfig;
+use crate::sim::backend::GroupKind;
 use crate::stats::Histogram;
 use crate::util::rng::mix64;
 use crate::util::time::{Ps, NS};
@@ -49,6 +65,118 @@ const SALT_NOTIFY: u64 = 0x414D_0004;
 const SALT_PCIE: u64 = 0x5043_0005;
 const SALT_ECC: u64 = 0x4543_0006;
 const SALT_ECC_KIND: u64 = 0x4543_0007;
+const SALT_BURST_SEED: u64 = 0x4255_0008;
+const SALT_BURST_START: u64 = 0x4255_0009;
+const SALT_BURST_LEN: u64 = 0x4255_000A;
+const SALT_BURST_KIND: u64 = 0x4255_000B;
+
+/// Draw resolution: parts per billion. A `fault_rate` as low as 1e-9
+/// still rounds to a nonzero plan (the old parts-per-million grid
+/// silently zeroed anything below 5e-7).
+const PPB: u64 = 1_000_000_000;
+
+const PHI: u64 = 0x9E37_79B9_7F4A_7C15;
+
+// ---------------------------------------------------------------------
+// Fault domains (correlated burst layer).
+// ---------------------------------------------------------------------
+
+/// The PCIe link domain — injected at the swap site, where no channel
+/// group is in play (PCIe traffic aliases local DRAM).
+pub(crate) const DOM_PCIE: u64 = 0x5;
+
+/// Fault-domain identity for a channel-group kind: the MEC chips, the
+/// plain extension channel group, or the AMU/MIMS unit. Local DRAM is
+/// never a fault domain.
+pub(crate) fn domain_of(kind: GroupKind) -> Option<u64> {
+    match kind {
+        GroupKind::Local => None,
+        GroupKind::ExtMec => Some(0x1),
+        GroupKind::ExtRemote | GroupKind::ExtTrl => Some(0x2),
+        GroupKind::ExtAmu => Some(0x3),
+        GroupKind::ExtMims => Some(0x4),
+    }
+}
+
+/// What the correlated layer says about a domain at one instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum BurstState {
+    /// Domain healthy: only the memoryless per-draw model applies.
+    Good,
+    /// Fail-slow episode: service latency through the domain is
+    /// multiplied by the carried factor.
+    Slow(u64),
+    /// Fail-stop episode: every draw in the window faults.
+    Stop,
+}
+
+/// Longest burst run, in windows: run lengths draw uniformly from
+/// `1..=MAX_RUN_WINDOWS`, which bounds the lookback of the pure
+/// window-state query.
+const MAX_RUN_WINDOWS: u64 = 4;
+
+/// Seeded two-state burst process, evaluated per (domain, window) with
+/// no mutable state. Built only when `burst_rate > 0`.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct BurstPlan {
+    /// Probability a burst episode starts in any given window, ppb.
+    rate_ppb: u64,
+    /// Window length (virtual time per state-machine step), ps.
+    len: Ps,
+    /// Fail-slow service-latency multiplier.
+    slow_mult: u64,
+    seed: u64,
+}
+
+impl BurstPlan {
+    fn from_cfg(cfg: &SystemConfig) -> Option<BurstPlan> {
+        let rate_ppb = ppb(cfg.burst_rate);
+        if rate_ppb == 0 {
+            return None;
+        }
+        Some(BurstPlan {
+            rate_ppb,
+            len: cfg.burst_len.max(1),
+            slow_mult: cfg.burst_slow_mult.max(1),
+            seed: mix64(cfg.fault_seed ^ SALT_BURST_SEED),
+        })
+    }
+
+    /// Does a burst episode start at window `w` of `dom`?
+    #[inline]
+    fn starts(&self, dom: u64, w: u64) -> bool {
+        mix64(w.wrapping_mul(PHI) ^ dom ^ self.seed ^ SALT_BURST_START) % PPB < self.rate_ppb
+    }
+
+    /// Run length (in windows) of the episode starting at window `w`.
+    #[inline]
+    fn run_len(&self, dom: u64, w: u64) -> u64 {
+        1 + mix64(w.wrapping_mul(PHI) ^ dom ^ self.seed ^ SALT_BURST_LEN) % MAX_RUN_WINDOWS
+    }
+
+    /// Start window of the episode covering `at`, if any (the most
+    /// recent start wins when runs overlap).
+    fn episode(&self, dom: u64, at: Ps) -> Option<u64> {
+        let w = at / self.len;
+        (0..MAX_RUN_WINDOWS)
+            .map(|j| w.wrapping_sub(j))
+            .find(|&ws| self.starts(dom, ws) && self.run_len(dom, ws) > w.wrapping_sub(ws))
+    }
+
+    /// Pure state query: good, fail-slow, or fail-stop at instant `at`.
+    pub(crate) fn state(&self, dom: u64, at: Ps) -> BurstState {
+        match self.episode(dom, at) {
+            None => BurstState::Good,
+            Some(ws) => {
+                if mix64(ws ^ dom ^ self.seed ^ SALT_BURST_KIND) & 1 == 0 {
+                    BurstState::Stop
+                } else {
+                    BurstState::Slow(self.slow_mult)
+                }
+            }
+        }
+    }
+}
 
 /// Outcome of a MEC prefetch-buffer fill under fault.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -78,33 +206,76 @@ pub enum EccFault {
 /// component that injects (platform, MEC chips).
 #[derive(Debug, Clone, Copy)]
 pub struct FaultPlan {
-    /// Extension-path fault probability, parts per million.
-    rate_ppm: u64,
-    /// Transient-bit-error probability, parts per million.
-    ecc_ppm: u64,
+    /// Extension-path fault probability, parts per billion.
+    rate_ppb: u64,
+    /// Transient-bit-error probability, parts per billion.
+    ecc_ppb: u64,
     seed: u64,
+    /// Correlated burst layer; `None` when `burst_rate = 0`.
+    burst: Option<BurstPlan>,
 }
 
 impl FaultPlan {
     /// Build the plan from config knobs; `None` when fault injection is
     /// fully disabled (the inertness guarantee hangs on this).
     pub fn from_cfg(cfg: &SystemConfig) -> Option<FaultPlan> {
-        let rate_ppm = ppm(cfg.fault_rate);
-        let ecc_ppm = ppm(cfg.fault_ecc_rate);
-        if rate_ppm == 0 && ecc_ppm == 0 {
+        let rate_ppb = ppb(cfg.fault_rate);
+        let ecc_ppb = ppb(cfg.fault_ecc_rate);
+        let burst = BurstPlan::from_cfg(cfg);
+        if rate_ppb == 0 && ecc_ppb == 0 && burst.is_none() {
             return None;
         }
-        Some(FaultPlan { rate_ppm, ecc_ppm, seed: mix64(cfg.fault_seed) })
+        Some(FaultPlan { rate_ppb, ecc_ppb, seed: mix64(cfg.fault_seed), burst })
     }
 
     /// One Bernoulli draw: pure in (seed, salt, line, nth).
     #[inline]
-    fn roll(&self, ppm: u64, salt: u64, line: u64, nth: u64) -> bool {
-        if ppm == 0 {
+    fn roll(&self, ppb: u64, salt: u64, line: u64, nth: u64) -> bool {
+        if ppb == 0 {
             return false;
         }
-        let h = mix64(line ^ nth.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ self.seed ^ salt);
-        h % 1_000_000 < ppm
+        let h = mix64(line ^ nth.wrapping_mul(PHI) ^ self.seed ^ salt);
+        h % PPB < ppb
+    }
+
+    /// Is the correlated layer armed? (Gates the host-side health /
+    /// quarantine machinery so zero-burst runs build no tracker.)
+    #[inline]
+    pub(crate) fn burst_armed(&self) -> bool {
+        self.burst.is_some()
+    }
+
+    /// Correlated-layer state of an explicit domain id at instant `at`.
+    #[inline]
+    pub(crate) fn burst_state_dom(&self, dom: u64, at: Ps) -> BurstState {
+        match self.burst {
+            Some(b) => b.state(dom, at),
+            None => BurstState::Good,
+        }
+    }
+
+    /// Correlated-layer state of a channel-group kind's domain.
+    #[inline]
+    pub(crate) fn burst_state(&self, kind: GroupKind, at: Ps) -> BurstState {
+        match domain_of(kind) {
+            Some(d) => self.burst_state_dom(d, at),
+            None => BurstState::Good,
+        }
+    }
+
+    /// Fail-slow multiplier for `kind`'s domain at `at`, if in one.
+    #[inline]
+    pub(crate) fn burst_slow(&self, kind: GroupKind, at: Ps) -> Option<u64> {
+        match self.burst_state(kind, at) {
+            BurstState::Slow(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Is `kind`'s domain in a fail-stop window at `at`?
+    #[inline]
+    pub(crate) fn burst_stop(&self, kind: GroupKind, at: Ps) -> bool {
+        self.burst_state(kind, at) == BurstState::Stop
     }
 
     /// Not-ready first response on an extension-path demand read: the
@@ -112,14 +283,14 @@ impl FaultPlan {
     /// retry (or, on a non-twin mechanism, a modeled re-read delay).
     #[inline]
     pub fn not_ready(&self, line: u64, nth: u64) -> bool {
-        self.roll(self.rate_ppm, SALT_NOT_READY, line, nth)
+        self.roll(self.rate_ppb, SALT_NOT_READY, line, nth)
     }
 
     /// MEC prefetch-buffer fill fault for the `nth` tree fetch of `tag`.
     /// Late fills land `late_by` after the nominal fill time.
     #[inline]
     pub fn mec_fill(&self, tag: u64, nth: u64, late_by: Ps) -> FillFault {
-        if !self.roll(self.rate_ppm, SALT_MEC_FILL, tag, nth) {
+        if !self.roll(self.rate_ppb, SALT_MEC_FILL, tag, nth) {
             return FillFault::None;
         }
         if mix64(tag ^ nth ^ self.seed ^ SALT_MEC_KIND) & 1 == 0 {
@@ -134,7 +305,7 @@ impl FaultPlan {
     #[inline]
     pub fn notify_lost(&self, line: u64, nth: u64, attempt: u32) -> bool {
         self.roll(
-            self.rate_ppm,
+            self.rate_ppb,
             SALT_NOTIFY,
             line,
             nth.wrapping_mul(64).wrapping_add(attempt as u64),
@@ -144,14 +315,14 @@ impl FaultPlan {
     /// PCIe transfer failure on the `nth` swap of `page`.
     #[inline]
     pub fn pcie_fail(&self, page: u64, nth: u64) -> bool {
-        self.roll(self.rate_ppm, SALT_PCIE, page, nth)
+        self.roll(self.rate_ppb, SALT_PCIE, page, nth)
     }
 
     /// Transient bit error on a delivered beat; 1-in-8 faulted beats are
     /// multi-bit (detected, re-read), the rest correct in-line.
     #[inline]
     pub fn ecc(&self, line: u64, nth: u64) -> EccFault {
-        if !self.roll(self.ecc_ppm, SALT_ECC, line, nth) {
+        if !self.roll(self.ecc_ppb, SALT_ECC, line, nth) {
             return EccFault::None;
         }
         if mix64(line ^ nth ^ self.seed ^ SALT_ECC_KIND) & 7 == 0 {
@@ -191,8 +362,8 @@ impl FaultPlan {
     }
 }
 
-fn ppm(rate: f64) -> u64 {
-    (rate.clamp(0.0, 1.0) * 1_000_000.0).round() as u64
+fn ppb(rate: f64) -> u64 {
+    (rate.clamp(0.0, 1.0) * PPB as f64).round() as u64
 }
 
 /// Per-line occurrence counters backing the `nth` argument of every
@@ -224,6 +395,12 @@ pub struct FaultStats {
     /// Added latency of each fault recovery (retry redelivery, ECC
     /// re-read, AMU reissue loop, PCIe retransfer), in ps.
     pub recovery: Histogram,
+    /// Extension-domain demand accesses observed while a plan is armed
+    /// (the availability denominator).
+    pub ext_accesses: u64,
+    /// Of those, served degraded: an injected fault, a burst bad-state
+    /// window, or a quarantine demotion to the safe path.
+    pub degraded_accesses: u64,
 }
 
 impl FaultStats {
@@ -247,10 +424,127 @@ mod tests {
         FaultPlan::from_cfg(&cfg).expect("nonzero rates build a plan")
     }
 
+    fn bplan(rate: f64, len: Ps, mult: u64, seed: u64) -> FaultPlan {
+        let mut cfg = SystemConfig::tl_ooo();
+        cfg.burst_rate = rate;
+        cfg.burst_len = len;
+        cfg.burst_slow_mult = mult;
+        cfg.fault_seed = seed;
+        FaultPlan::from_cfg(&cfg).expect("nonzero burst rate builds a plan")
+    }
+
     #[test]
     fn zero_rates_build_no_plan() {
         let cfg = SystemConfig::tl_ooo();
         assert!(FaultPlan::from_cfg(&cfg).is_none());
+    }
+
+    #[test]
+    fn sub_ppm_rates_build_a_plan_and_inject() {
+        // Regression: the old parts-per-million grid rounded any rate
+        // below 5e-7 to zero, silently disabling injection.
+        let mut cfg = SystemConfig::tl_ooo();
+        cfg.fault_rate = 1e-7;
+        cfg.fault_seed = 42;
+        let p = FaultPlan::from_cfg(&cfg).expect("1e-7 must build a plan");
+        assert_eq!(p.rate_ppb, 100);
+        // Injects at roughly the configured rate: ~20 expected hits over
+        // 200M distinct lines (deterministic for this seed; the bounds
+        // leave ~5x slack either way so they hold for any seed short of
+        // astronomically unlucky).
+        let hits = (0..200_000_000u64).filter(|&l| p.not_ready(l * 64, 0)).count();
+        assert!(
+            (2..=100).contains(&hits),
+            "1e-7 rate gave {hits}/200M draws (expected ~20)"
+        );
+    }
+
+    #[test]
+    fn zero_burst_rate_builds_no_burst_layer() {
+        let p = plan(0.1, 0.0, 7);
+        assert!(!p.burst_armed());
+        assert_eq!(p.burst_state_dom(DOM_PCIE, 123 * NS), BurstState::Good);
+        assert_eq!(p.burst_state(GroupKind::ExtMec, 0), BurstState::Good);
+    }
+
+    #[test]
+    fn burst_rate_alone_builds_a_plan() {
+        let p = bplan(0.5, 1000 * NS, 8, 9);
+        assert!(p.burst_armed());
+        assert_eq!(p.rate_ppb, 0, "burst arming must not enable per-draw faults");
+        assert!(!p.not_ready(0x40, 0));
+    }
+
+    #[test]
+    fn burst_windows_are_deterministic_and_domain_split() {
+        let a = bplan(0.3, 1000 * NS, 4, 11);
+        let b = bplan(0.3, 1000 * NS, 4, 11);
+        let c = bplan(0.3, 1000 * NS, 4, 12);
+        let dom_a = domain_of(GroupKind::ExtMec).unwrap();
+        let dom_b = domain_of(GroupKind::ExtAmu).unwrap();
+        let (mut bad, mut seed_diff, mut dom_diff) = (0u32, 0u32, 0u32);
+        for w in 0..512u64 {
+            let at = w * 1000 * NS + 5;
+            let s = a.burst_state_dom(dom_a, at);
+            assert_eq!(s, b.burst_state_dom(dom_a, at));
+            if s != BurstState::Good {
+                bad += 1;
+            }
+            if s != c.burst_state_dom(dom_a, at) {
+                seed_diff += 1;
+            }
+            if s != a.burst_state_dom(dom_b, at) {
+                dom_diff += 1;
+            }
+        }
+        assert!(bad > 100, "30% start rate left only {bad}/512 bad windows");
+        assert!(bad < 500, "almost every window bad: {bad}/512");
+        assert!(seed_diff > 0, "seed change did not move the burst schedule");
+        assert!(dom_diff > 0, "domains share one burst schedule");
+    }
+
+    #[test]
+    fn burst_episodes_run_for_their_drawn_length() {
+        let p = bplan(0.05, 1000 * NS, 4, 3);
+        let b = p.burst.unwrap();
+        let dom = domain_of(GroupKind::ExtMec).unwrap();
+        let mut checked = 0;
+        for w in MAX_RUN_WINDOWS..2048u64 {
+            if !b.starts(dom, w) {
+                continue;
+            }
+            let run = b.run_len(dom, w);
+            assert!((1..=MAX_RUN_WINDOWS).contains(&run));
+            // Every window the run covers reports a bad state.
+            for j in 0..run {
+                let at = (w + j) * 1000 * NS;
+                assert_ne!(
+                    b.state(dom, at),
+                    BurstState::Good,
+                    "window {w}+{j} inside a run of {run} reads Good"
+                );
+            }
+            checked += 1;
+        }
+        assert!(checked > 10, "too few episodes to check: {checked}");
+    }
+
+    #[test]
+    fn burst_states_split_slow_and_stop() {
+        let p = bplan(0.25, 1000 * NS, 6, 21);
+        let dom = domain_of(GroupKind::ExtMims).unwrap();
+        let (mut slow, mut stop) = (0, 0);
+        for w in 0..2048u64 {
+            match p.burst_state_dom(dom, w * 1000 * NS) {
+                BurstState::Slow(m) => {
+                    assert_eq!(m, 6);
+                    slow += 1;
+                }
+                BurstState::Stop => stop += 1,
+                BurstState::Good => {}
+            }
+        }
+        assert!(slow > 50 && stop > 50, "slow={slow} stop={stop}");
     }
 
     #[test]

@@ -9,7 +9,10 @@
 
 use super::backend::{AmuStats, ChannelGroup, GroupKind, MimsStats, Router};
 use super::engine::{Ev, EventQueue};
-use super::fault::{EccFault, FaultCounters, FaultPlan, FaultStats, ECC_CORRECT_PS, ECC_REREAD_PS};
+use super::fault::{
+    domain_of, BurstState, EccFault, FaultCounters, FaultPlan, FaultStats, DOM_PCIE,
+    ECC_CORRECT_PS, ECC_REREAD_PS,
+};
 use super::report::SimReport;
 use crate::baselines::SwapOutcome;
 use crate::cache::{CacheConfig, DataKind, LookupResult, MshrFile, MshrOutcome, SetAssocCache, Tlb};
@@ -68,6 +71,170 @@ struct PendingTxn {
     line: u64,
 }
 
+/// EWMA weight of each new health observation (1/8: a retry storm of a
+/// few consecutive faulted accesses crosses any threshold below ~0.6,
+/// while isolated blips decay away within tens of accesses).
+const HEALTH_ALPHA: f64 = 0.125;
+
+/// Per-fault-domain host-side health state.
+struct DomainHealth {
+    /// EWMA of unhealthy-access outcomes in [0, 1].
+    score: f64,
+    /// First unhealthy observation of the current episode (MTTD anchor);
+    /// cleared once the score decays back below half the threshold.
+    bad_since: Option<Ps>,
+    /// Quarantine entry time; `Some` means currently quarantined.
+    quarantined_at: Option<Ps>,
+    /// Consecutive clean probe outcomes observed while quarantined.
+    probe_streak: u32,
+}
+
+/// Host-side online health detection and quarantine over fault domains.
+///
+/// One EWMA unhealthy score per domain (MEC chip, extension channel
+/// group, AMU/MIMS unit, PCIe link), fed by the per-access retry and
+/// recovery outcomes the host observes at delivery. When a score crosses
+/// `quarantine_threshold` the domain is quarantined: *all* its traffic is
+/// demoted to the §4.5 safe path (real data through the uncacheable
+/// mapping plus `safe_penalty`, no content check, no retry storm). While
+/// quarantined the tracker runs half-open probation — each access still
+/// evaluates its would-be fault outcome without applying it — and
+/// `probe_ok` consecutive clean probes re-admit the domain.
+///
+/// Built only when the burst layer is armed *and* the threshold is
+/// positive, so a `burst_rate = 0` run carries no tracker state at all.
+pub(crate) struct HealthTracker {
+    threshold: f64,
+    probe_ok: u32,
+    domains: FastMap<u64, DomainHealth>,
+    quarantines: u64,
+    readmits: u64,
+    /// Sum over quarantine events of (quarantine entry − first unhealthy
+    /// observation): total time-to-detect.
+    mttd_sum: Ps,
+    /// Sum over readmissions of the quarantine interval length.
+    mttr_sum: Ps,
+    /// Total time spent quarantined across closed intervals (open
+    /// intervals are added at report time).
+    degraded: Ps,
+}
+
+/// Finalized health/quarantine numbers for the report.
+#[derive(Debug, Default, Clone, Copy)]
+pub(crate) struct HealthTotals {
+    pub quarantines: u64,
+    pub readmits: u64,
+    /// Mean time-to-detect (first unhealthy observation → quarantine), ns.
+    pub mttd_ns: f64,
+    /// Mean time-to-repair (quarantine → readmission), ns.
+    pub mttr_ns: f64,
+    /// Total domain-time spent quarantined (degraded mode), ns.
+    pub degraded_ns: f64,
+}
+
+impl HealthTracker {
+    fn new(threshold: f64, probe_ok: u32) -> HealthTracker {
+        HealthTracker {
+            threshold,
+            probe_ok: probe_ok.max(1),
+            domains: FastMap::default(),
+            quarantines: 0,
+            readmits: 0,
+            mttd_sum: 0,
+            mttr_sum: 0,
+            degraded: 0,
+        }
+    }
+
+    /// Is the fault domain behind `kind` currently quarantined?
+    fn quarantined(&self, kind: GroupKind) -> bool {
+        domain_of(kind).is_some_and(|dom| {
+            self.domains.get(&dom).is_some_and(|d| d.quarantined_at.is_some())
+        })
+    }
+
+    /// Fold one delivery outcome into the domain score and run the
+    /// quarantine state machine. `at` is the service-completion instant
+    /// (`saturating_sub` everywhere: completion times are not monotone
+    /// across channels).
+    fn observe(&mut self, kind: GroupKind, unhealthy: bool, at: Ps) {
+        let Some(dom) = domain_of(kind) else { return };
+        self.observe_dom(dom, unhealthy, at);
+    }
+
+    fn observe_dom(&mut self, dom: u64, unhealthy: bool, at: Ps) {
+        let d = self.domains.entry(dom).or_insert(DomainHealth {
+            score: 0.0,
+            bad_since: None,
+            quarantined_at: None,
+            probe_streak: 0,
+        });
+        match d.quarantined_at {
+            Some(since) => {
+                // Half-open probation: the caller evaluated the would-be
+                // outcome without applying it.
+                if unhealthy {
+                    d.probe_streak = 0;
+                } else {
+                    d.probe_streak += 1;
+                    if d.probe_streak >= self.probe_ok {
+                        let held = at.saturating_sub(since);
+                        self.degraded += held;
+                        self.mttr_sum += held;
+                        self.readmits += 1;
+                        d.quarantined_at = None;
+                        d.probe_streak = 0;
+                        d.score = 0.0;
+                        d.bad_since = None;
+                    }
+                }
+            }
+            None => {
+                if unhealthy && d.bad_since.is_none() {
+                    d.bad_since = Some(at);
+                }
+                d.score += HEALTH_ALPHA * ((unhealthy as u8 as f64) - d.score);
+                if d.score >= self.threshold {
+                    self.mttd_sum += at.saturating_sub(d.bad_since.unwrap_or(at));
+                    self.quarantines += 1;
+                    d.quarantined_at = Some(at);
+                    d.probe_streak = 0;
+                } else if !unhealthy && d.score < 0.5 * self.threshold {
+                    // The episode decayed on its own: drop the MTTD
+                    // anchor so a later episode measures its own onset.
+                    d.bad_since = None;
+                }
+            }
+        }
+    }
+
+    /// Report-time totals; still-open quarantine intervals are closed at
+    /// `now` for the degraded-time figure (but don't count as repairs).
+    fn totals(&self, now: Ps) -> HealthTotals {
+        let mut degraded = self.degraded;
+        for d in self.domains.values() {
+            if let Some(since) = d.quarantined_at {
+                degraded += now.saturating_sub(since);
+            }
+        }
+        HealthTotals {
+            quarantines: self.quarantines,
+            readmits: self.readmits,
+            mttd_ns: if self.quarantines > 0 {
+                self.mttd_sum as f64 / self.quarantines as f64 / 1000.0
+            } else {
+                0.0
+            },
+            mttr_ns: if self.readmits > 0 {
+                self.mttr_sum as f64 / self.readmits as f64 / 1000.0
+            } else {
+                0.0
+            },
+            degraded_ns: degraded as f64 / 1000.0,
+        }
+    }
+}
+
 pub struct Platform {
     cfg: SystemConfig,
     spec: RunSpec,
@@ -99,6 +266,10 @@ pub struct Platform {
     /// Per-line occurrence counters for the fault draws.
     fault_seq: FaultCounters,
     fault_stats: FaultStats,
+    /// Online health detection and quarantine (armed only when the
+    /// correlated-fault burst layer is on and the threshold is positive,
+    /// so `burst_rate = 0` runs are bit-identical to builds without it).
+    health: Option<HealthTracker>,
     events: EventQueue,
     mlp: LevelMeter,
     now: Ps,
@@ -238,12 +409,24 @@ impl<'a> MemoryPort for Port<'a> {
                 if let SwapOutcome::Fault { swap_done, .. } = pcie.access(acc.vaddr, now) {
                     let mut xfer = swap_done - now;
                     if let Some(plan) = self.fault {
+                        let page = acc.vaddr & !0xFFF;
+                        let nth = self.fault_seq.next(page);
+                        self.fault_stats.ext_accesses += 1;
+                        // Correlated layer: a bad burst window on the
+                        // PCIe link domain stretches the DMA (fail-slow)
+                        // or force-drops it (fail-stop).
+                        let state = plan.burst_state_dom(DOM_PCIE, now);
+                        if let BurstState::Slow(mult) = state {
+                            xfer *= mult;
+                        }
                         // Injected DMA transfer failure: the completion
                         // timeout fires and the whole swap retransmits.
-                        let page = acc.vaddr & !0xFFF;
-                        if plan.pcie_fail(page, self.fault_seq.next(page)) {
+                        if state == BurstState::Stop || plan.pcie_fail(page, nth) {
                             self.fault_stats.record(xfer);
+                            self.fault_stats.degraded_accesses += 1;
                             xfer += xfer;
+                        } else if state != BurstState::Good {
+                            self.fault_stats.degraded_accesses += 1;
                         }
                     }
                     delay += xfer;
@@ -439,6 +622,12 @@ impl Platform {
             fault: FaultPlan::from_cfg(cfg),
             fault_seq: FaultCounters::default(),
             fault_stats: FaultStats::default(),
+            health: match FaultPlan::from_cfg(cfg) {
+                Some(p) if p.burst_armed() && cfg.quarantine_threshold > 0.0 => Some(
+                    HealthTracker::new(cfg.quarantine_threshold, cfg.probe_ok),
+                ),
+                _ => None,
+            },
             events,
             mlp: LevelMeter::new(),
             now: 0,
@@ -471,8 +660,9 @@ impl Platform {
         let mut arrive = arrive;
         if kind != GroupKind::Local {
             // Backend ingress: NUMA crosses the QPI link, the AMU queues
-            // the request; other mechanisms pass through unchanged.
-            arrive = self.router.ingress(kind, arrive);
+            // the request; other mechanisms pass through unchanged. A
+            // fail-slow burst window stretches whatever the hook added.
+            arrive = self.router.ingress_degraded(kind, arrive, self.fault.as_ref());
         }
         let (ch, ch_addr) = self.groups[gi].route(line);
         // Both front ends draw from the same submit counter: the slab
@@ -635,76 +825,133 @@ impl Platform {
                     continue;
                 };
                 let mut done = r.data_end + self.cfg.llc_lat; // fill path back up
-                // Backend egress: the NUMA return hop / AMU notify.
-                done += self.router.egress_delay(kind);
+                // Backend egress: the NUMA return hop / AMU notify; a
+                // fail-slow burst window stretches the whole fill path.
+                done += self.router.egress_degraded(
+                    kind,
+                    r.data_end,
+                    self.cfg.llc_lat,
+                    self.fault.as_ref(),
+                );
                 match p.core {
                     Some(core) => {
                         if kind != GroupKind::Local {
                             if let Some(plan) = self.fault {
                                 let nth = self.fault_seq.next(p.line);
-                                match kind {
-                                    // Not-ready first response: the line
-                                    // fails the §4.4 content check and the
-                                    // core pays a software retry (or, past
-                                    // the streak threshold, demotes to the
-                                    // §4.5 safe path).
-                                    // MIMS messages ride the same MEC'd
-                                    // channel and content check, so a
-                                    // not-ready response faults exactly
-                                    // like the synchronous twin-load path.
-                                    GroupKind::ExtMec | GroupKind::ExtMims => {
-                                        // First loads and shadow lines are
-                                        // already fake; flipping them would
-                                        // be a no-op fault.
-                                        if data == DataKind::Real
-                                            && plan.not_ready(p.line, nth)
-                                        {
-                                            data = DataKind::Fake;
-                                            self.fault_stats.record(self.cfg.core.retry_penalty);
+                                // Correlated layer: the burst window this
+                                // delivery falls in, on this kind's fault
+                                // domain. Fail-stop windows fault every
+                                // draw; fail-slow already stretched the
+                                // egress above.
+                                let state = plan.burst_state(kind, r.data_end);
+                                let stop = state == BurstState::Stop;
+                                let mut unhealthy = state != BurstState::Good;
+                                self.fault_stats.ext_accesses += 1;
+                                if self.health.as_ref().is_some_and(|h| h.quarantined(kind)) {
+                                    // Domain-level §4.5 demotion: the host
+                                    // stopped trusting this domain's twin
+                                    // protocol and serves through the
+                                    // uncacheable safe mapping — real data
+                                    // plus `safe_penalty`, no content
+                                    // check, no retry storm. Half-open
+                                    // probation still evaluates the
+                                    // would-be outcome (without applying
+                                    // it) so clean windows re-admit.
+                                    unhealthy |= stop
+                                        || match kind {
+                                            GroupKind::ExtMec | GroupKind::ExtMims => {
+                                                data == DataKind::Real
+                                                    && plan.not_ready(p.line, nth)
+                                            }
+                                            GroupKind::ExtRemote | GroupKind::ExtTrl => {
+                                                plan.not_ready(p.line, nth)
+                                            }
+                                            GroupKind::ExtAmu => {
+                                                plan.notify_lost(p.line, nth, 0)
+                                            }
+                                            GroupKind::Local => false,
+                                        };
+                                    data = DataKind::Real;
+                                    done += self.cfg.core.safe_penalty;
+                                    self.cores[core].core.note_quarantined_safe();
+                                    self.fault_stats.degraded_accesses += 1;
+                                } else {
+                                    let mut faulted = false;
+                                    match kind {
+                                        // Not-ready first response: the line
+                                        // fails the §4.4 content check and the
+                                        // core pays a software retry (or, past
+                                        // the streak threshold, demotes to the
+                                        // §4.5 safe path).
+                                        // MIMS messages ride the same MEC'd
+                                        // channel and content check, so a
+                                        // not-ready response faults exactly
+                                        // like the synchronous twin-load path.
+                                        GroupKind::ExtMec | GroupKind::ExtMims => {
+                                            // First loads and shadow lines are
+                                            // already fake; flipping them would
+                                            // be a no-op fault.
+                                            if data == DataKind::Real
+                                                && (stop || plan.not_ready(p.line, nth))
+                                            {
+                                                data = DataKind::Fake;
+                                                self.fault_stats.record(self.cfg.core.retry_penalty);
+                                                faulted = true;
+                                            }
+                                        }
+                                        // Non-twin links have no content check:
+                                        // a lost transfer is detected by the
+                                        // poll-timeout window and redelivered.
+                                        GroupKind::ExtRemote | GroupKind::ExtTrl => {
+                                            if stop || plan.not_ready(p.line, nth) {
+                                                done += self.cfg.fault_poll_timeout;
+                                                self.fault_stats.record(self.cfg.fault_poll_timeout);
+                                                faulted = true;
+                                            }
+                                        }
+                                        // Lost completion notify: software
+                                        // polls out the timeout and reissues
+                                        // with exponential backoff; the bounded
+                                        // final attempt always delivers.
+                                        GroupKind::ExtAmu => {
+                                            if stop || plan.notify_lost(p.line, nth, 0) {
+                                                let (rec, _) = plan.amu_recovery(
+                                                    p.line,
+                                                    nth,
+                                                    self.cfg.fault_poll_timeout,
+                                                    self.cfg.fault_reissue_max,
+                                                    self.cfg.fault_backoff_mult,
+                                                );
+                                                done += rec;
+                                                self.fault_stats.record(rec);
+                                                faulted = true;
+                                            }
+                                        }
+                                        GroupKind::Local => {}
+                                    }
+                                    // Transient bit errors on the returning
+                                    // beat: ECC corrects single-bit flips
+                                    // in-line; multi-bit detections force a
+                                    // controller re-read.
+                                    match plan.ecc(p.line, nth) {
+                                        EccFault::None => {}
+                                        EccFault::Corrected => {
+                                            self.fault_stats.ecc_corrected += 1;
+                                            done += ECC_CORRECT_PS;
+                                        }
+                                        EccFault::Detected => {
+                                            done += ECC_REREAD_PS;
+                                            self.fault_stats.record(ECC_REREAD_PS);
+                                            faulted = true;
                                         }
                                     }
-                                    // Non-twin links have no content check:
-                                    // a lost transfer is detected by the
-                                    // poll-timeout window and redelivered.
-                                    GroupKind::ExtRemote | GroupKind::ExtTrl => {
-                                        if plan.not_ready(p.line, nth) {
-                                            done += self.cfg.fault_poll_timeout;
-                                            self.fault_stats.record(self.cfg.fault_poll_timeout);
-                                        }
+                                    unhealthy |= faulted;
+                                    if unhealthy {
+                                        self.fault_stats.degraded_accesses += 1;
                                     }
-                                    // Lost completion notify: software
-                                    // polls out the timeout and reissues
-                                    // with exponential backoff; the bounded
-                                    // final attempt always delivers.
-                                    GroupKind::ExtAmu => {
-                                        if plan.notify_lost(p.line, nth, 0) {
-                                            let (rec, _) = plan.amu_recovery(
-                                                p.line,
-                                                nth,
-                                                self.cfg.fault_poll_timeout,
-                                                self.cfg.fault_reissue_max,
-                                                self.cfg.fault_backoff_mult,
-                                            );
-                                            done += rec;
-                                            self.fault_stats.record(rec);
-                                        }
-                                    }
-                                    GroupKind::Local => {}
                                 }
-                                // Transient bit errors on the returning
-                                // beat: ECC corrects single-bit flips
-                                // in-line; multi-bit detections force a
-                                // controller re-read.
-                                match plan.ecc(p.line, nth) {
-                                    EccFault::None => {}
-                                    EccFault::Corrected => {
-                                        self.fault_stats.ecc_corrected += 1;
-                                        done += ECC_CORRECT_PS;
-                                    }
-                                    EccFault::Detected => {
-                                        done += ECC_REREAD_PS;
-                                        self.fault_stats.record(ECC_REREAD_PS);
-                                    }
+                                if let Some(h) = self.health.as_mut() {
+                                    h.observe(kind, unhealthy, r.data_end);
                                 }
                             }
                         }
@@ -943,6 +1190,12 @@ impl Platform {
     /// counted by the chips; report.rs sums both).
     pub(crate) fn fault_stats(&self) -> &FaultStats {
         &self.fault_stats
+    }
+
+    /// Health/quarantine totals (zeros when the tracker isn't armed).
+    /// Still-open quarantine intervals are closed at the current time.
+    pub(crate) fn health_totals(&self) -> HealthTotals {
+        self.health.as_ref().map(|h| h.totals(self.now)).unwrap_or_default()
     }
 
     /// Channel-bus totals over every controller: (commands issued,

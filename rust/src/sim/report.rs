@@ -122,6 +122,35 @@ pub struct SimReport {
     pub recovery_p99: Ps,
     /// Maximum fault-recovery added latency (ps).
     pub recovery_max: Ps,
+    // Correlated fault domains + health/quarantine (all zero — and
+    // `availability` 1.0 — when no fault plan is armed).
+    /// Extended-memory deliveries (plus PCIe swap transfers) that passed
+    /// through an armed fault plan (count).
+    pub ext_accesses: u64,
+    /// Of those, accesses degraded by a burst window, a per-draw fault,
+    /// or quarantine-demoted service (count).
+    pub degraded_accesses: u64,
+    /// `1 − degraded_accesses / ext_accesses` (1.0 when no extended
+    /// accesses ran under an armed plan).
+    pub availability: f64,
+    /// Fault domains quarantined by the online health detector (count;
+    /// a domain re-entering quarantine counts again).
+    pub quarantines: u64,
+    /// Quarantined domains re-admitted after `probe_ok` clean probes
+    /// (count).
+    pub readmits: u64,
+    /// Accesses served via the safe path because their whole domain was
+    /// quarantined (count; subset of `safe_paths`).
+    pub quarantined_served: u64,
+    /// Mean time-to-detect: first unhealthy observation → quarantine
+    /// entry, averaged over quarantine events (ns).
+    pub mttd_ns: f64,
+    /// Mean time-to-repair: quarantine entry → readmission, averaged
+    /// over readmissions (ns).
+    pub mttr_ns: f64,
+    /// Total domain-time spent in quarantine (degraded mode), with any
+    /// still-open interval closed at run end (ns).
+    pub degraded_ns: f64,
     /// True if the watchdog tripped before all cores finished.
     pub deadlocked: bool,
     // Open-loop serving (all zero under `arrival = closed`).
@@ -208,6 +237,7 @@ impl SimReport {
             mec_fill_lates += m.stats.fill_lates;
         }
         let fault = p.fault_stats();
+        let health = p.health_totals();
         let serving = p.serving_totals();
         SimReport {
             mechanism: cfg.mechanism.name(),
@@ -260,6 +290,19 @@ impl SimReport {
             recovery_mean: fault.recovery.mean(),
             recovery_p99: fault.recovery.quantile(0.99),
             recovery_max: fault.recovery.max(),
+            ext_accesses: fault.ext_accesses,
+            degraded_accesses: fault.degraded_accesses,
+            availability: if fault.ext_accesses == 0 {
+                1.0
+            } else {
+                1.0 - fault.degraded_accesses as f64 / fault.ext_accesses as f64
+            },
+            quarantines: health.quarantines,
+            readmits: health.readmits,
+            quarantined_served: core_stats.iter().map(|s| s.quarantine_served).sum(),
+            mttd_ns: health.mttd_ns,
+            mttr_ns: health.mttr_ns,
+            degraded_ns: health.degraded_ns,
             deadlocked: p.deadlocked,
             arrived_requests: serving.arrived,
             served_requests: serving.served,
@@ -340,6 +383,22 @@ impl SimReport {
         } else {
             String::new()
         };
+        let health = if self.degraded_accesses > 0 || self.quarantines > 0 {
+            format!(
+                ", avail {:.4} ({}/{} degraded, quar {}/{} readm, mttd {:.0} ns, \
+                 mttr {:.0} ns, quar-served {})",
+                self.availability,
+                self.degraded_accesses,
+                self.ext_accesses,
+                self.quarantines,
+                self.readmits,
+                self.mttd_ns,
+                self.mttr_ns,
+                self.quarantined_served,
+            )
+        } else {
+            String::new()
+        };
         let mims = if self.mims_messages > 0 {
             format!(
                 ", mims {} msgs (pack {:.1}, {}/{} B)",
@@ -368,7 +427,7 @@ impl SimReport {
         };
         format!(
             "{}/{}: {:.3} ms, IPC {:.2}, LLC miss {}k, TLB miss {}k, BW {:.2} GB/s \
-             (bus {:.1}%), MLP {:.1}{}{}{}{}",
+             (bus {:.1}%), MLP {:.1}{}{}{}{}{}",
             self.mechanism,
             self.workload,
             self.runtime_ns() / 1e6,
@@ -379,6 +438,7 @@ impl SimReport {
             self.data_bus_util * 100.0,
             self.mlp_mean,
             fault,
+            health,
             mims,
             serving,
             if self.deadlocked { " [DEADLOCK]" } else { "" },

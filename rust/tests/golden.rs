@@ -59,7 +59,8 @@ fn render(r: &SimReport) -> String {
          cmds={} bus={:.6} amu_rq={} amu_stall={} amu_peak={} mims_msgs={} \
          mims_rq={} mims_db={} mims_qb={} faults={} storms={} \
          demoted={} ecc={} fdrops={} flates={} rec_p99={} arrived={} served={} \
-         dropped={} qmean={:.6} qpeak={} p50={} p99={} p999={}\n",
+         dropped={} qmean={:.6} qpeak={} p50={} p99={} p999={} ext_acc={} deg_acc={} \
+         avail={:.6} quar={} readm={} qsrv={} mttd={:.3} mttr={:.3} degns={:.3}\n",
         r.mechanism,
         r.workload,
         r.finish,
@@ -116,7 +117,27 @@ fn render(r: &SimReport) -> String {
         r.req_p50_ns,
         r.req_p99_ns,
         r.req_p999_ns,
+        r.ext_accesses,
+        r.degraded_accesses,
+        r.availability,
+        r.quarantines,
+        r.readmits,
+        r.quarantined_served,
+        r.mttd_ns,
+        r.mttr_ns,
+        r.degraded_ns,
     )
+}
+
+/// The correlated-burst variant used by the bursty corpus rows and the
+/// implementation-independence sweeps: a hot burst layer plus an armed
+/// quarantine, so the frozen lines exercise fail-slow stretching,
+/// fail-stop weaving, EWMA detection, and half-open readmission at once.
+fn bursty_quarantined(cfg: SystemConfig) -> SystemConfig {
+    let mut cfg = cfg.bursty(0.25);
+    cfg.quarantine_threshold = 0.5;
+    cfg.probe_ok = 4;
+    cfg
 }
 
 fn corpus() -> String {
@@ -163,6 +184,25 @@ fn corpus() -> String {
         spec.ops_per_core = 4_000;
         let r = run_spec(&cfg, &spec);
         assert!(!r.deadlocked, "{} deadlocked under faults", r.mechanism);
+        out.push_str(&render(&r));
+    }
+    // Bursty rows: every extension-path mechanism under the correlated
+    // Gilbert-Elliott burst layer with quarantine armed. These freeze
+    // the burst window schedule (fail-slow stretch factors, fail-stop
+    // windows), the EWMA health trajectory, and the quarantine/readmit
+    // arithmetic — a change to the burst salts, the window math, or the
+    // degraded-mode bookkeeping moves these rows even when the plain
+    // faulted rows above are untouched.
+    for cfg in mechanisms() {
+        if cfg.mechanism.name() == "ideal" {
+            continue; // no extension path, no fault domains
+        }
+        let mut cfg = bursty_quarantined(cfg);
+        cfg.cores = 2;
+        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+        spec.ops_per_core = 4_000;
+        let r = run_spec(&cfg, &spec);
+        assert!(!r.deadlocked, "{} deadlocked under bursts", r.mechanism);
         out.push_str(&render(&r));
     }
     // Open-loop serving rows: Poisson arrivals at a fixed offered load
@@ -240,14 +280,16 @@ fn golden_reports_match_snapshot() {
 #[test]
 fn golden_corpus_is_frontend_independent() {
     use twinload::cpu::FrontEnd;
-    // Fault-free and faulted: the injection schedule is keyed on
-    // (seed, line, occurrence), never on the request-tracking
-    // implementation, so the faulted rows are frontend-independent too.
-    for rate in [0.0, 0.05] {
-        let mut base = SystemConfig::tl_ooo();
-        if rate > 0.0 {
-            base = base.faulted(rate);
-        }
+    // Fault-free, faulted, and bursty: the injection schedule is keyed
+    // on (seed, line, occurrence) and the burst layer on (seed, domain,
+    // window), never on the request-tracking implementation, so the
+    // faulted and bursty rows are frontend-independent too.
+    for variant in ["clean", "faulted", "bursty"] {
+        let mut base = match variant {
+            "faulted" => SystemConfig::tl_ooo().faulted(0.05),
+            "bursty" => bursty_quarantined(SystemConfig::tl_ooo()),
+            _ => SystemConfig::tl_ooo(),
+        };
         base.cores = 2;
         let mut spec = RunSpec::smoke(WorkloadKind::Gups);
         spec.ops_per_core = 4_000;
@@ -261,7 +303,7 @@ fn golden_corpus_is_frontend_independent() {
         }
         assert_eq!(
             lines[0], lines[1],
-            "slab front end diverged from reference (rate {rate})"
+            "slab front end diverged from reference ({variant})"
         );
     }
 }
@@ -274,13 +316,17 @@ fn golden_corpus_is_frontend_independent() {
 #[test]
 fn golden_corpus_is_backend_independent() {
     use twinload::sim::Routing;
-    // Faulted as well: MEC fill faults are armed in `build_mecs`, which
-    // both routings share, and the platform sites key on the line — so
-    // the injection schedule cannot depend on the routing seam.
-    for rate in [0.0, 0.05] {
+    // Faulted and bursty as well: MEC fill faults are armed in
+    // `build_mecs`, which both routings share; the platform sites key
+    // on the line and the burst layer on (seed, domain, window) — so
+    // neither schedule can depend on the routing seam.
+    for variant in ["clean", "faulted", "bursty"] {
         for base in mechanisms() {
-            let base =
-                if rate > 0.0 { base.faulted(rate) } else { base };
+            let base = match variant {
+                "faulted" => base.faulted(0.05),
+                "bursty" => bursty_quarantined(base),
+                _ => base,
+            };
             let mut spec = RunSpec::smoke(WorkloadKind::Gups);
             spec.ops_per_core = 4_000;
             let mut lines = Vec::new();
@@ -294,7 +340,7 @@ fn golden_corpus_is_backend_independent() {
             }
             assert_eq!(
                 lines[0], lines[1],
-                "backend routing diverged from legacy for {} (rate {rate})",
+                "backend routing diverged from legacy for {} ({variant})",
                 base.mechanism.name()
             );
         }
@@ -340,14 +386,16 @@ fn golden_open_loop_rows_are_implementation_independent() {
 #[test]
 fn golden_corpus_is_engine_independent() {
     use twinload::sim::EngineKind;
-    // Faulted as well: per-line delivery order is engine-independent,
-    // so the per-line occurrence counters (and with them the entire
-    // fault schedule) must reproduce under every event engine.
-    for rate in [0.0, 0.05] {
-        let mut base = SystemConfig::tl_ooo();
-        if rate > 0.0 {
-            base = base.faulted(rate);
-        }
+    // Faulted and bursty as well: per-line delivery order is
+    // engine-independent, so the per-line occurrence counters and the
+    // virtual-time burst windows (and with them the entire fault
+    // schedule) must reproduce under every event engine.
+    for variant in ["clean", "faulted", "bursty"] {
+        let mut base = match variant {
+            "faulted" => SystemConfig::tl_ooo().faulted(0.05),
+            "bursty" => bursty_quarantined(SystemConfig::tl_ooo()),
+            _ => SystemConfig::tl_ooo(),
+        };
         base.cores = 2;
         let mut spec = RunSpec::smoke(WorkloadKind::Gups);
         spec.ops_per_core = 4_000;
@@ -362,11 +410,39 @@ fn golden_corpus_is_engine_independent() {
         }
         assert_eq!(
             lines[0], lines[1],
-            "adaptive calendar diverged from calendar (rate {rate})"
+            "adaptive calendar diverged from calendar ({variant})"
         );
         assert_eq!(
             lines[0], lines[2],
-            "reference heap diverged from calendar (rate {rate})"
+            "reference heap diverged from calendar ({variant})"
         );
     }
+}
+
+/// With `burst_rate = 0` no burst plan is built, so the quarantine
+/// knobs have nothing to observe: arming them must be bit-identical to
+/// leaving them off, even under plain per-access fault injection. This
+/// is the structural-inertness half of the acceptance bar — the other
+/// half (a zeroed run matching the pre-PR schedule) lives in the frozen
+/// faulted snapshot rows, which this PR must not move.
+#[test]
+fn golden_quarantine_knobs_without_bursts_are_inert() {
+    let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+    spec.ops_per_core = 4_000;
+    let mut lines = Vec::new();
+    for armed in [false, true] {
+        let mut cfg = SystemConfig::tl_ooo().faulted(0.05);
+        cfg.cores = 2;
+        if armed {
+            cfg.quarantine_threshold = 0.5;
+            cfg.probe_ok = 4;
+        }
+        let r = run_spec(&cfg, &spec);
+        assert!(!r.deadlocked);
+        lines.push(render(&r));
+    }
+    assert_eq!(
+        lines[0], lines[1],
+        "quarantine knobs perturbed a burst-free run"
+    );
 }

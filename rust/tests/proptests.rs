@@ -938,6 +938,26 @@ fn prop_chaos_faults_complete_exactly_once_and_zero_rate_is_inert() {
         let mut faulted = base.clone().faulted(rate);
         faulted.fault_seed = rng.next_u64();
         faulted.demote_after = 1 + rng.below(5) as u32;
+        // Correlated-fault arm: ~half the cases arm the Gilbert-Elliott
+        // burst layer on top of the per-draw rates (sometimes *instead*
+        // of them), and half of those arm the online health detector +
+        // quarantine. Exactly-once and cross-implementation bit-identity
+        // must survive fail-slow windows, fail-stop windows, and
+        // whole-domain safe-path demotion alike.
+        if rng.chance(0.5) {
+            faulted.burst_rate = (1 + rng.below(60)) as f64 / 100.0;
+            faulted.burst_len = (500 + rng.below(4_500)) * 1_000; // 0.5–5 µs
+            faulted.burst_slow_mult = 2 + rng.below(7);
+            if rng.chance(0.3) {
+                // Burst-only schedule: the per-draw rates off entirely.
+                faulted.fault_rate = 0.0;
+                faulted.fault_ecc_rate = 0.0;
+            }
+            if rng.chance(0.5) {
+                faulted.quarantine_threshold = (2 + rng.below(7)) as f64 / 10.0;
+                faulted.probe_ok = 1 + rng.below(16) as u32;
+            }
+        }
 
         let baseline = run_spec(&base, &spec);
         if baseline.deadlocked {
@@ -986,6 +1006,15 @@ fn prop_chaos_faults_complete_exactly_once_and_zero_rate_is_inert() {
                 r.req_p999_ns,
                 r.req_mean_ns.to_bits(),
                 r.queue_mean.to_bits(),
+                r.ext_accesses,
+                r.degraded_accesses,
+                r.availability.to_bits(),
+                r.quarantines,
+                r.readmits,
+                r.quarantined_served,
+                r.mttd_ns.to_bits(),
+                r.mttr_ns.to_bits(),
+                r.degraded_ns.to_bits(),
             ]
         };
 
@@ -1029,14 +1058,21 @@ fn prop_chaos_faults_complete_exactly_once_and_zero_rate_is_inert() {
 
         // Inertness: rates back to zero (demotion disarmed with them)
         // with every other fault knob still set must be bit-identical
-        // to the untouched config.
+        // to the untouched config. The burst rate joins the zeroing; the
+        // quarantine knobs deliberately stay armed — the health layer is
+        // gated on the burst layer, so a zero burst rate must keep a
+        // nonzero `quarantine_threshold` structurally inert too.
         let mut zeroed = faulted.clone();
         zeroed.fault_rate = 0.0;
         zeroed.fault_ecc_rate = 0.0;
+        zeroed.burst_rate = 0.0;
         zeroed.demote_after = 0;
         let z = run_spec(&zeroed, &spec);
         if z.faults_injected != 0 || z.ecc_corrected != 0 || z.demotions != 0 {
             return Err(format!("{mech}: zero-rate run still injected faults"));
+        }
+        if z.ext_accesses != 0 || z.degraded_accesses != 0 || z.quarantines != 0 {
+            return Err(format!("{mech}: zero-rate run still tracked fault domains"));
         }
         if fp(&z) != fp(&baseline) {
             return Err(format!(
@@ -1102,6 +1138,14 @@ fn prop_config_ini_round_trips_and_rejects() {
         let fault_poll_ns = 1 + rng.below(1_000);
         let fault_reissue = 1 + rng.below(8);
         let fault_backoff = 1 + rng.below(4);
+        // Correlated-fault / health-detector knobs (kept valid: nonzero
+        // window and multiplier, probe_ok ≥ 1).
+        let burst_rate = rng.below(100) as f64 / 100.0;
+        let burst_len_ns = 1 + rng.below(10_000);
+        let burst_slow_mult = 1 + rng.below(16);
+        let quarantine_threshold = rng.below(100) as f64 / 100.0;
+        let probe_ok = 1 + rng.below(32);
+        let slo_p99_us = 1 + rng.below(10_000);
 
         // Random decoration: spacing around '=', optional comments.
         let kv = |k: &str, v: String, rng: &mut twinload::util::Rng| {
@@ -1131,6 +1175,12 @@ fn prop_config_ini_round_trips_and_rejects() {
             kv("fault_poll_timeout_ns", fault_poll_ns.to_string(), rng),
             kv("fault_reissue_max", fault_reissue.to_string(), rng),
             kv("fault_backoff_mult", fault_backoff.to_string(), rng),
+            kv("burst_rate", burst_rate.to_string(), rng),
+            kv("burst_len_ns", burst_len_ns.to_string(), rng),
+            kv("burst_slow_mult", burst_slow_mult.to_string(), rng),
+            kv("quarantine_threshold", quarantine_threshold.to_string(), rng),
+            kv("probe_ok", probe_ok.to_string(), rng),
+            kv("slo_p99_us", slo_p99_us.to_string(), rng),
         ];
         rng.shuffle(&mut sys_keys);
         let mut run_keys = vec![
@@ -1210,6 +1260,18 @@ fn prop_config_ini_round_trips_and_rejects() {
             || cfg.fault_backoff_mult as u64 != fault_backoff
         {
             return Err("fault knob [system] key lost".into());
+        }
+        if cfg.burst_rate.to_bits() != burst_rate.to_bits()
+            || cfg.burst_len != burst_len_ns * 1_000
+            || cfg.burst_slow_mult != burst_slow_mult
+        {
+            return Err("burst [system] key lost".into());
+        }
+        if cfg.quarantine_threshold.to_bits() != quarantine_threshold.to_bits()
+            || cfg.probe_ok as u64 != probe_ok
+            || cfg.slo_p99_us != slo_p99_us
+        {
+            return Err("health [system] key lost".into());
         }
         if spec.workload != wl
             || spec.ops_per_core != ops
