@@ -230,13 +230,17 @@ fn main() {
         bench_cache(n_cache)
     });
 
-    // End-to-end simulator throughput, all three event engines per
-    // workload so the pair rule reads the win off the same run.
+    // End-to-end simulator throughput, all four event engines per
+    // workload so the pair rule reads the win off the same run (the
+    // sharded engine's gain only materializes on multi-core hosts with
+    // enough queued work; on a single-CPU runner it pumps serially and
+    // the pair rule's tolerance absorbs the dispatch overhead).
     let ops = 200_000u64 / scale;
     for (engine_tag, engine) in [
         (" [calendar]", EngineKind::Calendar),
         (" [adaptive]", EngineKind::AdaptiveCalendar),
         (" [ref-heap]", EngineKind::ReferenceHeap),
+        (" [sharded]", EngineKind::Sharded),
     ] {
         for (name, wl, cfg) in [
             ("sim ideal/gups", WorkloadKind::Gups, SystemConfig::ideal()),
@@ -253,6 +257,34 @@ fn main() {
                 bench_sim(wl, &cfg, ops);
             });
         }
+    }
+
+    // SMARTS-sampled rows: the same end-to-end sims with a 6.4%
+    // detailed fraction (128 of every 2000 ops). The speedup over the
+    // matching [calendar] rows is the sampling win the §Perf table
+    // reports; correctness of the estimate is covered by the physics
+    // integration test, not the bench.
+    for (name, wl, cfg) in [
+        ("sim ideal/gups [sampled]", WorkloadKind::Gups, SystemConfig::ideal()),
+        ("sim tl-ooo/gups [sampled]", WorkloadKind::Gups, SystemConfig::tl_ooo()),
+        ("sim tl-ooo/memcached [sampled]", WorkloadKind::Memcached, SystemConfig::tl_ooo()),
+        ("sim amu/gups [sampled]", WorkloadKind::Gups, SystemConfig::amu()),
+    ] {
+        let mut cfg = cfg;
+        cfg.cores = 4;
+        let total_ops = ops * cfg.cores as u64;
+        timeit(&mut rows, name, total_ops as f64, "logical-op", trials, || {
+            let spec = RunSpec {
+                workload: wl,
+                footprint: 32 << 20,
+                ops_per_core: ops,
+                seed: 5,
+                ..RunSpec::smoke(wl)
+            }
+            .sampled(2_000, 64, 64);
+            let r = run_spec(&cfg, &spec);
+            assert!(!r.deadlocked);
+        });
     }
 
     // Front-end pair: the slab issue/complete path vs the retained

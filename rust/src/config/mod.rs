@@ -413,6 +413,26 @@ pub struct RunSpec {
     /// it are dropped (the overload signal). Must be positive for
     /// open-loop runs.
     pub queue_depth: u32,
+    /// SMARTS sampling cadence in retired ops per core: each period
+    /// fast-forwards functionally, runs `sample_warmup` detailed ops,
+    /// then measures `sample_detail` ops. 0 = sampling off (every op
+    /// detailed — bit-identical to pre-sampling behaviour).
+    pub sample_period: u64,
+    /// Detailed-but-unmeasured ops at the head of each window (timing
+    /// state refill after the functional fast-forward).
+    pub sample_warmup: u64,
+    /// Measured ops per window; must be ≥ 1 when sampling is on, and
+    /// `sample_warmup + sample_detail` must fit in the period.
+    pub sample_detail: u64,
+    /// Seed of the window placement inside the period (decorrelated
+    /// from the workload and arrival seeds).
+    pub sample_seed: u64,
+    /// Upper bound on intra-sim pump shards for the `sharded` engine
+    /// (`usize::MAX` = bounded only by channels and host threads). The
+    /// sweep runner lowers it so sweep fan-out × per-sim shards cannot
+    /// oversubscribe the host. Sizes the worker pool only — it cannot
+    /// change simulated results.
+    pub shard_cap: usize,
 }
 
 impl RunSpec {
@@ -420,8 +440,15 @@ impl RunSpec {
     const CLOSED: (ArrivalKind, u64, f64, u64, u32) =
         (ArrivalKind::Closed, 0, 0.9, 0xA221_7A1, 64);
 
+    /// Sampling-off defaults shared by every constructor:
+    /// (period, warmup, detail, seed). The warmup/detail defaults only
+    /// take effect once a period is set (via the `sampled` builder, INI,
+    /// or CLI flags).
+    const UNSAMPLED: (u64, u64, u64, u64) = (0, 64, 64, 0x5A3D_11);
+
     fn with_defaults(workload: crate::workloads::WorkloadKind, footprint: u64, ops: u64, seed: u64) -> RunSpec {
         let (arrival, offered_rps, zipf_theta, arrival_seed, queue_depth) = Self::CLOSED;
+        let (sample_period, sample_warmup, sample_detail, sample_seed) = Self::UNSAMPLED;
         RunSpec {
             workload,
             footprint,
@@ -432,6 +459,11 @@ impl RunSpec {
             zipf_theta,
             arrival_seed,
             queue_depth,
+            sample_period,
+            sample_warmup,
+            sample_detail,
+            sample_seed,
+            shard_cap: usize::MAX,
         }
     }
 
@@ -453,6 +485,16 @@ impl RunSpec {
     pub fn open_loop(mut self, arrival: ArrivalKind, offered_rps: u64) -> RunSpec {
         self.arrival = arrival;
         self.offered_rps = offered_rps;
+        self
+    }
+
+    /// SMARTS-sampled variant: measure `detail` ops after `warmup`
+    /// detailed ops every `period` retired ops, fast-forwarding the
+    /// rest (keeps every other field, including the seeded placement).
+    pub fn sampled(mut self, period: u64, warmup: u64, detail: u64) -> RunSpec {
+        self.sample_period = period;
+        self.sample_warmup = warmup;
+        self.sample_detail = detail;
         self
     }
 }

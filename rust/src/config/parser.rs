@@ -231,6 +231,18 @@ pub fn apply(
                 "queue_depth" => {
                     spec.queue_depth = v.parse().map_err(|_| "bad queue_depth")?
                 }
+                "sample_period" => {
+                    spec.sample_period = v.parse().map_err(|_| "bad sample_period")?
+                }
+                "sample_warmup" => {
+                    spec.sample_warmup = v.parse().map_err(|_| "bad sample_warmup")?
+                }
+                "sample_detail" => {
+                    spec.sample_detail = v.parse().map_err(|_| "bad sample_detail")?
+                }
+                "sample_seed" => {
+                    spec.sample_seed = v.parse().map_err(|_| "bad sample_seed")?
+                }
                 other => return Err(format!("unknown [run] key '{other}'")),
             }
         }
@@ -423,6 +435,31 @@ mod tests {
             "[run]\nzipf_theta = skewed\n",
             "[run]\narrival_seed = -1\n",
             "[run]\nqueue_depth = deep\n",
+        ] {
+            let ini = Ini::parse(bad).unwrap();
+            assert!(apply(&ini, &mut cfg, &mut spec).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn sample_keys_configure_the_smarts_cadence() {
+        let ini = Ini::parse(
+            "[run]\nsample_period = 2000\nsample_warmup = 100\nsample_detail = 50\n\
+             sample_seed = 77\n",
+        )
+        .unwrap();
+        let mut cfg = SystemConfig::ideal();
+        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+        apply(&ini, &mut cfg, &mut spec).unwrap();
+        assert_eq!(spec.sample_period, 2000);
+        assert_eq!(spec.sample_warmup, 100);
+        assert_eq!(spec.sample_detail, 50);
+        assert_eq!(spec.sample_seed, 77);
+        for bad in [
+            "[run]\nsample_period = often\n",
+            "[run]\nsample_warmup = -3\n",
+            "[run]\nsample_detail = all\n",
+            "[run]\nsample_seed = x\n",
         ] {
             let ini = Ini::parse(bad).unwrap();
             assert!(apply(&ini, &mut cfg, &mut spec).is_err(), "accepted {bad}");

@@ -974,7 +974,7 @@ pub fn ablate_degrade(scale: &Scale) -> Result<Table> {
 /// throughput alone hides latency collapse near saturation. Failed jobs
 /// surface as FAILED rows (continue-on-error), mirroring
 /// [`ablate_faults`].
-pub fn serve(scale: &Scale, slo_p99_us: u64) -> Result<Table> {
+pub fn serve(scale: &Scale, slo_p99_us: u64, sampled: bool) -> Result<Table> {
     // One memcached request lowers to ~8 logical ops, so a geometric
     // ladder from 0.5M to 32M req/s spans clearly-under-loaded to
     // clearly-saturated for every mechanism at these core counts.
@@ -988,12 +988,15 @@ pub fn serve(scale: &Scale, slo_p99_us: u64) -> Result<Table> {
     for mech in mechs {
         for &rps in offered {
             let c = preset(mech)?;
-            jobs.push((
-                scale.cfg(c),
-                scale
-                    .spec(WorkloadKind::Memcached, scale.medium)
-                    .open_loop(ArrivalKind::Poisson, rps),
-            ));
+            let mut spec = scale
+                .spec(WorkloadKind::Memcached, scale.medium)
+                .open_loop(ArrivalKind::Poisson, rps);
+            if sampled {
+                // SMARTS cadence: 1/16 of ops in a detailed window, the
+                // same fraction warming up, the rest fast-forwarded.
+                spec = spec.sampled(1024, 64, 64);
+            }
+            jobs.push((scale.cfg(c), spec));
         }
     }
     let outcomes = try_run_parallel(&jobs, scale.threads);
@@ -1241,7 +1244,7 @@ mod tests {
             threads: 2,
             quick: true,
         };
-        let t = serve(&scale, 500).unwrap();
+        let t = serve(&scale, 500, false).unwrap();
         // 6 mechanisms × (3 offered points + knee + slo-knee rows).
         assert_eq!(t.num_rows(), 6 * 5);
         let csv = t.to_csv();

@@ -1,10 +1,10 @@
 //! Parallel simulation fan-out.
 
 use crate::config::{RunSpec, SystemConfig};
-use crate::sim::{try_run_spec, SimReport};
+use crate::sim::{shard, try_run_spec, SimReport};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 
 /// One sweep job that could not produce a report: the typed error (or
 /// captured panic message) plus enough identity to name the job in
@@ -39,6 +39,10 @@ pub fn try_run_parallel(
     threads: usize,
 ) -> Vec<Result<SimReport, JobError>> {
     let threads = threads.max(1).min(jobs.len().max(1));
+    // Thread-budget guard: with `threads` sweep workers each allowed to
+    // open an intra-sim shard pool, the product must not oversubscribe
+    // the host — lower every job's shard cap to the per-sim budget.
+    let budget = shard::shard_budget(host_threads(), threads);
     let next = AtomicUsize::new(0);
     type Slot = Option<Result<SimReport, JobError>>;
     let results: Mutex<Vec<Slot>> = Mutex::new(vec![None; jobs.len()]);
@@ -50,10 +54,13 @@ pub fn try_run_parallel(
                     break;
                 }
                 let (cfg, spec) = &jobs[i];
+                let spec = capped_spec(spec, budget);
                 // Workers never panic across the lock: build/run errors
                 // become typed results, and any residual panic is caught
-                // here — the mutex cannot be poisoned by a failed job.
-                let outcome = catch_unwind(AssertUnwindSafe(|| try_run_spec(cfg, spec)))
+                // here. Should one slip through anyway (e.g. a panic in
+                // a Drop while the slot is held), the write-back path
+                // recovers the data instead of unwrapping the poison.
+                let outcome = catch_unwind(AssertUnwindSafe(|| try_run_spec(cfg, &spec)))
                     .unwrap_or_else(|p| Err(anyhow::anyhow!("{}", panic_message(&p))))
                     .map_err(|e| JobError {
                         index: i,
@@ -61,16 +68,57 @@ pub fn try_run_parallel(
                         workload: spec.workload.name(),
                         message: format!("{e:#}"),
                     });
-                results.lock().unwrap()[i] = Some(outcome);
+                lock_slots(&results)[i] = Some(outcome);
             });
         }
     });
-    results
-        .into_inner()
-        .unwrap()
+    let slots = results.into_inner().unwrap_or_else(PoisonError::into_inner);
+    slots
         .into_iter()
-        .map(|r| r.expect("job not completed"))
+        .enumerate()
+        .map(|(i, slot)| finish_slot(i, jobs, slot))
         .collect()
+}
+
+/// Poison-recovering lock on the shared result slots: a mutex poisoned
+/// by a worker that died mid-write still hands back the data (each slot
+/// is a single `Option` assignment, so partially-written state is not a
+/// concern — the slot is either the old value or the new one).
+fn lock_slots<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Resolve one result slot. A vacant slot means the worker that claimed
+/// job `i` terminated without writing back (it died outside the
+/// `catch_unwind` envelope); that job failed, not the whole sweep, so
+/// it becomes a typed [`JobError`] in its own slot.
+fn finish_slot(
+    i: usize,
+    jobs: &[(SystemConfig, RunSpec)],
+    slot: Option<Result<SimReport, JobError>>,
+) -> Result<SimReport, JobError> {
+    slot.unwrap_or_else(|| {
+        let (cfg, spec) = &jobs[i];
+        Err(JobError {
+            index: i,
+            mechanism: cfg.mechanism.name(),
+            workload: spec.workload.name(),
+            message: "worker terminated before completing job".to_string(),
+        })
+    })
+}
+
+/// A job spec with its shard cap lowered to the sweep's per-sim budget
+/// (an explicitly tighter cap on the spec is kept — never raised).
+fn capped_spec(spec: &RunSpec, budget: usize) -> RunSpec {
+    let mut s = *spec;
+    s.shard_cap = s.shard_cap.min(budget);
+    s
+}
+
+/// Hardware threads available to the whole process (≥ 1).
+fn host_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
 fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
@@ -189,6 +237,76 @@ mod tests {
             assert_eq!(a.llc_misses, b.llc_misses, "{} diverged", a.mechanism);
             assert_eq!(a.dram_reads, b.dram_reads, "{} diverged", a.mechanism);
         }
+    }
+
+    #[test]
+    fn vacant_slot_becomes_a_typed_job_error() {
+        // Regression: a worker that dies without writing its slot back
+        // (formerly `.expect("job not completed")`, a sweep-wide panic)
+        // must surface as a JobError naming the job, not tear down the
+        // collection of every other result.
+        let mut cfg = SystemConfig::ideal();
+        cfg.cores = 1;
+        let spec = RunSpec::smoke(WorkloadKind::Gups);
+        let jobs = vec![(cfg, spec)];
+        let err = finish_slot(0, &jobs, None).err().expect("vacant slot must be an error");
+        assert_eq!(err.index, 0);
+        assert_eq!(err.mechanism, "ideal");
+        assert_eq!(err.workload, "gups");
+        assert!(err.message.contains("terminated"), "{}", err.message);
+        // A filled slot passes through untouched.
+        let ok = finish_slot(
+            0,
+            &jobs,
+            Some(Err(JobError {
+                index: 0,
+                mechanism: "ideal",
+                workload: "gups",
+                message: "x".into(),
+            })),
+        );
+        assert_eq!(ok.err().unwrap().message, "x");
+    }
+
+    #[test]
+    fn poisoned_result_mutex_is_recovered_not_propagated() {
+        // Regression for the `results.lock().unwrap()` panic path: a
+        // mutex poisoned by one worker must still yield its data.
+        let m = Mutex::new(vec![0usize; 2]);
+        let _ = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let _guard = m.lock().unwrap();
+            panic!("poison the lock");
+        }));
+        assert!(m.is_poisoned());
+        lock_slots(&m)[1] = 7;
+        assert_eq!(lock_slots(&m)[1], 7);
+    }
+
+    #[test]
+    fn sweep_caps_shard_fanout_within_the_thread_budget() {
+        // The budget guard must hold `per-sim shards × sweep threads`
+        // within the host budget, never raise an explicitly tighter
+        // cap, and never push a cap below 1.
+        let spec = RunSpec::smoke(WorkloadKind::Gups);
+        assert_eq!(spec.shard_cap, usize::MAX, "default spec is host-bounded only");
+        for host in 1..=32usize {
+            for sweep in 1..=8usize {
+                let budget = shard::shard_budget(host, sweep);
+                let capped = capped_spec(&spec, budget);
+                assert!(capped.shard_cap >= 1);
+                if capped.shard_cap > 1 {
+                    assert!(
+                        capped.shard_cap * sweep <= host,
+                        "host={host} sweep={sweep} cap={} oversubscribes",
+                        capped.shard_cap
+                    );
+                }
+            }
+        }
+        let mut tight = spec;
+        tight.shard_cap = 2;
+        assert_eq!(capped_spec(&tight, 8).shard_cap, 2, "tighter caps are kept");
+        assert_eq!(capped_spec(&tight, 1).shard_cap, 1, "budget still wins when lower");
     }
 
     #[test]

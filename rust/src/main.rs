@@ -55,6 +55,10 @@ const VALUE_FLAGS: &[&str] = &[
     "zipf-theta",
     "arrival-seed",
     "queue-depth",
+    "sample-period",
+    "sample-warmup",
+    "sample-detail",
+    "sample-seed",
 ];
 
 fn main() {
@@ -87,7 +91,7 @@ fn print_usage() {
          \n\
          twinload run --mechanism tl-ooo --workload gups [--ops N] [--cores C]\n\
          \x20            [--footprint-mb M] [--seed S] [--config file.ini]\n\
-         \x20            [--engine calendar|adaptive-calendar|reference-heap]\n\
+         \x20            [--engine calendar|adaptive-calendar|reference-heap|sharded]\n\
          \x20            [--sched bank-indexed|rank-inval|reference-scan]\n\
          \x20            [--frontend slab|reference] [--routing backend|legacy]\n\
          \x20            [--amu-depth N] [--amu-issue-ns N] [--amu-notify-ns N]\n\
@@ -100,10 +104,12 @@ fn print_usage() {
          \x20            [--quarantine-threshold F] [--probe-ok N] [--slo-p99-us N]\n\
          \x20            [--arrival closed|poisson|mmpp] [--offered-rps N]\n\
          \x20            [--zipf-theta F] [--arrival-seed S] [--queue-depth N]\n\
+         \x20            [--sample-period N] [--sample-warmup N] [--sample-detail N]\n\
+         \x20            [--sample-seed S]\n\
          twinload repro <table1|table2|table3|table4|table5|fig7|fig8|fig9|\n\
          \x20            fig10|fig11|fig12|fig13|fig14|fig15|all> [--quick] [--csv-dir DIR]\n\
          twinload ablate <lvc|layers|batch|scm|smt|amu|mims|faults|degrade> [--quick]\n\
-         twinload serve [--quick] [--slo-p99-us N] [--csv-dir DIR]\n\
+         twinload serve [--quick] [--sampled] [--slo-p99-us N] [--csv-dir DIR]\n\
          twinload validate\n\
          twinload list"
     );
@@ -191,6 +197,10 @@ fn cmd_run(args: &Args) -> i32 {
     flag!("offered-rps", |v| spec.offered_rps = v);
     flag!("arrival-seed", |v| spec.arrival_seed = v);
     flag!("queue-depth", |v| spec.queue_depth = v as u32);
+    flag!("sample-period", |v| spec.sample_period = v);
+    flag!("sample-warmup", |v| spec.sample_warmup = v);
+    flag!("sample-detail", |v| spec.sample_detail = v);
+    flag!("sample-seed", |v| spec.sample_seed = v);
     if let Ok(Some(f)) = args.get_f64("zipf-theta") {
         spec.zipf_theta = f;
     }
@@ -218,7 +228,9 @@ fn cmd_run(args: &Args) -> i32 {
     }
     if let Some(name) = args.get("engine") {
         let Some(kind) = twinload::sim::engine::EngineKind::by_name(name) else {
-            eprintln!("unknown engine '{name}' (calendar | adaptive-calendar | reference-heap)");
+            eprintln!(
+                "unknown engine '{name}' (calendar | adaptive-calendar | reference-heap | sharded)"
+            );
             return 2;
         };
         cfg.engine = kind;
@@ -340,6 +352,19 @@ fn cmd_run(args: &Args) -> i32 {
             report.mttd_ns,
             report.mttr_ns,
             report.degraded_ns,
+        );
+    }
+    if report.sample_windows > 0 {
+        println!(
+            "  sampled       {:>12} windows ({} detailed ops)\n  \
+             ns/op         {:>9.2} ± {:.2} (95% CI)\n  \
+             sampled IPC   {:>9.3} ± {:.3} (95% CI)",
+            report.sample_windows,
+            report.sample_detailed_ops,
+            report.sample_ns_per_op_mean,
+            report.sample_ci_ns_per_op,
+            report.sample_ipc_mean,
+            report.sample_ci_ipc,
         );
     }
     println!(
@@ -484,7 +509,7 @@ fn cmd_serve(args: &Args) -> i32 {
             return 2;
         }
     };
-    match exp::serve(&scale, slo) {
+    match exp::serve(&scale, slo, args.has("sampled")) {
         Ok(t) => emit(t, csv, "serve"),
         Err(e) => {
             eprintln!("error: {e:#}");

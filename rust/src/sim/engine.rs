@@ -73,6 +73,14 @@ pub enum EngineKind {
     /// The original binary-heap engine, retained as the differential
     /// oracle. Identical pop order.
     ReferenceHeap,
+    /// Calendar queue plus conservative-parallel controller pumping:
+    /// the platform partitions its channel groups into worker shards
+    /// (`sim/shard.rs`) that pump concurrently inside the lookahead
+    /// window bounded by the minimum cross-shard latency, then applies
+    /// their results serially in deterministic group order. Pop order
+    /// and every `SimReport` are bit-identical to `Calendar` by
+    /// construction (the `sharded-equivalence` proptest proves it).
+    Sharded,
 }
 
 impl EngineKind {
@@ -81,6 +89,7 @@ impl EngineKind {
             EngineKind::Calendar => "calendar",
             EngineKind::AdaptiveCalendar => "adaptive-calendar",
             EngineKind::ReferenceHeap => "reference-heap",
+            EngineKind::Sharded => "sharded",
         }
     }
 
@@ -89,6 +98,7 @@ impl EngineKind {
             "calendar" => Some(EngineKind::Calendar),
             "adaptive-calendar" | "adaptive" => Some(EngineKind::AdaptiveCalendar),
             "reference-heap" | "ref-heap" | "heap" => Some(EngineKind::ReferenceHeap),
+            "sharded" => Some(EngineKind::Sharded),
             _ => None,
         }
     }
@@ -410,6 +420,10 @@ enum Imp {
 #[derive(Debug)]
 pub struct EventQueue {
     imp: Imp,
+    /// The kind requested at construction. Stored rather than derived
+    /// from `imp` because `Sharded` shares the fixed calendar storage:
+    /// the sharding lives in how the platform *pumps*, not in pop order.
+    kind: EngineKind,
     next_seq: u64,
     len: usize,
     peak_len: usize,
@@ -433,19 +447,19 @@ impl EventQueue {
     /// heap, refined at runtime by the adaptive calendar).
     pub fn with_kind(kind: EngineKind, tick: Ps) -> EventQueue {
         let imp = match kind {
-            EngineKind::Calendar => Imp::Calendar(Calendar::new(tick, false)),
+            // Sharded reuses the fixed calendar storage: parallelism
+            // happens in the platform's pump phase, not in the queue.
+            EngineKind::Calendar | EngineKind::Sharded => {
+                Imp::Calendar(Calendar::new(tick, false))
+            }
             EngineKind::AdaptiveCalendar => Imp::Calendar(Calendar::new(tick, true)),
             EngineKind::ReferenceHeap => Imp::Heap(BinaryHeap::with_capacity(1024)),
         };
-        EventQueue { imp, next_seq: 0, len: 0, peak_len: 0, pushed: 0 }
+        EventQueue { imp, kind, next_seq: 0, len: 0, peak_len: 0, pushed: 0 }
     }
 
     pub fn kind(&self) -> EngineKind {
-        match &self.imp {
-            Imp::Heap(_) => EngineKind::ReferenceHeap,
-            Imp::Calendar(c) if c.adaptive => EngineKind::AdaptiveCalendar,
-            Imp::Calendar(_) => EngineKind::Calendar,
-        }
+        self.kind
     }
 
     pub fn push(&mut self, t: Ps, ev: Ev) {
@@ -505,11 +519,12 @@ impl EventQueue {
 mod tests {
     use super::*;
 
-    fn both() -> [EventQueue; 3] {
+    fn both() -> [EventQueue; 4] {
         [
             EventQueue::with_kind(EngineKind::Calendar, CYCLE_800MHZ),
             EventQueue::with_kind(EngineKind::AdaptiveCalendar, CYCLE_800MHZ),
             EventQueue::with_kind(EngineKind::ReferenceHeap, 0),
+            EventQueue::with_kind(EngineKind::Sharded, CYCLE_800MHZ),
         ]
     }
 
@@ -602,14 +617,34 @@ mod tests {
 
     #[test]
     fn engine_kind_names_round_trip() {
-        for kind in
-            [EngineKind::Calendar, EngineKind::AdaptiveCalendar, EngineKind::ReferenceHeap]
-        {
+        for kind in [
+            EngineKind::Calendar,
+            EngineKind::AdaptiveCalendar,
+            EngineKind::ReferenceHeap,
+            EngineKind::Sharded,
+        ] {
             assert_eq!(EngineKind::by_name(kind.name()), Some(kind));
         }
         assert_eq!(EngineKind::by_name("ref-heap"), Some(EngineKind::ReferenceHeap));
         assert_eq!(EngineKind::by_name("adaptive"), Some(EngineKind::AdaptiveCalendar));
         assert!(EngineKind::by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn sharded_queue_reports_its_kind_and_shares_calendar_storage() {
+        // `Sharded` differs from `Calendar` only in how the platform
+        // pumps; the queue itself must behave exactly like the fixed
+        // calendar while still reporting its requested kind.
+        let mut q = EventQueue::with_kind(EngineKind::Sharded, CYCLE_800MHZ);
+        assert_eq!(q.kind(), EngineKind::Sharded);
+        assert_eq!(q.stats().kind, EngineKind::Sharded);
+        assert_eq!(q.stats().width, CYCLE_800MHZ);
+        q.push(7_800_000, Ev::Pump { group: 1 });
+        q.push(100, Ev::CoreWake { core: 0 });
+        assert!(q.stats().overflow_pushes >= 1, "calendar overflow path not shared");
+        assert_eq!(q.stats().resamples, 0, "sharded must use the fixed-width calendar");
+        let order: Vec<Ps> = std::iter::from_fn(|| q.pop().map(|e| e.t)).collect();
+        assert_eq!(order, vec![100, 7_800_000]);
     }
 
     #[test]

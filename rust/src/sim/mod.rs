@@ -10,6 +10,8 @@ pub mod engine;
 pub mod fault;
 pub mod platform;
 pub mod report;
+pub mod sample;
+pub mod shard;
 
 pub use backend::Routing;
 pub use fault::FaultPlan;

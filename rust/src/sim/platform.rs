@@ -8,12 +8,14 @@
 //! observation and egress on service, plus read-only stat accessors.
 
 use super::backend::{AmuStats, ChannelGroup, GroupKind, MimsStats, Router};
-use super::engine::{Ev, EventQueue};
+use super::engine::{EngineKind, Ev, EventQueue};
 use super::fault::{
     domain_of, BurstState, EccFault, FaultCounters, FaultPlan, FaultStats, DOM_PCIE,
     ECC_CORRECT_PS, ECC_REREAD_PS,
 };
 use super::report::SimReport;
+use super::sample::Sampler;
+use super::shard::{self, PumpJob, ShardPool};
 use crate::baselines::SwapOutcome;
 use crate::cache::{CacheConfig, DataKind, LookupResult, MshrFile, MshrOutcome, SetAssocCache, Tlb};
 use crate::config::{RunSpec, SystemConfig};
@@ -61,6 +63,8 @@ struct CoreBundle {
     /// real L2 prefetchers track): (last line, run length, lru stamp).
     streams: [(u64, u32, u64); 8],
     stream_clock: u64,
+    /// SMARTS sampling state machine (`None` = every op runs detailed).
+    sampler: Option<Sampler>,
 }
 
 /// A read transaction in flight at a controller.
@@ -256,9 +260,17 @@ pub struct Platform {
     /// exact same order.
     txns: TagSlab<PendingTxn>,
     next_txn: u64,
-    /// Reusable service-result buffer for controller pumps (the pump hot
-    /// loop appends into it instead of allocating a Vec per call).
-    svc_buf: Vec<ServiceResult>,
+    /// Reusable per-channel service-result buffers for the two-phase
+    /// pump (sized to the widest group; each channel appends into its
+    /// own slot so phase 1 can run the channels in parallel).
+    pump_bufs: Vec<Vec<ServiceResult>>,
+    /// Per-channel wake times produced by phase 1.
+    pump_wakes: Vec<Option<Ps>>,
+    /// Worker shards for `EngineKind::Sharded` (`None` = serial phase 1:
+    /// other engines, single-CPU hosts, or an exhausted thread budget).
+    shards: Option<ShardPool>,
+    /// Pump batches that actually ran on the shard pool (diagnostics).
+    parallel_pumps: u64,
     /// Deterministic fault schedule (`None` = injection fully disabled;
     /// every injection site below is gated on it, so a zero-rate run is
     /// bit-identical to a build without this subsystem).
@@ -308,12 +320,24 @@ struct Port<'a> {
     fault: Option<FaultPlan>,
     fault_seq: &'a mut FaultCounters,
     fault_stats: &'a mut FaultStats,
+    /// SMARTS fast-forward: serve every access from the content model at
+    /// a cheap constant latency instead of the detailed machinery.
+    functional: bool,
 }
 
 /// Stride prefetch degree (lines fetched ahead once a stream is seen).
 const PREFETCH_DEGREE: u64 = 4;
 /// Misses in sequence before the prefetcher engages.
 const PREFETCH_TRAIN: u32 = 2;
+/// Latency of a functional-mode miss (SMARTS fast-forward): a flat
+/// figure between the LLC and DRAM costs, cheap to compute but still
+/// pacing the core enough that open-loop queues drain plausibly.
+const FUNCTIONAL_MISS_PS: Ps = 60_000;
+/// Queued transactions (across a group's channels) below which a
+/// sharded pump runs serially: dispatching to the pool costs two lock
+/// round-trips, which only pays off once the per-channel pumps have
+/// real scheduling work to do.
+const SHARD_MIN_QUEUED: usize = 8;
 
 impl<'a> Port<'a> {
     /// Register a miss waiter for `line`; returns the request handle the
@@ -364,6 +388,26 @@ impl<'a> MemoryPort for Port<'a> {
         }
         let is_store = acc.kind == AccessKind::Store;
         let line = acc.vaddr & !63;
+
+        if self.functional {
+            // SMARTS fast-forward: keep the content model warm (TLB,
+            // cache tags, residency) at a constant cheap latency and
+            // bypass the MSHR/DRAM/backend machinery entirely. Dropped
+            // dirty evictions are deliberate — functional mode maintains
+            // state, not timing, and the next detailed window rebuilds
+            // timing state during its warmup.
+            self.tlb.access(acc.vaddr);
+            if let LookupResult::Hit(d) = self.l1.access(line, is_store) {
+                return IssueResult::Done { at: now + self.cfg.l1_lat, data: d };
+            }
+            if let LookupResult::Hit(d) = self.llc.access(line, false) {
+                let _ = self.l1.fill(line, is_store, d);
+                return IssueResult::Done { at: now + self.cfg.llc_lat, data: d };
+            }
+            let _ = self.llc.fill(line, false, DataKind::Real);
+            let _ = self.l1.fill(line, is_store, DataKind::Real);
+            return IssueResult::Done { at: now + FUNCTIONAL_MISS_PS, data: DataKind::Real };
+        }
 
         // Stall check first, against *probes* only: a stalled op will be
         // re-issued, and hardware does not recount TLB/cache accesses for
@@ -550,6 +594,20 @@ impl Platform {
         if !(0.0..1.0).contains(&spec.zipf_theta) {
             bail!("zipf_theta must be in [0, 1), got {}", spec.zipf_theta);
         }
+        // Sampling-knob validation (SMARTS cadence; period 0 = off).
+        if spec.sample_period > 0 {
+            if spec.sample_detail == 0 {
+                bail!("sample_period > 0 requires sample_detail >= 1");
+            }
+            if spec.sample_warmup + spec.sample_detail > spec.sample_period {
+                bail!(
+                    "sample window does not fit: sample_warmup {} + sample_detail {} > sample_period {}",
+                    spec.sample_warmup,
+                    spec.sample_detail,
+                    spec.sample_period
+                );
+            }
+        }
         let mut tp = cfg.core;
         tp.rob_size = (tp.rob_size / smt).max(16);
         tp.demote_after = cfg.demote_after;
@@ -598,6 +656,18 @@ impl Platform {
                     walker_free: 0,
                     streams: [(u64::MAX, 0, 0); 8],
                     stream_clock: 0,
+                    // The cadence parameters (including the seeded
+                    // window offset) are identical across cores, so
+                    // every core measures the same op ranges.
+                    sampler: (spec.sample_period > 0).then(|| {
+                        Sampler::new(
+                            spec.sample_period,
+                            spec.sample_warmup,
+                            spec.sample_detail,
+                            spec.sample_seed,
+                            cfg.core.period,
+                        )
+                    }),
                 }
             })
             .collect();
@@ -606,6 +676,19 @@ impl Platform {
         for i in 0..hw_threads {
             events.push(0, Ev::CoreWake { core: i });
         }
+
+        // Shard pool for the parallel engine: one slot per channel of
+        // the widest group, capped by the sweep-level thread budget and
+        // the host. A plan of 1 (single-CPU host, exhausted budget, or a
+        // one-channel platform) keeps `Sharded` selectable but pumps
+        // serially — results are bit-identical either way.
+        let max_ch = groups.iter().map(|g| g.channels.len()).max().unwrap_or(0);
+        let shards = if cfg.engine == EngineKind::Sharded {
+            let n = shard::plan_shards(max_ch, spec.shard_cap);
+            (n >= 2).then(|| ShardPool::new(n - 1))
+        } else {
+            None
+        };
 
         Ok(Platform {
             cfg: cfg.clone(),
@@ -618,7 +701,10 @@ impl Platform {
             pending: FastMap::default(),
             txns: TagSlab::new(),
             next_txn: 1,
-            svc_buf: Vec::new(),
+            pump_bufs: (0..max_ch).map(|_| Vec::new()).collect(),
+            pump_wakes: vec![None; max_ch],
+            shards,
+            parallel_pumps: 0,
             fault: FaultPlan::from_cfg(cfg),
             fault_seq: FaultCounters::default(),
             fault_stats: FaultStats::default(),
@@ -720,6 +806,7 @@ impl Platform {
             if matches!(b.next_wake, Some(w) if w <= now) {
                 b.next_wake = None;
             }
+            let functional = b.sampler.as_ref().is_some_and(|s| s.functional());
             let mut port = Port {
                 cfg: &self.cfg,
                 fe: self.frontend,
@@ -739,6 +826,7 @@ impl Platform {
                 fault: self.fault,
                 fault_seq: &mut self.fault_seq,
                 fault_stats: &mut self.fault_stats,
+                functional,
             };
             if let Some(wake) = b.core.advance(now, &mut b.source, &mut port) {
                 // Dedup: keep only the earliest outstanding wake per core.
@@ -756,6 +844,12 @@ impl Platform {
             // No-op in closed-loop runs.
             let retired = b.core.stats.retired_ops;
             b.source.observe_retired(retired, now);
+            // SMARTS cadence: fold retired progress into the sampler so
+            // the next advance runs in the right mode, and completed
+            // detail windows record their ns-per-op / IPC samples.
+            if let Some(s) = b.sampler.as_mut() {
+                s.observe(retired, b.core.stats.retired_insts, now);
+            }
         }
         for (line, at) in outbox.reads.drain(..) {
             self.submit(line, at, Some(Some(ci)));
@@ -772,22 +866,67 @@ impl Platform {
     }
 
     /// Pump all controllers of a group at `now`; deliver service results.
+    ///
+    /// Two phases. **Phase 1** pumps every channel into its own result
+    /// buffer: a controller pump touches only channel-local state, so
+    /// under [`EngineKind::Sharded`] the channels run on the worker
+    /// shards in parallel. The conservative lookahead window that makes
+    /// this safe is the minimum cross-shard latency: every consequence a
+    /// serviced transaction has outside its own channel (LLC fill,
+    /// delivery, eviction writeback) lands at `data_end + llc_lat` plus
+    /// the backend egress — strictly after `now`, so no pump at `now`
+    /// can observe work a sibling produces at `now`. **Phase 2** folds
+    /// the buffered results into the shared state serially in ascending
+    /// channel order, so the event stream — and every `SimReport` — is
+    /// bit-identical whether phase 1 ran serially or sharded.
     fn pump_group(&mut self, gi: usize, now: Ps) {
         if matches!(self.groups[gi].next_pump, Some(s) if s <= now) {
             self.groups[gi].next_pump = None;
         }
         let kind = self.groups[gi].kind;
-        let mut next_wake: Option<Ps> = None;
         let nch = self.groups[gi].channels.len();
-        // Reusable buffer: pump appends; we clear per channel. Taken out
-        // of self so the result loop below can borrow self freely.
-        let mut results = std::mem::take(&mut self.svc_buf);
+
+        // --- Phase 1: pump each channel into its own buffer. ---
+        let parallel = self.shards.is_some()
+            && nch >= 2
+            && self.groups[gi]
+                .channels
+                .iter()
+                .map(|c| c.queue_len())
+                .sum::<usize>()
+                >= SHARD_MIN_QUEUED;
+        if parallel {
+            self.parallel_pumps += 1;
+            let chans = self.groups[gi].channels.as_mut_ptr();
+            let bufs = self.pump_bufs.as_mut_ptr();
+            let wakes = self.pump_wakes.as_mut_ptr();
+            // Safety: every job targets a distinct channel index, so the
+            // controller/buffer/wake pointers are disjoint, and
+            // `ShardPool::run` joins the whole batch before returning —
+            // the pointers never outlive this call's exclusive borrow.
+            let jobs: Vec<PumpJob> = (0..nch)
+                .map(|ch| unsafe {
+                    PumpJob { mc: chans.add(ch), now, out: bufs.add(ch), wake: wakes.add(ch) }
+                })
+                .collect();
+            self.shards.as_ref().unwrap().run(jobs);
+        } else {
+            for ch in 0..nch {
+                self.pump_bufs[ch].clear();
+                self.pump_wakes[ch] =
+                    self.groups[gi].channels[ch].pump(now, &mut self.pump_bufs[ch]);
+            }
+        }
+
+        // --- Phase 2: apply results serially in channel order. ---
+        let mut next_wake: Option<Ps> = None;
         for ch in 0..nch {
-            results.clear();
-            let wake = self.groups[gi].channels[ch].pump(now, &mut results);
-            if let Some(w) = wake {
+            if let Some(w) = self.pump_wakes[ch] {
                 next_wake = Some(next_wake.map_or(w, |x: Ps| x.min(w)));
             }
+            // Taken out of self so the apply loop can borrow self freely
+            // (put back below to keep the capacity).
+            let results = std::mem::take(&mut self.pump_bufs[ch]);
             for r in &results {
                 // The backend observes the serviced command stream (the
                 // MEC watches the DDR bus exactly as §4.3 describes).
@@ -968,8 +1107,8 @@ impl Platform {
                     }
                 }
             }
+            self.pump_bufs[ch] = results;
         }
-        self.svc_buf = results;
         if let Some(w) = next_wake {
             self.schedule_pump(gi, w.max(now));
         }
@@ -1211,5 +1350,31 @@ impl Platform {
             }
         }
         (cmds, if n == 0 { 0.0 } else { util_sum / n as f64 })
+    }
+
+    /// Pooled SMARTS sampling data across all hardware threads:
+    /// (completed windows, detailed ops, per-window ns-per-op samples,
+    /// per-window IPC samples). Everything zero/empty when sampling is
+    /// off. Cores pool in index order, so the sample vectors — and the
+    /// CIs computed from them — are deterministic.
+    pub(crate) fn sample_pool(&self) -> (u64, u64, Vec<f64>, Vec<f64>) {
+        let (mut windows, mut dops) = (0u64, 0u64);
+        let (mut ns, mut ipc) = (Vec::new(), Vec::new());
+        for b in &self.cores {
+            if let Some(s) = &b.sampler {
+                windows += s.windows();
+                dops += s.detailed_ops;
+                ns.extend_from_slice(&s.ns_per_op);
+                ipc.extend_from_slice(&s.ipc);
+            }
+        }
+        (windows, dops, ns, ipc)
+    }
+
+    /// Pump batches phase 1 actually ran on the shard pool (0 for the
+    /// single-thread engines; a diagnostic, deliberately excluded from
+    /// the equivalence fingerprints — it depends on the host).
+    pub(crate) fn parallel_pumps(&self) -> u64 {
+        self.parallel_pumps
     }
 }

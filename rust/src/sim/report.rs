@@ -200,6 +200,26 @@ pub struct SimReport {
     pub engine_width: u64,
     /// Completed adaptive width re-bucketings (adaptive calendar only).
     pub engine_resamples: u64,
+    /// Pump batches the sharded engine ran on its worker pool (0 for
+    /// the single-thread engines; host-dependent diagnostic, excluded
+    /// from the equivalence fingerprints).
+    pub engine_parallel_pumps: u64,
+    // SMARTS systematic sampling (all zero when `sample_period = 0`).
+    /// Completed measurement windows across all hardware threads
+    /// (count).
+    pub sample_windows: u64,
+    /// Ops retired in detailed mode — warmup plus measurement (count;
+    /// the rest of the run fast-forwarded functionally).
+    pub sample_detailed_ops: u64,
+    /// Mean ns-per-op over the measurement windows.
+    pub sample_ns_per_op_mean: f64,
+    /// 95 % CLT confidence half-width of `sample_ns_per_op_mean` (ns;
+    /// 0 with fewer than two windows).
+    pub sample_ci_ns_per_op: f64,
+    /// Mean per-window IPC over the measurement windows.
+    pub sample_ipc_mean: f64,
+    /// 95 % CLT confidence half-width of `sample_ipc_mean`.
+    pub sample_ci_ipc: f64,
 }
 
 impl SimReport {
@@ -239,6 +259,9 @@ impl SimReport {
         let fault = p.fault_stats();
         let health = p.health_totals();
         let serving = p.serving_totals();
+        let (sample_windows, sample_detailed_ops, sample_ns, sample_ipc) = p.sample_pool();
+        let (sample_ns_per_op_mean, sample_ci_ns_per_op) = crate::stats::mean_ci(&sample_ns);
+        let (sample_ipc_mean, sample_ci_ipc) = crate::stats::mean_ci(&sample_ipc);
         SimReport {
             mechanism: cfg.mechanism.name(),
             workload: spec.workload.name(),
@@ -321,6 +344,13 @@ impl SimReport {
             engine_buckets: engine.buckets,
             engine_width: engine.width,
             engine_resamples: engine.resamples,
+            engine_parallel_pumps: p.parallel_pumps(),
+            sample_windows,
+            sample_detailed_ops,
+            sample_ns_per_op_mean,
+            sample_ci_ns_per_op,
+            sample_ipc_mean,
+            sample_ci_ipc,
         }
     }
 
@@ -425,9 +455,23 @@ impl SimReport {
         } else {
             String::new()
         };
+        let sampled = if self.sample_windows > 0 {
+            format!(
+                ", sampled {} windows ({} detailed ops, {:.1} ± {:.1} ns/op, \
+                 IPC {:.2} ± {:.2})",
+                self.sample_windows,
+                self.sample_detailed_ops,
+                self.sample_ns_per_op_mean,
+                self.sample_ci_ns_per_op,
+                self.sample_ipc_mean,
+                self.sample_ci_ipc,
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{}/{}: {:.3} ms, IPC {:.2}, LLC miss {}k, TLB miss {}k, BW {:.2} GB/s \
-             (bus {:.1}%), MLP {:.1}{}{}{}{}{}",
+             (bus {:.1}%), MLP {:.1}{}{}{}{}{}{}",
             self.mechanism,
             self.workload,
             self.runtime_ns() / 1e6,
@@ -441,6 +485,7 @@ impl SimReport {
             health,
             mims,
             serving,
+            sampled,
             if self.deadlocked { " [DEADLOCK]" } else { "" },
         )
     }

@@ -1,0 +1,267 @@
+//! SMARTS-style systematic sampling (Wunderlich et al., ISCA '03).
+//!
+//! A sampled run alternates between three execution modes on a fixed
+//! cadence measured in retired memory operations:
+//!
+//! ```text
+//!  |-- functional --|-- warmup --|-- detail --|-- functional --| ...
+//!  '------------------------ period ------------------------'
+//! ```
+//!
+//! * **Functional** — operations complete against the cache/TLB content
+//!   model at a cheap constant latency: state keeps warming (tags,
+//!   residency) but the MSHR/DRAM/backend machinery is bypassed, so
+//!   most of the run costs almost nothing.
+//! * **Warmup** — full detailed execution, discarded from measurement:
+//!   it refills the timing state (queues, row buffers, MLP) that
+//!   functional mode cannot maintain.
+//! * **Detail** — full detailed execution, measured: each completed
+//!   window contributes one ns-per-op and one IPC sample.
+//!
+//! Window placement inside the period is drawn once from the seeded
+//! [`window_offset`] so the cadence is deterministic — the same
+//! `sample_seed` reproduces identical window placements, and results
+//! are independent of engine/front-end/routing choices exactly like
+//! unsampled runs. Per-window samples pool into a CLT confidence
+//! interval (`stats::mean_ci`) reported as `sample_ci_*` in
+//! [`SimReport`](super::report::SimReport).
+
+use crate::util::time::Ps;
+use crate::util::Rng;
+
+/// Execution mode of one core at a given retired-op index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SampleMode {
+    /// Cheap content-model execution (fast-forward).
+    Functional,
+    /// Detailed execution, not measured (timing-state refill).
+    Warmup,
+    /// Detailed execution, measured.
+    Detail,
+}
+
+/// Seeded placement of the warmup+detail window inside the period:
+/// a single uniform draw in `[0, period - warmup - detail]`. Pure in
+/// its arguments, so every core of a run (and every re-run with the
+/// same seed) agrees on the cadence.
+pub fn window_offset(seed: u64, period: u64, warmup: u64, detail: u64) -> u64 {
+    let slack = period.saturating_sub(warmup.saturating_add(detail));
+    if slack == 0 {
+        return 0;
+    }
+    Rng::new(seed).below(slack + 1)
+}
+
+/// Per-core sampling state machine. The platform consults
+/// [`Sampler::functional`] before each core advance (it decides the
+/// memory port's execution mode) and feeds retired-op progress back
+/// through [`Sampler::observe`], which detects window boundaries and
+/// records per-window samples.
+#[derive(Debug)]
+pub struct Sampler {
+    period: u64,
+    warmup: u64,
+    detail: u64,
+    offset: u64,
+    cpu_period: Ps,
+    mode: SampleMode,
+    /// Anchors of the currently-open detail window.
+    win_t: Ps,
+    win_ops: u64,
+    win_insts: u64,
+    /// Cumulative ops at the previous `observe` (for detailed-op
+    /// accounting).
+    last_ops: u64,
+    /// Ops retired while in warmup or detail mode.
+    pub detailed_ops: u64,
+    /// One ns-per-op sample per completed detail window.
+    pub ns_per_op: Vec<f64>,
+    /// One IPC sample per completed detail window.
+    pub ipc: Vec<f64>,
+}
+
+impl Sampler {
+    /// `period` must be ≥ `warmup + detail` ≥ 1 (enforced by
+    /// `Platform::build`'s spec validation before a sampler exists).
+    pub fn new(period: u64, warmup: u64, detail: u64, seed: u64, cpu_period: Ps) -> Sampler {
+        debug_assert!(detail >= 1 && warmup + detail <= period);
+        let offset = window_offset(seed, period, warmup, detail);
+        let mut s = Sampler {
+            period,
+            warmup,
+            detail,
+            offset,
+            cpu_period,
+            mode: SampleMode::Functional,
+            win_t: 0,
+            win_ops: 0,
+            win_insts: 0,
+            last_ops: 0,
+            detailed_ops: 0,
+            ns_per_op: Vec::new(),
+            ipc: Vec::new(),
+        };
+        s.mode = s.mode_at(0);
+        s
+    }
+
+    /// Mode for the op at cumulative index `op`: a pure function of the
+    /// cadence parameters, so mode sequences survive resharding and
+    /// engine swaps by construction.
+    pub fn mode_at(&self, op: u64) -> SampleMode {
+        if op < self.offset {
+            return SampleMode::Functional;
+        }
+        let r = (op - self.offset) % self.period;
+        if r < self.warmup {
+            SampleMode::Warmup
+        } else if r < self.warmup + self.detail {
+            SampleMode::Detail
+        } else {
+            SampleMode::Functional
+        }
+    }
+
+    /// Whether the core's next advance should run the cheap functional
+    /// memory path.
+    pub fn functional(&self) -> bool {
+        self.mode == SampleMode::Functional
+    }
+
+    /// Fold retired-op progress (cumulative ops/insts at sim time
+    /// `now`) into the state machine. Called after every core advance;
+    /// opens a measurement window on entry to detail mode and closes it
+    /// (recording samples) on exit.
+    pub fn observe(&mut self, ops: u64, insts: u64, now: Ps) {
+        let new_mode = self.mode_at(ops);
+        if self.mode != SampleMode::Functional {
+            self.detailed_ops += ops - self.last_ops;
+        }
+        match (self.mode, new_mode) {
+            (SampleMode::Detail, SampleMode::Detail) => {}
+            (SampleMode::Detail, _) => self.close(ops, insts, now),
+            (_, SampleMode::Detail) => {
+                self.win_t = now;
+                self.win_ops = ops;
+                self.win_insts = insts;
+            }
+            _ => {}
+        }
+        self.mode = new_mode;
+        self.last_ops = ops;
+    }
+
+    fn close(&mut self, ops: u64, insts: u64, now: Ps) {
+        let d_ops = ops - self.win_ops;
+        let d_t = now.saturating_sub(self.win_t);
+        // An advance can overshoot a whole window (retire past it in
+        // one burst); a window with no ops or no elapsed time carries
+        // no information, so drop it rather than divide by zero.
+        if d_ops == 0 || d_t == 0 {
+            return;
+        }
+        self.ns_per_op.push(d_t as f64 / 1_000.0 / d_ops as f64);
+        let cycles = d_t as f64 / self.cpu_period as f64;
+        self.ipc.push((insts - self.win_insts) as f64 / cycles);
+    }
+
+    /// Completed measurement windows.
+    pub fn windows(&self) -> u64 {
+        self.ns_per_op.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drive(s: &mut Sampler, schedule: &[(u64, u64, Ps)]) {
+        for &(ops, insts, t) in schedule {
+            s.observe(ops, insts, t);
+        }
+    }
+
+    #[test]
+    fn offset_is_deterministic_and_in_range() {
+        for seed in [0u64, 1, 42, 0x5A3D, u64::MAX] {
+            let a = window_offset(seed, 1000, 64, 64);
+            let b = window_offset(seed, 1000, 64, 64);
+            assert_eq!(a, b, "same seed must reproduce the placement");
+            assert!(a <= 1000 - 128, "offset must leave room for the window");
+        }
+        // No slack -> window pinned at the period start.
+        assert_eq!(window_offset(7, 128, 64, 64), 0);
+        assert_eq!(window_offset(7, 100, 64, 64), 0);
+        // Different seeds should (generically) move the window.
+        let spread: std::collections::BTreeSet<u64> =
+            (0..16u64).map(|s| window_offset(s, 100_000, 64, 64)).collect();
+        assert!(spread.len() > 1, "placements must actually depend on the seed");
+    }
+
+    #[test]
+    fn mode_sequence_follows_the_cadence() {
+        let s = Sampler::new(100, 10, 5, 3, 1_250);
+        let off = s.offset;
+        for op in 0..off {
+            assert_eq!(s.mode_at(op), SampleMode::Functional);
+        }
+        for rep in 0..3u64 {
+            let base = off + rep * 100;
+            for i in 0..10 {
+                assert_eq!(s.mode_at(base + i), SampleMode::Warmup, "warmup at {i}");
+            }
+            for i in 10..15 {
+                assert_eq!(s.mode_at(base + i), SampleMode::Detail, "detail at {i}");
+            }
+            for i in 15..100 {
+                assert_eq!(s.mode_at(base + i), SampleMode::Functional, "functional at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn windows_record_ns_per_op_and_ipc() {
+        let mut s = Sampler::new(100, 10, 5, 3, 1_000);
+        // Drive exactly three full periods past the seeded offset so
+        // the expected counts are exact for any offset draw.
+        let total = s.offset + 300;
+        // Walk op-by-op at 2 ns per op, 3 insts per op.
+        let mut sched = Vec::new();
+        for op in 1..=total {
+            sched.push((op, op * 3, op * 2_000));
+        }
+        drive(&mut s, &sched);
+        assert_eq!(s.windows(), 3, "three full periods -> three windows");
+        for w in &s.ns_per_op {
+            assert!((w - 2.0).abs() < 1e-9, "uniform stream -> 2 ns/op, got {w}");
+        }
+        for ipc in &s.ipc {
+            // 3 insts per 2 cycles (cpu_period 1000 ps, 2000 ps per op).
+            assert!((ipc - 1.5).abs() < 1e-9, "expected IPC 1.5, got {ipc}");
+        }
+        // Exactly the three (warmup + detail) windows ran detailed;
+        // everything else fast-forwarded.
+        assert_eq!(s.detailed_ops, 3 * 15);
+        assert!((s.detailed_ops as f64) <= 0.2 * total as f64);
+    }
+
+    #[test]
+    fn overshooting_a_window_drops_it_cleanly() {
+        let mut s = Sampler::new(100, 10, 5, 3, 1_000);
+        let off = s.offset;
+        // One giant advance that jumps from before the window to far
+        // past it: no sample, no panic, accounting still sane.
+        drive(&mut s, &[(off + 50, (off + 50) * 3, 1_000_000)]);
+        assert_eq!(s.windows(), 0);
+        assert_eq!(s.mode, SampleMode::Functional);
+    }
+
+    #[test]
+    fn same_seed_same_windows_different_seed_moves_them() {
+        let a = Sampler::new(1_000, 64, 64, 0x5A3D, 1_250);
+        let b = Sampler::new(1_000, 64, 64, 0x5A3D, 1_250);
+        assert_eq!(a.offset, b.offset);
+        let moved = (0..32u64).any(|s| Sampler::new(1_000, 64, 64, s, 1_250).offset != a.offset);
+        assert!(moved, "window placement must depend on sample_seed");
+    }
+}

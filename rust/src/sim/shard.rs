@@ -1,0 +1,305 @@
+//! Conservative-parallel controller pumping for [`EngineKind::Sharded`].
+//!
+//! The platform partitions each channel group's controllers into worker
+//! shards. A `Pump { group }` event is executed in two phases:
+//!
+//! 1. **Pump phase (parallel under `Sharded`)** — every channel's
+//!    [`MemController::pump`] runs against its own result buffer. A
+//!    controller pump touches only that controller's state, so distinct
+//!    channels are data-independent by construction.
+//! 2. **Apply phase (always serial, channel order)** — service results
+//!    are folded into the shared platform state (backend observation,
+//!    fault draws, deliveries, prefetch fills) exactly as the
+//!    single-thread engines do.
+//!
+//! The conservative lookahead window that makes phase 1 safe is the
+//! minimum cross-shard latency: every cross-channel consequence of a
+//! serviced transaction (a writeback, a delivery, a prefetch fill)
+//! re-enters the calendar queue at least `llc_lat` plus the backend's
+//! egress floor *after* the pump instant, so no phase-1 pump at time
+//! `t` can observe work another shard produces at `t`. Phase 2 applies
+//! those consequences in deterministic channel order, which is why the
+//! `sharded-equivalence` differential proptest can demand bit-identical
+//! `SimReport`s against the serial calendar engine.
+//!
+//! [`EngineKind::Sharded`]: super::engine::EngineKind::Sharded
+//! [`MemController::pump`]: crate::dram::MemController::pump
+
+use crate::dram::{MemController, ServiceResult};
+use crate::util::time::Ps;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+
+/// One channel pump: raw pointers into the platform's controller and
+/// per-channel buffer slots. The dispatcher guarantees every job in a
+/// batch targets a distinct channel index and blocks until the whole
+/// batch completes, so the pointers are exclusive and live for the
+/// duration of the job.
+pub(crate) struct PumpJob {
+    pub mc: *mut MemController,
+    pub now: Ps,
+    pub out: *mut Vec<ServiceResult>,
+    pub wake: *mut Option<Ps>,
+}
+
+// Safety: jobs are only created by `Platform::pump_group` over disjoint
+// channel/buffer slots, and `ShardPool::run` joins the batch before
+// returning, so no pointer outlives the exclusive borrow it came from.
+unsafe impl Send for PumpJob {}
+
+impl PumpJob {
+    /// Safety: the caller guarantees exclusive access to all three
+    /// targets until the owning dispatch returns.
+    unsafe fn run(&self) {
+        let out = &mut *self.out;
+        out.clear();
+        *self.wake = (*self.mc).pump(self.now, out);
+    }
+}
+
+struct PoolState {
+    jobs: Vec<PumpJob>,
+    /// Jobs handed in but not yet finished (queued + running).
+    outstanding: usize,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers wait here for jobs.
+    work: Condvar,
+    /// The dispatcher waits here for batch completion.
+    done: Condvar,
+}
+
+/// Recover the guard from a poisoned lock: pool state is a plain job
+/// queue plus counters, valid at every instruction boundary, so a
+/// panicking peer (impossible in practice — `pump` is straight-line
+/// arithmetic) must not wedge every later simulation in the process.
+fn lock(m: &Mutex<PoolState>) -> MutexGuard<'_, PoolState> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Persistent worker pool for the sharded engine. One pool lives for
+/// one `Platform`; workers park on a condvar between pump batches, so
+/// the steady-state dispatch cost is two lock round-trips per batch,
+/// not a thread spawn.
+pub(crate) struct ShardPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ShardPool {
+    /// Spawn `extra_workers` parked worker threads. The dispatching
+    /// thread participates in every batch, so total pump parallelism is
+    /// `extra_workers + 1`.
+    pub(crate) fn new(extra_workers: usize) -> ShardPool {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { jobs: Vec::new(), outstanding: 0, shutdown: false }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (0..extra_workers)
+            .map(|_| {
+                let sh = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&sh))
+            })
+            .collect();
+        ShardPool { shared, workers }
+    }
+
+    pub(crate) fn extra_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run one batch of channel pumps to completion. The calling thread
+    /// steals jobs alongside the workers and only returns once every
+    /// job has finished (the raw-pointer liveness contract).
+    pub(crate) fn run(&self, jobs: Vec<PumpJob>) {
+        {
+            let mut st = lock(&self.shared.state);
+            st.outstanding += jobs.len();
+            st.jobs.extend(jobs);
+        }
+        self.shared.work.notify_all();
+        loop {
+            let job = {
+                let mut st = lock(&self.shared.state);
+                match st.jobs.pop() {
+                    Some(j) => j,
+                    None => {
+                        while st.outstanding > 0 {
+                            st = self
+                                .shared
+                                .done
+                                .wait(st)
+                                .unwrap_or_else(PoisonError::into_inner);
+                        }
+                        return;
+                    }
+                }
+            };
+            unsafe { job.run() };
+            let mut st = lock(&self.shared.state);
+            st.outstanding -= 1;
+            if st.outstanding == 0 {
+                self.shared.done.notify_all();
+            }
+        }
+    }
+}
+
+fn worker_loop(sh: &PoolShared) {
+    loop {
+        let job = {
+            let mut st = lock(&sh.state);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(j) = st.jobs.pop() {
+                    break j;
+                }
+                st = sh.work.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        unsafe { job.run() };
+        let mut st = lock(&sh.state);
+        st.outstanding -= 1;
+        if st.outstanding == 0 {
+            sh.done.notify_all();
+        }
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        lock(&self.shared.state).shutdown = true;
+        self.shared.work.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The budget arithmetic: with `sweep_threads` simulations running
+/// concurrently on `host_threads` hardware threads, each simulation may
+/// use at most `host / sweep` shards (floor, at least 1 — a sharded
+/// platform degrades to serial pumping rather than failing). The sweep
+/// runner lowers each job's [`RunSpec::shard_cap`] to this budget so
+/// sweep fan-out times per-platform shards cannot oversubscribe the
+/// host.
+///
+/// [`RunSpec::shard_cap`]: crate::config::RunSpec::shard_cap
+pub fn shard_budget(host_threads: usize, sweep_threads: usize) -> usize {
+    (host_threads / sweep_threads.max(1)).max(1)
+}
+
+/// Shards a platform with `max_channels` controllers on its widest
+/// group may use: bounded by the channel count (more shards than
+/// channels is pure overhead), the spec's shard cap (lowered by the
+/// sweep runner's thread budget), and the host's hardware threads.
+/// The plan only sizes the worker pool — it cannot affect simulated
+/// results, so depending on host parallelism here is safe.
+pub(crate) fn plan_shards(max_channels: usize, cap: usize) -> usize {
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    max_channels.max(1).min(cap.max(1)).min(host)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::dram::{AddressMapping, Transaction};
+
+    #[test]
+    fn budget_arithmetic_never_oversubscribes() {
+        // sweep_threads concurrent sims x budget shards each <= host.
+        for host in 1..=64usize {
+            for sweep in 1..=16usize {
+                let per_sim = shard_budget(host, sweep);
+                assert!(per_sim >= 1, "budget must keep sharded runs alive");
+                if per_sim > 1 {
+                    assert!(
+                        per_sim * sweep <= host,
+                        "host={host} sweep={sweep} budget={per_sim} oversubscribes"
+                    );
+                }
+            }
+        }
+        // Degenerate inputs clamp instead of dividing by zero.
+        assert_eq!(shard_budget(8, 0), 8);
+        assert_eq!(shard_budget(0, 4), 1);
+    }
+
+    #[test]
+    fn plan_is_bounded_by_channels_cap_and_host() {
+        let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        assert_eq!(plan_shards(0, usize::MAX), 1);
+        assert_eq!(plan_shards(1, usize::MAX), 1);
+        assert!(plan_shards(2, usize::MAX) <= 2);
+        assert!(plan_shards(64, 3) <= 3, "plan must honor the spec cap");
+        assert_eq!(plan_shards(64, 0), 1, "a zero cap clamps to serial, not zero shards");
+        assert!(plan_shards(1024, usize::MAX) <= host);
+    }
+
+    #[test]
+    fn pool_runs_batches_and_shuts_down() {
+        // Drive real controller pumps through the pool and compare
+        // against serial pumps of identically-loaded controllers.
+        let cfg = SystemConfig::ideal();
+        let geo = cfg.local_channel_geometry();
+        let map = AddressMapping::new(&geo, 1);
+        let build = || {
+            let mut mcs: Vec<MemController> = (0..4)
+                .map(|_| MemController::with_policy(cfg.host_timing, geo, cfg.sched))
+                .collect();
+            for (ci, mc) in mcs.iter_mut().enumerate() {
+                for i in 0..8u64 {
+                    mc.enqueue(Transaction {
+                        id: (ci as u64) << 32 | i,
+                        addr: map.decode((i * 7 + ci as u64) * 64),
+                        is_write: i % 3 == 0,
+                        arrive: 0,
+                    });
+                }
+            }
+            mcs
+        };
+        let mut serial = build();
+        let mut serial_out: Vec<(Vec<ServiceResult>, Option<Ps>)> = Vec::new();
+        for mc in serial.iter_mut() {
+            let mut buf = Vec::new();
+            let wake = mc.pump(1_000_000, &mut buf);
+            serial_out.push((buf, wake));
+        }
+
+        let mut pooled = build();
+        let mut bufs: Vec<Vec<ServiceResult>> = vec![Vec::new(); 4];
+        let mut wakes: Vec<Option<Ps>> = vec![None; 4];
+        let pool = ShardPool::new(2);
+        assert_eq!(pool.extra_workers(), 2);
+        let jobs: Vec<PumpJob> = (0..4)
+            .map(|ch| PumpJob {
+                mc: &mut pooled[ch] as *mut MemController,
+                now: 1_000_000,
+                out: &mut bufs[ch] as *mut Vec<ServiceResult>,
+                wake: &mut wakes[ch] as *mut Option<Ps>,
+            })
+            .collect();
+        pool.run(jobs);
+        for ch in 0..4 {
+            assert_eq!(wakes[ch], serial_out[ch].1, "channel {ch} wake diverged");
+            assert_eq!(
+                bufs[ch].len(),
+                serial_out[ch].0.len(),
+                "channel {ch} result count diverged"
+            );
+            for (a, b) in bufs[ch].iter().zip(&serial_out[ch].0) {
+                assert_eq!(a.id, b.id, "channel {ch} service order diverged");
+                assert_eq!(a.data_end, b.data_end, "channel {ch} timing diverged");
+            }
+        }
+        drop(pool); // must join cleanly with parked workers
+    }
+}

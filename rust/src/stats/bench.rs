@@ -16,9 +16,10 @@
 //!   [`PROVISIONAL_FACTOR`]×) slowdowns and downgrades the rest to
 //!   warnings.
 //! * **Pair rule** — machine-independent: an optimized engine/policy row
-//!   (`… [calendar]`, `… [bank-indexed]`, `… [frontend]`) must not run
-//!   slower than its retained reference row (`… [ref-heap]`,
-//!   `… [ref-scan]`, `… [frontend-ref]`) measured in the same process,
+//!   (`… [calendar]`, `… [bank-indexed]`, `… [frontend]`, `… [sharded]`)
+//!   must not run slower than its retained reference row (`… [ref-heap]`,
+//!   `… [ref-scan]`, `… [frontend-ref]`, `… [calendar]`) measured in the
+//!   same process,
 //!   beyond a small [`PAIR_TOLERANCE`] noise band. This holds even while
 //!   the baseline is provisional.
 
@@ -42,6 +43,12 @@ const ENGINE_PAIRS: &[(&str, &str)] = &[
     (" [ref-scan]", " [bank-indexed]"),
     (" [ref-scan]", " [rank-inval]"),
     (" [frontend-ref]", " [frontend]"),
+    // The sharded engine is bit-identical to calendar by construction,
+    // so the only thing left to gate is throughput: at >= 2 channel
+    // groups it must not lose to the single-thread calendar engine
+    // beyond the noise band (a single-CPU runner degrades sharded to
+    // serial pumping, and the tolerance absorbs its dispatch overhead).
+    (" [calendar]", " [sharded]"),
 ];
 
 // ---------------------------------------------------------------------
@@ -609,6 +616,40 @@ mod tests {
         assert!(!g.passed());
         assert_eq!(g.failures.len(), 1);
         assert!(g.failures[0].contains("sim amu/gups [calendar]"), "{}", g.failures[0]);
+    }
+
+    #[test]
+    fn pair_rule_holds_sharded_to_its_single_thread_reference() {
+        // Sharded is bit-identical to calendar by construction, so the
+        // gate only has to police throughput: losing to the retained
+        // single-thread engine beyond the noise band fails the run.
+        let lagging = report(
+            &[
+                ("sim ideal/gups [calendar]", 100.0),
+                ("sim ideal/gups [sharded]", 50.0),
+            ],
+            false,
+        );
+        let g = perf_gate(&lagging, &lagging);
+        assert!(!g.passed(), "sharded losing to calendar must fail");
+        assert!(g.failures[0].contains("[sharded]"), "{}", g.failures[0]);
+
+        // Within the tolerance band (a serial-pumping single-CPU
+        // runner): sub-parity is a warning, not a failure.
+        let healthy = report(
+            &[
+                ("sim ideal/gups [calendar]", 100.0),
+                ("sim ideal/gups [sharded]", 90.0),
+            ],
+            false,
+        );
+        let g = perf_gate(&healthy, &healthy);
+        assert!(g.passed(), "{:?}", g.failures);
+        assert!(
+            g.warnings.iter().any(|w| w.contains("noise floor")),
+            "{:?}",
+            g.warnings
+        );
     }
 
     #[test]

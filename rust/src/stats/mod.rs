@@ -213,6 +213,24 @@ impl Summary {
     }
 }
 
+/// Mean and 95 % CLT confidence half-width (`1.96 · s / √n`, with `s`
+/// the *sample* standard deviation) of a sample set — the SMARTS-style
+/// sampling estimator behind the `sample_ci_*` report fields. Returns
+/// `(0, 0)` for an empty sample and half-width 0 for a single sample
+/// (no variance information, not "certain").
+pub fn mean_ci(samples: &[f64]) -> (f64, f64) {
+    let n = samples.len();
+    if n == 0 {
+        return (0.0, 0.0);
+    }
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    if n < 2 {
+        return (mean, 0.0);
+    }
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64;
+    (mean, 1.96 * (var / n as f64).sqrt())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -286,5 +304,37 @@ mod tests {
         let g = Summary::geomean(&[1.0, 4.0]);
         assert!((g - 2.0).abs() < 1e-12);
         assert_eq!(Summary::geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn mean_ci_constant_stream_has_zero_width() {
+        let (m, ci) = mean_ci(&[5.0; 64]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert_eq!(ci, 0.0, "no variance -> zero-width interval");
+    }
+
+    #[test]
+    fn mean_ci_known_variance_gives_expected_half_width() {
+        // Alternating ±1 around 10: sample variance n/(n-1), so the
+        // half-width is 1.96 * sqrt(n/(n-1)/n) = 1.96 / sqrt(n-1).
+        let n = 101usize;
+        let samples: Vec<f64> =
+            (0..n).map(|i| 10.0 + if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let (m, ci) = mean_ci(&samples);
+        // 51 highs, 50 lows -> mean slightly above 10.
+        assert!((m - (10.0 + 1.0 / n as f64)).abs() < 1e-12);
+        let s2 = samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64;
+        let expect = 1.96 * (s2 / n as f64).sqrt();
+        assert!((ci - expect).abs() < 1e-12, "ci={ci} expect={expect}");
+        // And the closed-form sanity bound: just under 1.96/sqrt(n-1).
+        assert!((ci - 1.96 / (n as f64 - 1.0).sqrt()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn mean_ci_degenerate_inputs() {
+        assert_eq!(mean_ci(&[]), (0.0, 0.0));
+        let (m, ci) = mean_ci(&[3.25]);
+        assert_eq!(m, 3.25);
+        assert_eq!(ci, 0.0, "one sample carries no variance information");
     }
 }

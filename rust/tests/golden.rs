@@ -60,7 +60,8 @@ fn render(r: &SimReport) -> String {
          mims_rq={} mims_db={} mims_qb={} faults={} storms={} \
          demoted={} ecc={} fdrops={} flates={} rec_p99={} arrived={} served={} \
          dropped={} qmean={:.6} qpeak={} p50={} p99={} p999={} ext_acc={} deg_acc={} \
-         avail={:.6} quar={} readm={} qsrv={} mttd={:.3} mttr={:.3} degns={:.3}\n",
+         avail={:.6} quar={} readm={} qsrv={} mttd={:.3} mttr={:.3} degns={:.3} \
+         swin={} sdet={} sns={:.6} snsci={:.6} sipc={:.6} sipcci={:.6}\n",
         r.mechanism,
         r.workload,
         r.finish,
@@ -126,6 +127,12 @@ fn render(r: &SimReport) -> String {
         r.mttd_ns,
         r.mttr_ns,
         r.degraded_ns,
+        r.sample_windows,
+        r.sample_detailed_ops,
+        r.sample_ns_per_op_mean,
+        r.sample_ci_ns_per_op,
+        r.sample_ipc_mean,
+        r.sample_ci_ipc,
     )
 }
 
@@ -229,6 +236,23 @@ fn corpus() -> String {
         let spec = spec.open_loop(ArrivalKind::Mmpp, 4_000_000);
         let r = run_spec(&cfg, &spec);
         assert!(!r.deadlocked, "mmpp corpus run deadlocked");
+        out.push_str(&render(&r));
+    }
+    // Sampled row: freezes the SMARTS cadence itself — the seeded
+    // window placement, the functional fast-path timing, and the
+    // estimator output (the sample fields at the end of the render
+    // line). A change to the fast-forward latency model, the window
+    // accounting, or the CI arithmetic moves this row even when every
+    // fully-detailed row above is untouched.
+    {
+        let mut cfg = SystemConfig::tl_ooo();
+        cfg.cores = 2;
+        let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+        spec.ops_per_core = 4_000;
+        let spec = spec.sampled(500, 50, 50);
+        let r = run_spec(&cfg, &spec);
+        assert!(!r.deadlocked, "sampled corpus run deadlocked");
+        assert!(r.sample_windows > 0, "sampled corpus row measured no windows");
         out.push_str(&render(&r));
     }
     out
@@ -359,9 +383,12 @@ fn golden_open_loop_rows_are_implementation_independent() {
     spec.ops_per_core = 4_000;
     let spec = spec.open_loop(ArrivalKind::Poisson, 4_000_000);
     let mut lines = Vec::new();
-    for engine in
-        [EngineKind::Calendar, EngineKind::AdaptiveCalendar, EngineKind::ReferenceHeap]
-    {
+    for engine in [
+        EngineKind::Calendar,
+        EngineKind::AdaptiveCalendar,
+        EngineKind::ReferenceHeap,
+        EngineKind::Sharded,
+    ] {
         for fe in [FrontEnd::Slab, FrontEnd::Reference] {
             for routing in [Routing::Backend, Routing::Legacy] {
                 let mut cfg = SystemConfig::tl_ooo();
@@ -400,8 +427,12 @@ fn golden_corpus_is_engine_independent() {
         let mut spec = RunSpec::smoke(WorkloadKind::Gups);
         spec.ops_per_core = 4_000;
         let mut lines = Vec::new();
-        for kind in [EngineKind::Calendar, EngineKind::AdaptiveCalendar, EngineKind::ReferenceHeap]
-        {
+        for kind in [
+            EngineKind::Calendar,
+            EngineKind::AdaptiveCalendar,
+            EngineKind::ReferenceHeap,
+            EngineKind::Sharded,
+        ] {
             let mut cfg = base.clone();
             cfg.engine = kind;
             let r = run_spec(&cfg, &spec);
@@ -416,6 +447,48 @@ fn golden_corpus_is_engine_independent() {
             lines[0], lines[2],
             "reference heap diverged from calendar ({variant})"
         );
+        assert_eq!(
+            lines[0], lines[3],
+            "sharded engine diverged from calendar ({variant})"
+        );
+    }
+}
+
+/// The sampled corpus row must be implementation-independent too: the
+/// SMARTS cadence is a pure function of (sample_seed, period, retired
+/// ops), and the functional fast path touches no engine, front-end, or
+/// routing state — so the same sampled run reproduces bit-for-bit
+/// across every seam, including the sharded engine.
+#[test]
+fn golden_sampled_rows_are_implementation_independent() {
+    use twinload::cpu::FrontEnd;
+    use twinload::sim::{EngineKind, Routing};
+    let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+    spec.ops_per_core = 4_000;
+    let spec = spec.sampled(500, 50, 50);
+    let mut lines = Vec::new();
+    for engine in [
+        EngineKind::Calendar,
+        EngineKind::AdaptiveCalendar,
+        EngineKind::ReferenceHeap,
+        EngineKind::Sharded,
+    ] {
+        for fe in [FrontEnd::Slab, FrontEnd::Reference] {
+            for routing in [Routing::Backend, Routing::Legacy] {
+                let mut cfg = SystemConfig::tl_ooo();
+                cfg.cores = 2;
+                cfg.engine = engine;
+                cfg.frontend = fe;
+                cfg.routing = routing;
+                let r = run_spec(&cfg, &spec);
+                assert!(!r.deadlocked);
+                assert!(r.sample_windows > 0, "sampled run measured no windows");
+                lines.push(render(&r));
+            }
+        }
+    }
+    for l in &lines[1..] {
+        assert_eq!(&lines[0], l, "sampled run diverged across implementations");
     }
 }
 

@@ -155,11 +155,12 @@ fn static_tables_are_paper_faithful() {
     assert!(t5.contains("3963") || t5.contains("3962") || t5.contains("3964"));
 }
 
-/// Both calendar event engines (fixed-width and adaptive) are
-/// observationally identical to the reference heap: every mechanism must
-/// produce an identical SimReport under all three engines
-/// (engine-diagnostic counters excluded — resize, overflow, width, and
-/// resample counts are calendar-specific by construction).
+/// Both calendar event engines (fixed-width and adaptive) and the
+/// conservative-parallel sharded engine are observationally identical
+/// to the reference heap: every mechanism must produce an identical
+/// SimReport under all four engines (engine-diagnostic counters
+/// excluded — resize, overflow, width, resample, and parallel-pump
+/// counts are implementation-specific by construction).
 #[test]
 fn event_engines_equivalent_across_all_mechanisms() {
     use twinload::sim::EngineKind;
@@ -179,7 +180,7 @@ fn event_engines_equivalent_across_all_mechanisms() {
         heap.engine = EngineKind::ReferenceHeap;
         let b = run(&heap, WorkloadKind::Gups, 4_000);
         assert_eq!(b.engine, "reference-heap");
-        for kind in [EngineKind::Calendar, EngineKind::AdaptiveCalendar] {
+        for kind in [EngineKind::Calendar, EngineKind::AdaptiveCalendar, EngineKind::Sharded] {
             let mut cal = base.clone();
             cal.engine = kind;
             let a = run(&cal, WorkloadKind::Gups, 4_000);
@@ -534,6 +535,91 @@ fn tiny_lvc_forces_retries_but_stays_correct() {
     assert!(bad.finish >= good.finish);
     // Same program, same retired work despite the retries.
     assert_eq!(bad.loads, good.loads);
+}
+
+/// SMARTS physics check: on a long gups run the sampled simulation must
+/// (a) execute at most 10 % of ops in detailed (warmup + measured)
+/// mode, (b) retire exactly the same work as the full run, and (c)
+/// estimate a mean ns/op consistent with the fully-detailed run. The
+/// consistency band is the window-pool CI plus a 15 % systematic
+/// allowance: the CLT interval covers window-to-window sampling noise,
+/// not the residual warmup bias of smoke-scale windows (64-op warmups
+/// cannot perfectly refill queue/MLP state after a fast-forward).
+#[test]
+fn sampled_gups_measures_a_small_detailed_fraction_faithfully() {
+    let cfg = SystemConfig::tl_ooo();
+    let mut full_spec = RunSpec::smoke(WorkloadKind::Gups);
+    full_spec.ops_per_core = 40_000;
+    // 9% nominal detailed fraction: 120 warmup + 60 measured per 2000.
+    let sampled_spec = full_spec.sampled(2_000, 120, 60);
+
+    let mut sys = cfg.clone();
+    sys.cores = 2;
+    let full = run_spec(&sys, &full_spec);
+    let sampled = run_spec(&sys, &sampled_spec);
+    assert!(!full.deadlocked && !sampled.deadlocked);
+
+    // (b) Sampling changes timing, never work: every op still retires.
+    assert_eq!(sampled.retired_ops, full.retired_ops);
+    assert_eq!(sampled.loads, full.loads);
+    assert_eq!(sampled.stores, full.stores);
+
+    // (a) ≤ 10% of ops ran detailed.
+    assert!(
+        sampled.sample_detailed_ops * 10 <= sampled.retired_ops,
+        "detailed fraction too high: {} of {} ops",
+        sampled.sample_detailed_ops,
+        sampled.retired_ops
+    );
+    // Enough windows for the CI to mean anything (~19 per core).
+    assert!(
+        sampled.sample_windows >= 20,
+        "too few measurement windows: {}",
+        sampled.sample_windows
+    );
+
+    // (c) The estimator tracks the full run's per-core ns/op.
+    let full_ns_per_op = full.runtime_ns() / full_spec.ops_per_core as f64;
+    let err = (sampled.sample_ns_per_op_mean - full_ns_per_op).abs();
+    let band = sampled.sample_ci_ns_per_op + 0.15 * full_ns_per_op;
+    assert!(
+        err <= band,
+        "sampled mean {:.2} ns/op missed full-run {:.2} ns/op (ci {:.2}, band {:.2})",
+        sampled.sample_ns_per_op_mean,
+        full_ns_per_op,
+        sampled.sample_ci_ns_per_op,
+        band
+    );
+    // The interval itself is well-formed: positive width from a
+    // non-constant window pool, finite IPC estimate alongside it.
+    assert!(sampled.sample_ci_ns_per_op >= 0.0);
+    assert!(sampled.sample_ipc_mean > 0.0 && sampled.sample_ipc_mean.is_finite());
+}
+
+/// The sharded engine must actually engage its worker pool under load
+/// (on a multi-core host): a memory-bound run with deep queues on two
+/// local channels has pump instants with enough queued transactions to
+/// cross the parallel-dispatch floor. Equivalence tests prove sharded
+/// output is right; this proves the parallel path is the thing being
+/// tested and not silently dormant.
+#[test]
+fn sharded_engine_engages_the_worker_pool_under_load() {
+    use twinload::sim::EngineKind;
+    if std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) < 2 {
+        return; // single-CPU host: the plan is 1 and sharded runs serial
+    }
+    let mut cfg = SystemConfig::ideal();
+    cfg.cores = 4;
+    cfg.engine = EngineKind::Sharded;
+    let mut spec = RunSpec::smoke(WorkloadKind::Gups);
+    spec.ops_per_core = 5_000;
+    let r = run_spec(&cfg, &spec);
+    assert!(!r.deadlocked);
+    assert_eq!(r.engine, "sharded");
+    assert!(
+        r.engine_parallel_pumps > 0,
+        "worker pool never dispatched a parallel pump batch"
+    );
 }
 
 /// Failure injection: SCM leaves blow the TL-OoO timing window (retries)

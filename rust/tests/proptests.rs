@@ -1106,7 +1106,8 @@ fn prop_config_ini_round_trips_and_rejects() {
         let mech = [
             "ideal", "tl-ooo", "tl-lf", "tl-lf-batched", "numa", "pcie", "inc-trl", "amu", "mims",
         ][rng.below(9) as usize];
-        let engine = ["calendar", "adaptive-calendar", "reference-heap"][rng.below(3) as usize];
+        let engine =
+            ["calendar", "adaptive-calendar", "reference-heap", "sharded"][rng.below(4) as usize];
         let sched = ["bank-indexed", "rank-inval", "reference-scan"][rng.below(3) as usize];
         let frontend = ["slab", "reference"][rng.below(2) as usize];
         let routing = ["backend", "legacy"][rng.below(2) as usize];
@@ -1129,6 +1130,11 @@ fn prop_config_ini_round_trips_and_rejects() {
         let zipf_theta = rng.below(100) as f64 / 100.0;
         let arrival_seed = rng.below(1 << 40);
         let queue_depth = 1 + rng.below(4096);
+        // SMARTS sampling knobs (kept valid: the window fits the period).
+        let sample_period = 2 + rng.below(10_000);
+        let sample_warmup = rng.below(sample_period / 2);
+        let sample_detail = 1 + rng.below(sample_period - sample_warmup - 1);
+        let sample_seed = rng.below(1 << 40);
         // Fault-injection knobs (reissue/backoff/poll kept valid for a
         // nonzero rate; validation rejects zeros there).
         let fault_rate = rng.below(100) as f64 / 100.0;
@@ -1193,6 +1199,10 @@ fn prop_config_ini_round_trips_and_rejects() {
             kv("zipf_theta", zipf_theta.to_string(), rng),
             kv("arrival_seed", arrival_seed.to_string(), rng),
             kv("queue_depth", queue_depth.to_string(), rng),
+            kv("sample_period", sample_period.to_string(), rng),
+            kv("sample_warmup", sample_warmup.to_string(), rng),
+            kv("sample_detail", sample_detail.to_string(), rng),
+            kv("sample_seed", sample_seed.to_string(), rng),
         ];
         rng.shuffle(&mut run_keys);
         let mut text = String::from("# generated\n[system]\n");
@@ -1287,6 +1297,13 @@ fn prop_config_ini_round_trips_and_rejects() {
             || spec.queue_depth as u64 != queue_depth
         {
             return Err("serving [run] key lost".into());
+        }
+        if spec.sample_period != sample_period
+            || spec.sample_warmup != sample_warmup
+            || spec.sample_detail != sample_detail
+            || spec.sample_seed != sample_seed
+        {
+            return Err("sampling [run] key lost".into());
         }
 
         // Corruptions must be rejected, not silently absorbed.
@@ -1410,4 +1427,164 @@ fn prop_mims_pack_one_is_bit_identical_to_tl_lf() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_sharded_engine_is_bit_identical_to_calendar() {
+    // Tentpole differential for the conservative-parallel engine: under
+    // arbitrary mechanism × scheduler × front end × routing × fault /
+    // burst schedule × arrival mode × sampling cadence, `Sharded` must
+    // produce a bit-identical `SimReport` to the serial `Calendar`
+    // engine. The two-phase pump makes this true by construction (phase
+    // 1 outputs are independent of worker interleaving, phase 2 always
+    // applies in channel order under the `llc_lat + egress` lookahead);
+    // this test is the proof obligation that construction argument is
+    // actually implemented. Only `engine_parallel_pumps` (a host-
+    // dependent diagnostic) may differ, so it is excluded from the
+    // fingerprint.
+    use std::cell::Cell;
+    use twinload::config::{RunSpec, SystemConfig};
+    use twinload::cpu::FrontEnd;
+    use twinload::dram::SchedPolicy;
+    use twinload::sim::engine::EngineKind;
+    use twinload::sim::{run_spec, Routing, SimReport};
+    use twinload::workloads::arrival::ArrivalKind;
+    use twinload::workloads::WorkloadKind;
+
+    let parallel_total = Cell::new(0u64);
+    check("sharded-equivalence", cfg(), |rng| {
+        let mech = [
+            "ideal", "tl-ooo", "tl-lf", "tl-lf-batched", "numa", "pcie", "inc-trl", "amu", "mims",
+        ][rng.below(9) as usize];
+        let mut base = SystemConfig::by_name(mech).expect("preset");
+        base.cores = 2 + rng.below(2) as usize;
+        base.sched = [SchedPolicy::BankIndexed, SchedPolicy::RankInval, SchedPolicy::ReferenceScan]
+            [rng.below(3) as usize];
+        base.routing = [Routing::Backend, Routing::Legacy][rng.below(2) as usize];
+        base.frontend = [FrontEnd::Slab, FrontEnd::Reference][rng.below(2) as usize];
+
+        let wl = if rng.chance(0.25) { WorkloadKind::Cg } else { WorkloadKind::Gups };
+        let mut spec = RunSpec::smoke(wl);
+        spec.ops_per_core = 400 + rng.below(800);
+        spec.seed = rng.next_u64();
+        // Open-loop arm: shard parallelism × arrival pacing.
+        if rng.chance(0.3) {
+            let kind = [ArrivalKind::Poisson, ArrivalKind::Mmpp][rng.below(2) as usize];
+            spec = spec.open_loop(kind, (1 + rng.below(32)) * 1_000_000);
+            spec.queue_depth = 2 + rng.below(62) as u32;
+            spec.arrival_seed = rng.next_u64();
+        }
+        // Sampled arm: the SMARTS cadence must be engine-independent
+        // (the functional fast path touches no controller state).
+        if rng.chance(0.3) {
+            let period = 100 + rng.below(400);
+            spec = spec.sampled(period, rng.below(50), 1 + rng.below(50));
+            spec.sample_seed = rng.next_u64();
+        }
+        // Fault / burst arm: schedule draws happen in the serial apply
+        // phase, so they must be identical under parallel pumping.
+        if rng.chance(0.4) && mech != "ideal" {
+            let rate = (1 + rng.below(30)) as f64 / 100.0;
+            base = base.faulted(rate);
+            base.fault_seed = rng.next_u64();
+            base.demote_after = 1 + rng.below(5) as u32;
+            if rng.chance(0.5) {
+                base.burst_rate = (1 + rng.below(40)) as f64 / 100.0;
+                base.burst_len = (500 + rng.below(4_500)) * 1_000;
+                base.burst_slow_mult = 2 + rng.below(7);
+            }
+        }
+
+        let fp = |r: &SimReport| {
+            vec![
+                r.finish,
+                r.retired_insts,
+                r.retired_ops,
+                r.loads,
+                r.stores,
+                r.fences,
+                r.twin_retries,
+                r.safe_paths,
+                r.cas_fails,
+                r.retry_storms,
+                r.demotions,
+                r.faults_injected,
+                r.ecc_corrected,
+                r.mec_fill_drops,
+                r.mec_fill_lates,
+                r.recovery_p99,
+                r.recovery_max,
+                r.recovery_mean.to_bits(),
+                r.llc_hits,
+                r.llc_misses,
+                r.dram_reads,
+                r.dram_writes,
+                r.dram_cmds,
+                r.pcie_faults,
+                r.amu_requests,
+                r.mims_requests,
+                r.mims_messages,
+                r.mims_delivered_bytes,
+                r.mims_requested_bytes,
+                r.engine_events,
+                r.engine_peak,
+                r.arrived_requests,
+                r.served_requests,
+                r.dropped_requests,
+                r.queue_peak,
+                r.req_p50_ns,
+                r.req_p99_ns,
+                r.req_p999_ns,
+                r.req_mean_ns.to_bits(),
+                r.queue_mean.to_bits(),
+                r.ext_accesses,
+                r.degraded_accesses,
+                r.availability.to_bits(),
+                r.quarantines,
+                r.readmits,
+                r.quarantined_served,
+                r.mttd_ns.to_bits(),
+                r.mttr_ns.to_bits(),
+                r.degraded_ns.to_bits(),
+                r.sample_windows,
+                r.sample_detailed_ops,
+                r.sample_ns_per_op_mean.to_bits(),
+                r.sample_ci_ns_per_op.to_bits(),
+                r.sample_ipc_mean.to_bits(),
+                r.sample_ci_ipc.to_bits(),
+            ]
+        };
+
+        let mut serial_cfg = base.clone();
+        serial_cfg.engine = EngineKind::Calendar;
+        let mut sharded_cfg = base.clone();
+        sharded_cfg.engine = EngineKind::Sharded;
+        let a = run_spec(&serial_cfg, &spec);
+        let b = run_spec(&sharded_cfg, &spec);
+        if a.deadlocked || b.deadlocked {
+            return Err(format!("{mech}: sharded differential run deadlocked"));
+        }
+        if b.engine != "sharded" {
+            return Err(format!("engine name lost: {}", b.engine));
+        }
+        parallel_total.set(parallel_total.get() + b.engine_parallel_pumps);
+        if fp(&a) != fp(&b) {
+            return Err(format!(
+                "sharded diverged from calendar ({mech}/{:?}/{:?}/{:?}): {:?} vs {:?}",
+                base.sched,
+                base.frontend,
+                base.routing,
+                fp(&b),
+                fp(&a)
+            ));
+        }
+        Ok(())
+    });
+    // Vacuity check: on a multi-core host the equivalence above must
+    // have exercised the parallel pump path at least once, or the whole
+    // proof collapses to serial-vs-serial.
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if cfg().cases >= 16 && host >= 2 {
+        assert!(parallel_total.get() > 0, "no case pumped channels in parallel");
+    }
 }
